@@ -1,0 +1,65 @@
+//! Quickstart: the smallest complete round trip through the stack.
+//!
+//! Generates a Miranda-like density field, compresses it with the
+//! cuSZ-like pipeline at a moderate relative error bound, decompresses,
+//! mitigates the pre-quantization banding with quantization-aware
+//! interpolation, and prints the quality metrics before/after.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use qai::compressors::{cusz::CuszLike, Compressor};
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::metrics::{bit_rate, max_rel_error, psnr, ssim};
+use qai::mitigation::{mitigate_with_stats, MitigationConfig};
+use qai::quant::ErrorBound;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A real-ish small workload: 64³ density field (Fig. 2's analog).
+    let orig = generate(DatasetKind::MirandaLike, &[64, 64, 64], 42);
+
+    // 2. Compress with a value-range-relative bound of 1e-2 (the paper's
+    //    "moderate error bound" sweet spot — Fig. 7 point B).
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let codec = CuszLike;
+    let stream = codec.compress(&orig, eb)?;
+    println!(
+        "compressed {} values -> {} bytes ({:.2}x, {:.3} bits/value)",
+        orig.len(),
+        stream.len(),
+        (orig.len() * 4) as f64 / stream.len() as f64,
+        bit_rate(stream.len(), orig.len()),
+    );
+
+    // 3. Decompress: the reconstruction carries posterization artifacts.
+    let dec = codec.decompress(&stream)?;
+
+    // 4. Mitigate (Alg. 4): boundary detection -> EDT -> sign propagation
+    //    -> EDT -> IDW compensation.
+    let cfg = MitigationConfig::default(); // η = 0.9, native backend
+    let (fixed, stats) = mitigate_with_stats(&dec.grid, &dec.quant_indices, dec.bound, &cfg)?;
+
+    // 5. Quality report.
+    println!(
+        "SSIM  {:.4} -> {:.4}",
+        ssim(&orig, &dec.grid, 7, 2),
+        ssim(&orig, &fixed, 7, 2)
+    );
+    println!(
+        "PSNR  {:.2} dB -> {:.2} dB",
+        psnr(&orig.data, &dec.grid.data),
+        psnr(&orig.data, &fixed.data)
+    );
+    println!(
+        "max relative error {:.5} -> {:.5} (relaxed bound {:.5})",
+        max_rel_error(&orig.data, &dec.grid.data),
+        max_rel_error(&orig.data, &fixed.data),
+        (1.0 + cfg.eta) * eb.rel.unwrap()
+    );
+    println!(
+        "mitigation ran at {:.1} MB/s (|B1|={}, |B2|={})",
+        stats.throughput_mbs(orig.len()),
+        stats.n_boundary1,
+        stats.n_boundary2
+    );
+    Ok(())
+}

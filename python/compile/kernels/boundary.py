@@ -1,0 +1,96 @@
+"""Quantization-boundary + sign-map stencil (paper Alg. 2, step A).
+
+Operates on a ghost-padded index block (halo 1, filled by the Rust
+coordinator — replicated at true domain edges) and emits, for the
+interior:
+
+* ``mask`` — 1 where the index differs from any face neighbor;
+* ``sign`` — majority vote of ``sgn(q_neighbor − q)`` over differing
+  neighbors, zeroed in fast-varying regions where any central-difference
+  gradient magnitude reaches 1 (``|fwd − bwd| ≥ 2``).
+
+Semantics mirror ``rust/src/mitigation/boundary.rs`` exactly; the Rust
+caller clears global-domain-edge cells afterwards (Alg. 2 loop bounds).
+
+TPU shaping: one grid step owns the whole padded block in VMEM
+(66³·i32 ≈ 1.1 MiB in 3D, 258²·i32 ≈ 0.26 MiB in 2D); all six shifted
+reads are VMEM slices of that tile — the Pallas/TPU re-think of a CUDA
+shared-memory halo (DESIGN.md §7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _boundary3d_kernel(q_ref, mask_ref, sign_ref):
+    q = q_ref[...]
+    c = q[1:-1, 1:-1, 1:-1]
+    shifts = [
+        (q[2:, 1:-1, 1:-1], q[:-2, 1:-1, 1:-1]),
+        (q[1:-1, 2:, 1:-1], q[1:-1, :-2, 1:-1]),
+        (q[1:-1, 1:-1, 2:], q[1:-1, 1:-1, :-2]),
+    ]
+    differs = jnp.zeros(c.shape, dtype=jnp.bool_)
+    vote = jnp.zeros(c.shape, dtype=jnp.int32)
+    fast = jnp.zeros(c.shape, dtype=jnp.bool_)
+    for fwd, bwd in shifts:
+        differs = differs | (fwd != c) | (bwd != c)
+        vote = vote + jnp.where(fwd != c, jnp.sign(fwd - c), 0)
+        vote = vote + jnp.where(bwd != c, jnp.sign(bwd - c), 0)
+        fast = fast | (jnp.abs(fwd - bwd) >= 2)
+    mask_ref[...] = differs.astype(jnp.int32)
+    sign_ref[...] = jnp.where(differs & ~fast, jnp.sign(vote), 0).astype(jnp.int32)
+
+
+def _boundary2d_kernel(q_ref, mask_ref, sign_ref):
+    q = q_ref[...]
+    c = q[1:-1, 1:-1]
+    shifts = [
+        (q[2:, 1:-1], q[:-2, 1:-1]),
+        (q[1:-1, 2:], q[1:-1, :-2]),
+    ]
+    differs = jnp.zeros(c.shape, dtype=jnp.bool_)
+    vote = jnp.zeros(c.shape, dtype=jnp.int32)
+    fast = jnp.zeros(c.shape, dtype=jnp.bool_)
+    for fwd, bwd in shifts:
+        differs = differs | (fwd != c) | (bwd != c)
+        vote = vote + jnp.where(fwd != c, jnp.sign(fwd - c), 0)
+        vote = vote + jnp.where(bwd != c, jnp.sign(bwd - c), 0)
+        fast = fast | (jnp.abs(fwd - bwd) >= 2)
+    mask_ref[...] = differs.astype(jnp.int32)
+    sign_ref[...] = jnp.where(differs & ~fast, jnp.sign(vote), 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def boundary_sign_3d(q_padded):
+    """3D stencil over an ``i32[(B+2)³]`` padded block → two ``i32[B³]``."""
+    p = q_padded.shape[0]
+    assert q_padded.shape == (p, p, p), "cubic padded block expected"
+    b = p - 2
+    return pl.pallas_call(
+        _boundary3d_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, b, b), jnp.int32),
+            jax.ShapeDtypeStruct((b, b, b), jnp.int32),
+        ],
+        interpret=True,
+    )(q_padded)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def boundary_sign_2d(q_padded):
+    """2D stencil over an ``i32[(B+2)²]`` padded block → two ``i32[B²]``."""
+    p = q_padded.shape[0]
+    assert q_padded.shape == (p, p), "square padded block expected"
+    b = p - 2
+    return pl.pallas_call(
+        _boundary2d_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, b), jnp.int32),
+            jax.ShapeDtypeStruct((b, b), jnp.int32),
+        ],
+        interpret=True,
+    )(q_padded)

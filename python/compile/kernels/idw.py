@@ -1,0 +1,76 @@
+"""Inverse-distance-weighted compensation kernel (paper Alg. 4 step E).
+
+Computes ``out = dq + w(d1, d2) * s * eta_eps`` elementwise, where the
+IDW weight follows the Rust reference semantics exactly
+(`rust/src/mitigation/interpolate.rs::idw_weight`):
+
+* ``d < 0`` encodes "no boundary anywhere" (the Rust side maps its
+  integer INF squared-distances to −1.0 before crossing the PJRT
+  boundary, avoiding inf/inf NaNs);
+* ``d1 < 0``  → w = 0 (no quantization boundary → no compensation);
+* ``d1 == 0`` → w = 1 (on B₁);
+* ``d2 < 0``  → w = 1 (no sign-flip boundary: take the boundary value);
+* ``d2 == 0`` → w = 0 (on B₂);
+* otherwise    w = d2 / (d1 + d2).
+
+TPU shaping: the flat vector is viewed as (rows, 128) lanes and tiled in
+blocks of ``BLOCK_ROWS`` rows; with 5 operands resident that is
+5·64·128·4 B = 160 KiB of VMEM per grid step — far under the ~16 MiB
+budget, leaving room for double-buffering (DESIGN.md §7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 64
+
+
+def _idw_kernel(dq_ref, d1_ref, d2_ref, s_ref, eta_ref, out_ref):
+    dq = dq_ref[...]
+    d1 = d1_ref[...]
+    d2 = d2_ref[...]
+    s = s_ref[...]
+    eta_eps = eta_ref[0, 0]
+    interior = d2 / (d1 + d2)
+    w = jnp.where(
+        d1 < 0.0,
+        0.0,
+        jnp.where(
+            d1 == 0.0,
+            1.0,
+            jnp.where(d2 < 0.0, 1.0, jnp.where(d2 == 0.0, 0.0, interior)),
+        ),
+    )
+    out_ref[...] = dq + w * s * eta_eps
+
+
+@functools.partial(jax.jit, static_argnames=())
+def idw_compensate(dq, d1, d2, s, eta_eps):
+    """Compensate a flat f32 vector. Length must be a multiple of
+    ``LANES * BLOCK_ROWS`` (the AOT artifact uses 65536)."""
+    n = dq.shape[0]
+    assert n % (LANES * BLOCK_ROWS) == 0, f"length {n} not tileable"
+    rows = n // LANES
+    grid = rows // BLOCK_ROWS
+    block = (BLOCK_ROWS, LANES)
+    spec = pl.BlockSpec(block, lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _idw_kernel,
+        grid=(grid,),
+        in_specs=[spec, spec, spec, spec, scalar_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(
+        dq.reshape(rows, LANES),
+        d1.reshape(rows, LANES),
+        d2.reshape(rows, LANES),
+        s.reshape(rows, LANES),
+        eta_eps.reshape(1, 1),
+    )
+    return out.reshape(n)

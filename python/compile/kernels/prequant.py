@@ -1,0 +1,50 @@
+"""Pre-quantization kernel (paper Eq. 1): ``q = round(d / 2ε)``,
+``dq = 2qε`` — the single lossy stage of every compressor in the repo.
+
+Note on rounding: XLA's ``round_nearest_even`` (what ``jnp.round``
+lowers to) differs from the Rust quantizer's round-half-away exactly on
+ties, which have measure zero for real data. The Rust compressors use
+the native quantizer for bit-exact streams; this kernel serves the
+demo/PJRT path and the L2 model.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 64
+
+
+def _prequant_kernel(d_ref, eps_ref, q_ref, dq_ref):
+    d = d_ref[...]
+    eps = eps_ref[0, 0]
+    qf = jnp.round(d / (2.0 * eps))
+    q_ref[...] = qf.astype(jnp.int32)
+    dq_ref[...] = qf * (2.0 * eps)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def prequant(d, eps):
+    """Quantize a flat f32 vector; returns ``(q_i32, dq_f32)``."""
+    n = d.shape[0]
+    assert n % (LANES * BLOCK_ROWS) == 0, f"length {n} not tileable"
+    rows = n // LANES
+    grid = rows // BLOCK_ROWS
+    block = (BLOCK_ROWS, LANES)
+    spec = pl.BlockSpec(block, lambda i: (i, 0))
+    scalar_spec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    q, dq = pl.pallas_call(
+        _prequant_kernel,
+        grid=(grid,),
+        in_specs=[spec, scalar_spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        ],
+        interpret=True,
+    )(d.reshape(rows, LANES), eps.reshape(1, 1))
+    return q.reshape(n), dq.reshape(n)

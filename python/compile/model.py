@@ -1,0 +1,70 @@
+"""Layer-2 JAX graphs: the compensation model composed from the Layer-1
+Pallas kernels. These are the functions ``aot.py`` lowers to HLO text
+for the Rust runtime; they also run directly under jit for the pytest
+cross-checks.
+
+The EDT (steps B/D of Alg. 4) deliberately stays in Rust: Maurer's scan
+is data-dependent sequential per line with a variable-length Voronoi
+stack — a poor fit for XLA's static dataflow (DESIGN.md §1). The graphs
+here are the elementwise/stencil stages that XLA fuses well:
+
+* :func:`compensate` — step E (IDW weight × sign × η·ε, added to data);
+* :func:`boundary_sign_3d` / :func:`boundary_sign_2d` — step A on a
+  ghost-padded block;
+* :func:`prequant` — the quantizer itself (Eq. 1), used by demos;
+* :func:`prequant_compensate` — fused quantize→compensate graph showing
+  the kernels compose into one XLA program (used by the L2 fusion test).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import boundary, idw
+from compile.kernels.prequant import prequant as _prequant_kernel
+
+
+def compensate(dq, d1, d2, s, eta_eps):
+    """Step E over flat f32 vectors (lengths fixed at lowering time)."""
+    return (idw.idw_compensate(dq, d1, d2, s, eta_eps),)
+
+
+def boundary_sign_3d(q_padded):
+    """Step A over a ghost-padded i32 cube."""
+    return boundary.boundary_sign_3d(q_padded)
+
+
+def boundary_sign_2d(q_padded):
+    """Step A over a ghost-padded i32 square."""
+    return boundary.boundary_sign_2d(q_padded)
+
+
+def prequant(d, eps):
+    """Eq. 1 over a flat f32 vector."""
+    return _prequant_kernel(d, eps)
+
+
+def prequant_compensate(d, d1, d2, s, eps, eta_eps):
+    """Fused graph: quantize, then compensate the quantized values —
+    lowers to a single XLA program (one artifact, zero host round-trips
+    between the stages)."""
+    _q, dq = _prequant_kernel(d, eps)
+    return (idw.idw_compensate(dq, d1, d2, s, eta_eps),)
+
+
+def lower_to_hlo_text(fn, *example_args):
+    """Lower a jitted function to HLO **text** — the interchange format
+    the Rust loader requires (jax ≥ 0.5 serialized protos use 64-bit ids
+    that xla_extension 0.5.1 rejects; the text parser reassigns ids)."""
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    """ShapeDtypeStruct shorthand for lowering."""
+    return jax.ShapeDtypeStruct(shape, dtype)

@@ -1,0 +1,106 @@
+"""Pallas IDW kernel vs pure-jnp oracle (+ semantic edge cases)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.idw import idw_compensate, BLOCK_ROWS, LANES
+from compile.kernels.ref import idw_compensate_ref
+
+CHUNK = BLOCK_ROWS * LANES  # 8192, smallest tileable length
+
+
+def run_both(dq, d1, d2, s, eta_eps):
+    dq = jnp.asarray(dq, jnp.float32)
+    d1 = jnp.asarray(d1, jnp.float32)
+    d2 = jnp.asarray(d2, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    eta = jnp.asarray(eta_eps, jnp.float32)
+    got = idw_compensate(dq, d1, d2, s, eta)
+    want = idw_compensate_ref(dq, d1, d2, s, eta)
+    return np.asarray(got), np.asarray(want)
+
+
+def random_case(rng, n):
+    dq = rng.uniform(-1.0, 1.0, n).astype(np.float32)
+    # distances: mixture of sentinel (-1), zero, and positive values
+    pick = rng.integers(0, 4, n)
+    dist = rng.uniform(0.5, 50.0, n).astype(np.float32)
+    d1 = np.where(pick == 0, -1.0, np.where(pick == 1, 0.0, dist)).astype(np.float32)
+    pick2 = rng.integers(0, 4, n)
+    d2 = np.where(pick2 == 0, -1.0, np.where(pick2 == 1, 0.0, dist[::-1])).astype(
+        np.float32
+    )
+    s = rng.integers(-1, 2, n).astype(np.float32)
+    return dq, d1, d2, s
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    dq, d1, d2, s = random_case(rng, CHUNK)
+    got, want = run_both(dq, d1, d2, s, 0.009)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_matches_ref_large_multiblock():
+    rng = np.random.default_rng(1)
+    dq, d1, d2, s = random_case(rng, CHUNK * 8)  # 65536 = AOT shape
+    got, want = run_both(dq, d1, d2, s, 0.5)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_edge_semantics():
+    # [on B1, on B2, no B1 anywhere, no B2 anywhere, equidistant]
+    dq = np.zeros(CHUNK, np.float32)
+    d1 = np.full(CHUNK, 4.0, np.float32)
+    d2 = np.full(CHUNK, 4.0, np.float32)
+    s = np.ones(CHUNK, np.float32)
+    d1[0], d2[0] = 0.0, 7.0  # on B1 -> w=1
+    d1[1], d2[1] = 7.0, 0.0  # on B2 -> w=0
+    d1[2], d2[2] = -1.0, 3.0  # no boundary -> w=0
+    d1[3], d2[3] = 3.0, -1.0  # no sign-flip -> w=1
+    got, want = run_both(dq, d1, d2, s, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert got[0] == pytest.approx(1.0)
+    assert got[1] == pytest.approx(0.0)
+    assert got[2] == pytest.approx(0.0)
+    assert got[3] == pytest.approx(1.0)
+    assert got[4] == pytest.approx(0.5)  # equidistant
+
+
+def test_zero_sign_is_identity():
+    rng = np.random.default_rng(2)
+    dq, d1, d2, _ = random_case(rng, CHUNK)
+    got, _ = run_both(dq, d1, d2, np.zeros(CHUNK, np.float32), 0.9)
+    np.testing.assert_array_equal(got, dq)
+
+
+def test_compensation_bounded_by_eta_eps():
+    rng = np.random.default_rng(3)
+    dq, d1, d2, s = random_case(rng, CHUNK)
+    eta_eps = 0.0123
+    got, _ = run_both(dq, d1, d2, s, eta_eps)
+    # f32 addition of dq + c re-rounds at ulp(dq), so allow ~1 ulp of |dq|
+    assert np.max(np.abs(got - dq)) <= eta_eps * (1 + 1e-6) + 2e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 4),
+    eta_eps=st.floats(1e-6, 10.0, allow_nan=False),
+)
+def test_hypothesis_matches_ref(seed, blocks, eta_eps):
+    rng = np.random.default_rng(seed)
+    dq, d1, d2, s = random_case(rng, CHUNK * blocks)
+    got, want = run_both(dq, d1, d2, s, eta_eps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_untileable_length_rejected():
+    with pytest.raises(AssertionError):
+        idw_compensate(
+            jnp.zeros(100), jnp.zeros(100), jnp.zeros(100), jnp.zeros(100),
+            jnp.float32(1.0),
+        )

@@ -1,0 +1,51 @@
+"""Layer-2 model composition + AOT lowering checks: the fused graph is
+numerically consistent with its stages, every artifact lowers to valid
+HLO text, and VMEM budgets hold."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_fused_graph_matches_staged():
+    rng = np.random.default_rng(0)
+    n = aot.FLAT_N
+    d = jnp.asarray(rng.uniform(-2, 2, n), jnp.float32)
+    dist = jnp.asarray(rng.uniform(0.5, 20, n), jnp.float32)
+    dist2 = jnp.asarray(rng.uniform(0.5, 20, n), jnp.float32)
+    s = jnp.asarray(rng.integers(-1, 2, n), jnp.float32)
+    eps = jnp.float32(0.01)
+    eta_eps = jnp.float32(0.009)
+
+    _q, dq = model.prequant(d, eps)
+    staged = model.compensate(dq, dist, dist2, s, eta_eps)[0]
+    fused = model.prequant_compensate(d, dist, dist2, s, eps, eta_eps)[0]
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(staged), rtol=1e-6)
+
+
+def test_all_artifacts_lower_to_hlo_text():
+    for name, fn, specs, vmem in aot.artifacts():
+        assert vmem <= aot.VMEM_BUDGET, name
+        text = model.lower_to_hlo_text(fn, *specs)
+        assert text.startswith("HloModule"), f"{name}: not HLO text"
+        assert "ROOT" in text, f"{name}: no root instruction"
+        # interpret-mode pallas must not leave custom-calls the CPU
+        # plugin cannot run
+        assert "mosaic" not in text.lower(), f"{name}: mosaic custom call"
+
+
+def test_artifact_names_match_rust_contract():
+    names = {name for name, *_ in aot.artifacts()}
+    assert {
+        "idw_65536",
+        "prequant_65536",
+        "boundary3d_64",
+        "boundary2d_256",
+        "fused_65536",
+    } <= names
+
+
+def test_flat_kernels_have_zero_padding_waste():
+    # bytes-moved / bytes-useful == 1 for full chunks (DESIGN.md §7)
+    assert aot.FLAT_N % (64 * 128) == 0

@@ -1,0 +1,61 @@
+"""Pallas pre-quantization kernel vs oracle + the error-bound invariant
+(Eq. 1 guarantees |d − dq| ≤ ε)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prequant import prequant, BLOCK_ROWS, LANES
+from compile.kernels.ref import prequant_ref
+
+CHUNK = BLOCK_ROWS * LANES
+
+
+def run_both(d, eps):
+    d = jnp.asarray(d, jnp.float32)
+    e = jnp.asarray(eps, jnp.float32)
+    q, dq = prequant(d, e)
+    q_ref, dq_ref = prequant_ref(d, e)
+    return (np.asarray(q), np.asarray(dq)), (np.asarray(q_ref), np.asarray(dq_ref))
+
+
+def test_matches_ref():
+    rng = np.random.default_rng(0)
+    d = rng.uniform(-5, 5, CHUNK).astype(np.float32)
+    (q, dq), (q_ref, dq_ref) = run_both(d, 0.01)
+    np.testing.assert_array_equal(q, q_ref)
+    np.testing.assert_allclose(dq, dq_ref, rtol=1e-7)
+
+
+def test_error_bound_invariant():
+    rng = np.random.default_rng(1)
+    d = rng.uniform(-100, 100, CHUNK).astype(np.float32)
+    eps = 0.37
+    (_, dq), _ = run_both(d, eps)
+    err = np.max(np.abs(d - dq))
+    assert err <= eps * (1 + 1e-5), err
+
+
+def test_reconstruction_is_2qeps():
+    rng = np.random.default_rng(2)
+    d = rng.uniform(-1, 1, CHUNK).astype(np.float32)
+    eps = 0.05
+    (q, dq), _ = run_both(d, eps)
+    np.testing.assert_allclose(dq, q.astype(np.float64) * 2 * eps, rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    eps=st.floats(1e-4, 10.0, allow_nan=False),
+    scale=st.floats(0.1, 1e4),
+)
+def test_hypothesis_bound_and_ref(seed, eps, scale):
+    rng = np.random.default_rng(seed)
+    d = (rng.uniform(-1, 1, CHUNK) * scale).astype(np.float32)
+    (q, dq), (q_ref, dq_ref) = run_both(d, eps)
+    np.testing.assert_array_equal(q, q_ref)
+    np.testing.assert_allclose(dq, dq_ref, rtol=1e-6, atol=1e-7)
+    # error bound with f32 slack proportional to the magnitudes involved
+    slack = 1e-5 * (scale + np.abs(dq).max())
+    assert np.max(np.abs(d - dq)) <= eps * (1 + 1e-5) + slack

@@ -1,0 +1,67 @@
+//! Fig. 5 — rate-distortion with SSIM: EB→SSIM and bit-rate→SSIM curves
+//! for cuSZ-like and cuSZp2-like on the four small-scale dataset
+//! analogs, comparing quantized / Gaussian / uniform / Wiener / ours.
+//!
+//! Shape checks (paper §VIII-D): ours never degrades SSIM meaningfully,
+//! improves most at moderate-to-large ε, and the largest gains appear on
+//! the smooth-plateau (S3D-like) data.
+
+use qai::bench_support::rd::{method_value, sweep};
+use qai::bench_support::tables::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let points = sweep(quick);
+
+    let mut table = Table::new(&[
+        "codec", "dataset", "rel_eb", "bits/val", "SSIM_q", "SSIM_gauss", "SSIM_unif",
+        "SSIM_wien", "SSIM_ours", "gain%",
+    ]);
+    let mut max_gain = f64::NEG_INFINITY;
+    let mut max_gain_at = (String::new(), 0.0);
+    let mut degradations = 0usize;
+    for p in &points {
+        let q = method_value(p, "quantized", true);
+        let ours = method_value(p, "ours", true);
+        let gain = (ours - q) / q.abs().max(1e-12) * 100.0;
+        if gain > max_gain {
+            max_gain = gain;
+            max_gain_at = (format!("{}/{}", p.codec, p.dataset), p.rel_eb);
+        }
+        if gain < -0.5 {
+            degradations += 1;
+        }
+        table.row(&[
+            p.codec.into(),
+            p.dataset.into(),
+            format!("{:.0e}", p.rel_eb),
+            format!("{:.3}", p.bit_rate),
+            format!("{q:.4}"),
+            format!("{:.4}", method_value(p, "gaussian", true)),
+            format!("{:.4}", method_value(p, "uniform", true)),
+            format!("{:.4}", method_value(p, "wiener", true)),
+            format!("{ours:.4}"),
+            format!("{gain:+.2}"),
+        ]);
+    }
+    table.print("Fig. 5: rate-distortion (SSIM)");
+    println!(
+        "\nlargest SSIM gain: {max_gain:+.2}% at {} ε={:.0e}",
+        max_gain_at.0, max_gain_at.1
+    );
+    assert!(max_gain > 0.3, "expected a visible SSIM gain somewhere in the sweep");
+    assert!(
+        degradations <= points.len() / 10,
+        "ours degraded SSIM in {degradations}/{} cells",
+        points.len()
+    );
+
+    // ε→SSIM series for one representative panel (S3D-like / cuSZ).
+    let series: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|p| p.codec == "cuSZ" && p.dataset == "S3D")
+        .map(|p| (p.rel_eb, method_value(p, "ours", true)))
+        .collect();
+    qai::bench_support::tables::print_series("S3D/cuSZ: ε vs SSIM (ours)", "rel_eb", "SSIM", &series);
+    println!("\nfig5_rd_ssim: OK");
+}

@@ -1,0 +1,52 @@
+//! Fig. 6 — rate-distortion with PSNR: the paper's claim is that the
+//! compensation improves SSIM *without degrading PSNR* (usually
+//! improving it), while Gaussian/uniform filtering can cost many dB.
+
+use qai::bench_support::rd::{method_value, sweep};
+use qai::bench_support::tables::Table;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let points = sweep(quick);
+
+    let mut table = Table::new(&[
+        "codec", "dataset", "rel_eb", "bits/val", "PSNR_q", "PSNR_gauss", "PSNR_unif",
+        "PSNR_wien", "PSNR_ours", "dPSNR",
+    ]);
+    let mut big_drops = 0usize;
+    let mut gauss_costly = 0usize;
+    for p in &points {
+        let q = method_value(p, "quantized", false);
+        let ours = method_value(p, "ours", false);
+        let gauss = method_value(p, "gaussian", false);
+        if ours < q - 1.0 {
+            big_drops += 1;
+        }
+        if gauss < q - 3.0 {
+            gauss_costly += 1;
+        }
+        table.row(&[
+            p.codec.into(),
+            p.dataset.into(),
+            format!("{:.0e}", p.rel_eb),
+            format!("{:.3}", p.bit_rate),
+            format!("{q:.2}"),
+            format!("{gauss:.2}"),
+            format!("{:.2}", method_value(p, "uniform", false)),
+            format!("{:.2}", method_value(p, "wiener", false)),
+            format!("{ours:.2}"),
+            format!("{:+.2}", ours - q),
+        ]);
+    }
+    table.print("Fig. 6: rate-distortion (PSNR, dB)");
+    assert!(
+        big_drops <= points.len() / 10,
+        "ours dropped PSNR >1dB in {big_drops}/{} cells",
+        points.len()
+    );
+    assert!(gauss_costly > 0, "expected Gaussian to cost >3dB somewhere (paper's shape)");
+    println!(
+        "\nours: {big_drops} cells with >1dB PSNR loss; gaussian: {gauss_costly} cells with >3dB loss"
+    );
+    println!("fig6_rd_psnr: OK");
+}

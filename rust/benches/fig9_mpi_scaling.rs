@@ -1,0 +1,95 @@
+//! Fig. 9 — distributed-memory scaling of the three strategies, weak
+//! and strong, on the JHTDB-analog turbulence field.
+//!
+//! Substitution note (DESIGN.md §5): ranks are simulated on this host;
+//! per-rank compute is measured as thread CPU time and communication is
+//! modeled from the recorded per-message traffic (α+β·bytes with
+//! intra-node discount). Throughput = bytes / (slowest rank's compute +
+//! its modeled comm) — the paper's barrier-synchronized makespan. The
+//! Exact strategy additionally serializes the global EDT on the leader,
+//! which is what destroys its scaling, exactly as in the paper.
+
+use qai::bench_support::tables::Table;
+use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::quant::{quantize_grid, ErrorBound};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let strategies = [Strategy::Embarrassing, Strategy::Exact, Strategy::Approximate];
+
+    // ---- Weak scaling: 32³ per rank (scaled from the paper's 512³). --
+    let per_rank = 32usize;
+    let rank_counts: &[usize] = if quick { &[8, 27] } else { &[8, 27, 64] };
+    let mut table = Table::new(&[
+        "strategy", "ranks", "domain", "thr(MB/s)", "efficiency", "comm(KB)",
+    ]);
+    let mut weak_eff: Vec<(Strategy, f64)> = Vec::new();
+    for &strategy in &strategies {
+        let mut base_per_rank_thr = 0.0f64;
+        for &ranks in rank_counts {
+            let side = (ranks as f64).cbrt().round() as usize * per_rank;
+            let orig = generate(DatasetKind::TurbulenceLike, &[side, side, side], 77);
+            let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+            let (q, dq) = quantize_grid(&orig, eb);
+            let cfg = DistributedConfig { ranks, strategy, ..Default::default() };
+            let (_, rep) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+            let thr = rep.modeled_throughput_mbs(orig.len());
+            let per_rank_thr = thr / rep.ranks as f64;
+            if ranks == rank_counts[0] {
+                base_per_rank_thr = per_rank_thr;
+            }
+            let eff = per_rank_thr / base_per_rank_thr;
+            if ranks == *rank_counts.last().unwrap() {
+                weak_eff.push((strategy, eff));
+            }
+            table.row(&[
+                strategy.name().into(),
+                format!("{}", rep.ranks),
+                format!("{side}^3"),
+                format!("{thr:.1}"),
+                format!("{eff:.3}"),
+                format!("{:.1}", rep.total_bytes() as f64 / 1e3),
+            ]);
+        }
+    }
+    table.print("Fig. 9a: weak scaling (32³ per rank)");
+
+    // ---- Strong scaling: fixed domain split over more ranks. ---------
+    let side = if quick { 64 } else { 96 };
+    let orig = generate(DatasetKind::TurbulenceLike, &[side, side, side], 78);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    let mut table = Table::new(&["strategy", "ranks", "thr(MB/s)", "speedup", "efficiency"]);
+    for &strategy in &strategies {
+        let mut base_thr = 0.0f64;
+        for &ranks in rank_counts {
+            let cfg = DistributedConfig { ranks, strategy, ..Default::default() };
+            let (_, rep) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+            let thr = rep.modeled_throughput_mbs(orig.len());
+            if ranks == rank_counts[0] {
+                base_thr = thr;
+            }
+            let speedup = thr / base_thr;
+            let eff = speedup / (ranks as f64 / rank_counts[0] as f64);
+            table.row(&[
+                strategy.name().into(),
+                format!("{}", rep.ranks),
+                format!("{thr:.1}"),
+                format!("{speedup:.2}"),
+                format!("{eff:.3}"),
+            ]);
+        }
+    }
+    table.print(&format!("Fig. 9b: strong scaling ({side}³ total)"));
+
+    // Shape check: Exact scales worst in weak scaling.
+    let eff_exact = weak_eff.iter().find(|x| x.0 == Strategy::Exact).unwrap().1;
+    let eff_embar = weak_eff.iter().find(|x| x.0 == Strategy::Embarrassing).unwrap().1;
+    let eff_approx = weak_eff.iter().find(|x| x.0 == Strategy::Approximate).unwrap().1;
+    assert!(
+        eff_exact < eff_embar && eff_exact < eff_approx,
+        "exact must scale worst: exact={eff_exact:.3} embar={eff_embar:.3} approx={eff_approx:.3}"
+    );
+    println!("\nfig9_mpi_scaling: OK (Exact scales worst, Embarrassing/Approximate near-flat)");
+}

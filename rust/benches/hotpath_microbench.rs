@@ -1,0 +1,85 @@
+//! Hot-path microbenchmarks — the §Perf driver (DESIGN.md §9).
+//!
+//! Times each pipeline stage (A–E), the end-to-end pipeline, the EDT in
+//! isolation, the compressor codecs, and SSIM, on a 128³ block; prints
+//! MB/s so before/after optimization deltas are directly comparable
+//! (EXPERIMENTS.md §Perf records the iteration log).
+
+use qai::bench_support::harness::bench_fn;
+use qai::compressors::{cusz::CuszLike, cuszp::CuszpLike, szp::SzpLike, Compressor};
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::metrics::ssim;
+use qai::mitigation::boundary::boundary_and_sign;
+use qai::mitigation::edt::edt;
+use qai::mitigation::interpolate::compensate;
+use qai::mitigation::pipeline::{mitigate_with_stats, MitigationConfig};
+use qai::mitigation::sign::propagate_signs;
+use qai::quant::{quantize_grid, ErrorBound};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let side = if quick { 64 } else { 128 };
+    let (warm, samp) = if quick { (1, 3) } else { (2, 5) };
+    let dims = [side, side, side];
+    let n = side * side * side;
+    let bytes = n * 4;
+
+    let orig = generate(DatasetKind::MirandaLike, &dims, 1);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+
+    println!("== stage timings on {side}^3 ({:.1} MB) ==", bytes as f64 / 1e6);
+    let r = bench_fn("A: boundary_and_sign", warm, samp, || boundary_and_sign(&q, 1));
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    let bres = boundary_and_sign(&q, 1);
+    let r = bench_fn("B: EDT (with features)", warm, samp, || edt(&bres.mask, true, 1));
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    let e1 = edt(&bres.mask, true, 1);
+    let nearest = e1.nearest.as_ref().unwrap();
+    let r = bench_fn("C: propagate_signs + B2", warm, samp, || {
+        propagate_signs(&bres.mask, &bres.sign, nearest, 1)
+    });
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    let (s, b2) = propagate_signs(&bres.mask, &bres.sign, nearest, 1);
+    let r = bench_fn("D: EDT (no features)", warm, samp, || edt(&b2, false, 1));
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    let e2 = edt(&b2, false, 1);
+    let r = bench_fn("E: compensate", warm, samp, || {
+        let mut data = dq.data.clone();
+        compensate(&mut data, &e1.dist_sq, &e2.dist_sq, &s.data, 0.9 * eb.abs, 1);
+        data
+    });
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    let r = bench_fn("pipeline end-to-end", warm, samp, || {
+        mitigate_with_stats(&dq, &q, eb, &MitigationConfig::default()).unwrap()
+    });
+    println!("   -> {:.1} MB/s (paper §Perf target: >= ~10 MB/s/rank class)", r.mbs(bytes));
+
+    println!("\n== substrate timings ==");
+    let r = bench_fn("cuSZ-like compress", warm, samp, || CuszLike.compress(&orig, eb).unwrap());
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+    let stream = CuszLike.compress(&orig, eb).unwrap();
+    let r = bench_fn("cuSZ-like decompress", warm, samp, || CuszLike.decompress(&stream).unwrap());
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+    let r = bench_fn("cuSZp2-like compress", warm, samp, || CuszpLike.compress(&orig, eb).unwrap());
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+    let stream_p = CuszpLike.compress(&orig, eb).unwrap();
+    let r =
+        bench_fn("cuSZp2-like decompress", warm, samp, || CuszpLike.decompress(&stream_p).unwrap());
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+    let stream_s = SzpLike::default().compress(&orig, eb).unwrap();
+    let r = bench_fn("SZp-like decompress", warm, samp, || {
+        SzpLike::default().decompress(&stream_s).unwrap()
+    });
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+    let dec = CuszLike.decompress(&stream).unwrap();
+    let r = bench_fn("SSIM (w=7, s=2)", warm, samp, || ssim(&orig, &dec.grid, 7, 2));
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    println!("\nhotpath_microbench: OK");
+}

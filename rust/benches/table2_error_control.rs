@@ -1,0 +1,61 @@
+//! Table II — maximum relative error after Gaussian / uniform / Wiener
+//! filtering vs our compensation, at ε = 1e-3, against the relaxed
+//! bound (1+η)ε = 1.9e-3. The paper's claim: smoothing filters can
+//! violate the relaxed bound (by orders of magnitude near fronts),
+//! Wiener usually behaves but has no guarantee, ours is *always* within.
+
+use qai::bench_support::tables::Table;
+use qai::compressors::{cusz::CuszLike, Compressor};
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::filters::{gaussian_filter, uniform_filter, wiener_filter};
+use qai::metrics::max_rel_error;
+use qai::mitigation::{mitigate, MitigationConfig};
+use qai::quant::ErrorBound;
+
+fn main() {
+    let rel = 1e-3;
+    let relaxed = 1.9e-3;
+    let cases: Vec<(&str, DatasetKind, Vec<usize>, u64)> = vec![
+        ("CESM/f0", DatasetKind::ClimateLike, vec![256, 512], 10),
+        ("CESM/f1", DatasetKind::ClimateLike, vec![256, 512], 11),
+        ("Hurricane/f0", DatasetKind::HurricaneLike, vec![50, 100, 100], 12),
+        ("Hurricane/f1", DatasetKind::HurricaneLike, vec![50, 100, 100], 13),
+        ("NYX/f0", DatasetKind::CosmologyLike, vec![64, 64, 64], 14),
+        ("NYX/f1", DatasetKind::CosmologyLike, vec![64, 64, 64], 15),
+        ("S3D/f0", DatasetKind::CombustionLike, vec![64, 64, 64], 16),
+        ("S3D/f1", DatasetKind::CombustionLike, vec![64, 64, 64], 17),
+    ];
+
+    let mut table =
+        Table::new(&["dataset/field", "Gaussian", "Uniform", "Wiener", "Ours", "ours<=1.9e-3"]);
+    let mut any_filter_violates = false;
+    for (name, kind, dims, seed) in cases {
+        let orig = generate(kind, &dims, seed);
+        let eb = ErrorBound::relative(rel).resolve(&orig.data);
+        let dec = CuszLike.decompress(&CuszLike.compress(&orig, eb).unwrap()).unwrap();
+
+        let e_gauss = max_rel_error(&orig.data, &gaussian_filter(&dec.grid, 1.0).data);
+        let e_unif = max_rel_error(&orig.data, &uniform_filter(&dec.grid).data);
+        let e_wien = max_rel_error(&orig.data, &wiener_filter(&dec.grid, eb.abs).data);
+        let ours = mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
+        let e_ours = max_rel_error(&orig.data, &ours.data);
+
+        any_filter_violates |= e_gauss > relaxed || e_unif > relaxed;
+        let ok = e_ours <= relaxed * (1.0 + 1e-5);
+        assert!(ok, "{name}: ours violated the relaxed bound: {e_ours}");
+        table.row(&[
+            name.into(),
+            format!("{e_gauss:.4}"),
+            format!("{e_unif:.4}"),
+            format!("{e_wien:.4}"),
+            format!("{e_ours:.4}"),
+            format!("{ok}"),
+        ]);
+    }
+    table.print("Table II: maximum relative error after compensation (ε = 1e-3)");
+    assert!(
+        any_filter_violates,
+        "expected at least one smoothing-filter violation of the relaxed bound"
+    );
+    println!("\ntable2_error_control: OK (ours always within (1+η)ε; smoothers violate)");
+}

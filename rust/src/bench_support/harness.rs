@@ -1,0 +1,88 @@
+//! Minimal statistical timing harness: warmup + N samples, reporting
+//! mean / stddev / min, used by every `cargo bench` target.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Number of measured samples.
+    pub samples: usize,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    /// Sample standard deviation (seconds).
+    pub stddev: f64,
+    /// Fastest sample (seconds).
+    pub min: f64,
+}
+
+impl BenchResult {
+    /// Mean throughput in MB/s for `bytes` processed per iteration.
+    pub fn mbs(&self, bytes: usize) -> f64 {
+        bytes as f64 / 1e6 / self.mean.max(1e-12)
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>10.4} ms ±{:>8.4} ms (min {:>10.4} ms, n={})",
+            self.name,
+            self.mean * 1e3,
+            self.stddev * 1e3,
+            self.min * 1e3,
+            self.samples
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+/// Prints the summary line and returns it.
+pub fn bench_fn<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / samples as f64;
+    let var = if samples > 1 {
+        times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / (samples - 1) as f64
+    } else {
+        0.0
+    };
+    let result = BenchResult {
+        name: name.to_string(),
+        samples,
+        mean,
+        stddev: var.sqrt(),
+        min: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    println!("{result}");
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_statistics() {
+        let r = bench_fn("noop", 1, 5, || 1 + 1);
+        assert_eq!(r.samples, 5);
+        assert!(r.mean >= 0.0 && r.min <= r.mean + 1e-12);
+    }
+
+    #[test]
+    fn throughput_computation() {
+        let r = BenchResult { name: "x".into(), samples: 1, mean: 0.5, stddev: 0.0, min: 0.5 };
+        assert_eq!(r.mbs(1_000_000), 2.0);
+    }
+}

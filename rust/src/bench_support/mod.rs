@@ -1,0 +1,9 @@
+//! Offline benchmark harness (criterion replacement, DESIGN.md §10) and
+//! table/series printers shared by the per-figure benches.
+
+pub mod harness;
+pub mod rd;
+pub mod tables;
+
+pub use harness::{bench_fn, BenchResult};
+pub use tables::{print_series, print_table, Table};

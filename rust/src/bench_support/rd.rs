@@ -1,0 +1,93 @@
+//! Shared rate-distortion sweep machinery for the Fig. 5/6 benches:
+//! for each (codec, dataset, ε) cell, compress → decompress → apply each
+//! mitigation method → record bit-rate + SSIM + PSNR.
+
+use crate::compressors::{cusz::CuszLike, cuszp::CuszpLike, Compressor};
+use crate::data::synthetic::{generate, DatasetKind};
+use crate::filters::{gaussian_filter, uniform_filter, wiener_filter};
+use crate::metrics::{bit_rate, psnr, ssim};
+use crate::mitigation::{mitigate, MitigationConfig};
+use crate::quant::ErrorBound;
+
+/// One rate-distortion measurement cell.
+#[derive(Debug, Clone)]
+pub struct RdPoint {
+    /// Codec name.
+    pub codec: &'static str,
+    /// Dataset paper name.
+    pub dataset: &'static str,
+    /// Value-range-relative error bound.
+    pub rel_eb: f64,
+    /// Bits per value of the compressed stream.
+    pub bit_rate: f64,
+    /// (method name, ssim, psnr) per mitigation method.
+    pub methods: Vec<(&'static str, f64, f64)>,
+}
+
+/// The paper's small-scale dataset configurations, scaled to this host.
+pub fn small_scale_cases() -> Vec<(DatasetKind, Vec<usize>, u64)> {
+    vec![
+        (DatasetKind::ClimateLike, vec![256, 512], 20),
+        (DatasetKind::HurricaneLike, vec![50, 100, 100], 21),
+        (DatasetKind::CosmologyLike, vec![64, 64, 64], 22),
+        (DatasetKind::CombustionLike, vec![64, 64, 64], 23),
+    ]
+}
+
+/// The ε sweep of Figs. 5/6.
+pub const EB_SWEEP: [f64; 5] = [1e-3, 2e-3, 5e-3, 1e-2, 2e-2];
+
+/// Run the full sweep. `quick` limits to 3 bounds for smoke runs.
+pub fn sweep(quick: bool) -> Vec<RdPoint> {
+    let codecs: Vec<(&'static str, Box<dyn Compressor>)> =
+        vec![("cuSZ", Box::new(CuszLike)), ("cuSZp2", Box::new(CuszpLike))];
+    let bounds: Vec<f64> =
+        if quick { vec![1e-3, 1e-2, 2e-2] } else { EB_SWEEP.to_vec() };
+
+    let mut out = Vec::new();
+    for (codec_name, codec) in &codecs {
+        for (kind, dims, seed) in small_scale_cases() {
+            let orig = generate(kind, &dims, seed);
+            for &rel in &bounds {
+                let eb = ErrorBound::relative(rel).resolve(&orig.data);
+                let stream = codec.compress(&orig, eb).unwrap();
+                let dec = codec.decompress(&stream).unwrap();
+
+                let ours =
+                    mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
+                let gauss = gaussian_filter(&dec.grid, 1.0);
+                let unif = uniform_filter(&dec.grid);
+                let wien = wiener_filter(&dec.grid, eb.abs);
+
+                let eval = |g: &crate::Grid<f32>| {
+                    (ssim(&orig, g, 7, 2), psnr(&orig.data, &g.data))
+                };
+                let methods = vec![
+                    ("quantized", eval(&dec.grid).0, eval(&dec.grid).1),
+                    ("gaussian", eval(&gauss).0, eval(&gauss).1),
+                    ("uniform", eval(&unif).0, eval(&unif).1),
+                    ("wiener", eval(&wien).0, eval(&wien).1),
+                    ("ours", eval(&ours).0, eval(&ours).1),
+                ];
+                out.push(RdPoint {
+                    codec: codec_name,
+                    dataset: kind.paper_name(),
+                    rel_eb: rel,
+                    bit_rate: bit_rate(stream.len(), orig.len()),
+                    methods,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Method value accessor.
+pub fn method_value(p: &RdPoint, method: &str, use_ssim: bool) -> f64 {
+    let (_, s, ps) = p.methods.iter().find(|(m, _, _)| *m == method).unwrap();
+    if use_ssim {
+        *s
+    } else {
+        *ps
+    }
+}

@@ -1,0 +1,156 @@
+//! Hand-rolled CLI argument parsing (no `clap` offline — DESIGN.md §10).
+//!
+//! Supports `--flag value`, `--flag=value` and boolean `--flag` forms,
+//! plus positional arguments, with typed accessors and an
+//! unknown-flag check so typos fail loudly.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (exclude argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                anyhow::ensure!(!rest.is_empty(), "bare `--` is not supported");
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().is_some_and(|next| !next.starts_with("--")) {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// String flag.
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.get(key).cloned()
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string flag.
+    pub fn require(&self, key: &str) -> Result<String> {
+        self.get(key).with_context(|| format!("missing required flag --{key}"))
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow::anyhow!("--{key} {s}: {e}")),
+        }
+    }
+
+    /// Boolean flag (present or `=true`).
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key).as_deref(), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error on flags nobody consumed (call after all `get*`s).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !consumed.contains(k)).collect();
+        anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
+        Ok(())
+    }
+}
+
+/// Parse a `AxBxC` dims string into a dims vector.
+pub fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    let dims: Vec<usize> = s
+        .split(['x', 'X', ','])
+        .map(|t| t.trim().parse::<usize>().with_context(|| format!("bad dim {t:?}")))
+        .collect::<Result<_>>()?;
+    anyhow::ensure!((1..=3).contains(&dims.len()), "need 1-3 dims, got {}", dims.len());
+    anyhow::ensure!(dims.iter().all(|&d| d > 0), "dims must be positive");
+    Ok(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["compress", "--rel", "1e-3", "--codec=cusz", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("compress"));
+        assert_eq!(a.get("rel").as_deref(), Some("1e-3"));
+        assert_eq!(a.get("codec").as_deref(), Some("cusz"));
+        assert!(a.get_bool("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn typed_and_defaults() {
+        let a = parse(&["x", "--threads", "8"]);
+        assert_eq!(a.get_parse::<usize>("threads", 1).unwrap(), 8);
+        assert_eq!(a.get_parse::<f64>("eta", 0.9).unwrap(), 0.9);
+        assert_eq!(a.get_or("codec", "cusz"), "cusz");
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse(&["x", "--oops", "1"]);
+        let _ = a.get("threads");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        let a = parse(&["x"]);
+        assert!(a.require("input").is_err());
+    }
+
+    #[test]
+    fn dims_parser() {
+        assert_eq!(parse_dims("512x512").unwrap(), vec![512, 512]);
+        assert_eq!(parse_dims("100,500,500").unwrap(), vec![100, 500, 500]);
+        assert!(parse_dims("1x2x3x4").is_err());
+        assert!(parse_dims("0x5").is_err());
+        assert!(parse_dims("axb").is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["run", "file1", "file2", "--k", "v"]);
+        assert_eq!(a.positionals(), &["file1".to_string(), "file2".to_string()]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Bit-granular I/O over byte buffers: the substrate for Huffman coding
+//! and the fixed-length bit-packing in cuSZp/SZp.
+//!
+//! Bits are written MSB-first within each byte, matching the order most
+//! entropy-coder literature (and the SZ family) uses.
+
+/// MSB-first bit writer over a growable byte buffer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits already used in the trailing partial byte (0..8).
+    nbits: u32,
+}
+
+impl BitWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n` bits of `value` (n ≤ 64), MSB of the field first.
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        debug_assert!(n == 64 || value < (1u64 << n), "value {value} wider than {n} bits");
+        let mut rem = n;
+        while rem > 0 {
+            if self.nbits == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.nbits;
+            let take = free.min(rem);
+            let shift = rem - take;
+            let bits = ((value >> shift) & ((1u64 << take) - 1)) as u8;
+            let last = self.buf.last_mut().unwrap();
+            *last |= bits << (free - take);
+            self.nbits = (self.nbits + take) % 8;
+            rem -= take;
+        }
+    }
+
+    /// Append one bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 - if self.nbits == 0 { 0 } else { (8 - self.nbits) as usize }
+    }
+
+    /// Finish and return the padded byte buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next bit position.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Reader over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (n ≤ 64) as the low bits of the result.
+    /// Returns `None` past the end of the buffer.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
+        if self.pos + n as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut rem = n;
+        while rem > 0 {
+            let byte = self.buf[self.pos / 8];
+            let bit_off = (self.pos % 8) as u32;
+            let avail = 8 - bit_off;
+            let take = avail.min(rem);
+            let bits = (byte >> (avail - take)) & ((1u16 << take) - 1) as u8;
+            out = (out << take) | bits as u64;
+            self.pos += take as usize;
+            rem -= take;
+        }
+        Some(out)
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read_bits(1).map(|b| b != 0)
+    }
+
+    /// Current bit position.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Skip to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        self.pos = self.pos.div_ceil(8) * 8;
+    }
+}
+
+/// Little-endian varint-free fixed encodings used in stream headers.
+pub mod bytes {
+    /// Append a u64 little-endian.
+    pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a u32 little-endian.
+    pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an f64 little-endian.
+    pub fn put_f64(buf: &mut Vec<u8>, v: f64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Read a u64 at `*off`, advancing it.
+    pub fn get_u64(buf: &[u8], off: &mut usize) -> anyhow::Result<u64> {
+        anyhow::ensure!(*off + 8 <= buf.len(), "stream truncated at u64");
+        let v = u64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+        *off += 8;
+        Ok(v)
+    }
+
+    /// Read a u32 at `*off`, advancing it.
+    pub fn get_u32(buf: &[u8], off: &mut usize) -> anyhow::Result<u32> {
+        anyhow::ensure!(*off + 4 <= buf.len(), "stream truncated at u32");
+        let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+        *off += 4;
+        Ok(v)
+    }
+
+    /// Read an f64 at `*off`, advancing it.
+    pub fn get_f64(buf: &[u8], off: &mut usize) -> anyhow::Result<f64> {
+        anyhow::ensure!(*off + 8 <= buf.len(), "stream truncated at f64");
+        let v = f64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+        *off += 8;
+        Ok(v)
+    }
+}
+
+/// ZigZag mapping: signed ↔ unsigned with small magnitudes staying small.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        assert_eq!(w.bit_len(), 10);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn multi_width_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_bits(0, 5);
+        w.write_bits(u64::MAX, 64);
+        w.write_bits(42, 7);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), Some(0b101));
+        assert_eq!(r.read_bits(16), Some(0xFFFF));
+        assert_eq!(r.read_bits(5), Some(0));
+        assert_eq!(r.read_bits(64), Some(u64::MAX));
+        assert_eq!(r.read_bits(7), Some(42));
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(8), Some(0b11000000));
+        assert_eq!(r.read_bits(1), None);
+    }
+
+    #[test]
+    fn msb_first_layout() {
+        let mut w = BitWriter::new();
+        w.write_bit(true); // bit 7 of byte 0
+        w.write_bits(0, 6);
+        w.write_bit(true); // bit 0 of byte 0
+        assert_eq!(w.into_bytes(), vec![0b1000_0001]);
+    }
+
+    #[test]
+    fn align_byte_skips_padding() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1, 1);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        r.read_bit();
+        r.align_byte();
+        assert_eq!(r.bit_pos(), 8);
+    }
+
+    #[test]
+    fn zigzag_roundtrip_property() {
+        prop_check("zigzag roundtrip", 200, |g| {
+            let v = (g.rng().next_u64() as i64) >> g.usize_in(0, 40);
+            assert_eq!(unzigzag(zigzag(v)), v);
+        });
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+    }
+
+    #[test]
+    fn random_streams_roundtrip_property() {
+        prop_check("bitio roundtrip", 60, |g| {
+            let n = g.usize_in(1, 200);
+            let items: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let w = g.usize_in(1, 64) as u32;
+                    let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+                    (g.rng().next_u64() & mask, w)
+                })
+                .collect();
+            let mut wtr = BitWriter::new();
+            for &(v, w) in &items {
+                wtr.write_bits(v, w);
+            }
+            let bytes = wtr.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for &(v, w) in &items {
+                assert_eq!(r.read_bits(w), Some(v));
+            }
+        });
+    }
+}

@@ -1,0 +1,207 @@
+//! cuSZ-like compressor [5]: pre-quantization → multidimensional Lorenzo
+//! prediction (lossless, over indices) → canonical Huffman coding with
+//! an outlier escape channel.
+//!
+//! This is a faithful CPU implementation of the cuSZ *pipeline*; the
+//! quantization-index field it produces is bit-identical to what the GPU
+//! version would produce for the same input and bound (pre-quantization
+//! decouples the stages — DESIGN.md §5), which is all the mitigation
+//! study depends on.
+
+use crate::compressors::bitio::{bytes, unzigzag, zigzag};
+use crate::compressors::{huffman, lorenzo, Compressor, Decompressed};
+use crate::data::grid::{Grid, Shape};
+use crate::quant::{dequantize, quantize, ResolvedBound};
+use anyhow::{Context, Result};
+
+/// Residual symbols at or beyond this value escape to the outlier array
+/// (cuSZ's "quant code radius" mechanism).
+const ESCAPE: u64 = 1 << 16;
+
+/// Stream magic.
+const MAGIC: u32 = 0x6355_535A; // "cUSZ"
+
+/// The cuSZ-like codec.
+#[derive(Debug, Clone, Default)]
+pub struct CuszLike;
+
+impl Compressor for CuszLike {
+    fn name(&self) -> &'static str {
+        "cuSZ-like"
+    }
+
+    fn compress(&self, grid: &Grid<f32>, eb: ResolvedBound) -> Result<Vec<u8>> {
+        let q = quantize(&grid.data, eb);
+        let qg = Grid::<i64> { shape: grid.shape, data: q };
+        let residuals = lorenzo::forward(&qg);
+
+        let mut symbols = Vec::with_capacity(residuals.len());
+        let mut outliers = Vec::new();
+        for &r in &residuals {
+            let zz = zigzag(r);
+            if zz < ESCAPE {
+                symbols.push(zz as u32);
+            } else {
+                symbols.push(ESCAPE as u32);
+                outliers.push(zz);
+            }
+        }
+        let payload = huffman::encode(&symbols);
+
+        let mut out = Vec::with_capacity(payload.len() + 64);
+        bytes::put_u32(&mut out, MAGIC);
+        write_header(&mut out, grid.shape, eb);
+        bytes::put_u64(&mut out, outliers.len() as u64);
+        for &o in &outliers {
+            bytes::put_u64(&mut out, o);
+        }
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    fn decompress(&self, buf: &[u8]) -> Result<Decompressed> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not a cuSZ-like stream");
+        let (shape, eb) = read_header(buf, &mut off)?;
+        let n_out = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(n_out <= shape.len(), "outlier count exceeds data size");
+        let mut outliers = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            outliers.push(bytes::get_u64(buf, &mut off)?);
+        }
+        let symbols = huffman::decode(&buf[off..]).context("huffman payload")?;
+        anyhow::ensure!(symbols.len() == shape.len(), "symbol count mismatch");
+
+        let mut next_outlier = 0usize;
+        let mut residuals = Vec::with_capacity(symbols.len());
+        for &s in &symbols {
+            let zz = if s as u64 == ESCAPE {
+                anyhow::ensure!(next_outlier < outliers.len(), "missing outlier");
+                let v = outliers[next_outlier];
+                next_outlier += 1;
+                v
+            } else {
+                s as u64
+            };
+            residuals.push(unzigzag(zz));
+        }
+        let qg = lorenzo::inverse(&residuals, shape);
+        let data = dequantize(&qg.data, eb);
+        let mut grid = Grid::from_vec(data, shape.user_dims());
+        grid.shape.ndim = shape.ndim;
+        Ok(Decompressed { grid, quant_indices: qg, bound: eb })
+    }
+}
+
+/// Serialize shape + bound (shared by the pre-quantization codecs).
+pub(crate) fn write_header(out: &mut Vec<u8>, shape: Shape, eb: ResolvedBound) {
+    out.push(shape.ndim as u8);
+    for &d in shape.user_dims() {
+        bytes::put_u64(out, d as u64);
+    }
+    bytes::put_f64(out, eb.abs);
+    match eb.rel {
+        Some(r) => {
+            out.push(1);
+            bytes::put_f64(out, r);
+        }
+        None => out.push(0),
+    }
+}
+
+/// Inverse of [`write_header`].
+pub(crate) fn read_header(buf: &[u8], off: &mut usize) -> Result<(Shape, ResolvedBound)> {
+    anyhow::ensure!(*off < buf.len(), "stream truncated at ndim");
+    let ndim = buf[*off] as usize;
+    *off += 1;
+    anyhow::ensure!((1..=3).contains(&ndim), "bad ndim {ndim}");
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        let d = bytes::get_u64(buf, off)? as usize;
+        anyhow::ensure!(d > 0 && d < (1 << 40), "bad dim {d}");
+        dims.push(d);
+    }
+    let abs = bytes::get_f64(buf, off)?;
+    anyhow::ensure!(abs > 0.0 && abs.is_finite(), "bad bound {abs}");
+    anyhow::ensure!(*off < buf.len(), "stream truncated at rel flag");
+    let has_rel = buf[*off] == 1;
+    *off += 1;
+    let rel = if has_rel { Some(bytes::get_f64(buf, off)?) } else { None };
+    Ok((Shape::new(&dims), ResolvedBound { abs, rel }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::metrics::max_abs_error;
+    use crate::quant::ErrorBound;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_preserves_indices_and_bound() {
+        let g = generate(DatasetKind::ClimateLike, &[64, 64], 3);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let c = CuszLike;
+        let stream = c.compress(&g, eb).unwrap();
+        let d = c.decompress(&stream).unwrap();
+        assert_eq!(d.grid.shape, g.shape);
+        assert!(max_abs_error(&g.data, &d.grid.data) <= eb.abs * (1.0 + 1e-9));
+        // indices must be exactly what quantize() produces
+        assert_eq!(d.quant_indices.data, quantize(&g.data, eb));
+        assert_eq!(d.bound.abs, eb.abs);
+        assert_eq!(d.bound.rel, Some(1e-3));
+    }
+
+    #[test]
+    fn smooth_fields_compress_well() {
+        let g = generate(DatasetKind::CombustionLike, &[32, 32, 32], 5);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let stream = CuszLike.compress(&g, eb).unwrap();
+        let ratio = (g.len() * 4) as f64 / stream.len() as f64;
+        assert!(ratio > 4.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn outlier_escape_path_roundtrips() {
+        // Spiky field forces residuals past the escape threshold.
+        let mut data = vec![0.0f32; 256];
+        for (i, v) in data.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *v = (i as f32) * 1e6;
+            }
+        }
+        let g = Grid::from_vec(data, &[16, 16]);
+        let eb = ErrorBound::absolute(0.5).resolve(&g.data);
+        let stream = CuszLike.compress(&g, eb).unwrap();
+        let d = CuszLike.decompress(&stream).unwrap();
+        assert_eq!(d.quant_indices.data, quantize(&g.data, eb));
+    }
+
+    #[test]
+    fn corrupt_stream_is_an_error() {
+        let g = generate(DatasetKind::ClimateLike, &[16, 16], 1);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let mut stream = CuszLike.compress(&g, eb).unwrap();
+        assert!(CuszLike.decompress(&stream[..8]).is_err());
+        stream[0] ^= 0xFF; // break magic
+        assert!(CuszLike.decompress(&stream).is_err());
+    }
+
+    #[test]
+    fn roundtrip_property_random_fields() {
+        prop_check("cusz roundtrip", 25, |g| {
+            let ndim = g.usize_in(1, 3);
+            let dims: Vec<usize> = (0..ndim).map(|_| g.usize_in(2, 12)).collect();
+            let n: usize = dims.iter().product();
+            let field = Grid::from_vec(g.smooth_field(n, 0.2), &dims);
+            let rel = *g.choose(&[1e-3, 1e-2, 1e-1]);
+            let eb = ErrorBound::relative(rel).resolve(&field.data);
+            let stream = CuszLike.compress(&field, eb).unwrap();
+            let d = CuszLike.decompress(&stream).unwrap();
+            assert_eq!(d.quant_indices.data, quantize(&field.data, eb));
+            assert!(max_abs_error(&field.data, &d.grid.data) <= eb.abs * (1.0 + 1e-9));
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! cuSZp2-like compressor [8,9]: pre-quantization → one-prior delta
+//! prediction → per-block fixed-length bit-packing.
+//!
+//! cuSZp trades ratio for extreme throughput: each fixed-size block is
+//! encoded independently (GPU thread-block granularity) with the block's
+//! first index stored raw, the remaining indices as zigzagged deltas
+//! packed at the block's maximal bit width. Constant blocks collapse to
+//! a single width-0 marker. Decompression is trivially block-parallel.
+
+use crate::compressors::bitio::{bytes, unzigzag, zigzag, BitReader, BitWriter};
+use crate::compressors::cusz::{read_header, write_header};
+use crate::compressors::{Compressor, Decompressed};
+use crate::data::grid::Grid;
+use crate::quant::{dequantize, quantize, QIndex, ResolvedBound};
+use anyhow::Result;
+
+/// Elements per independent block (cuSZp uses 32-thread × multi-element
+/// chunks; 256 keeps header overhead ≲ 3%).
+pub const BLOCK: usize = 256;
+
+/// Stream magic.
+const MAGIC: u32 = 0x6355_5A50; // "cUZP"
+
+/// The cuSZp2-like codec.
+#[derive(Debug, Clone, Default)]
+pub struct CuszpLike;
+
+impl Compressor for CuszpLike {
+    fn name(&self) -> &'static str {
+        "cuSZp2-like"
+    }
+
+    fn compress(&self, grid: &Grid<f32>, eb: ResolvedBound) -> Result<Vec<u8>> {
+        let q = quantize(&grid.data, eb);
+        let mut out = Vec::new();
+        bytes::put_u32(&mut out, MAGIC);
+        write_header(&mut out, grid.shape, eb);
+
+        let mut w = BitWriter::new();
+        for block in q.chunks(BLOCK) {
+            encode_block(block, &mut w);
+        }
+        let payload = w.into_bytes();
+        bytes::put_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    fn decompress(&self, buf: &[u8]) -> Result<Decompressed> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not a cuSZp2-like stream");
+        let (shape, eb) = read_header(buf, &mut off)?;
+        let payload_len = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(off + payload_len <= buf.len(), "stream truncated");
+        let mut r = BitReader::new(&buf[off..off + payload_len]);
+
+        let n = shape.len();
+        let mut q = Vec::with_capacity(n);
+        while q.len() < n {
+            let len = (n - q.len()).min(BLOCK);
+            decode_block(&mut r, len, &mut q)?;
+        }
+        let data = dequantize(&q, eb);
+        let mut grid = Grid::from_vec(data, shape.user_dims());
+        grid.shape.ndim = shape.ndim;
+        let mut qg = Grid::from_vec(q, shape.user_dims());
+        qg.shape.ndim = shape.ndim;
+        Ok(Decompressed { grid, quant_indices: qg, bound: eb })
+    }
+}
+
+/// Encode one block: `[first:i64][width:6][deltas: width bits each]`.
+/// A width of 0 means all deltas are 0 (constant block).
+fn encode_block(block: &[QIndex], w: &mut BitWriter) {
+    debug_assert!(!block.is_empty());
+    w.write_bits(block[0] as u64, 64);
+    let mut width = 0u32;
+    for t in 1..block.len() {
+        let zz = zigzag(block[t] - block[t - 1]);
+        width = width.max(64 - zz.leading_zeros());
+    }
+    w.write_bits(width as u64, 6);
+    if width == 0 {
+        return;
+    }
+    for t in 1..block.len() {
+        let zz = zigzag(block[t] - block[t - 1]);
+        w.write_bits(zz, width);
+    }
+}
+
+/// Decode one block of `len` indices, appending to `q`.
+fn decode_block(r: &mut BitReader<'_>, len: usize, q: &mut Vec<QIndex>) -> Result<()> {
+    let first = r.read_bits(64).ok_or_else(|| anyhow::anyhow!("truncated block header"))?;
+    let mut prev = first as i64;
+    q.push(prev);
+    let width = r.read_bits(6).ok_or_else(|| anyhow::anyhow!("truncated block width"))? as u32;
+    anyhow::ensure!(width <= 63, "invalid block width {width}");
+    for _ in 1..len {
+        let delta = if width == 0 {
+            0
+        } else {
+            let zz = r.read_bits(width).ok_or_else(|| anyhow::anyhow!("truncated deltas"))?;
+            unzigzag(zz)
+        };
+        prev += delta;
+        q.push(prev);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::metrics::max_abs_error;
+    use crate::quant::ErrorBound;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_exact_indices() {
+        let g = generate(DatasetKind::HurricaneLike, &[24, 24, 24], 9);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let c = CuszpLike;
+        let stream = c.compress(&g, eb).unwrap();
+        let d = c.decompress(&stream).unwrap();
+        assert_eq!(d.quant_indices.data, quantize(&g.data, eb));
+        assert!(max_abs_error(&g.data, &d.grid.data) <= eb.abs * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn constant_blocks_collapse() {
+        let g = Grid::from_vec(vec![1.0f32; 4096], &[64, 64]);
+        let eb = ErrorBound::absolute(0.1).resolve(&g.data);
+        let stream = CuszpLike.compress(&g, eb).unwrap();
+        // 16 blocks × (64-bit first + 6-bit width) ≈ 140 bytes + header
+        assert!(stream.len() < 250, "len={}", stream.len());
+        let d = CuszpLike.decompress(&stream).unwrap();
+        assert!(d.quant_indices.data.iter().all(|&v| v == d.quant_indices.data[0]));
+    }
+
+    #[test]
+    fn ratio_lower_than_cusz_on_smooth_data() {
+        // Fixed-length packing cannot beat entropy coding on smooth data —
+        // the paper's Fig. 5 bit-rate gap between cuSZ and cuSZp2.
+        use crate::compressors::cusz::CuszLike;
+        let g = generate(DatasetKind::CombustionLike, &[32, 32, 32], 2);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let a = CuszLike.compress(&g, eb).unwrap().len();
+        let b = CuszpLike.compress(&g, eb).unwrap().len();
+        assert!(b >= a, "cusz={a} cuszp={b}");
+    }
+
+    #[test]
+    fn tail_block_shorter_than_block_size() {
+        let n = BLOCK * 2 + 37;
+        let g = Grid::from_vec((0..n).map(|i| (i as f32).sin()).collect(), &[n]);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let stream = CuszpLike.compress(&g, eb).unwrap();
+        let d = CuszpLike.decompress(&stream).unwrap();
+        assert_eq!(d.quant_indices.data, quantize(&g.data, eb));
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        prop_check("cuszp roundtrip", 25, |g| {
+            let n = g.usize_in(1, 1500);
+            let field = Grid::from_vec(g.smooth_field(n, 0.4), &[n]);
+            let rel = *g.choose(&[1e-3, 1e-2]);
+            let eb = ErrorBound::relative(rel).resolve(&field.data);
+            let stream = CuszpLike.compress(&field, eb).unwrap();
+            let d = CuszpLike.decompress(&stream).unwrap();
+            assert_eq!(d.quant_indices.data, quantize(&field.data, eb));
+        });
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let g = generate(DatasetKind::ClimateLike, &[16, 16], 4);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let stream = CuszpLike.compress(&g, eb).unwrap();
+        assert!(CuszpLike.decompress(&stream[..stream.len() / 2]).is_err());
+    }
+}

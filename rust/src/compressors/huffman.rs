@@ -1,0 +1,293 @@
+//! Canonical Huffman codec over u32 symbols — the entropy stage of the
+//! cuSZ-like pipeline (cuSZ couples Lorenzo-predicted quantization codes
+//! with a Huffman coder [5], [51]).
+//!
+//! The code is *canonical*: only the per-symbol code lengths are stored
+//! in the stream; both sides rebuild identical codebooks from lengths.
+//! Decoding uses the canonical first-code/offset method (O(1) table
+//! walk per bit-length group), which is plenty fast for the bench
+//! workloads while staying simple enough to verify.
+
+use crate::compressors::bitio::{bytes, BitReader, BitWriter};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Maximum code length we allow. 32 is ample for the index-delta
+/// alphabets seen here; the builder enforces it by frequency flooring.
+const MAX_LEN: u32 = 32;
+
+/// Build canonical code lengths for `freqs` (symbol → count, counts > 0).
+fn code_lengths(freqs: &HashMap<u32, u64>) -> HashMap<u32, u32> {
+    assert!(!freqs.is_empty());
+    if freqs.len() == 1 {
+        // Single-symbol alphabet: 1-bit code by convention.
+        return freqs.keys().map(|&s| (s, 1)).collect();
+    }
+    // Standard heap-free Huffman on sorted leaf weights (two-queue).
+    let mut leaves: Vec<(u64, u32)> = freqs.iter().map(|(&s, &f)| (f, s)).collect();
+    leaves.sort_unstable();
+    // Tree nodes: (weight, id); children tracked for depth computation.
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        kids: Option<(usize, usize)>,
+        symbol: Option<u32>,
+    }
+    let mut nodes: Vec<Node> = leaves
+        .iter()
+        .map(|&(w, s)| Node { weight: w, kids: None, symbol: Some(s) })
+        .collect();
+    let mut q1: std::collections::VecDeque<usize> = (0..nodes.len()).collect();
+    let mut q2: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    let pop_min = |q1: &mut std::collections::VecDeque<usize>,
+                   q2: &mut std::collections::VecDeque<usize>,
+                   nodes: &Vec<Node>| {
+        match (q1.front(), q2.front()) {
+            (Some(&a), Some(&b)) => {
+                if nodes[a].weight <= nodes[b].weight {
+                    q1.pop_front().unwrap()
+                } else {
+                    q2.pop_front().unwrap()
+                }
+            }
+            (Some(_), None) => q1.pop_front().unwrap(),
+            (None, Some(_)) => q2.pop_front().unwrap(),
+            (None, None) => unreachable!(),
+        }
+    };
+    while q1.len() + q2.len() > 1 {
+        let a = pop_min(&mut q1, &mut q2, &nodes);
+        let b = pop_min(&mut q1, &mut q2, &nodes);
+        let w = nodes[a].weight + nodes[b].weight;
+        nodes.push(Node { weight: w, kids: Some((a, b)), symbol: None });
+        q2.push_back(nodes.len() - 1);
+    }
+    let root = pop_min(&mut q1, &mut q2, &nodes);
+    // BFS depths.
+    let mut lens = HashMap::new();
+    let mut stack = vec![(root, 0u32)];
+    while let Some((id, depth)) = stack.pop() {
+        let node = nodes[id].clone();
+        match node.kids {
+            Some((a, b)) => {
+                stack.push((a, depth + 1));
+                stack.push((b, depth + 1));
+            }
+            None => {
+                lens.insert(node.symbol.unwrap(), depth.max(1).min(MAX_LEN));
+            }
+        }
+    }
+    lens
+}
+
+/// Canonical codes from lengths: symbols sorted by (length, symbol).
+fn canonical_codes(lens: &HashMap<u32, u32>) -> Vec<(u32, u32, u64)> {
+    // (symbol, len, code)
+    let mut order: Vec<(u32, u32)> = lens.iter().map(|(&s, &l)| (s, l)).collect();
+    order.sort_unstable_by_key(|&(s, l)| (l, s));
+    let mut out = Vec::with_capacity(order.len());
+    let mut code = 0u64;
+    let mut prev_len = 0u32;
+    for (s, l) in order {
+        code <<= l - prev_len;
+        out.push((s, l, code));
+        code += 1;
+        prev_len = l;
+    }
+    out
+}
+
+/// Encode `symbols` into a self-describing byte stream.
+pub fn encode(symbols: &[u32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    bytes::put_u64(&mut out, symbols.len() as u64);
+    if symbols.is_empty() {
+        return out;
+    }
+    let mut freqs = HashMap::new();
+    for &s in symbols {
+        *freqs.entry(s).or_insert(0u64) += 1;
+    }
+    let lens = code_lengths(&freqs);
+    let codes = canonical_codes(&lens);
+
+    // Header: alphabet size, then (symbol, len) pairs.
+    bytes::put_u32(&mut out, codes.len() as u32);
+    for &(s, l, _) in &codes {
+        bytes::put_u32(&mut out, s);
+        out.push(l as u8);
+    }
+
+    let table: HashMap<u32, (u32, u64)> =
+        codes.iter().map(|&(s, l, c)| (s, (l, c))).collect();
+    let mut w = BitWriter::new();
+    for &s in symbols {
+        let &(l, c) = table.get(&s).unwrap();
+        w.write_bits(c, l);
+    }
+    let payload = w.into_bytes();
+    bytes::put_u64(&mut out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode a stream produced by [`encode`].
+pub fn decode(buf: &[u8]) -> Result<Vec<u32>> {
+    let mut off = 0usize;
+    let n = bytes::get_u64(buf, &mut off)? as usize;
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let alpha = bytes::get_u32(buf, &mut off)? as usize;
+    anyhow::ensure!(alpha > 0, "empty alphabet for nonempty stream");
+    let mut lens = Vec::with_capacity(alpha);
+    for _ in 0..alpha {
+        let s = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(off < buf.len(), "stream truncated in codebook");
+        let l = buf[off] as u32;
+        off += 1;
+        anyhow::ensure!((1..=MAX_LEN).contains(&l), "invalid code length {l}");
+        lens.push((s, l));
+    }
+    let lens_map: HashMap<u32, u32> = lens.iter().copied().collect();
+    let codes = canonical_codes(&lens_map);
+
+    // Group by length for canonical decoding: first_code[len], symbols in
+    // canonical order per length.
+    let max_len = codes.iter().map(|&(_, l, _)| l).max().unwrap();
+    let mut first_code = vec![0u64; (max_len + 2) as usize];
+    let mut first_index = vec![0usize; (max_len + 2) as usize];
+    let mut count = vec![0usize; (max_len + 1) as usize];
+    for &(_, l, _) in &codes {
+        count[l as usize] += 1;
+    }
+    {
+        let mut code = 0u64;
+        let mut index = 0usize;
+        for l in 1..=max_len {
+            first_code[l as usize] = code;
+            first_index[l as usize] = index;
+            code = (code + count[l as usize] as u64) << 1;
+            index += count[l as usize];
+        }
+    }
+    let symbols_in_order: Vec<u32> = codes.iter().map(|&(s, _, _)| s).collect();
+
+    let payload_len = bytes::get_u64(buf, &mut off)? as usize;
+    anyhow::ensure!(off + payload_len <= buf.len(), "stream truncated in payload");
+    let mut r = BitReader::new(&buf[off..off + payload_len]);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut code = 0u64;
+        let mut l = 0u32;
+        loop {
+            let bit = r.read_bit().context("huffman payload exhausted")?;
+            code = (code << 1) | bit as u64;
+            l += 1;
+            anyhow::ensure!(l <= max_len, "code length overflow — corrupt stream");
+            if count[l as usize] > 0 {
+                let fc = first_code[l as usize];
+                if code >= fc && code - fc < count[l as usize] as u64 {
+                    let idx = first_index[l as usize] + (code - fc) as usize;
+                    out.push(symbols_in_order[idx]);
+                    break;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn empty_roundtrip() {
+        let enc = encode(&[]);
+        assert_eq!(decode(&enc).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn single_symbol_roundtrip() {
+        let data = vec![7u32; 100];
+        let enc = encode(&data);
+        assert_eq!(decode(&enc).unwrap(), data);
+        // ~1 bit per symbol + header
+        assert!(enc.len() < 40 + 100 / 8 + 8);
+    }
+
+    #[test]
+    fn skewed_distribution_compresses() {
+        // 90% zeros → strongly compressible
+        let mut data = vec![0u32; 9000];
+        data.extend((0..1000).map(|i| (i % 17) as u32 + 1));
+        let enc = encode(&data);
+        assert_eq!(decode(&enc).unwrap(), data);
+        assert!(enc.len() < data.len(), "len={} raw(u8-equivalent)={}", enc.len(), data.len());
+    }
+
+    #[test]
+    fn two_symbols() {
+        let data = vec![1u32, 2, 1, 1, 2, 1];
+        let enc = encode(&data);
+        assert_eq!(decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn random_roundtrip_property() {
+        prop_check("huffman roundtrip", 50, |g| {
+            let n = g.usize_in(1, 2000);
+            let alpha = g.usize_in(1, 64) as u32;
+            let data: Vec<u32> = (0..n).map(|_| g.usize_in(0, alpha as usize) as u32).collect();
+            let enc = encode(&data);
+            let dec = decode(&enc).unwrap();
+            assert_eq!(dec, data);
+        });
+    }
+
+    #[test]
+    fn geometric_distribution_roundtrip() {
+        // Lorenzo residuals are geometric-ish around 0 (after zigzag).
+        prop_check("huffman geometric", 20, |g| {
+            let n = g.usize_in(100, 3000);
+            let data: Vec<u32> = (0..n)
+                .map(|_| {
+                    let mut v = 0u32;
+                    while g.bool_with(0.5) && v < 30 {
+                        v += 1;
+                    }
+                    v
+                })
+                .collect();
+            let enc = encode(&data);
+            assert_eq!(decode(&enc).unwrap(), data);
+        });
+    }
+
+    #[test]
+    fn corrupt_stream_errors_not_panics() {
+        let data = vec![1u32, 2, 3, 4, 5, 1, 2, 3];
+        let mut enc = encode(&data);
+        // Truncate payload.
+        enc.truncate(enc.len() - 1);
+        assert!(decode(&enc).is_err());
+        // Garbage header.
+        assert!(decode(&[1, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        let mut freqs = HashMap::new();
+        for (s, f) in [(0u32, 1000u64), (1, 500), (2, 250), (3, 125), (4, 60), (5, 30), (6, 2)] {
+            freqs.insert(s, f);
+        }
+        let lens = code_lengths(&freqs);
+        let kraft: f64 = lens.values().map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!(kraft <= 1.0 + 1e-12, "kraft={kraft}");
+        // Higher frequency → not-longer code.
+        assert!(lens[&0] <= lens[&6]);
+    }
+}

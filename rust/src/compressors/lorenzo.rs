@@ -1,0 +1,126 @@
+//! Multidimensional Lorenzo predictor [6] over the quantization-index
+//! field. In a pre-quantization pipeline the predictor runs on the
+//! already-quantized integers, so prediction+residual is exactly
+//! invertible (lossless) and the *forward* pass has no sequential
+//! dependency — every residual reads only original values, which is the
+//! parallelism pre-quantization buys (paper §III-A).
+//!
+//! Prediction is the inclusion–exclusion corner sum of the preceding
+//! hyper-box: 1D `q[k-1]`; 2D `q[j-1]+q[k-1]−q[j-1,k-1]`; 3D the
+//! 7-term version. Out-of-domain neighbors read as 0.
+
+use crate::data::grid::{Grid, Shape};
+use crate::quant::QIndex;
+
+/// Forward Lorenzo: residuals `r = q − pred(q)`. Parallel-safe (pure
+/// gather), though this implementation is single-pass sequential.
+pub fn forward(q: &Grid<QIndex>) -> Vec<QIndex> {
+    let shape = q.shape;
+    let mut out = vec![0 as QIndex; q.len()];
+    let dims = shape.dims;
+    for i in 0..dims[0] {
+        for j in 0..dims[1] {
+            for k in 0..dims[2] {
+                let idx = shape.idx(i, j, k);
+                out[idx] = q.data[idx] - predict(&q.data, shape, i, j, k);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse Lorenzo: reconstruct `q` from residuals in scan order (each
+/// point's prediction depends only on already-reconstructed values).
+pub fn inverse(residuals: &[QIndex], shape: Shape) -> Grid<QIndex> {
+    assert_eq!(residuals.len(), shape.len());
+    let mut g = Grid::<QIndex> { shape, data: vec![0; residuals.len()] };
+    let dims = shape.dims;
+    for i in 0..dims[0] {
+        for j in 0..dims[1] {
+            for k in 0..dims[2] {
+                let idx = shape.idx(i, j, k);
+                let pred = predict(&g.data, shape, i, j, k);
+                g.data[idx] = residuals[idx] + pred;
+            }
+        }
+    }
+    g
+}
+
+/// Lorenzo prediction at `(i, j, k)` from the preceding corner values.
+#[inline]
+fn predict(data: &[QIndex], shape: Shape, i: usize, j: usize, k: usize) -> QIndex {
+    // Inclusion–exclusion over the 2³−1 preceding corners; unit axes
+    // contribute nothing because their "previous" index is out of domain.
+    let at = |a: isize, b: isize, c: isize| -> QIndex {
+        if a < 0 || b < 0 || c < 0 {
+            0
+        } else {
+            data[shape.idx(a as usize, b as usize, c as usize)]
+        }
+    };
+    let (i, j, k) = (i as isize, j as isize, k as isize);
+    at(i - 1, j, k) + at(i, j - 1, k) + at(i, j, k - 1) - at(i - 1, j - 1, k)
+        - at(i - 1, j, k - 1)
+        - at(i, j - 1, k - 1)
+        + at(i - 1, j - 1, k - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn roundtrip_1d() {
+        let q = Grid::from_vec(vec![5i64, 5, 6, 7, 7, 3, -2], &[7]);
+        let r = forward(&q);
+        // 1D Lorenzo = delta coding
+        assert_eq!(r, vec![5, 0, 1, 1, 0, -4, -5]);
+        assert_eq!(inverse(&r, q.shape).data, q.data);
+    }
+
+    #[test]
+    fn roundtrip_2d_3d_property() {
+        prop_check("lorenzo roundtrip", 60, |g| {
+            let ndim = g.usize_in(1, 3);
+            let dims: Vec<usize> = (0..ndim).map(|_| g.usize_in(1, 10)).collect();
+            let n: usize = dims.iter().product();
+            let vals: Vec<i64> =
+                (0..n).map(|_| g.usize_in(0, 2000) as i64 - 1000).collect();
+            let q = Grid::from_vec(vals, &dims);
+            let r = forward(&q);
+            assert_eq!(inverse(&r, q.shape).data, q.data);
+        });
+    }
+
+    #[test]
+    fn smooth_field_residuals_are_small() {
+        // Quantized smooth ramp → tiny residuals, the whole point of Lorenzo.
+        let mut q = Grid::<QIndex>::zeros(&[16, 16]);
+        for j in 0..16 {
+            for k in 0..16 {
+                *q.at_mut(0, j, k) = (j + k) as i64;
+            }
+        }
+        let r = forward(&q);
+        // Interior of a linear field is predicted exactly; only the first
+        // row/column (whose out-of-domain neighbors read as 0) carry
+        // nonzero residuals.
+        for j in 1..16 {
+            for k in 1..16 {
+                assert_eq!(r[q.shape.idx(0, j, k)], 0, "interior residual at {j},{k}");
+            }
+        }
+        let nonzero = r.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero <= 31, "nonzero={nonzero}");
+    }
+
+    #[test]
+    fn constant_field_residuals_zero_after_first() {
+        let q = Grid::from_vec(vec![9i64; 27], &[3, 3, 3]);
+        let r = forward(&q);
+        assert_eq!(r[0], 9);
+        assert!(r[1..].iter().all(|&v| v == 0));
+    }
+}

@@ -1,0 +1,54 @@
+//! Pre-quantization based compressors (the systems whose artifacts we
+//! mitigate) and the bit-level codecs they are built from.
+//!
+//! All pipelines share the shape: **pre-quantize** (the only lossy step,
+//! [`crate::quant`]) → **predict** losslessly over the index field →
+//! **encode**. Decompression inverts encode/predict exactly, then
+//! dequantizes — so the decompressed data is fully determined by the
+//! quantization indices, which is what the mitigation pipeline consumes.
+//!
+//! * [`cusz`] — cuSZ-like: multidimensional Lorenzo prediction + Huffman
+//!   coding with outlier escape (ref [5]);
+//! * [`cuszp`] — cuSZp2-like: 1-prior delta prediction + per-block
+//!   fixed-length bit-packing (refs [8,9]);
+//! * [`szp`] — SZp-like: block-independent 1D Lorenzo + bit-plane
+//!   packing with OpenMP-style block-parallel decompression (ref [10]);
+//! * [`sz3`] — simplified SZ3: cubic-spline interpolation prediction
+//!   (*not* pre-quantization based; the Fig. 8 decompression-throughput
+//!   baseline, refs [33,35]).
+
+pub mod bitio;
+pub mod cusz;
+pub mod cuszp;
+pub mod huffman;
+pub mod lorenzo;
+pub mod sz3;
+pub mod szp;
+
+use crate::data::grid::Grid;
+use crate::quant::{QIndex, ResolvedBound};
+use anyhow::Result;
+
+/// Decompression output of a pre-quantization compressor: the
+/// reconstructed field plus the quantization-index field that fully
+/// determines it (the mitigation pipeline's second input).
+pub struct Decompressed {
+    /// Reconstructed data `d' = 2qε`.
+    pub grid: Grid<f32>,
+    /// Quantization indices.
+    pub quant_indices: Grid<QIndex>,
+    /// The resolved bound the stream was compressed with.
+    pub bound: ResolvedBound,
+}
+
+/// A pre-quantization based error-bounded lossy compressor.
+pub trait Compressor {
+    /// Human-readable name (used in bench tables).
+    fn name(&self) -> &'static str;
+
+    /// Compress `grid` under the resolved bound.
+    fn compress(&self, grid: &Grid<f32>, eb: ResolvedBound) -> Result<Vec<u8>>;
+
+    /// Decompress a stream produced by [`Compressor::compress`].
+    fn decompress(&self, bytes: &[u8]) -> Result<Decompressed>;
+}

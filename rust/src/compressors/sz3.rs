@@ -1,0 +1,286 @@
+//! Simplified SZ3 [33,35]: multi-level interpolation-predictive
+//! compressor with error-controlled residual quantization.
+//!
+//! This is **not** a pre-quantization compressor (prediction happens on
+//! reconstructed values, level by level); it exists as the second
+//! OpenMP decompression-throughput baseline of Fig. 8 and as a
+//! rate-distortion reference point. Relative to upstream SZ3 it is
+//! simplified to 1D multi-level cubic interpolation over the flattened
+//! array (upstream interleaves axes per level); the parallel granularity
+//! — independent predictions within a level — is the same, which is what
+//! the efficiency comparison exercises.
+//!
+//! Anchors sit at stride `2^L`; each level `l = L..1` predicts the
+//! midpoints of stride `2^l` with 4-point cubic interpolation (linear /
+//! nearest at the borders), quantizes the prediction residual at the
+//! error bound, and reconstructs — so every point obeys `|d−d'| ≤ ε`.
+
+use crate::compressors::bitio::{bytes, unzigzag, zigzag};
+use crate::compressors::cusz::{read_header, write_header};
+use crate::compressors::huffman;
+use crate::data::grid::Grid;
+use crate::quant::ResolvedBound;
+use crate::util::par::{parallel_for_range, UnsafeSlice};
+use anyhow::{Context, Result};
+
+/// Max interpolation levels: anchors every 2^10 = 1024 points.
+const MAX_LEVEL: u32 = 10;
+/// Residual symbols ≥ this escape to the outlier channel.
+const ESCAPE: u64 = 1 << 16;
+/// Stream magic.
+const MAGIC: u32 = 0x535A_3300; // "SZ3"
+
+/// The simplified SZ3 codec; `threads` parallelizes within-level work
+/// during decompression (the Fig. 8 knob).
+#[derive(Debug, Clone)]
+pub struct Sz3Like {
+    /// Decompression threads.
+    pub threads: usize,
+}
+
+impl Default for Sz3Like {
+    fn default() -> Self {
+        Sz3Like { threads: 1 }
+    }
+}
+
+/// Number of levels for `n` points.
+fn levels_for(n: usize) -> u32 {
+    if n < 2 {
+        return 0;
+    }
+    MAX_LEVEL.min(usize::BITS - 1 - (n - 1).leading_zeros())
+}
+
+/// Cubic (or degraded) interpolation prediction at position `i` with
+/// half-stride `h`, over the reconstruction buffer.
+#[inline]
+fn predict(recon: &[f32], i: usize, h: usize) -> f64 {
+    let n = recon.len();
+    let im1 = i - h; // always valid: i ≥ h by construction
+    if i + h < n {
+        if i >= 3 * h && i + 3 * h < n {
+            // 4-point cubic: (-f₋₃ + 9f₋₁ + 9f₊₁ − f₊₃)/16
+            (-(recon[i - 3 * h] as f64) + 9.0 * recon[im1] as f64 + 9.0 * recon[i + h] as f64
+                - recon[i + 3 * h] as f64)
+                / 16.0
+        } else {
+            0.5 * (recon[im1] as f64 + recon[i + h] as f64)
+        }
+    } else {
+        recon[im1] as f64
+    }
+}
+
+impl Sz3Like {
+    /// Name for bench tables.
+    pub fn name(&self) -> &'static str {
+        "SZ3-like"
+    }
+
+    /// Compress under a resolved bound.
+    pub fn compress(&self, grid: &Grid<f32>, eb: ResolvedBound) -> Result<Vec<u8>> {
+        let n = grid.len();
+        let data = &grid.data;
+        let lv = levels_for(n);
+        let anchor_stride = 1usize << lv;
+
+        let mut recon = vec![0.0f32; n];
+        let mut anchors = Vec::new();
+        for i in (0..n).step_by(anchor_stride) {
+            anchors.push(data[i]);
+            recon[i] = data[i];
+        }
+
+        let two_eps = 2.0 * eb.abs;
+        let mut codes: Vec<i64> = Vec::with_capacity(n);
+        for lvl in (1..=lv).rev() {
+            let s = 1usize << lvl;
+            let h = s >> 1;
+            let mut i = h;
+            while i < n {
+                let pred = predict(&recon, i, h);
+                let code = ((data[i] as f64 - pred) / two_eps).round() as i64;
+                recon[i] = (pred + code as f64 * two_eps) as f32;
+                codes.push(code);
+                i += s;
+            }
+        }
+
+        // Entropy-code residuals with outlier escape.
+        let mut symbols = Vec::with_capacity(codes.len());
+        let mut outliers = Vec::new();
+        for &c in &codes {
+            let zz = zigzag(c);
+            if zz < ESCAPE {
+                symbols.push(zz as u32);
+            } else {
+                symbols.push(ESCAPE as u32);
+                outliers.push(zz);
+            }
+        }
+        let payload = huffman::encode(&symbols);
+
+        let mut out = Vec::new();
+        bytes::put_u32(&mut out, MAGIC);
+        write_header(&mut out, grid.shape, eb);
+        bytes::put_u64(&mut out, anchors.len() as u64);
+        for &a in &anchors {
+            bytes::put_u32(&mut out, a.to_bits());
+        }
+        bytes::put_u64(&mut out, outliers.len() as u64);
+        for &o in &outliers {
+            bytes::put_u64(&mut out, o);
+        }
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    /// Decompress (within-level parallel over `self.threads`).
+    pub fn decompress(&self, buf: &[u8]) -> Result<Grid<f32>> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not an SZ3-like stream");
+        let (shape, eb) = read_header(buf, &mut off)?;
+        let n = shape.len();
+        let lv = levels_for(n);
+        let anchor_stride = 1usize << lv;
+
+        let n_anchors = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(n_anchors == n.div_ceil(anchor_stride), "anchor count mismatch");
+        let mut recon = vec![0.0f32; n];
+        for a in 0..n_anchors {
+            let bits = bytes::get_u32(buf, &mut off)?;
+            recon[a * anchor_stride] = f32::from_bits(bits);
+        }
+        let n_out = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(n_out <= n, "outlier count exceeds data size");
+        let mut outliers = Vec::with_capacity(n_out);
+        for _ in 0..n_out {
+            outliers.push(bytes::get_u64(buf, &mut off)?);
+        }
+        let symbols = huffman::decode(&buf[off..]).context("huffman payload")?;
+
+        // Rebuild codes.
+        let mut next_outlier = 0usize;
+        let mut codes = Vec::with_capacity(symbols.len());
+        for &s in &symbols {
+            let zz = if s as u64 == ESCAPE {
+                anyhow::ensure!(next_outlier < outliers.len(), "missing outlier");
+                let v = outliers[next_outlier];
+                next_outlier += 1;
+                v
+            } else {
+                s as u64
+            };
+            codes.push(unzigzag(zz));
+        }
+
+        // Replay levels; within a level all predictions read only coarser
+        // positions, so the level is embarrassingly parallel.
+        let two_eps = 2.0 * eb.abs;
+        let mut code_base = 0usize;
+        for lvl in (1..=lv).rev() {
+            let s = 1usize << lvl;
+            let h = s >> 1;
+            let count = if n > h { (n - h).div_ceil(s) } else { 0 };
+            anyhow::ensure!(code_base + count <= codes.len(), "codes exhausted at level {lvl}");
+            {
+                let rs = UnsafeSlice::new(&mut recon);
+                let codes = &codes;
+                parallel_for_range(count, self.threads, 1024, |t| {
+                    let i = h + t * s;
+                    // SAFETY: this level writes only positions ≡ h (mod s),
+                    // reads only positions ≡ 0 (mod s) — disjoint.
+                    let pred = {
+                        let r = unsafe { rs.slice_mut(0, n) };
+                        predict(r, i, h)
+                    };
+                    let code = codes[code_base + t];
+                    unsafe { rs.write(i, (pred + code as f64 * two_eps) as f32) };
+                });
+            }
+            code_base += count;
+        }
+        anyhow::ensure!(code_base == codes.len(), "trailing codes in stream");
+
+        let mut grid = Grid::from_vec(recon, shape.user_dims());
+        grid.shape.ndim = shape.ndim;
+        Ok(grid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::metrics::max_abs_error;
+    use crate::quant::ErrorBound;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn error_bound_respected() {
+        let g = generate(DatasetKind::TurbulenceLike, &[20, 20, 20], 17);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let c = Sz3Like::default();
+        let stream = c.compress(&g, eb).unwrap();
+        let d = c.decompress(&stream).unwrap();
+        // f32 rounding of recon can add ~1 ulp of the value magnitude.
+        let tol = eb.abs * (1.0 + 1e-5) + g.value_range() as f64 * f32::EPSILON as f64 * 4.0;
+        assert!(max_abs_error(&g.data, &d.data) <= tol);
+    }
+
+    #[test]
+    fn parallel_decode_is_bitwise_identical() {
+        let g = generate(DatasetKind::MirandaLike, &[24, 24, 24], 3);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let stream = Sz3Like::default().compress(&g, eb).unwrap();
+        let d1 = Sz3Like { threads: 1 }.decompress(&stream).unwrap();
+        let d4 = Sz3Like { threads: 4 }.decompress(&stream).unwrap();
+        assert_eq!(d1.data, d4.data);
+    }
+
+    #[test]
+    fn beats_bound_compressors_on_ratio_for_smooth_1d_data() {
+        // Interpolation prediction outperforms fixed-length delta packing
+        // on smooth 1D signals (the regime its 1D multi-level spline
+        // models directly; in 3D the simplified flattening gives up some
+        // of upstream SZ3's advantage — see module docs).
+        use crate::compressors::{cuszp::CuszpLike, Compressor};
+        let n = 32768;
+        let data: Vec<f32> =
+            (0..n).map(|i| ((i as f32) * 0.002).sin() + 0.3 * ((i as f32) * 0.0007).cos()).collect();
+        let g = Grid::from_vec(data, &[n]);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let a = Sz3Like::default().compress(&g, eb).unwrap().len();
+        let b = CuszpLike.compress(&g, eb).unwrap().len();
+        assert!(a < b, "sz3={a} cuszp={b}");
+    }
+
+    #[test]
+    fn tiny_fields() {
+        for n in [1usize, 2, 3, 5] {
+            let g = Grid::from_vec((0..n).map(|i| i as f32 * 0.3).collect(), &[n]);
+            let eb = ErrorBound::absolute(0.01).resolve(&g.data);
+            let stream = Sz3Like::default().compress(&g, eb).unwrap();
+            let d = Sz3Like::default().decompress(&stream).unwrap();
+            assert!(max_abs_error(&g.data, &d.data) <= 0.011, "n={n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        prop_check("sz3 error bound", 20, |gen| {
+            let n = gen.usize_in(1, 3000);
+            let field = Grid::from_vec(gen.smooth_field(n, 0.1), &[n]);
+            let rel = *gen.choose(&[1e-3, 1e-2]);
+            let eb = ErrorBound::relative(rel).resolve(&field.data);
+            let c = Sz3Like::default();
+            let stream = c.compress(&field, eb).unwrap();
+            let d = c.decompress(&stream).unwrap();
+            let tol =
+                eb.abs * (1.0 + 1e-5) + field.value_range() as f64 * f32::EPSILON as f64 * 4.0;
+            assert!(max_abs_error(&field.data, &d.data) <= tol);
+        });
+    }
+}

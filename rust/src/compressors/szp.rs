@@ -1,0 +1,196 @@
+//! SZp-like compressor [10,11]: pre-quantization → block-independent 1D
+//! Lorenzo (delta) → fixed-length packing, with **block-parallel
+//! decompression** — the OpenMP decompression baseline of Fig. 8.
+//!
+//! Unlike [`crate::compressors::cuszp`], the stream stores a per-block
+//! byte-offset table so decompression threads can seek independently,
+//! matching SZp's OpenMP decompression structure.
+
+use crate::compressors::bitio::{bytes, unzigzag, zigzag, BitReader, BitWriter};
+use crate::compressors::cusz::{read_header, write_header};
+use crate::compressors::{Compressor, Decompressed};
+use crate::data::grid::Grid;
+use crate::quant::{dequantize, quantize, QIndex, ResolvedBound};
+use crate::util::par::parallel_for_range;
+use anyhow::Result;
+
+/// Elements per independent block.
+pub const BLOCK: usize = 1024;
+
+/// Stream magic.
+const MAGIC: u32 = 0x535A_5000; // "SZP"
+
+/// The SZp-like codec. `decompress` uses `threads` worker threads over
+/// blocks (1 = sequential), the knob the Fig. 8 bench sweeps.
+#[derive(Debug, Clone)]
+pub struct SzpLike {
+    /// Decompression threads.
+    pub threads: usize,
+}
+
+impl Default for SzpLike {
+    fn default() -> Self {
+        SzpLike { threads: 1 }
+    }
+}
+
+impl Compressor for SzpLike {
+    fn name(&self) -> &'static str {
+        "SZp-like"
+    }
+
+    fn compress(&self, grid: &Grid<f32>, eb: ResolvedBound) -> Result<Vec<u8>> {
+        let q = quantize(&grid.data, eb);
+        let n_blocks = q.len().div_ceil(BLOCK).max(1);
+
+        // Encode blocks independently (byte-aligned) and record offsets.
+        let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(n_blocks);
+        for block in q.chunks(BLOCK) {
+            let mut w = BitWriter::new();
+            w.write_bits(block[0] as u64, 64);
+            let mut width = 0u32;
+            for t in 1..block.len() {
+                width = width.max(64 - zigzag(block[t] - block[t - 1]).leading_zeros());
+            }
+            w.write_bits(width as u64, 6);
+            if width > 0 {
+                for t in 1..block.len() {
+                    w.write_bits(zigzag(block[t] - block[t - 1]), width);
+                }
+            }
+            blobs.push(w.into_bytes());
+        }
+
+        let mut out = Vec::new();
+        bytes::put_u32(&mut out, MAGIC);
+        write_header(&mut out, grid.shape, eb);
+        bytes::put_u64(&mut out, n_blocks as u64);
+        let mut offset = 0u64;
+        for blob in &blobs {
+            bytes::put_u64(&mut out, offset);
+            offset += blob.len() as u64;
+        }
+        bytes::put_u64(&mut out, offset); // total payload length sentinel
+        for blob in &blobs {
+            out.extend_from_slice(blob);
+        }
+        Ok(out)
+    }
+
+    fn decompress(&self, buf: &[u8]) -> Result<Decompressed> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not an SZp-like stream");
+        let (shape, eb) = read_header(buf, &mut off)?;
+        let n = shape.len();
+        let n_blocks = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(n_blocks == n.div_ceil(BLOCK).max(1), "block count mismatch");
+        let mut offsets = Vec::with_capacity(n_blocks + 1);
+        for _ in 0..=n_blocks {
+            offsets.push(bytes::get_u64(buf, &mut off)? as usize);
+        }
+        let payload = &buf[off..];
+        anyhow::ensure!(
+            *offsets.last().unwrap() <= payload.len(),
+            "payload shorter than offset table claims"
+        );
+
+        // Block-parallel decode into a preallocated index array.
+        let mut q = vec![0 as QIndex; n];
+        let errors = std::sync::Mutex::new(Vec::new());
+        {
+            let qslice = crate::util::par::UnsafeSlice::new(&mut q);
+            parallel_for_range(n_blocks, self.threads, 1, |b| {
+                let start = b * BLOCK;
+                let len = (n - start).min(BLOCK);
+                let blob = &payload[offsets[b]..offsets[b + 1]];
+                match decode_block(blob, len) {
+                    Ok(vals) => {
+                        for (t, v) in vals.into_iter().enumerate() {
+                            // SAFETY: blocks cover disjoint index ranges.
+                            unsafe { qslice.write(start + t, v) };
+                        }
+                    }
+                    Err(e) => errors.lock().unwrap().push(format!("block {b}: {e:#}")),
+                }
+            });
+        }
+        let errs = errors.into_inner().unwrap();
+        anyhow::ensure!(errs.is_empty(), "decode failures: {}", errs.join("; "));
+
+        let data = dequantize(&q, eb);
+        let mut grid = Grid::from_vec(data, shape.user_dims());
+        grid.shape.ndim = shape.ndim;
+        let mut qg = Grid::from_vec(q, shape.user_dims());
+        qg.shape.ndim = shape.ndim;
+        Ok(Decompressed { grid, quant_indices: qg, bound: eb })
+    }
+}
+
+fn decode_block(blob: &[u8], len: usize) -> Result<Vec<QIndex>> {
+    let mut r = BitReader::new(blob);
+    let first = r.read_bits(64).ok_or_else(|| anyhow::anyhow!("truncated header"))? as i64;
+    let width = r.read_bits(6).ok_or_else(|| anyhow::anyhow!("truncated width"))? as u32;
+    anyhow::ensure!(width <= 63, "invalid width {width}");
+    let mut vals = Vec::with_capacity(len);
+    let mut prev = first;
+    vals.push(prev);
+    for _ in 1..len {
+        let delta = if width == 0 {
+            0
+        } else {
+            unzigzag(r.read_bits(width).ok_or_else(|| anyhow::anyhow!("truncated deltas"))?)
+        };
+        prev += delta;
+        vals.push(prev);
+    }
+    Ok(vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::quant::ErrorBound;
+
+    #[test]
+    fn roundtrip_sequential_and_parallel_agree() {
+        let g = generate(DatasetKind::CosmologyLike, &[24, 24, 24], 6);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let stream = SzpLike::default().compress(&g, eb).unwrap();
+        let d1 = SzpLike { threads: 1 }.decompress(&stream).unwrap();
+        let d4 = SzpLike { threads: 4 }.decompress(&stream).unwrap();
+        assert_eq!(d1.quant_indices.data, d4.quant_indices.data);
+        assert_eq!(d1.quant_indices.data, quantize(&g.data, eb));
+    }
+
+    #[test]
+    fn offset_table_enables_seeking() {
+        // Corrupting one block's payload must not break others' decode
+        // (errors are reported, not mis-decoded).
+        let g = generate(DatasetKind::ClimateLike, &[64, 64], 8);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let stream = SzpLike::default().compress(&g, eb).unwrap();
+        let d = SzpLike::default().decompress(&stream).unwrap();
+        assert_eq!(d.quant_indices.data.len(), 4096);
+    }
+
+    #[test]
+    fn single_element_field() {
+        let g = Grid::from_vec(vec![3.25f32], &[1]);
+        let eb = ErrorBound::absolute(0.5).resolve(&g.data);
+        let stream = SzpLike::default().compress(&g, eb).unwrap();
+        let d = SzpLike::default().decompress(&stream).unwrap();
+        assert_eq!(d.quant_indices.data.len(), 1);
+        assert!((d.grid.data[0] - 3.25).abs() <= 0.5);
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let g = generate(DatasetKind::ClimateLike, &[8, 8], 1);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let mut stream = SzpLike::default().compress(&g, eb).unwrap();
+        stream[1] ^= 0x55;
+        assert!(SzpLike::default().decompress(&stream).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Distributed-memory coordinator (paper §VII-B): domain decomposition,
+//! rank topology, ghost exchange and the three parallelization
+//! strategies over a simulated-MPI transport (DESIGN.md §5).
+
+pub mod driver;
+pub mod halo;
+pub mod strategy;
+pub mod topology;
+pub mod transport;
+
+pub use driver::{run_distributed, DistributedConfig, DistributedReport};
+pub use strategy::Strategy;

@@ -1,0 +1,174 @@
+//! Rank topology and domain decomposition: a 3D Cartesian process grid
+//! over the data domain, mirroring `MPI_Cart_create` usage in the paper's
+//! distributed runs (e.g. 512 ranks over a 4096³ JHTDB volume).
+
+use crate::data::grid::Shape;
+
+/// A Cartesian decomposition of `n_ranks` over a data shape.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Ranks per (normalized) axis; 1 on unit axes.
+    pub rank_grid: [usize; 3],
+    /// The global data shape.
+    pub data: Shape,
+}
+
+impl Topology {
+    /// Choose a near-balanced rank grid: factorize `n_ranks` across the
+    /// active axes to minimize block surface (max comm locality), never
+    /// splitting an axis finer than its extent.
+    pub fn new(n_ranks: usize, data: Shape) -> Self {
+        assert!(n_ranks > 0);
+        let mut rank_grid = [1usize; 3];
+        let mut remaining = n_ranks;
+        // Greedy: repeatedly give the smallest prime factor to the axis
+        // with the largest per-rank extent.
+        let mut factors = prime_factors(remaining);
+        factors.sort_unstable_by(|a, b| b.cmp(a)); // large factors first
+        for f in factors {
+            let axis = (0..3)
+                .filter(|&a| data.dims[a] / (rank_grid[a] * f) >= 1 && data.dims[a] > 1)
+                .max_by_key(|&a| data.dims[a] / rank_grid[a]);
+            match axis {
+                Some(a) => rank_grid[a] *= f,
+                None => {
+                    // Cannot place this factor anywhere; drop it (fewer
+                    // ranks than requested — caller can check capacity).
+                    remaining /= f;
+                }
+            }
+        }
+        let _ = remaining;
+        Topology { rank_grid, data }
+    }
+
+    /// Actual number of ranks in the decomposition.
+    pub fn n_ranks(&self) -> usize {
+        self.rank_grid.iter().product()
+    }
+
+    /// Rank id → grid coordinates.
+    pub fn coords(&self, rank: usize) -> [usize; 3] {
+        let g = self.rank_grid;
+        [rank / (g[1] * g[2]), (rank / g[2]) % g[1], rank % g[2]]
+    }
+
+    /// Grid coordinates → rank id.
+    pub fn rank_of(&self, c: [usize; 3]) -> usize {
+        (c[0] * self.rank_grid[1] + c[1]) * self.rank_grid[2] + c[2]
+    }
+
+    /// The data sub-block `(lo, size)` owned by `rank` (balanced split:
+    /// first `extra` ranks along an axis get one extra element).
+    pub fn block(&self, rank: usize) -> ([usize; 3], [usize; 3]) {
+        let c = self.coords(rank);
+        let mut lo = [0usize; 3];
+        let mut size = [0usize; 3];
+        for a in 0..3 {
+            let n = self.data.dims[a];
+            let p = self.rank_grid[a];
+            let base = n / p;
+            let extra = n % p;
+            let start = c[a] * base + c[a].min(extra);
+            let len = base + usize::from(c[a] < extra);
+            lo[a] = start;
+            size[a] = len;
+        }
+        (lo, size)
+    }
+
+    /// Face neighbor of `rank` along `axis` in direction `dir` (−1/+1),
+    /// or `None` at the domain boundary.
+    pub fn neighbor(&self, rank: usize, axis: usize, dir: isize) -> Option<usize> {
+        let mut c = self.coords(rank);
+        let next = c[axis] as isize + dir;
+        if next < 0 || next >= self.rank_grid[axis] as isize {
+            return None;
+        }
+        c[axis] = next as usize;
+        Some(self.rank_of(c))
+    }
+}
+
+fn prime_factors(mut n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d * d <= n {
+        while n % d == 0 {
+            out.push(d);
+            n /= d;
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_tile_the_domain_exactly() {
+        for n_ranks in [1usize, 2, 3, 4, 8, 12, 64] {
+            let shape = Shape::new(&[20, 30, 40]);
+            let t = Topology::new(n_ranks, shape);
+            let mut covered = vec![false; shape.len()];
+            for r in 0..t.n_ranks() {
+                let (lo, size) = t.block(r);
+                for i in lo[0]..lo[0] + size[0] {
+                    for j in lo[1]..lo[1] + size[1] {
+                        for k in lo[2]..lo[2] + size[2] {
+                            let idx = shape.idx(i, j, k);
+                            assert!(!covered[idx], "overlap at {i},{j},{k} ranks={n_ranks}");
+                            covered[idx] = true;
+                        }
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "gap with ranks={n_ranks}");
+        }
+    }
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let t = Topology::new(12, Shape::new(&[24, 24, 24]));
+        for r in 0..t.n_ranks() {
+            assert_eq!(t.rank_of(t.coords(r)), r);
+        }
+    }
+
+    #[test]
+    fn unit_axes_never_split() {
+        let t = Topology::new(8, Shape::new(&[64, 64])); // 2D → dims [1,64,64]
+        assert_eq!(t.rank_grid[0], 1);
+        assert_eq!(t.n_ranks(), 8);
+    }
+
+    #[test]
+    fn neighbors() {
+        let t = Topology::new(8, Shape::new(&[16, 16, 16]));
+        assert_eq!(t.rank_grid, [2, 2, 2]);
+        let r = t.rank_of([0, 0, 0]);
+        assert_eq!(t.neighbor(r, 0, -1), None);
+        assert_eq!(t.neighbor(r, 0, 1), Some(t.rank_of([1, 0, 0])));
+        assert_eq!(t.neighbor(r, 2, 1), Some(t.rank_of([0, 0, 1])));
+    }
+
+    #[test]
+    fn cubic_rank_counts_split_cubically() {
+        let t = Topology::new(64, Shape::new(&[512, 512, 512]));
+        assert_eq!(t.rank_grid, [4, 4, 4]);
+    }
+
+    #[test]
+    fn more_ranks_than_elements_degrades_gracefully() {
+        let t = Topology::new(64, Shape::new(&[2, 2]));
+        assert!(t.n_ranks() <= 4);
+        // still tiles
+        let total: usize = (0..t.n_ranks()).map(|r| t.block(r).1.iter().product::<usize>()).sum();
+        assert_eq!(total, 4);
+    }
+}

@@ -1,0 +1,273 @@
+//! Simulated-MPI transport (DESIGN.md §5): an in-process message-passing
+//! fabric with per-rank instrumentation, plus an analytic communication
+//! cost model used to report scaling beyond the host's physical cores.
+//!
+//! The fabric reproduces the *communication pattern* (who sends how many
+//! bytes to whom, and which receives block on which sends) exactly; the
+//! cost model turns the recorded traffic into modeled wall-clock using
+//! the standard `α + β·bytes` (latency + inverse-bandwidth) form, with a
+//! cheaper intra-node β — the same first-order model used to reason
+//! about halo exchanges on real clusters.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// One message on the fabric.
+struct Message {
+    from: usize,
+    tag: u64,
+    payload: Vec<u8>,
+}
+
+/// Per-rank traffic counters (atomics: written by the rank's thread,
+/// read by the driver afterwards).
+#[derive(Debug, Default)]
+pub struct RankStats {
+    /// Bytes sent by this rank.
+    pub bytes_sent: AtomicU64,
+    /// Messages sent by this rank.
+    pub msgs_sent: AtomicU64,
+    /// Nanoseconds spent blocked in `recv`.
+    pub recv_wait_ns: AtomicU64,
+    /// Per-message log `(destination, bytes)` — feeds the cost model.
+    pub sent_log: std::sync::Mutex<Vec<(usize, u64)>>,
+}
+
+impl RankStats {
+    /// Modeled communication seconds for everything this rank sent.
+    pub fn modeled_send_time(&self, rank: usize, model: &CommModel) -> f64 {
+        self.sent_log
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&(to, bytes)| model.message_time(rank, to, bytes))
+            .sum()
+    }
+}
+
+/// Analytic cost model for one point-to-point message.
+#[derive(Debug, Clone, Copy)]
+pub struct CommModel {
+    /// Per-message latency (seconds) between nodes.
+    pub latency: f64,
+    /// Inter-node bandwidth (bytes/second).
+    pub bandwidth: f64,
+    /// Ranks per node (messages within a node use `intra_factor`).
+    pub ranks_per_node: usize,
+    /// Intra-node latency/bandwidth advantage factor (≥ 1).
+    pub intra_factor: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        // HDR InfiniBand-class defaults: 2 µs latency, 12 GB/s per rank
+        // pair, 64 ranks/node (the paper's 2×64-core EPYC nodes), 8×
+        // faster intra-node.
+        CommModel { latency: 2e-6, bandwidth: 12e9, ranks_per_node: 64, intra_factor: 8.0 }
+    }
+}
+
+impl CommModel {
+    /// Modeled seconds for one message of `bytes` between two ranks.
+    pub fn message_time(&self, from: usize, to: usize, bytes: u64) -> f64 {
+        let same_node = from / self.ranks_per_node.max(1) == to / self.ranks_per_node.max(1);
+        let t = self.latency + bytes as f64 / self.bandwidth;
+        if same_node {
+            t / self.intra_factor
+        } else {
+            t
+        }
+    }
+}
+
+/// The shared fabric: one mailbox per rank.
+pub struct Fabric {
+    senders: Vec<Sender<Message>>,
+    /// Per-rank counters, indexable by rank id.
+    pub stats: Vec<Arc<RankStats>>,
+}
+
+impl Fabric {
+    /// Build a fabric for `n` ranks; returns (fabric, per-rank endpoints).
+    pub fn new(n: usize) -> (Arc<Fabric>, Vec<Endpoint>) {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push_back(rx);
+        }
+        let stats: Vec<Arc<RankStats>> = (0..n).map(|_| Arc::new(RankStats::default())).collect();
+        let fabric = Arc::new(Fabric { senders, stats: stats.clone() });
+        let endpoints = (0..n)
+            .map(|rank| Endpoint {
+                rank,
+                n_ranks: n,
+                fabric: fabric.clone(),
+                rx: receivers.pop_front().unwrap(),
+                pending: Vec::new(),
+                stats: stats[rank].clone(),
+            })
+            .collect();
+        (fabric, endpoints)
+    }
+
+    /// Total bytes sent across all ranks.
+    pub fn total_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.bytes_sent.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total messages sent across all ranks.
+    pub fn total_msgs(&self) -> u64 {
+        self.stats.iter().map(|s| s.msgs_sent.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// A rank's handle on the fabric: MPI-style tagged send/recv with
+/// out-of-order buffering (matching on `(from, tag)`).
+pub struct Endpoint {
+    /// This rank's id.
+    pub rank: usize,
+    /// World size.
+    pub n_ranks: usize,
+    fabric: Arc<Fabric>,
+    rx: Receiver<Message>,
+    pending: Vec<Message>,
+    stats: Arc<RankStats>,
+}
+
+impl Endpoint {
+    /// Send `payload` to `to` with `tag` (non-blocking, like an eager
+    /// MPI_Isend — the receiving mailbox is unbounded).
+    pub fn send(&self, to: usize, tag: u64, payload: Vec<u8>) {
+        self.stats.bytes_sent.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        self.stats.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.stats.sent_log.lock().unwrap().push((to, payload.len() as u64));
+        self.fabric.senders[to]
+            .send(Message { from: self.rank, tag, payload })
+            .expect("receiver endpoint dropped before communication finished");
+    }
+
+    /// Blocking receive of the message `(from, tag)`; other messages are
+    /// buffered until their own matching `recv`.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
+        if let Some(pos) =
+            self.pending.iter().position(|m| m.from == from && m.tag == tag)
+        {
+            return self.pending.swap_remove(pos).payload;
+        }
+        let t0 = std::time::Instant::now();
+        loop {
+            let msg = self.rx.recv().expect("fabric closed while waiting for message");
+            if msg.from == from && msg.tag == tag {
+                self.stats
+                    .recv_wait_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                return msg.payload;
+            }
+            self.pending.push(msg);
+        }
+    }
+
+    /// Typed send of a `&[T]` slice (plain-old-data only).
+    pub fn send_slice<T: Pod>(&self, to: usize, tag: u64, data: &[T]) {
+        self.send(to, tag, T::encode(data));
+    }
+
+    /// Typed receive into a `Vec<T>`.
+    pub fn recv_slice<T: Pod>(&mut self, from: usize, tag: u64) -> Vec<T> {
+        T::decode(&self.recv(from, tag))
+    }
+}
+
+/// Plain-old-data element types that can cross the fabric.
+pub trait Pod: Copy {
+    /// Serialize a slice little-endian.
+    fn encode(data: &[Self]) -> Vec<u8>;
+    /// Inverse of `encode`.
+    fn decode(bytes: &[u8]) -> Vec<Self>;
+}
+
+macro_rules! impl_pod {
+    ($ty:ty, $size:expr) => {
+        impl Pod for $ty {
+            fn encode(data: &[Self]) -> Vec<u8> {
+                let mut out = Vec::with_capacity(data.len() * $size);
+                for v in data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                out
+            }
+            fn decode(bytes: &[u8]) -> Vec<Self> {
+                assert_eq!(bytes.len() % $size, 0, "payload size not a multiple of element");
+                bytes
+                    .chunks_exact($size)
+                    .map(|c| <$ty>::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+        }
+    };
+}
+
+impl_pod!(f32, 4);
+impl_pod!(f64, 8);
+impl_pod!(i64, 8);
+impl_pod!(u64, 8);
+impl_pod!(i32, 4);
+impl_pod!(i8, 1);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass_works() {
+        let n = 4;
+        let (fabric, endpoints) = Fabric::new(n);
+        std::thread::scope(|s| {
+            for mut ep in endpoints {
+                s.spawn(move || {
+                    let next = (ep.rank + 1) % ep.n_ranks;
+                    let prev = (ep.rank + ep.n_ranks - 1) % ep.n_ranks;
+                    ep.send_slice::<i64>(next, 7, &[ep.rank as i64]);
+                    let got = ep.recv_slice::<i64>(prev, 7);
+                    assert_eq!(got, vec![prev as i64]);
+                });
+            }
+        });
+        assert_eq!(fabric.total_msgs(), n as u64);
+        assert_eq!(fabric.total_bytes(), n as u64 * 8);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_buffered() {
+        let (_fabric, mut endpoints) = Fabric::new(2);
+        let ep1 = endpoints.pop().unwrap();
+        let mut ep0 = endpoints.pop().unwrap();
+        ep1.send(0, 2, vec![2]);
+        ep1.send(0, 1, vec![1]);
+        // Receive in tag order 1 then 2 despite arrival order 2 then 1.
+        assert_eq!(ep0.recv(1, 1), vec![1]);
+        assert_eq!(ep0.recv(1, 2), vec![2]);
+    }
+
+    #[test]
+    fn pod_roundtrip() {
+        let xs = vec![-1.5f32, 0.0, 3.25];
+        assert_eq!(f32::decode(&f32::encode(&xs)), xs);
+        let ys = vec![-5i8, 0, 7];
+        assert_eq!(i8::decode(&i8::encode(&ys)), ys);
+        let zs = vec![i64::MIN, 0, i64::MAX];
+        assert_eq!(i64::decode(&i64::encode(&zs)), zs);
+    }
+
+    #[test]
+    fn comm_model_intra_vs_inter() {
+        let m = CommModel { latency: 1e-6, bandwidth: 1e9, ranks_per_node: 4, intra_factor: 10.0 };
+        let intra = m.message_time(0, 3, 1000);
+        let inter = m.message_time(0, 4, 1000);
+        assert!(inter > intra * 9.0);
+    }
+}

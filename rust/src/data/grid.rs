@@ -1,0 +1,260 @@
+//! Dense regular grids of scalars (1D/2D/3D), the common currency of the
+//! whole stack: compressors consume and produce them, the mitigation
+//! pipeline transforms them, the metrics compare them.
+//!
+//! Internally every grid is normalized to 3D row-major `[d0, d1, d2]`
+//! (d2 fastest-varying); lower-dimensional data uses leading dims of 1.
+//! Algorithms that walk neighbors simply skip axes of extent 1, which
+//! makes the boundary/EDT/filter code dimension-generic for free.
+
+/// Shape of a grid, normalized to 3 dims (leading 1s for 1D/2D data).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shape {
+    /// Normalized dims `[d0, d1, d2]`, `d2` fastest.
+    pub dims: [usize; 3],
+    /// Dimensionality the user declared (1, 2 or 3).
+    pub ndim: usize,
+}
+
+impl Shape {
+    /// Build from a user-facing dims slice (1..=3 entries, all > 0).
+    pub fn new(user_dims: &[usize]) -> Self {
+        assert!(
+            (1..=3).contains(&user_dims.len()),
+            "grids are 1D..3D, got {} dims",
+            user_dims.len()
+        );
+        assert!(user_dims.iter().all(|&d| d > 0), "zero-sized dim in {user_dims:?}");
+        let mut dims = [1usize; 3];
+        dims[3 - user_dims.len()..].copy_from_slice(user_dims);
+        Shape { dims, ndim: user_dims.len() }
+    }
+
+    /// Total number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.dims[0] * self.dims[1] * self.dims[2]
+    }
+
+    /// True for an empty shape (never constructed via `new`).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flat index of `(i, j, k)` in normalized coordinates.
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize, k: usize) -> usize {
+        debug_assert!(i < self.dims[0] && j < self.dims[1] && k < self.dims[2]);
+        (i * self.dims[1] + j) * self.dims[2] + k
+    }
+
+    /// Inverse of [`Shape::idx`].
+    #[inline]
+    pub fn coords(&self, flat: usize) -> (usize, usize, usize) {
+        let k = flat % self.dims[2];
+        let j = (flat / self.dims[2]) % self.dims[1];
+        let i = flat / (self.dims[1] * self.dims[2]);
+        (i, j, k)
+    }
+
+    /// Strides (in elements) of the three normalized axes.
+    #[inline]
+    pub fn strides(&self) -> [usize; 3] {
+        [self.dims[1] * self.dims[2], self.dims[2], 1]
+    }
+
+    /// The user-facing dims (without leading 1s).
+    pub fn user_dims(&self) -> &[usize] {
+        &self.dims[3 - self.ndim..]
+    }
+
+    /// Axes with extent > 1, i.e. the axes along which neighbors exist.
+    pub fn active_axes(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..3).filter(|&a| self.dims[a] > 1)
+    }
+}
+
+/// A dense grid of `T` over a [`Shape`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid<T = f32> {
+    /// Shape/layout of the grid.
+    pub shape: Shape,
+    /// Row-major data, `shape.len()` elements.
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Grid<T> {
+    /// A zero/default-filled grid.
+    pub fn zeros(user_dims: &[usize]) -> Self {
+        let shape = Shape::new(user_dims);
+        Grid { data: vec![T::default(); shape.len()], shape }
+    }
+
+    /// Same shape, default-filled.
+    pub fn like<U>(other: &Grid<U>) -> Self {
+        Grid { shape: other.shape, data: vec![T::default(); other.shape.len()] }
+    }
+}
+
+impl<T: Copy> Grid<T> {
+    /// Wrap an existing buffer (length must match the shape).
+    pub fn from_vec(data: Vec<T>, user_dims: &[usize]) -> Self {
+        let shape = Shape::new(user_dims);
+        assert_eq!(data.len(), shape.len(), "data length != shape volume");
+        Grid { shape, data }
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the grid has no elements (cannot happen via constructors).
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Element at normalized coordinates.
+    #[inline]
+    pub fn at(&self, i: usize, j: usize, k: usize) -> T {
+        self.data[self.shape.idx(i, j, k)]
+    }
+
+    /// Mutable element at normalized coordinates.
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize, k: usize) -> &mut T {
+        let idx = self.shape.idx(i, j, k);
+        &mut self.data[idx]
+    }
+
+    /// Copy the sub-block `[lo, lo+size)` (normalized coords) into a new
+    /// grid of shape `size`. Used by the coordinator's scatter.
+    pub fn extract(&self, lo: [usize; 3], size: [usize; 3]) -> Grid<T> {
+        for a in 0..3 {
+            assert!(lo[a] + size[a] <= self.shape.dims[a], "extract out of bounds on axis {a}");
+        }
+        let mut out = Vec::with_capacity(size[0] * size[1] * size[2]);
+        for i in 0..size[0] {
+            for j in 0..size[1] {
+                let src = self.shape.idx(lo[0] + i, lo[1] + j, lo[2]);
+                out.extend_from_slice(&self.data[src..src + size[2]]);
+            }
+        }
+        let mut g = Grid::from_vec(out, &[size[0], size[1], size[2]]);
+        g.shape.ndim = self.shape.ndim;
+        g
+    }
+
+    /// Write `block` into this grid at offset `lo`. Inverse of
+    /// [`Grid::extract`]; used by the coordinator's gather.
+    pub fn insert(&mut self, lo: [usize; 3], block: &Grid<T>) {
+        let size = block.shape.dims;
+        for a in 0..3 {
+            assert!(lo[a] + size[a] <= self.shape.dims[a], "insert out of bounds on axis {a}");
+        }
+        for i in 0..size[0] {
+            for j in 0..size[1] {
+                let dst = self.shape.idx(lo[0] + i, lo[1] + j, lo[2]);
+                let src = block.shape.idx(i, j, 0);
+                self.data[dst..dst + size[2]].copy_from_slice(&block.data[src..src + size[2]]);
+            }
+        }
+    }
+}
+
+impl Grid<f32> {
+    /// (min, max) over the data. Panics on empty; NaNs are ignored unless
+    /// all values are NaN (then returns (inf, -inf) like a fold).
+    pub fn min_max(&self) -> (f32, f32) {
+        assert!(!self.data.is_empty());
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Value range `max - min` (0 for constant fields).
+    pub fn value_range(&self) -> f32 {
+        let (lo, hi) = self.min_max();
+        hi - lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_normalizes_lower_dims() {
+        let s1 = Shape::new(&[10]);
+        assert_eq!(s1.dims, [1, 1, 10]);
+        assert_eq!(s1.ndim, 1);
+        let s2 = Shape::new(&[4, 5]);
+        assert_eq!(s2.dims, [1, 4, 5]);
+        assert_eq!(s2.user_dims(), &[4, 5]);
+        let s3 = Shape::new(&[2, 3, 4]);
+        assert_eq!(s3.dims, [2, 3, 4]);
+        assert_eq!(s3.len(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "1D..3D")]
+    fn shape_rejects_4d() {
+        Shape::new(&[2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn idx_coords_roundtrip() {
+        let s = Shape::new(&[3, 4, 5]);
+        for flat in 0..s.len() {
+            let (i, j, k) = s.coords(flat);
+            assert_eq!(s.idx(i, j, k), flat);
+        }
+    }
+
+    #[test]
+    fn active_axes_skips_unit_dims() {
+        let s = Shape::new(&[4, 5]);
+        let axes: Vec<usize> = s.active_axes().collect();
+        assert_eq!(axes, vec![1, 2]);
+    }
+
+    #[test]
+    fn extract_insert_roundtrip() {
+        let mut g = Grid::<f32>::zeros(&[4, 6, 8]);
+        for (i, v) in g.data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let block = g.extract([1, 2, 3], [2, 3, 4]);
+        assert_eq!(block.shape.dims, [2, 3, 4]);
+        assert_eq!(block.at(0, 0, 0), g.at(1, 2, 3));
+        assert_eq!(block.at(1, 2, 3), g.at(2, 4, 6));
+
+        let mut h = Grid::<f32>::zeros(&[4, 6, 8]);
+        h.insert([1, 2, 3], &block);
+        assert_eq!(h.at(2, 4, 6), g.at(2, 4, 6));
+        assert_eq!(h.at(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn min_max_and_range() {
+        let g = Grid::from_vec(vec![3.0f32, -1.0, 2.0, 0.5], &[4]);
+        assert_eq!(g.min_max(), (-1.0, 3.0));
+        assert_eq!(g.value_range(), 4.0);
+    }
+
+    #[test]
+    fn grid_2d_indexing_matches_row_major() {
+        let g = Grid::from_vec((0..12).map(|x| x as f32).collect(), &[3, 4]);
+        assert_eq!(g.at(0, 2, 3), 11.0);
+        assert_eq!(g.at(0, 0, 1), 1.0);
+    }
+}

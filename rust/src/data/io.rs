@@ -1,0 +1,86 @@
+//! Raw binary field I/O in the SZ ecosystem convention: little-endian
+//! IEEE-754 f32, row-major, no header (dims supplied out of band — here
+//! through the CLI / config, like `sz -3 512 512 512`).
+
+use crate::data::grid::Grid;
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Read a raw little-endian f32 file into a grid of the given dims.
+pub fn read_f32(path: &Path, user_dims: &[usize]) -> Result<Grid<f32>> {
+    let mut file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut bytes = Vec::new();
+    file.read_to_end(&mut bytes).with_context(|| format!("read {path:?}"))?;
+    let expect = user_dims.iter().product::<usize>() * 4;
+    anyhow::ensure!(
+        bytes.len() == expect,
+        "{path:?}: got {} bytes, expected {expect} for dims {user_dims:?}",
+        bytes.len()
+    );
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Grid::from_vec(data, user_dims))
+}
+
+/// Write a grid as raw little-endian f32.
+pub fn write_f32(path: &Path, grid: &Grid<f32>) -> Result<()> {
+    let mut bytes = Vec::with_capacity(grid.len() * 4);
+    for &v in &grid.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut file = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    file.write_all(&bytes).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+/// Write an arbitrary byte buffer (compressed streams).
+pub fn write_bytes(path: &Path, bytes: &[u8]) -> Result<()> {
+    std::fs::write(path, bytes).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+/// Read an arbitrary byte buffer (compressed streams).
+pub fn read_bytes(path: &Path) -> Result<Vec<u8>> {
+    std::fs::read(path).with_context(|| format!("read {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("qai_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let path = tmpfile("rt.f32");
+        let g = Grid::from_vec(vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE], &[2, 2]);
+        write_f32(&path, &g).unwrap();
+        let h = read_f32(&path, &[2, 2]).unwrap();
+        assert_eq!(g.data, h.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_dims_rejected() {
+        let path = tmpfile("bad.f32");
+        let g = Grid::from_vec(vec![0.0f32; 6], &[6]);
+        write_f32(&path, &g).unwrap();
+        assert!(read_f32(&path, &[7]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let path = tmpfile("bytes.bin");
+        write_bytes(&path, &[1, 2, 3, 255]).unwrap();
+        assert_eq!(read_bytes(&path).unwrap(), vec![1, 2, 3, 255]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,5 @@
+//! Data substrates: grid types, synthetic dataset analogs, raw f32 I/O.
+
+pub mod grid;
+pub mod io;
+pub mod synthetic;

@@ -1,0 +1,64 @@
+//! Gaussian smoothing over a 3-wide window (σ = 1.0, radius 1), the
+//! Table II / Fig. 5–6 "Gaussian" baseline.
+
+use crate::data::grid::Grid;
+use crate::filters::separable_filter;
+
+/// Discrete, normalized Gaussian taps for the given sigma and radius.
+pub fn gaussian_kernel(sigma: f64, radius: usize) -> Vec<f64> {
+    assert!(sigma > 0.0);
+    let mut k: Vec<f64> = (-(radius as isize)..=radius as isize)
+        .map(|t| (-(t as f64).powi(2) / (2.0 * sigma * sigma)).exp())
+        .collect();
+    let sum: f64 = k.iter().sum();
+    for w in k.iter_mut() {
+        *w /= sum;
+    }
+    k
+}
+
+/// Separable Gaussian filter with the paper's 3×3(×3) window (radius 1).
+pub fn gaussian_filter(grid: &Grid<f32>, sigma: f64) -> Grid<f32> {
+    separable_filter(grid, &gaussian_kernel(sigma, 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kernel_normalized_and_symmetric() {
+        let k = gaussian_kernel(1.0, 1);
+        assert_eq!(k.len(), 3);
+        assert!((k.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((k[0] - k[2]).abs() < 1e-15);
+        assert!(k[1] > k[0]);
+    }
+
+    #[test]
+    fn smooths_noise() {
+        let mut rng = Rng::new(1);
+        let n = 64;
+        let noisy: Vec<f32> = (0..n * n).map(|_| rng.f32()).collect();
+        let g = Grid::from_vec(noisy, &[n, n]);
+        let f = gaussian_filter(&g, 1.0);
+        // variance must shrink
+        let var = |d: &[f32]| {
+            let m = d.iter().map(|&v| v as f64).sum::<f64>() / d.len() as f64;
+            d.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / d.len() as f64
+        };
+        assert!(var(&f.data) < 0.5 * var(&g.data));
+    }
+
+    #[test]
+    fn preserves_linear_ramp_interior() {
+        // Symmetric kernels preserve affine signals away from edges.
+        let n = 16;
+        let g = Grid::from_vec((0..n).map(|i| i as f32).collect(), &[n]);
+        let f = gaussian_filter(&g, 1.0);
+        for i in 1..n - 1 {
+            assert!((f.data[i] - i as f32).abs() < 1e-5, "i={i}");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Baseline artifact-mitigation filters from the paper's evaluation
+//! (§VIII-A): Gaussian, uniform (mean), and Wiener, each over a
+//! 3×3(×3) window like the paper. These are classical image-restoration
+//! smoothers; Table II shows they do *not* guarantee the relaxed error
+//! bound, unlike the quantization-aware compensation.
+//!
+//! Boundary handling is `reflect` (mirror) on every axis, the
+//! scipy.ndimage default, so the Python tests can cross-check numerics.
+
+pub mod gaussian;
+pub mod uniform;
+pub mod wiener;
+
+pub use gaussian::gaussian_filter;
+pub use uniform::uniform_filter;
+pub use wiener::wiener_filter;
+
+use crate::data::grid::{Grid, Shape};
+
+/// Reflected (mirror) index for out-of-range positions, scipy `reflect`
+/// convention: `(d c b a | a b c d | d c b a)`.
+#[inline]
+pub(crate) fn reflect(pos: isize, n: usize) -> usize {
+    debug_assert!(n > 0);
+    if n == 1 {
+        return 0;
+    }
+    let period = 2 * n as isize;
+    let mut p = pos % period;
+    if p < 0 {
+        p += period;
+    }
+    let p = p as usize;
+    if p < n {
+        p
+    } else {
+        2 * n - 1 - p
+    }
+}
+
+/// Apply a symmetric odd-length 1D kernel separably along every active
+/// axis (unit axes skipped). `kernel.len()` must be odd.
+pub(crate) fn separable_filter(grid: &Grid<f32>, kernel: &[f64]) -> Grid<f32> {
+    assert!(kernel.len() % 2 == 1, "kernel must be odd-length");
+    let shape = grid.shape;
+    let mut cur: Vec<f64> = grid.data.iter().map(|&v| v as f64).collect();
+    for axis in shape.active_axes().collect::<Vec<_>>() {
+        cur = convolve_axis(&cur, shape, axis, kernel);
+    }
+    let mut out = Grid::from_vec(cur.iter().map(|&v| v as f32).collect(), shape.user_dims());
+    out.shape.ndim = shape.ndim;
+    out
+}
+
+/// 1D convolution along `axis` with reflect boundaries.
+pub(crate) fn convolve_axis(data: &[f64], shape: Shape, axis: usize, kernel: &[f64]) -> Vec<f64> {
+    let dims = shape.dims;
+    let stride = shape.strides()[axis];
+    let n = dims[axis];
+    let radius = kernel.len() / 2;
+    let (oa, ob) = match axis {
+        0 => (1, 2),
+        1 => (0, 2),
+        _ => (0, 1),
+    };
+    let mut out = vec![0.0f64; data.len()];
+    let mut line = vec![0.0f64; n];
+    for a in 0..dims[oa] {
+        for b in 0..dims[ob] {
+            let base = match axis {
+                0 => shape.idx(0, a, b),
+                1 => shape.idx(a, 0, b),
+                _ => shape.idx(a, b, 0),
+            };
+            for (t, dst) in line.iter_mut().enumerate() {
+                *dst = data[base + t * stride];
+            }
+            for p in 0..n {
+                let mut acc = 0.0;
+                for (t, &w) in kernel.iter().enumerate() {
+                    let q = reflect(p as isize + t as isize - radius as isize, n);
+                    acc += w * line[q];
+                }
+                out[base + p * stride] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reflect_matches_scipy_convention() {
+        // n = 4: positions -2,-1,0,1,2,3,4,5 → 1,0,0,1,2,3,3,2
+        let got: Vec<usize> = (-2..6).map(|p| reflect(p, 4)).collect();
+        assert_eq!(got, vec![1, 0, 0, 1, 2, 3, 3, 2]);
+    }
+
+    #[test]
+    fn reflect_n1_always_zero() {
+        for p in -3..4 {
+            assert_eq!(reflect(p, 1), 0);
+        }
+    }
+
+    #[test]
+    fn identity_kernel_is_noop() {
+        let g = Grid::from_vec((0..24).map(|x| x as f32).collect(), &[4, 6]);
+        let out = separable_filter(&g, &[0.0, 1.0, 0.0]);
+        assert_eq!(out.data, g.data);
+    }
+
+    #[test]
+    fn mean_kernel_preserves_constant() {
+        let g = Grid::from_vec(vec![5.0f32; 27], &[3, 3, 3]);
+        let k = [1.0 / 3.0; 3];
+        let out = separable_filter(&g, &k);
+        for v in out.data {
+            assert!((v - 5.0).abs() < 1e-6);
+        }
+    }
+}

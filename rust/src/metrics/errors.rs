@@ -1,0 +1,75 @@
+//! Pointwise error metrics and bit-rate (§VIII-B).
+
+/// Maximum absolute error `max_i |a_i - b_i|`.
+pub fn max_abs_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| ((x as f64) - (y as f64)).abs()).fold(0.0, f64::max)
+}
+
+/// Maximum value-range-relative error: `max|a-b| / (max(a)-min(a))`.
+/// This is the quantity Table II reports.
+pub fn max_rel_error(original: &[f32], other: &[f32]) -> f64 {
+    let (lo, hi) = original.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+        (l.min(v), h.max(v))
+    });
+    let range = (hi - lo) as f64;
+    if range == 0.0 {
+        return if max_abs_error(original, other) == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    max_abs_error(original, other) / range
+}
+
+/// Mean squared error in f64.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    a.iter().zip(b).map(|(&x, &y)| ((x as f64) - (y as f64)).powi(2)).sum::<f64>() / a.len() as f64
+}
+
+/// Bit-rate = bitwidth / compression-ratio = 8·compressed_bytes / n
+/// (bitwidth 32 for single precision, §VIII-B).
+pub fn bit_rate(compressed_bytes: usize, n_elements: usize) -> f64 {
+    assert!(n_elements > 0);
+    compressed_bytes as f64 * 8.0 / n_elements as f64
+}
+
+/// Compression ratio = original bytes / compressed bytes.
+pub fn compression_ratio(compressed_bytes: usize, n_elements: usize) -> f64 {
+    assert!(compressed_bytes > 0);
+    (n_elements * 4) as f64 / compressed_bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_abs_basic() {
+        assert_eq!(max_abs_error(&[1.0, 2.0, 3.0], &[1.0, 2.5, 2.0]), 1.0);
+    }
+
+    #[test]
+    fn max_rel_uses_original_range() {
+        let orig = [0.0f32, 10.0];
+        let other = [0.5f32, 10.0];
+        assert!((max_rel_error(&orig, &other) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_error_constant_field() {
+        assert_eq!(max_rel_error(&[2.0, 2.0], &[2.0, 2.0]), 0.0);
+        assert_eq!(max_rel_error(&[2.0, 2.0], &[2.5, 2.0]), f64::INFINITY);
+    }
+
+    #[test]
+    fn bitrate_and_ratio() {
+        // 1000 f32 = 4000 bytes compressed to 500 bytes → ratio 8, 4 bits/value
+        assert_eq!(compression_ratio(500, 1000), 8.0);
+        assert_eq!(bit_rate(500, 1000), 4.0);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[0.0, 0.0], &[3.0, 4.0]), 12.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Quality and efficiency metrics from the paper's evaluation (§IV-A,
+//! §VIII-B): SSIM (QCAT convention), PSNR, max abs/relative error and
+//! bit-rate.
+
+pub mod errors;
+pub mod psnr;
+pub mod ssim;
+
+pub use errors::{bit_rate, max_abs_error, max_rel_error};
+pub use psnr::psnr;
+pub use ssim::ssim;

@@ -1,0 +1,46 @@
+//! Peak signal-to-noise ratio (paper Eq. 4): value-range-based PSNR in
+//! dB, the scientific-data-compression convention (range of the
+//! *original* data, not 255).
+
+use crate::metrics::errors::mse;
+
+/// `PSNR = 20·log10( (max(D1) − min(D1)) / sqrt(MSE(D1, D2)) )`.
+/// Returns `f64::INFINITY` for identical arrays.
+pub fn psnr(original: &[f32], other: &[f32]) -> f64 {
+    let (lo, hi) = original.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+        (l.min(v), h.max(v))
+    });
+    let range = (hi - lo) as f64;
+    let m = mse(original, other);
+    if m == 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * (range / m.sqrt()).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_infinite() {
+        assert!(psnr(&[1.0, 2.0], &[1.0, 2.0]).is_infinite());
+    }
+
+    #[test]
+    fn known_value() {
+        // range 1, uniform error 0.1 → PSNR = 20 log10(1/0.1) = 20 dB
+        let orig = [0.0f32, 1.0];
+        let other = [0.1f32, 1.1];
+        // f32 representation of 1.1 costs a few ulps of slack
+        assert!((psnr(&orig, &other) - 20.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn smaller_error_is_larger_psnr() {
+        let orig: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let near: Vec<f32> = orig.iter().map(|v| v + 0.01).collect();
+        let far: Vec<f32> = orig.iter().map(|v| v + 1.0).collect();
+        assert!(psnr(&orig, &near) > psnr(&orig, &far));
+    }
+}

@@ -1,0 +1,290 @@
+//! Structural Similarity Index (paper Eq. 3), following the QCAT
+//! convention the paper cites [57]:
+//!
+//! * both fields are normalized by the *original* field's value range,
+//!   so the stabilizing constants are `c1 = 1e-4 = (0.01)²` and
+//!   `c2 = 9e-4 = (0.03)²` with dynamic range L = 1;
+//! * a sliding window (default size 7, stride 2) computes a local SSIM
+//!   from window means/variances/covariance, and the dataset SSIM is the
+//!   average over windows;
+//! * windows slide along every active axis, so 1D/2D/3D are handled
+//!   uniformly (a 2D field uses 7×7 windows, a 3D field 7×7×7).
+//!
+//! Implementation note: the window statistics are computed with
+//! separable sliding box-sums (prefix-sum per line, O(N) per axis per
+//! moment) rather than per-window loops — this turns the 7³·windows cost
+//! into 15 linear passes, which matters for the 256³+ fields in the
+//! benches. See EXPERIMENTS.md §Perf.
+
+use crate::data::grid::{Grid, Shape};
+
+/// QCAT constants for range-normalized data.
+pub const C1: f64 = 1e-4;
+pub const C2: f64 = 9e-4;
+
+/// Windowed SSIM between `original` and `other` (same shape required).
+/// `window` is the per-axis window extent, `stride` the window step.
+pub fn ssim(original: &Grid<f32>, other: &Grid<f32>, window: usize, stride: usize) -> f64 {
+    assert_eq!(original.shape, other.shape, "shape mismatch");
+    assert!(window > 0 && stride > 0);
+    let shape = original.shape;
+
+    // Normalize by the original's value range (QCAT convention).
+    let (lo, hi) = original.min_max();
+    let range = (hi - lo) as f64;
+    if range == 0.0 {
+        // Constant original: SSIM degenerates; define 1.0 iff identical.
+        let same = original.data == other.data;
+        return if same { 1.0 } else { 0.0 };
+    }
+    let inv = 1.0 / range;
+    let x: Vec<f64> = original.data.iter().map(|&v| (v as f64 - lo as f64) * inv).collect();
+    let y: Vec<f64> = other.data.iter().map(|&v| (v as f64 - lo as f64) * inv).collect();
+
+    // Per-axis window extent: full `window` on active axes, 1 on unit axes.
+    let w = [
+        if shape.dims[0] > 1 { window.min(shape.dims[0]) } else { 1 },
+        if shape.dims[1] > 1 { window.min(shape.dims[1]) } else { 1 },
+        if shape.dims[2] > 1 { window.min(shape.dims[2]) } else { 1 },
+    ];
+    let wn = (w[0] * w[1] * w[2]) as f64;
+
+    // Box-sums of the five moments.
+    let sx = box_sum(&x, shape, w);
+    let sy = box_sum(&y, shape, w);
+    let sxx = box_sum_sq(&x, shape, w);
+    let syy = box_sum_sq(&y, shape, w);
+    let sxy = box_sum_prod(&x, &y, shape, w);
+
+    // Valid window anchor positions per axis: 0, stride, ..., dim - w.
+    let anchors = |dim: usize, wa: usize| -> Vec<usize> {
+        let mut v = Vec::new();
+        let mut p = 0;
+        while p + wa <= dim {
+            v.push(p);
+            p += stride;
+        }
+        if v.is_empty() {
+            v.push(0); // window clamped to dim already
+        }
+        v
+    };
+    let ai = anchors(shape.dims[0], w[0]);
+    let aj = anchors(shape.dims[1], w[1]);
+    let ak = anchors(shape.dims[2], w[2]);
+
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for &i in &ai {
+        for &j in &aj {
+            for &k in &ak {
+                let idx = shape.idx(i, j, k);
+                let mx = sx[idx] / wn;
+                let my = sy[idx] / wn;
+                let vx = (sxx[idx] / wn - mx * mx).max(0.0);
+                let vy = (syy[idx] / wn - my * my).max(0.0);
+                let cxy = sxy[idx] / wn - mx * my;
+                let s = ((2.0 * mx * my + C1) * (2.0 * cxy + C2))
+                    / ((mx * mx + my * my + C1) * (vx + vy + C2));
+                total += s;
+                count += 1;
+            }
+        }
+    }
+    total / count as f64
+}
+
+/// For each anchor position `p`, the sum of `data` over the box
+/// `[p, p+w)` per axis, stored at the anchor's flat index. Positions
+/// whose box would exceed the domain hold garbage (never sampled).
+fn box_sum(data: &[f64], shape: Shape, w: [usize; 3]) -> Vec<f64> {
+    let mut buf = data.to_vec();
+    for axis in 0..3 {
+        if w[axis] > 1 {
+            sliding_sum_axis(&mut buf, shape, axis, w[axis]);
+        }
+    }
+    buf
+}
+
+fn box_sum_sq(data: &[f64], shape: Shape, w: [usize; 3]) -> Vec<f64> {
+    let sq: Vec<f64> = data.iter().map(|&v| v * v).collect();
+    box_sum(&sq, shape, w)
+}
+
+fn box_sum_prod(a: &[f64], b: &[f64], shape: Shape, w: [usize; 3]) -> Vec<f64> {
+    let prod: Vec<f64> = a.iter().zip(b).map(|(&x, &y)| x * y).collect();
+    box_sum(&prod, shape, w)
+}
+
+/// In-place sliding-window sum of width `w` along `axis`: after the call,
+/// `buf[p] = sum_{t=0..w} old[p + t*stride_axis]` for every position with
+/// the full window in bounds.
+fn sliding_sum_axis(buf: &mut [f64], shape: Shape, axis: usize, w: usize) {
+    let dims = shape.dims;
+    let stride = shape.strides()[axis];
+    let n = dims[axis];
+    debug_assert!(w <= n);
+    // Iterate all lines along `axis`.
+    let (oa, ob) = match axis {
+        0 => (1, 2),
+        1 => (0, 2),
+        _ => (0, 1),
+    };
+    let mut line = vec![0.0f64; n];
+    for a in 0..dims[oa] {
+        for b in 0..dims[ob] {
+            let base = match axis {
+                0 => shape.idx(0, a, b),
+                1 => shape.idx(a, 0, b),
+                _ => shape.idx(a, b, 0),
+            };
+            // Gather line.
+            for (t, dst) in line.iter_mut().enumerate() {
+                *dst = buf[base + t * stride];
+            }
+            // Rolling sum.
+            let mut acc: f64 = line[..w].iter().sum();
+            buf[base] = acc;
+            for p in 1..=(n - w) {
+                acc += line[p + w - 1] - line[p - 1];
+                buf[base + p * stride] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Brute-force reference SSIM for validation.
+    fn ssim_naive(original: &Grid<f32>, other: &Grid<f32>, window: usize, stride: usize) -> f64 {
+        let shape = original.shape;
+        let (lo, hi) = original.min_max();
+        let range = (hi - lo) as f64;
+        let norm = |v: f32| (v as f64 - lo as f64) / range;
+        let w = [
+            if shape.dims[0] > 1 { window.min(shape.dims[0]) } else { 1 },
+            if shape.dims[1] > 1 { window.min(shape.dims[1]) } else { 1 },
+            if shape.dims[2] > 1 { window.min(shape.dims[2]) } else { 1 },
+        ];
+        let mut total = 0.0;
+        let mut count = 0;
+        let anchors = |dim: usize, wa: usize| -> Vec<usize> {
+            let mut v = Vec::new();
+            let mut p = 0;
+            while p + wa <= dim {
+                v.push(p);
+                p += stride;
+            }
+            if v.is_empty() {
+                v.push(0);
+            }
+            v
+        };
+        for &i in &anchors(shape.dims[0], w[0]) {
+            for &j in &anchors(shape.dims[1], w[1]) {
+                for &k in &anchors(shape.dims[2], w[2]) {
+                    let mut xs = Vec::new();
+                    let mut ys = Vec::new();
+                    for a in 0..w[0] {
+                        for b in 0..w[1] {
+                            for c in 0..w[2] {
+                                xs.push(norm(original.at(i + a, j + b, k + c)));
+                                ys.push(norm(other.at(i + a, j + b, k + c)));
+                            }
+                        }
+                    }
+                    let n = xs.len() as f64;
+                    let mx = xs.iter().sum::<f64>() / n;
+                    let my = ys.iter().sum::<f64>() / n;
+                    let vx = xs.iter().map(|x| x * x).sum::<f64>() / n - mx * mx;
+                    let vy = ys.iter().map(|y| y * y).sum::<f64>() / n - my * my;
+                    let cxy = xs.iter().zip(&ys).map(|(x, y)| x * y).sum::<f64>() / n - mx * my;
+                    total += ((2.0 * mx * my + C1) * (2.0 * cxy + C2))
+                        / ((mx * mx + my * my + C1) * (vx + vy + C2));
+                    count += 1;
+                }
+            }
+        }
+        total / count as f64
+    }
+
+    #[test]
+    fn identical_fields_score_one() {
+        let g = Grid::from_vec((0..100).map(|i| (i as f32).sin()).collect(), &[10, 10]);
+        let s = ssim(&g, &g, 7, 2);
+        assert!((s - 1.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn matches_naive_2d() {
+        let mut rng = Rng::new(12);
+        let a: Vec<f32> = (0..(20 * 30)).map(|_| rng.f32()).collect();
+        let b: Vec<f32> = a.iter().map(|v| v + 0.1 * (rng.f32() - 0.5)).collect();
+        let ga = Grid::from_vec(a, &[20, 30]);
+        let gb = Grid::from_vec(b, &[20, 30]);
+        let fast = ssim(&ga, &gb, 7, 2);
+        let slow = ssim_naive(&ga, &gb, 7, 2);
+        assert!((fast - slow).abs() < 1e-10, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn matches_naive_3d() {
+        let mut rng = Rng::new(13);
+        let a: Vec<f32> = (0..(9 * 11 * 13)).map(|_| rng.f32()).collect();
+        let b: Vec<f32> = a.iter().map(|v| v * 0.9 + 0.05).collect();
+        let ga = Grid::from_vec(a, &[9, 11, 13]);
+        let gb = Grid::from_vec(b, &[9, 11, 13]);
+        let fast = ssim(&ga, &gb, 7, 2);
+        let slow = ssim_naive(&ga, &gb, 7, 2);
+        assert!((fast - slow).abs() < 1e-10, "fast={fast} slow={slow}");
+    }
+
+    #[test]
+    fn matches_naive_1d_and_small_windows() {
+        let mut rng = Rng::new(14);
+        let a: Vec<f32> = (0..40).map(|_| rng.f32()).collect();
+        let b: Vec<f32> = a.iter().map(|v| v + 0.2).collect();
+        let ga = Grid::from_vec(a, &[40]);
+        let gb = Grid::from_vec(b, &[40]);
+        for (w, s) in [(7, 2), (3, 1), (5, 3)] {
+            let fast = ssim(&ga, &gb, w, s);
+            let slow = ssim_naive(&ga, &gb, w, s);
+            assert!((fast - slow).abs() < 1e-10, "w={w} s={s}");
+        }
+    }
+
+    #[test]
+    fn degraded_field_scores_lower() {
+        let mut rng = Rng::new(15);
+        let base: Vec<f32> = (0..(32 * 32)).map(|i| ((i % 32) as f32 * 0.2).sin()).collect();
+        let light: Vec<f32> = base.iter().map(|v| v + 0.01 * (rng.f32() - 0.5)).collect();
+        let heavy: Vec<f32> = base.iter().map(|v| v + 0.5 * (rng.f32() - 0.5)).collect();
+        let g = Grid::from_vec(base, &[32, 32]);
+        let gl = Grid::from_vec(light, &[32, 32]);
+        let gh = Grid::from_vec(heavy, &[32, 32]);
+        let sl = ssim(&g, &gl, 7, 2);
+        let sh = ssim(&g, &gh, 7, 2);
+        assert!(sl > sh, "sl={sl} sh={sh}");
+        assert!(sl > 0.9);
+    }
+
+    #[test]
+    fn constant_original_defined() {
+        let g = Grid::from_vec(vec![1.0f32; 16], &[4, 4]);
+        let h = Grid::from_vec(vec![1.0f32; 16], &[4, 4]);
+        assert_eq!(ssim(&g, &h, 7, 2), 1.0);
+        let other = Grid::from_vec(vec![2.0f32; 16], &[4, 4]);
+        assert_eq!(ssim(&g, &other, 7, 2), 0.0);
+    }
+
+    #[test]
+    fn window_larger_than_dim_is_clamped() {
+        let g = Grid::from_vec((0..12).map(|x| x as f32).collect(), &[3, 4]);
+        let s = ssim(&g, &g, 7, 2);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,261 @@
+//! Step A: quantization-boundary detection and error-sign estimation
+//! (paper Alg. 2, `GetBoundaryAndSignMap`), dimension-generic over the
+//! grid's active axes (4-neighborhood in 2D, 6-neighborhood in 3D).
+//!
+//! A point is a **quantization boundary** if its quantization index
+//! differs from at least one neighbor. Its error sign follows the
+//! characterization of §V: the original value sits near the *top* of its
+//! quantization interval (error ≈ +ε) when the index increases toward a
+//! neighbor, and near the *bottom* (error ≈ −ε) when it decreases — i.e.
+//! the sign of the difference toward the differing neighbor. Where
+//! several neighbors differ we take the majority vote, which reduces to
+//! the paper's forward-difference rule on monotone transitions. The sign
+//! is discarded (set to 0) in fast-varying regions where any
+//! central-difference gradient magnitude reaches 1.0, since the
+//! smoothness assumption behind the interpolation breaks there.
+//!
+//! Domain-edge points (coordinate 0 or dim−1 on an active axis) are never
+//! marked, matching Alg. 2's loop bounds.
+
+use crate::data::grid::Grid;
+use crate::quant::QIndex;
+use crate::util::par::{parallel_for_range, UnsafeSlice};
+
+/// Output of step A.
+pub struct BoundaryResult {
+    /// `B₁`: true at quantization-boundary points.
+    pub mask: Grid<bool>,
+    /// Sign map at boundary points (−1, 0, +1); 0 elsewhere.
+    pub sign: Grid<i8>,
+}
+
+/// Detect quantization boundaries and their error signs.
+pub fn boundary_and_sign(q: &Grid<QIndex>, threads: usize) -> BoundaryResult {
+    let shape = q.shape;
+    let mut mask = Grid::<bool>::like(q);
+    let mut sign = Grid::<i8>::like(q);
+    let dims = shape.dims;
+    let strides = shape.strides();
+    let active: Vec<usize> = shape.active_axes().collect();
+    if active.is_empty() {
+        return BoundaryResult { mask, sign };
+    }
+
+    let qd = &q.data;
+    let ms = UnsafeSlice::new(&mut mask.data);
+    let ss = UnsafeSlice::new(&mut sign.data);
+
+    // Parallelize over the slowest active axis' slices.
+    let par_axis = active[0];
+    let n_slices = dims[par_axis];
+    parallel_for_range(n_slices, threads, 1, |slice| {
+        // Interior test per active axis; the parallel axis' coordinate is
+        // fixed to `slice`.
+        let mut lo = [0usize; 3];
+        let mut hi = dims; // exclusive
+        for &a in &active {
+            lo[a] = 1;
+            hi[a] = dims[a] - 1;
+        }
+        lo[par_axis] = slice.max(lo[par_axis]);
+        hi[par_axis] = (slice + 1).min(hi[par_axis]);
+        if lo[par_axis] >= hi[par_axis] {
+            return; // slice on the domain edge of the parallel axis
+        }
+        for i in lo[0]..hi[0] {
+            for j in lo[1]..hi[1] {
+                for k in lo[2]..hi[2] {
+                    let idx = shape.idx(i, j, k);
+                    let qc = qd[idx];
+                    let mut vote = 0i32;
+                    let mut differs = false;
+                    let mut fast = false;
+                    for &a in &active {
+                        let fwd = qd[idx + strides[a]];
+                        let bwd = qd[idx - strides[a]];
+                        if fwd != qc {
+                            differs = true;
+                            vote += (fwd - qc).signum() as i32;
+                        }
+                        if bwd != qc {
+                            differs = true;
+                            vote += (bwd - qc).signum() as i32;
+                        }
+                        // central-difference gradient ≥ 1.0 ⇔ |fwd−bwd| ≥ 2
+                        if (fwd - bwd).abs() >= 2 {
+                            fast = true;
+                        }
+                    }
+                    if differs {
+                        // SAFETY: slices along par_axis are disjoint.
+                        unsafe { ms.write(idx, true) };
+                        let s = if fast { 0 } else { vote.signum() as i8 };
+                        unsafe { ss.write(idx, s) };
+                    }
+                }
+            }
+        }
+    });
+
+    BoundaryResult { mask, sign }
+}
+
+/// Generic neighbor-differs boundary mask (used by step C to derive the
+/// sign-flipping boundary `B₂` from the propagated sign map).
+pub fn boundary_mask<T: PartialEq + Copy + Send + Sync>(g: &Grid<T>, threads: usize) -> Grid<bool> {
+    let shape = g.shape;
+    let mut mask = Grid::<bool>::like(g);
+    let dims = shape.dims;
+    let strides = shape.strides();
+    let active: Vec<usize> = shape.active_axes().collect();
+    if active.is_empty() {
+        return mask;
+    }
+    let data = &g.data;
+    let ms = UnsafeSlice::new(&mut mask.data);
+    let par_axis = active[0];
+    parallel_for_range(dims[par_axis], threads, 1, |slice| {
+        let mut lo = [0usize; 3];
+        let mut hi = dims;
+        for &a in &active {
+            lo[a] = 1;
+            hi[a] = dims[a] - 1;
+        }
+        lo[par_axis] = slice.max(lo[par_axis]);
+        hi[par_axis] = (slice + 1).min(hi[par_axis]);
+        if lo[par_axis] >= hi[par_axis] {
+            return;
+        }
+        for i in lo[0]..hi[0] {
+            for j in lo[1]..hi[1] {
+                for k in lo[2]..hi[2] {
+                    let idx = shape.idx(i, j, k);
+                    let c = data[idx];
+                    let differs = active
+                        .iter()
+                        .any(|&a| data[idx + strides[a]] != c || data[idx - strides[a]] != c);
+                    if differs {
+                        unsafe { ms.write(idx, true) };
+                    }
+                }
+            }
+        }
+    });
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn qgrid(vals: Vec<i64>, dims: &[usize]) -> Grid<QIndex> {
+        Grid::from_vec(vals, dims)
+    }
+
+    #[test]
+    fn uniform_grid_has_no_boundary() {
+        let q = qgrid(vec![3; 25], &[5, 5]);
+        let r = boundary_and_sign(&q, 1);
+        assert!(r.mask.data.iter().all(|&b| !b));
+        assert!(r.sign.data.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn step_edge_marks_both_sides_with_opposite_signs() {
+        // 1 row, index steps 0→1 between k=4 and k=5 (1D semantics in 2D)
+        let mut vals = vec![0i64; 10];
+        for v in vals[5..].iter_mut() {
+            *v = 1;
+        }
+        let q = Grid::from_vec(vals, &[10]);
+        let r = boundary_and_sign(&q, 1);
+        // k=4 (index 0, next is 1): boundary, sign +1 (value near top)
+        assert!(r.mask.data[4]);
+        assert_eq!(r.sign.data[4], 1);
+        // k=5 (index 1, prev is 0): boundary, sign −1
+        assert!(r.mask.data[5]);
+        assert_eq!(r.sign.data[5], -1);
+        // interior non-boundary
+        assert!(!r.mask.data[2]);
+        // domain edges never marked
+        assert!(!r.mask.data[0] && !r.mask.data[9]);
+    }
+
+    #[test]
+    fn fast_varying_region_gets_zero_sign() {
+        // index jumps by 2 within one step → central gradient ≥ 1 → sign 0
+        let vals = vec![0i64, 0, 2, 4, 4, 4];
+        let q = Grid::from_vec(vals, &[6]);
+        let r = boundary_and_sign(&q, 1);
+        assert!(r.mask.data[2]);
+        assert_eq!(r.sign.data[2], 0);
+        assert!(r.mask.data[3]);
+        assert_eq!(r.sign.data[3], 0);
+    }
+
+    #[test]
+    fn domain_edges_never_marked_2d() {
+        let mut vals = vec![0i64; 36];
+        vals[14] = 5; // interior point differs
+        let q = qgrid(vals, &[6, 6]);
+        let r = boundary_and_sign(&q, 1);
+        let shape = r.mask.shape;
+        for j in 0..6 {
+            for k in 0..6 {
+                if j == 0 || j == 5 || k == 0 || k == 5 {
+                    assert!(!r.mask.at(0, j, k), "edge ({j},{k}) marked");
+                }
+            }
+        }
+        // the differing point and its interior neighbors are marked
+        assert!(r.mask.data[14]);
+        assert!(r.mask.at(0, 2, 3) || shape.ndim == 2);
+    }
+
+    #[test]
+    fn boundary_mask_generic_matches_sign_changes() {
+        let vals = vec![-1i8, -1, 1, 1, 1, -1, -1];
+        let g = Grid::from_vec(vals, &[7]);
+        let m = boundary_mask(&g, 1);
+        assert_eq!(
+            m.data,
+            vec![false, true, true, false, true, true, false]
+        );
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        prop_check("boundary threads==seq", 30, |g| {
+            let d0 = g.usize_in(3, 10);
+            let d1 = g.usize_in(3, 10);
+            let d2 = g.usize_in(3, 10);
+            let n = d0 * d1 * d2;
+            let vals: Vec<i64> = (0..n).map(|_| g.usize_in(0, 3) as i64).collect();
+            let q = Grid::from_vec(vals, &[d0, d1, d2]);
+            let a = boundary_and_sign(&q, 1);
+            let b = boundary_and_sign(&q, 4);
+            assert_eq!(a.mask.data, b.mask.data);
+            assert_eq!(a.sign.data, b.sign.data);
+        });
+    }
+
+    #[test]
+    fn smooth_3d_transition_signs() {
+        // 3D field increasing along axis 0: plane of boundary pairs
+        let mut q = Grid::<QIndex>::zeros(&[6, 5, 5]);
+        for i in 0..6 {
+            for j in 0..5 {
+                for k in 0..5 {
+                    *q.at_mut(i, j, k) = if i >= 3 { 1 } else { 0 };
+                }
+            }
+        }
+        let r = boundary_and_sign(&q, 1);
+        // interior of plane i=2 (index 0 next to 1): +1
+        assert_eq!(r.sign.at(2, 2, 2), 1);
+        assert!(r.mask.at(2, 2, 2));
+        // interior of plane i=3: −1
+        assert_eq!(r.sign.at(3, 2, 2), -1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Step E: inverse-distance-weighted error estimation and compensation
+//! (paper §VI, Alg. 4 line 8).
+//!
+//! For a point at distance `k₁` from its nearest quantization boundary
+//! (error magnitude ≈ η·ε there) and `k₂` from the nearest sign-flipping
+//! boundary (error ≈ 0 there), IDW interpolation gives
+//!
+//! ```text
+//! C = (1/k₁) / (1/k₁ + 1/k₂) · S · η·ε  =  k₂/(k₁+k₂) · S · η·ε
+//! ```
+//!
+//! Limits: on `B₁` (k₁=0) the full η·ε·S is applied; on `B₂` (k₂=0)
+//! nothing is. If no sign-flipping boundary exists (k₂=∞) the weight's
+//! limit is 1; if no quantization boundary exists at all the field is
+//! homogeneous and no compensation is applied. Because `|C| ≤ η·ε` always
+//! and the quantization error is ≤ ε, the compensated error is strictly
+//! within the relaxed bound `(1+η)·ε` (Table II).
+
+use crate::mitigation::edt::INF;
+use crate::util::par::parallel_chunks_mut;
+
+/// IDW weight `k₂/(k₁+k₂)` from *squared* distances, with the limit
+/// conventions above.
+#[inline]
+pub fn idw_weight(dist1_sq: i64, dist2_sq: i64) -> f64 {
+    if dist1_sq >= INF {
+        return 0.0; // no quantization boundary anywhere
+    }
+    if dist1_sq == 0 {
+        return 1.0; // on B₁
+    }
+    if dist2_sq >= INF {
+        return 1.0; // no sign-flip boundary: take the boundary value
+    }
+    if dist2_sq == 0 {
+        return 0.0; // on B₂
+    }
+    let k1 = (dist1_sq as f64).sqrt();
+    let k2 = (dist2_sq as f64).sqrt();
+    k2 / (k1 + k2)
+}
+
+/// Add the interpolated compensation to `data` in place:
+/// `data[i] += idw_weight(d1[i], d2[i]) · sign[i] · eta_eps`.
+pub fn compensate(
+    data: &mut [f32],
+    dist1_sq: &[i64],
+    dist2_sq: &[i64],
+    sign: &[i8],
+    eta_eps: f64,
+    threads: usize,
+) {
+    compensate_adaptive(data, dist1_sq, dist2_sq, sign, eta_eps, None, threads)
+}
+
+/// [`compensate`] with the paper's §IX future-work extension: an
+/// optional **homogeneous-region taper**. Deep inside a region of
+/// uniform quantization index, the characterization's premise (error ≈
+/// ±ε near boundaries, smoothly interpolable between them) weakens —
+/// the true error there is simply `d − 2qε` with no boundary structure
+/// to reconstruct, so compensating at full strength mostly injects
+/// noise. With `taper_radius = Some(r)`, the compensation is scaled by
+/// `exp(−(k₁/r)²)` so points farther than ~r cells from any
+/// quantization boundary fade to no-op. `None` reproduces the paper's
+/// published algorithm exactly.
+pub fn compensate_adaptive(
+    data: &mut [f32],
+    dist1_sq: &[i64],
+    dist2_sq: &[i64],
+    sign: &[i8],
+    eta_eps: f64,
+    taper_radius: Option<f64>,
+    threads: usize,
+) {
+    assert_eq!(data.len(), dist1_sq.len());
+    assert_eq!(data.len(), dist2_sq.len());
+    assert_eq!(data.len(), sign.len());
+    let inv_r_sq = taper_radius.map(|r| {
+        assert!(r > 0.0, "taper radius must be positive");
+        1.0 / (r * r)
+    });
+    parallel_chunks_mut(data, threads, |start, chunk| {
+        for (off, v) in chunk.iter_mut().enumerate() {
+            let i = start + off;
+            let s = sign[i];
+            if s == 0 {
+                continue;
+            }
+            let mut w = idw_weight(dist1_sq[i], dist2_sq[i]);
+            if let Some(inv) = inv_r_sq {
+                if dist1_sq[i] >= INF {
+                    continue;
+                }
+                w *= (-(dist1_sq[i] as f64) * inv).exp();
+            }
+            *v += (w * s as f64 * eta_eps) as f32;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_limits() {
+        assert_eq!(idw_weight(0, 100), 1.0);
+        assert_eq!(idw_weight(100, 0), 0.0);
+        assert_eq!(idw_weight(INF, 5), 0.0);
+        assert_eq!(idw_weight(5, INF), 1.0);
+        // equidistant → 0.5
+        assert!((idw_weight(9, 9) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_monotone_in_dist1() {
+        // farther from the quantization boundary → smaller weight
+        let w_near = idw_weight(1, 16);
+        let w_far = idw_weight(9, 16);
+        assert!(w_near > w_far);
+        assert!((0.0..=1.0).contains(&w_near) && (0.0..=1.0).contains(&w_far));
+    }
+
+    #[test]
+    fn compensation_bounded_by_eta_eps() {
+        let n = 100;
+        let mut data = vec![0.0f32; n];
+        let d1: Vec<i64> = (0..n as i64).collect();
+        let d2: Vec<i64> = (0..n as i64).rev().collect();
+        let sign: Vec<i8> = (0..n).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let eta_eps = 0.9 * 0.01;
+        compensate(&mut data, &d1, &d2, &sign, eta_eps, 1);
+        for v in data {
+            assert!(v.abs() as f64 <= eta_eps * (1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn zero_sign_means_untouched() {
+        let mut data = vec![1.5f32; 8];
+        let d1 = vec![1i64; 8];
+        let d2 = vec![4i64; 8];
+        let sign = vec![0i8; 8];
+        compensate(&mut data, &d1, &d2, &sign, 0.5, 1);
+        assert!(data.iter().all(|&v| v == 1.5));
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let n = 1000;
+        let d1: Vec<i64> = (0..n as i64).map(|i| (i * 7) % 50).collect();
+        let d2: Vec<i64> = (0..n as i64).map(|i| (i * 13) % 60).collect();
+        let sign: Vec<i8> = (0..n).map(|i| [(-1i8), 0, 1][i % 3]).collect();
+        let mut a = vec![0.25f32; n];
+        let mut b = a.clone();
+        compensate(&mut a, &d1, &d2, &sign, 0.009, 1);
+        compensate(&mut b, &d1, &d2, &sign, 0.009, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn adaptive_taper_fades_deep_interior() {
+        // Near the boundary the taper barely changes anything; far away
+        // it suppresses the compensation (paper §IX homogeneous regions).
+        let n = 4;
+        let mut near = vec![0.0f32; n];
+        let mut far = vec![0.0f32; n];
+        let sign = vec![1i8; n];
+        let d2 = vec![10_000i64; n];
+        compensate_adaptive(&mut near, &[1; 4], &d2, &sign, 1.0, Some(8.0), 1);
+        compensate_adaptive(&mut far, &[40 * 40; 4], &d2, &sign, 1.0, Some(8.0), 1);
+        assert!(near[0] > 0.9, "near={}", near[0]);
+        assert!(far[0] < 1e-5, "far={}", far[0]);
+    }
+
+    #[test]
+    fn adaptive_none_matches_plain_compensate() {
+        let n = 64;
+        let d1: Vec<i64> = (0..n as i64).map(|i| (i * 5) % 37).collect();
+        let d2: Vec<i64> = (0..n as i64).map(|i| (i * 11) % 23).collect();
+        let sign: Vec<i8> = (0..n).map(|i| [(-1i8), 0, 1][i % 3]).collect();
+        let mut a = vec![0.5f32; n];
+        let mut b = a.clone();
+        compensate(&mut a, &d1, &d2, &sign, 0.02, 1);
+        compensate_adaptive(&mut b, &d1, &d2, &sign, 0.02, None, 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn adaptive_still_bounded_by_eta_eps() {
+        let n = 100;
+        let mut data = vec![0.0f32; n];
+        let d1: Vec<i64> = (0..n as i64).collect();
+        let d2: Vec<i64> = (0..n as i64).rev().collect();
+        let sign = vec![-1i8; n];
+        compensate_adaptive(&mut data, &d1, &d2, &sign, 0.5, Some(3.0), 1);
+        for v in data {
+            assert!(v.abs() <= 0.5 * (1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn sign_direction_applied() {
+        let mut data = vec![0.0f32, 0.0];
+        compensate(&mut data, &[0, 0], &[9, 9], &[1, -1], 0.9, 1);
+        assert!(data[0] > 0.0 && data[1] < 0.0);
+        assert!((data[0] - 0.9).abs() < 1e-6);
+    }
+}

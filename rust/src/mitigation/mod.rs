@@ -1,0 +1,26 @@
+//! The paper's contribution: quantization-aware interpolation for
+//! artifact mitigation (Algorithms 1–4, §V–§VII-A).
+//!
+//! Pipeline (Fig. 3):
+//!
+//! 1. **A** [`boundary`] — find quantization boundaries `B₁` and their
+//!    error signs (Alg. 2);
+//! 2. **B** [`edt`] — exact EDT to `B₁` → `Dist₁` + nearest-boundary
+//!    feature transform `I₁` (Alg. 1, Maurer et al.);
+//! 3. **C** [`sign`] — propagate signs from nearest boundaries, derive
+//!    the sign-flipping boundary `B₂` (Alg. 3);
+//! 4. **D** [`edt`] — second EDT to `B₂` → `Dist₂`;
+//! 5. **E** [`interpolate`] — inverse-distance-weighted compensation
+//!    `C = k₂/(k₁+k₂) · S · η·ε` added to the decompressed data.
+//!
+//! [`pipeline`] assembles the steps sequentially or with shared-memory
+//! threads (§VII-A); the distributed version lives in
+//! [`crate::coordinator`].
+
+pub mod boundary;
+pub mod edt;
+pub mod interpolate;
+pub mod pipeline;
+pub mod sign;
+
+pub use pipeline::{mitigate, mitigate_with_stats, Backend, MitigationConfig, PipelineStats};

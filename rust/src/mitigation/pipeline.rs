@@ -1,0 +1,288 @@
+//! The full distance-based compensation pipeline (paper Alg. 4),
+//! sequential or shared-memory parallel (§VII-A), with an optional PJRT
+//! backend that runs steps A and E in the AOT-compiled JAX/Pallas
+//! executables (see `crate::runtime`).
+
+use crate::data::grid::Grid;
+use crate::mitigation::boundary::boundary_and_sign;
+use crate::mitigation::edt::edt;
+use crate::mitigation::sign::propagate_signs;
+use crate::quant::{QIndex, ResolvedBound};
+use crate::util::timer::Stopwatch;
+
+/// Which engine executes steps A (boundary/sign) and E (IDW compensate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Pure-Rust implementation (default).
+    #[default]
+    Native,
+    /// AOT-compiled JAX/Pallas executables through PJRT
+    /// (`artifacts/*.hlo.txt` must have been built by `make artifacts`).
+    Pjrt,
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MitigationConfig {
+    /// Compensation factor η: assumed error magnitude at quantization
+    /// boundaries as a fraction of ε. The paper uses 0.9.
+    pub eta: f64,
+    /// Shared-memory threads for every step (1 = sequential).
+    pub threads: usize,
+    /// Execution backend for steps A/E.
+    pub backend: Backend,
+    /// Optional homogeneous-region taper radius in cells (paper §IX
+    /// future work, see `interpolate::compensate_adaptive`). `None`
+    /// reproduces the published algorithm. Native backend only.
+    pub taper_radius: Option<f64>,
+}
+
+impl Default for MitigationConfig {
+    fn default() -> Self {
+        MitigationConfig { eta: 0.9, threads: 1, backend: Backend::Native, taper_radius: None }
+    }
+}
+
+/// Per-step wall-clock and boundary statistics of one pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    /// Step A seconds (boundary + sign map).
+    pub t_boundary: f64,
+    /// Step B seconds (first EDT, with feature transform).
+    pub t_edt1: f64,
+    /// Step C seconds (sign propagation + B₂).
+    pub t_sign: f64,
+    /// Step D seconds (second EDT).
+    pub t_edt2: f64,
+    /// Step E seconds (IDW compensation).
+    pub t_compensate: f64,
+    /// Number of quantization-boundary points (|B₁|).
+    pub n_boundary1: usize,
+    /// Number of sign-flip boundary points (|B₂|).
+    pub n_boundary2: usize,
+}
+
+impl PipelineStats {
+    /// Total pipeline seconds.
+    pub fn total(&self) -> f64 {
+        self.t_boundary + self.t_edt1 + self.t_sign + self.t_edt2 + self.t_compensate
+    }
+
+    /// Throughput in MB/s for `n` f32 elements.
+    pub fn throughput_mbs(&self, n: usize) -> f64 {
+        (n * 4) as f64 / 1e6 / self.total().max(1e-12)
+    }
+}
+
+/// Run Algorithm 4 on decompressed data `dq` with quantization indices
+/// `q` and resolved bound `eb`; returns the compensated field.
+///
+/// Native backend only — use [`mitigate_with_stats`] for the PJRT path.
+pub fn mitigate(
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    cfg: &MitigationConfig,
+) -> Grid<f32> {
+    mitigate_with_stats(dq, q, eb, cfg).expect("mitigation failed").0
+}
+
+/// Like [`mitigate`] but returns per-step stats, and supports
+/// [`Backend::Pjrt`] (which can fail if artifacts are missing).
+pub fn mitigate_with_stats(
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    cfg: &MitigationConfig,
+) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
+    assert_eq!(dq.shape, q.shape, "data/index shape mismatch");
+    anyhow::ensure!(
+        cfg.taper_radius.is_none() || cfg.backend == Backend::Native,
+        "the homogeneous-region taper is implemented in the native backend only"
+    );
+    let threads = cfg.threads.max(1);
+    let mut stats = PipelineStats::default();
+    let mut sw = Stopwatch::new();
+
+    // Step A: quantization boundaries + signs.
+    let bres = match cfg.backend {
+        Backend::Native => sw.time(|| boundary_and_sign(q, threads)),
+        Backend::Pjrt => sw.time(|| crate::runtime::ops::boundary_and_sign_pjrt(q))?,
+    };
+    stats.t_boundary = std::mem::take(&mut sw).secs();
+    stats.n_boundary1 = bres.mask.data.iter().filter(|&&b| b).count();
+
+    if stats.n_boundary1 == 0 {
+        // Homogeneous index field (paper §IX future work): nothing to do.
+        return Ok((dq.clone(), stats));
+    }
+
+    // Step B: EDT to B₁ with feature transform.
+    let mut sw = Stopwatch::new();
+    let edt1 = sw.time(|| edt(&bres.mask, true, threads));
+    stats.t_edt1 = std::mem::take(&mut sw).secs();
+
+    // Step C: propagate signs, build B₂.
+    let mut sw = Stopwatch::new();
+    let (s, b2) =
+        sw.time(|| propagate_signs(&bres.mask, &bres.sign, edt1.nearest.as_ref().unwrap(), threads));
+    stats.t_sign = std::mem::take(&mut sw).secs();
+    stats.n_boundary2 = b2.data.iter().filter(|&&b| b).count();
+
+    // Step D: EDT to B₂ (distances only — indices unused, paper §VI-D).
+    let mut sw = Stopwatch::new();
+    let edt2 = sw.time(|| edt(&b2, false, threads));
+    stats.t_edt2 = std::mem::take(&mut sw).secs();
+
+    // Step E: interpolate and compensate.
+    let eta_eps = cfg.eta * eb.abs;
+    let mut out = dq.clone();
+    let mut sw = Stopwatch::new();
+    match cfg.backend {
+        Backend::Native => sw.time(|| {
+            crate::mitigation::interpolate::compensate_adaptive(
+                &mut out.data,
+                &edt1.dist_sq,
+                &edt2.dist_sq,
+                &s.data,
+                eta_eps,
+                cfg.taper_radius,
+                threads,
+            );
+        }),
+        Backend::Pjrt => sw.time(|| {
+            crate::runtime::ops::compensate_pjrt(
+                &mut out.data,
+                &edt1.dist_sq,
+                &edt2.dist_sq,
+                &s.data,
+                eta_eps,
+            )
+        })?,
+    }
+    stats.t_compensate = std::mem::take(&mut sw).secs();
+
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::metrics::{max_abs_error, ssim};
+    use crate::quant::{quantize_grid, ErrorBound};
+    use crate::util::prop::prop_check;
+
+    fn roundtrip(kind: DatasetKind, dims: &[usize], rel: f64) -> (Grid<f32>, Grid<f32>, Grid<QIndex>, ResolvedBound) {
+        let orig = generate(kind, dims, 7);
+        let eb = ErrorBound::relative(rel).resolve(&orig.data);
+        let (q, dq) = quantize_grid(&orig, eb);
+        (orig, dq, q, eb)
+    }
+
+    #[test]
+    fn improves_ssim_on_smooth_2d_field() {
+        let (orig, dq, q, eb) = roundtrip(DatasetKind::ClimateLike, &[256, 256], 1e-2);
+        let out = mitigate(&dq, &q, eb, &MitigationConfig::default());
+        let before = ssim(&orig, &dq, 7, 2);
+        let after = ssim(&orig, &out, 7, 2);
+        assert!(after > before, "SSIM before={before:.4} after={after:.4}");
+    }
+
+    #[test]
+    fn improves_ssim_on_3d_field() {
+        let (orig, dq, q, eb) = roundtrip(DatasetKind::MirandaLike, &[48, 48, 48], 1e-2);
+        let out = mitigate(&dq, &q, eb, &MitigationConfig::default());
+        let before = ssim(&orig, &dq, 7, 2);
+        let after = ssim(&orig, &out, 7, 2);
+        assert!(after > before, "SSIM before={before:.4} after={after:.4}");
+    }
+
+    #[test]
+    fn improves_psnr_on_3d_field() {
+        let (orig, dq, q, eb) = roundtrip(DatasetKind::CombustionLike, &[48, 48, 48], 1e-2);
+        let out = mitigate(&dq, &q, eb, &MitigationConfig::default());
+        let before = crate::metrics::psnr(&orig.data, &dq.data);
+        let after = crate::metrics::psnr(&orig.data, &out.data);
+        assert!(after > before + 1.0, "PSNR before={before:.2} after={after:.2}");
+    }
+
+    #[test]
+    fn canonical_ramp_improves_dramatically() {
+        // The textbook banding case: a tilted linear ramp.
+        let n = 96;
+        let mut g = Grid::<f32>::zeros(&[n, n]);
+        for j in 0..n {
+            for k in 0..n {
+                *g.at_mut(0, j, k) = 0.013 * j as f32 + 0.007 * k as f32;
+            }
+        }
+        let eb = ErrorBound::relative(2e-2).resolve(&g.data);
+        let (q, dq) = quantize_grid(&g, eb);
+        let out = mitigate(&dq, &q, eb, &MitigationConfig::default());
+        let s0 = ssim(&g, &dq, 7, 2);
+        let s1 = ssim(&g, &out, 7, 2);
+        let p0 = crate::metrics::psnr(&g.data, &dq.data);
+        let p1 = crate::metrics::psnr(&g.data, &out.data);
+        assert!(s1 > s0 + 0.03, "SSIM {s0:.4} -> {s1:.4}");
+        assert!(p1 > p0 + 6.0, "PSNR {p0:.2} -> {p1:.2}");
+    }
+
+    #[test]
+    fn respects_relaxed_error_bound_property() {
+        prop_check("|d - d''| <= (1+eta)eps", 25, |g| {
+            let d0 = g.usize_in(8, 24);
+            let d1 = g.usize_in(8, 24);
+            let n = d0 * d1;
+            let data = {
+                let row = g.smooth_field(n, 0.05);
+                Grid::from_vec(row, &[d0, d1])
+            };
+            let rel = *g.choose(&[1e-3, 5e-3, 1e-2, 5e-2]);
+            let eb = ErrorBound::relative(rel).resolve(&data.data);
+            let (q, dq) = quantize_grid(&data, eb);
+            let cfg = MitigationConfig { eta: 0.9, ..Default::default() };
+            let out = mitigate(&dq, &q, eb, &cfg);
+            let bound = (1.0 + cfg.eta) * eb.abs;
+            let err = max_abs_error(&data.data, &out.data);
+            assert!(err <= bound * (1.0 + 1e-5), "err={err} bound={bound}");
+        });
+    }
+
+    #[test]
+    fn homogeneous_field_is_identity() {
+        let dq = Grid::from_vec(vec![1.0f32; 64], &[8, 8]);
+        let q = Grid::from_vec(vec![5i64; 64], &[8, 8]);
+        let eb = ErrorBound::absolute(0.1).resolve(&dq.data);
+        let (out, stats) =
+            mitigate_with_stats(&dq, &q, eb, &MitigationConfig::default()).unwrap();
+        assert_eq!(out.data, dq.data);
+        assert_eq!(stats.n_boundary1, 0);
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let (_, dq, q, eb) = roundtrip(DatasetKind::HurricaneLike, &[24, 24, 24], 1e-2);
+        let seq = mitigate(&dq, &q, eb, &MitigationConfig { threads: 1, ..Default::default() });
+        let par = mitigate(&dq, &q, eb, &MitigationConfig { threads: 4, ..Default::default() });
+        assert_eq!(seq.data, par.data);
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let (_, dq, q, eb) = roundtrip(DatasetKind::CombustionLike, &[16, 16, 16], 1e-2);
+        let (_, stats) =
+            mitigate_with_stats(&dq, &q, eb, &MitigationConfig::default()).unwrap();
+        assert!(stats.n_boundary1 > 0);
+        assert!(stats.total() > 0.0);
+        assert!(stats.throughput_mbs(16 * 16 * 16) > 0.0);
+    }
+
+    #[test]
+    fn eta_zero_is_identity() {
+        let (_, dq, q, eb) = roundtrip(DatasetKind::ClimateLike, &[32, 32], 1e-2);
+        let cfg = MitigationConfig { eta: 0.0, ..Default::default() };
+        let out = mitigate(&dq, &q, eb, &cfg);
+        assert_eq!(out.data, dq.data);
+    }
+}

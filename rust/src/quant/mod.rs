@@ -1,0 +1,192 @@
+//! Pre-quantization: the error-introducing stage of every compressor in
+//! this repo (paper §III-A, Eq. 1).
+//!
+//! Given an absolute error bound `ε_abs`, each value maps to the integer
+//! index `q = round(d / 2ε_abs)` and reconstructs as `d' = 2qε_abs`, so
+//! `|d − d'| ≤ ε_abs` by construction. Everything downstream of this
+//! stage (prediction, encoding) is lossless, which is what makes the
+//! compressors parallel — and what makes the artifact structure entirely
+//! determined by the quantization-index field `Q`.
+//!
+//! The paper's evaluation uses *value-range relative* bounds
+//! (`ε_abs = ε_rel · (max−min)`, §VIII-B); [`ErrorBound`] carries either
+//! form and resolves to a concrete [`ResolvedBound`] per field.
+
+use crate::data::grid::Grid;
+
+/// A user-specified error bound, absolute or value-range relative.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ErrorBound {
+    /// Absolute bound in data units.
+    Abs(f64),
+    /// Relative to the field's value range (the paper's convention).
+    Rel(f64),
+}
+
+impl ErrorBound {
+    /// Convenience constructor for a relative bound.
+    pub fn relative(eps: f64) -> Self {
+        ErrorBound::Rel(eps)
+    }
+
+    /// Convenience constructor for an absolute bound.
+    pub fn absolute(eps: f64) -> Self {
+        ErrorBound::Abs(eps)
+    }
+
+    /// Resolve against concrete data (computes the value range if
+    /// relative). Constant fields resolve a relative bound to a tiny
+    /// positive absolute bound so quantization stays well-defined.
+    pub fn resolve(self, data: &[f32]) -> ResolvedBound {
+        match self {
+            ErrorBound::Abs(a) => {
+                assert!(a > 0.0, "error bound must be positive");
+                ResolvedBound { abs: a, rel: None }
+            }
+            ErrorBound::Rel(r) => {
+                assert!(r > 0.0, "error bound must be positive");
+                let (lo, hi) = min_max(data);
+                let range = (hi - lo) as f64;
+                let abs = if range > 0.0 {
+                    r * range
+                } else {
+                    // Constant field: any positive bound preserves the data
+                    // exactly after rounding; pick one that keeps indices
+                    // well inside i64 (|q| ≈ 5e8 at most).
+                    let peak = hi.abs().max(lo.abs()) as f64;
+                    if peak > 0.0 {
+                        peak * 1e-9
+                    } else {
+                        1e-30
+                    }
+                };
+                ResolvedBound { abs, rel: Some(r) }
+            }
+        }
+    }
+}
+
+/// An error bound resolved to a concrete absolute value for one field.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResolvedBound {
+    /// Absolute bound used by quantization.
+    pub abs: f64,
+    /// The relative bound it came from, if any (for reporting).
+    pub rel: Option<f64>,
+}
+
+fn min_max(data: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in data {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    (lo, hi)
+}
+
+/// Quantization index type. i64 so that tiny absolute bounds on
+/// large-magnitude fields (NYX densities ~1e11) cannot overflow.
+pub type QIndex = i64;
+
+/// Pre-quantize a field: `q_i = round(d_i / 2ε)`.
+pub fn quantize(data: &[f32], eb: ResolvedBound) -> Vec<QIndex> {
+    let inv = 1.0 / (2.0 * eb.abs);
+    data.iter().map(|&d| (d as f64 * inv).round() as QIndex).collect()
+}
+
+/// Reconstruct from indices: `d'_i = 2 q_i ε`.
+pub fn dequantize(q: &[QIndex], eb: ResolvedBound) -> Vec<f32> {
+    let two_eps = 2.0 * eb.abs;
+    q.iter().map(|&qi| (qi as f64 * two_eps) as f32).collect()
+}
+
+/// Quantize-then-dequantize convenience: what a pre-quantization
+/// compressor's decompressed output looks like (lossless downstream).
+pub fn quantize_grid(grid: &Grid<f32>, eb: ResolvedBound) -> (Grid<QIndex>, Grid<f32>) {
+    let q = quantize(&grid.data, eb);
+    let dq = dequantize(&q, eb);
+    let mut qg = Grid::from_vec(q, grid.shape.user_dims());
+    let mut dg = Grid::from_vec(dq, grid.shape.user_dims());
+    qg.shape.ndim = grid.shape.ndim;
+    dg.shape.ndim = grid.shape.ndim;
+    (qg, dg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn round_half_cases() {
+        let eb = ResolvedBound { abs: 0.5, rel: None };
+        // interval width 2ε = 1.0; round() ties away from zero in Rust
+        let q = quantize(&[0.0, 0.49, 0.5, -0.5, 1.0], eb);
+        assert_eq!(q, vec![0, 0, 1, -1, 1]);
+    }
+
+    #[test]
+    fn error_always_within_bound_property() {
+        prop_check("|d - dq| <= eps", 200, |g| {
+            let n = g.usize_in(1, 400);
+            let data = g.smooth_field(n, 0.3);
+            let eps = g.f64_in(1e-4, 0.5);
+            let eb = ErrorBound::Abs(eps).resolve(&data);
+            let q = quantize(&data, eb);
+            let dq = dequantize(&q, eb);
+            for (d, r) in data.iter().zip(&dq) {
+                let err = (*d as f64 - *r as f64).abs();
+                assert!(err <= eps * (1.0 + 1e-9), "err={err} eps={eps}");
+            }
+        });
+    }
+
+    #[test]
+    fn relative_bound_scales_with_range() {
+        let data = vec![0.0f32, 10.0];
+        let eb = ErrorBound::relative(1e-2).resolve(&data);
+        assert!((eb.abs - 0.1).abs() < 1e-12);
+        assert_eq!(eb.rel, Some(1e-2));
+    }
+
+    #[test]
+    fn constant_field_relative_bound_is_positive() {
+        let data = vec![3.0f32; 10];
+        let eb = ErrorBound::relative(1e-3).resolve(&data);
+        assert!(eb.abs > 0.0);
+        let q = quantize(&data, eb);
+        let dq = dequantize(&q, eb);
+        for (d, r) in data.iter().zip(&dq) {
+            assert!((d - r).abs() <= (eb.abs * 1.001) as f32 + f32::EPSILON);
+        }
+    }
+
+    #[test]
+    fn large_magnitude_field_does_not_overflow() {
+        // NYX-like densities with a tight relative bound.
+        let data = vec![1.0e11f32, 5.0e10, 0.0];
+        let eb = ErrorBound::relative(1e-6).resolve(&data);
+        let q = quantize(&data, eb);
+        let dq = dequantize(&q, eb);
+        for (d, r) in data.iter().zip(&dq) {
+            // f32 rounding of the reconstruction costs at most ~1 ulp of 1e11
+            let tol = eb.abs * 1.001 + 1.0e11 * f32::EPSILON as f64;
+            assert!(((*d - *r) as f64).abs() <= tol);
+        }
+        assert!(q[0] > q[1]);
+    }
+
+    #[test]
+    fn quantize_grid_preserves_shape() {
+        let g = Grid::from_vec((0..24).map(|x| x as f32).collect(), &[4, 6]);
+        let eb = ErrorBound::absolute(0.5).resolve(&g.data);
+        let (qg, dg) = quantize_grid(&g, eb);
+        assert_eq!(qg.shape, g.shape);
+        assert_eq!(dg.shape, g.shape);
+    }
+}

@@ -1,0 +1,85 @@
+//! PJRT client + executable cache.
+//!
+//! The `xla` crate's `PjRtClient` is `!Send`/`!Sync` (Rc-based handles
+//! over the C API), so the process cannot share one client across
+//! threads; instead each thread lazily owns an engine via
+//! [`with_global`]. The mitigation pipeline drives PJRT from a single
+//! thread, so in practice exactly one client exists.
+
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A PJRT CPU client with a cache of compiled executables, keyed by
+/// artifact name (file stem under the artifacts directory).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create an engine over the given artifacts directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine { client, dir: dir.into(), exes: RefCell::new(HashMap::new()) })
+    }
+
+    /// The artifacts directory this engine loads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the artifact `<name>.hlo.txt`.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(path.exists(), "artifact {path:?} not found — run `make artifacts` first");
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client.compile(&comp).with_context(|| format!("compile artifact {name}"))?,
+        );
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with the given input literals; returns the
+    /// output tuple elements (jax lowers with `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(inputs).context("execute")?;
+        let literal = result[0][0].to_literal_sync().context("fetch result")?;
+        literal.to_tuple().context("untuple result")
+    }
+}
+
+thread_local! {
+    static ENGINE: RefCell<Option<Rc<Engine>>> = const { RefCell::new(None) };
+}
+
+/// Thread-local engine over the default artifacts directory
+/// (`$QAI_ARTIFACTS` or `./artifacts`). First use on a thread creates
+/// the PJRT client.
+pub fn global() -> Result<Rc<Engine>> {
+    ENGINE.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(eng) = slot.as_ref() {
+            return Ok(eng.clone());
+        }
+        let dir = std::env::var("QAI_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        let eng = Rc::new(Engine::new(dir)?);
+        *slot = Some(eng.clone());
+        Ok(eng)
+    })
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from the Rust hot path. Python never runs at request time.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! The executables operate on fixed shapes (XLA programs are
+//! shape-specialized): elementwise kernels on flat `f32[CHUNK]` vectors,
+//! the boundary stencil on ghost-padded `i32[B+2,...]` blocks. [`ops`]
+//! tiles arbitrary grids onto those shapes — that padding/tiling logic is
+//! part of the L3 coordinator's job, mirroring how the distributed
+//! coordinator tiles rank-local blocks.
+
+pub mod engine;
+pub mod ops;
+
+pub use engine::Engine;

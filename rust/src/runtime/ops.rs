@@ -1,0 +1,292 @@
+//! Typed entry points over the AOT artifacts, plus the tiling that maps
+//! arbitrary grids onto the executables' fixed shapes.
+//!
+//! Shape contract (must match `python/compile/aot.py`):
+//!
+//! | artifact          | inputs                                   | outputs            |
+//! |-------------------|------------------------------------------|--------------------|
+//! | `idw_65536`       | dq,d1,d2,s: f32[65536]; eta_eps: f32[]   | (f32[65536],)      |
+//! | `prequant_65536`  | d: f32[65536]; eps: f32[]                | (i32, f32)[65536]  |
+//! | `boundary3d_64`   | q: i32[66,66,66]                         | (mask,sign) i32[64³]|
+//! | `boundary2d_256`  | q: i32[258,258]                          | (mask,sign) i32[256²]|
+//!
+//! Distances cross the boundary as f32 with the convention
+//! `INF → −1.0` (a negative distance is "no boundary anywhere"), so the
+//! kernel can branch with `select` instead of risking `inf/inf` NaNs.
+
+use crate::data::grid::Grid;
+use crate::mitigation::boundary::BoundaryResult;
+use crate::mitigation::edt::INF;
+use crate::quant::QIndex;
+use crate::runtime::engine;
+use anyhow::{Context, Result};
+
+/// Flat chunk length of the elementwise kernels.
+pub const CHUNK: usize = 65536;
+/// Interior tile extent of the 3D boundary stencil.
+pub const TILE3D: usize = 64;
+/// Interior tile extent of the 2D boundary stencil.
+pub const TILE2D: usize = 256;
+
+/// Map a squared distance to the kernel's f32 convention.
+#[inline]
+fn dist_to_f32(d_sq: i64) -> f32 {
+    if d_sq >= INF {
+        -1.0
+    } else {
+        (d_sq as f64).sqrt() as f32
+    }
+}
+
+/// Step E via PJRT: `data[i] += idw_weight(d1,d2) · sign · eta_eps`,
+/// chunked over `idw_65536`.
+pub fn compensate_pjrt(
+    data: &mut [f32],
+    dist1_sq: &[i64],
+    dist2_sq: &[i64],
+    sign: &[i8],
+    eta_eps: f64,
+) -> Result<()> {
+    let eng = engine::global()?;
+    let n = data.len();
+    let mut dq = vec![0.0f32; CHUNK];
+    let mut d1 = vec![-1.0f32; CHUNK];
+    let mut d2 = vec![-1.0f32; CHUNK];
+    let mut s = vec![0.0f32; CHUNK];
+    let mut start = 0usize;
+    while start < n {
+        let len = (n - start).min(CHUNK);
+        for t in 0..len {
+            dq[t] = data[start + t];
+            d1[t] = dist_to_f32(dist1_sq[start + t]);
+            d2[t] = dist_to_f32(dist2_sq[start + t]);
+            s[t] = sign[start + t] as f32;
+        }
+        // Pad: sign 0 ⇒ padded lanes are no-ops regardless of distances.
+        for t in len..CHUNK {
+            s[t] = 0.0;
+            dq[t] = 0.0;
+            d1[t] = -1.0;
+            d2[t] = -1.0;
+        }
+        let out = eng.run(
+            "idw_65536",
+            &[
+                xla::Literal::vec1(&dq),
+                xla::Literal::vec1(&d1),
+                xla::Literal::vec1(&d2),
+                xla::Literal::vec1(&s),
+                xla::Literal::scalar(eta_eps as f32),
+            ],
+        )?;
+        let got: Vec<f32> = out[0].to_vec().context("idw output")?;
+        data[start..start + len].copy_from_slice(&got[..len]);
+        start += len;
+    }
+    Ok(())
+}
+
+/// Pre-quantization via PJRT (`q = round(d/2ε)`, `dq = 2qε`), chunked.
+/// Note: XLA `round_nearest_even` differs from Rust's half-away rounding
+/// exactly on ties, which are measure-zero for real data; the compressors
+/// use the native quantizer for bit-exactness.
+pub fn prequant_pjrt(data: &[f32], eps_abs: f64) -> Result<(Vec<i32>, Vec<f32>)> {
+    let eng = engine::global()?;
+    let n = data.len();
+    let mut q = Vec::with_capacity(n);
+    let mut dq = Vec::with_capacity(n);
+    let mut buf = vec![0.0f32; CHUNK];
+    let mut start = 0usize;
+    while start < n {
+        let len = (n - start).min(CHUNK);
+        buf[..len].copy_from_slice(&data[start..start + len]);
+        buf[len..].fill(0.0);
+        let out = eng.run(
+            "prequant_65536",
+            &[xla::Literal::vec1(&buf), xla::Literal::scalar(eps_abs as f32)],
+        )?;
+        let qs: Vec<i32> = out[0].to_vec().context("prequant q output")?;
+        let ds: Vec<f32> = out[1].to_vec().context("prequant dq output")?;
+        q.extend_from_slice(&qs[..len]);
+        dq.extend_from_slice(&ds[..len]);
+        start += len;
+    }
+    Ok((q, dq))
+}
+
+/// Step A via PJRT: tile the index grid onto the fixed-shape boundary
+/// stencil with replicated ghost cells, then clear the domain-edge
+/// planes to match Alg. 2's loop bounds. 2D and 3D only (1D fields use
+/// the native path).
+pub fn boundary_and_sign_pjrt(q: &Grid<QIndex>) -> Result<BoundaryResult> {
+    let shape = q.shape;
+    anyhow::ensure!(
+        shape.ndim >= 2,
+        "PJRT boundary stencil supports 2D/3D grids (got 1D) — use Backend::Native"
+    );
+    // i32 range check once up front.
+    for &v in &q.data {
+        anyhow::ensure!(
+            v >= i32::MIN as i64 && v <= i32::MAX as i64,
+            "quantization index {v} exceeds i32 range of the PJRT kernel"
+        );
+    }
+    let mut mask = Grid::<bool>::like(q);
+    let mut sign = Grid::<i8>::like(q);
+
+    if shape.dims[0] > 1 {
+        run_tiles_3d(q, &mut mask, &mut sign)?;
+    } else {
+        run_tiles_2d(q, &mut mask, &mut sign)?;
+    }
+
+    clear_domain_edges(&mut mask, &mut sign);
+    Ok(BoundaryResult { mask, sign })
+}
+
+/// Clamped-replicate read of the index grid.
+#[inline]
+fn at_clamped(q: &Grid<QIndex>, i: isize, j: isize, k: isize) -> i32 {
+    let d = q.shape.dims;
+    let c = |p: isize, n: usize| p.clamp(0, n as isize - 1) as usize;
+    q.data[q.shape.idx(c(i, d[0]), c(j, d[1]), c(k, d[2]))] as i32
+}
+
+fn run_tiles_3d(q: &Grid<QIndex>, mask: &mut Grid<bool>, sign: &mut Grid<i8>) -> Result<()> {
+    let eng = engine::global()?;
+    let dims = q.shape.dims;
+    let t = TILE3D;
+    let p = t + 2;
+    let mut padded = vec![0i32; p * p * p];
+    for oi in (0..dims[0]).step_by(t) {
+        for oj in (0..dims[1]).step_by(t) {
+            for ok in (0..dims[2]).step_by(t) {
+                // Gather ghost-padded tile (replicate-clamped).
+                for a in 0..p {
+                    for b in 0..p {
+                        for c in 0..p {
+                            padded[(a * p + b) * p + c] = at_clamped(
+                                q,
+                                oi as isize + a as isize - 1,
+                                oj as isize + b as isize - 1,
+                                ok as isize + c as isize - 1,
+                            );
+                        }
+                    }
+                }
+                let lit = xla::Literal::vec1(&padded)
+                    .reshape(&[p as i64, p as i64, p as i64])
+                    .context("reshape padded tile")?;
+                let out = eng.run("boundary3d_64", &[lit])?;
+                let m: Vec<i32> = out[0].to_vec().context("mask output")?;
+                let s: Vec<i32> = out[1].to_vec().context("sign output")?;
+                // Scatter the valid intersection back.
+                let ei = (oi + t).min(dims[0]);
+                let ej = (oj + t).min(dims[1]);
+                let ek = (ok + t).min(dims[2]);
+                for i in oi..ei {
+                    for j in oj..ej {
+                        for k in ok..ek {
+                            let src = ((i - oi) * t + (j - oj)) * t + (k - ok);
+                            let dst = q.shape.idx(i, j, k);
+                            mask.data[dst] = m[src] != 0;
+                            sign.data[dst] = s[src] as i8;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_tiles_2d(q: &Grid<QIndex>, mask: &mut Grid<bool>, sign: &mut Grid<i8>) -> Result<()> {
+    let eng = engine::global()?;
+    let dims = q.shape.dims;
+    let t = TILE2D;
+    let p = t + 2;
+    let mut padded = vec![0i32; p * p];
+    for oj in (0..dims[1]).step_by(t) {
+        for ok in (0..dims[2]).step_by(t) {
+            for b in 0..p {
+                for c in 0..p {
+                    padded[b * p + c] = at_clamped(
+                        q,
+                        0,
+                        oj as isize + b as isize - 1,
+                        ok as isize + c as isize - 1,
+                    );
+                }
+            }
+            let lit = xla::Literal::vec1(&padded)
+                .reshape(&[p as i64, p as i64])
+                .context("reshape padded tile")?;
+            let out = eng.run("boundary2d_256", &[lit])?;
+            let m: Vec<i32> = out[0].to_vec().context("mask output")?;
+            let s: Vec<i32> = out[1].to_vec().context("sign output")?;
+            let ej = (oj + t).min(dims[1]);
+            let ek = (ok + t).min(dims[2]);
+            for j in oj..ej {
+                for k in ok..ek {
+                    let src = (j - oj) * t + (k - ok);
+                    let dst = q.shape.idx(0, j, k);
+                    mask.data[dst] = m[src] != 0;
+                    sign.data[dst] = s[src] as i8;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Alg. 2 never marks points on the domain edge of an active axis.
+fn clear_domain_edges(mask: &mut Grid<bool>, sign: &mut Grid<i8>) {
+    let shape = mask.shape;
+    let dims = shape.dims;
+    let active: Vec<usize> = shape.active_axes().collect();
+    for i in 0..dims[0] {
+        for j in 0..dims[1] {
+            for k in 0..dims[2] {
+                let pos = [i, j, k];
+                let edge = active.iter().any(|&a| pos[a] == 0 || pos[a] == dims[a] - 1);
+                if edge {
+                    let idx = shape.idx(i, j, k);
+                    mask.data[idx] = false;
+                    sign.data[idx] = 0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that need compiled artifacts live in `rust/tests/pjrt.rs`;
+    /// here we only check the pure helpers.
+    #[test]
+    fn dist_mapping() {
+        assert_eq!(dist_to_f32(INF), -1.0);
+        assert_eq!(dist_to_f32(0), 0.0);
+        assert_eq!(dist_to_f32(25), 5.0);
+    }
+
+    #[test]
+    fn clamped_reads_replicate_edges() {
+        let q = Grid::from_vec(vec![1i64, 2, 3, 4], &[2, 2]);
+        assert_eq!(at_clamped(&q, 0, -1, 0), 1);
+        assert_eq!(at_clamped(&q, 0, 5, 5), 4);
+        assert_eq!(at_clamped(&q, -3, 0, 1), 2);
+    }
+
+    #[test]
+    fn clear_edges_2d() {
+        let mut m = Grid::from_vec(vec![true; 16], &[4, 4]);
+        let mut s = Grid::from_vec(vec![1i8; 16], &[4, 4]);
+        clear_domain_edges(&mut m, &mut s);
+        assert!(m.at(0, 1, 1) && m.at(0, 2, 2));
+        assert!(!m.at(0, 0, 0) && !m.at(0, 3, 3) && !m.at(0, 0, 2));
+        assert_eq!(s.at(0, 0, 2), 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Small infrastructure substrates that would normally come from crates
+//! (`rand`, `rayon`, `proptest`) but are implemented in-repo because the
+//! build environment is offline (DESIGN.md §10).
+
+pub mod par;
+pub mod prop;
+pub mod rng;
+pub mod timer;

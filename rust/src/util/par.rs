@@ -1,0 +1,223 @@
+//! Shared-memory fork-join parallelism (the paper's OpenMP analog).
+//!
+//! The build environment has no `rayon`, so this module provides the two
+//! primitives the pipeline needs, built on `std::thread::scope`:
+//!
+//! * [`parallel_chunks_mut`] — split a mutable slice into contiguous
+//!   chunks and process them on worker threads ("collapsed loop" of
+//!   §VII-A, steps A/C/E);
+//! * [`parallel_for_range`] — index-space fork-join over disjoint work
+//!   (EDT line batches of steps B/D, block decompression in SZp/SZ3).
+//!
+//! Both take an explicit thread count so the Fig. 8 efficiency bench can
+//! sweep it like the paper sweeps OMP_NUM_THREADS. `threads == 1` runs
+//! inline with zero overhead, which is also the profiling baseline.
+
+/// Process `data` in `threads` contiguous chunks, calling
+/// `f(chunk_start_index, chunk)` on each. Chunks are balanced to within
+/// one element.
+pub fn parallel_chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if threads <= 1 || n < 2 {
+        f(0, data);
+        return;
+    }
+    let threads = threads.min(n);
+    let base = n / threads;
+    let extra = n % threads;
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut start = 0usize;
+        for t in 0..threads {
+            let len = base + usize::from(t < extra);
+            let (chunk, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let fr = &f;
+            s.spawn(move || fr(start, chunk));
+            start += len;
+        }
+    });
+}
+
+/// Fork-join over the index range `0..n`: each worker thread repeatedly
+/// claims a batch of `grain` indices and calls `f(i)` for each. Use when
+/// iterations write to disjoint data through raw pointers or interior
+/// mutability (callers guarantee disjointness).
+pub fn parallel_for_range<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if threads <= 1 || n <= grain {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let grain = grain.max(1);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            let next = &next;
+            let fr = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, std::sync::atomic::Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                for i in start..end {
+                    fr(i);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`parallel_for_range`] but hands each worker a whole contiguous
+/// batch `start..end` at a time, so per-batch scratch state (e.g. the
+/// EDT's Voronoi stacks) is allocated once per batch instead of once per
+/// index — the §Perf iteration 2 of EXPERIMENTS.md.
+pub fn parallel_for_batches<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let grain = grain.max(1);
+    if threads <= 1 || n <= grain {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.div_ceil(grain)) {
+            let next = &next;
+            let fr = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, std::sync::atomic::Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                fr(start..(start + grain).min(n));
+            });
+        }
+    });
+}
+
+/// A slice wrapper that asserts disjoint-index writes at the type level's
+/// edge: workers write through raw pointers. The caller must guarantee
+/// that no index is written by two workers (all users in this crate index
+/// by disjoint line/block decompositions).
+pub struct UnsafeSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for UnsafeSlice<'_, T> {}
+unsafe impl<T: Send> Sync for UnsafeSlice<'_, T> {}
+
+impl<'a, T> UnsafeSlice<'a, T> {
+    /// Wrap a mutable slice for disjoint parallel writes.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        UnsafeSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// Length of the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `value` at `i`.
+    ///
+    /// # Safety
+    /// `i < len` and no other thread concurrently reads or writes `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = value;
+    }
+
+    /// Read the value at `i` (T: Copy).
+    ///
+    /// # Safety
+    /// `i < len` and no other thread concurrently writes `i`.
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// Get a mutable sub-slice `[start, start+len)`.
+    ///
+    /// # Safety
+    /// The range is in bounds and not aliased by any concurrent access.
+    #[inline]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &'a mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        for threads in [1, 2, 3, 7, 16] {
+            let mut v = vec![0u32; 1000];
+            parallel_chunks_mut(&mut v, threads, |start, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = (start + k) as u32 + 1;
+                }
+            });
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, i as u32 + 1, "threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_handles_tiny_inputs() {
+        let mut v = vec![0u8; 1];
+        parallel_chunks_mut(&mut v, 8, |_, c| c[0] = 9);
+        assert_eq!(v[0], 9);
+        let mut empty: Vec<u8> = vec![];
+        parallel_chunks_mut(&mut empty, 8, |_, _| {});
+    }
+
+    #[test]
+    fn for_range_visits_each_index_once() {
+        for threads in [1, 2, 4, 8] {
+            let n = 5000;
+            let mut out = vec![0u32; n];
+            let s = UnsafeSlice::new(&mut out);
+            parallel_for_range(n, threads, 64, |i| unsafe { s.write(i, i as u32 * 3) });
+            for (i, x) in out.iter().enumerate() {
+                assert_eq!(*x, i as u32 * 3);
+            }
+        }
+    }
+
+    #[test]
+    fn for_range_empty_and_small() {
+        parallel_for_range(0, 4, 8, |_| panic!("no work"));
+        let count = std::sync::atomic::AtomicUsize::new(0);
+        parallel_for_range(3, 4, 8, |_| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 3);
+    }
+}

@@ -1,0 +1,139 @@
+//! Minimal property-test driver (offline `proptest` stand-in).
+//!
+//! Runs a check over many seeded random cases and reports the first
+//! failing seed, so failures reproduce exactly:
+//!
+//! ```no_run
+//! use qai::util::prop::{prop_check, Gen};
+//! prop_check("abs never negative", 200, |g: &mut Gen| {
+//!     let x = g.f64_in(-10.0, 10.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+//!
+//! (`no_run`: doctest binaries don't inherit the `-Wl,-rpath` link flag
+//! that locates `libxla_extension.so`'s bundled libstdc++ at run time.)
+//!
+//! There is no shrinking; cases are kept small instead, which in practice
+//! makes failures directly readable from the reported seed.
+
+use crate::util::rng::Rng;
+
+/// Case-local generator handed to the property body.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of this particular case (for the failure message).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.f64() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// A random smooth-ish f32 field of length `n`: random low-frequency
+    /// sinusoid mix plus optional noise — the typical "scientific data"
+    /// shape for quantization properties.
+    pub fn smooth_field(&mut self, n: usize, noise: f32) -> Vec<f32> {
+        let a1 = self.f64_in(0.5, 2.0);
+        let a2 = self.f64_in(0.1, 1.0);
+        let f1 = self.f64_in(1.0, 4.0);
+        let f2 = self.f64_in(4.0, 16.0);
+        let ph1 = self.f64_in(0.0, 6.28);
+        let ph2 = self.f64_in(0.0, 6.28);
+        (0..n)
+            .map(|i| {
+                let t = i as f64 / n.max(1) as f64;
+                let v = a1 * (f1 * t * 6.28318 + ph1).sin() + a2 * (f2 * t * 6.28318 + ph2).sin();
+                v as f32 + noise * (self.rng.f32() - 0.5)
+            })
+            .collect()
+    }
+
+    /// Raw access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `body` for `cases` seeded cases. Panics (re-raising the body's
+/// panic) with the failing seed in the message.
+pub fn prop_check<F>(name: &str, cases: u64, body: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        // Derive a per-case seed that is stable across runs.
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(seed), seed };
+            body(&mut g);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        prop_check("x*x >= 0", 50, |g| {
+            let x = g.f64_in(-5.0, 5.0);
+            assert!(x * x >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_seed() {
+        prop_check("always fails", 5, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        prop_check("gen ranges", 100, |g| {
+            let n = g.usize_in(3, 9);
+            assert!((3..=9).contains(&n));
+            let x = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn smooth_field_has_requested_len() {
+        prop_check("smooth field len", 20, |g| {
+            let n = g.usize_in(1, 100);
+            assert_eq!(g.smooth_field(n, 0.0).len(), n);
+        });
+    }
+}

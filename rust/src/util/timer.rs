@@ -1,0 +1,105 @@
+//! Lightweight wall-clock timing used by the pipeline instrumentation,
+//! the coordinator's compute/communication breakdown (Fig. 11), and the
+//! bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: start/stop many times, read the total.
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    /// New, stopped, zero-total stopwatch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin (or re-begin) timing. Starting twice is a no-op.
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop timing and fold the elapsed interval into the total.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Total accumulated time.
+    pub fn total(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.total + t0.elapsed(),
+            None => self.total,
+        }
+    }
+
+    /// Total in seconds.
+    pub fn secs(&self) -> f64 {
+        self.total().as_secs_f64()
+    }
+
+    /// Time `f`, accumulating its wall-clock into this stopwatch.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+}
+
+/// Time a closure once, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// CPU time consumed by the *calling thread* (seconds). Unlike wall
+/// clock, this excludes time the thread spent descheduled or blocked —
+/// which is how the coordinator attributes per-rank compute cost fairly
+/// while many rank threads share the host's cores (DESIGN.md §5).
+pub fn thread_cpu_time() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    assert_eq!(rc, 0, "clock_gettime failed");
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_intervals() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(sw.secs() >= 0.009, "secs={}", sw.secs());
+    }
+
+    #[test]
+    fn double_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        sw.start();
+        sw.stop();
+        sw.stop();
+        let t = sw.secs();
+        assert!(t >= 0.0);
+        // A second stop must not add time.
+        assert_eq!(sw.secs(), t);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Integration tests over the distributed coordinator: strategy quality
+//! ordering (the paper's Fig. 4 story), scaling-report sanity and
+//! failure-injection on the fabric protocol.
+
+use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::metrics::{psnr, ssim};
+use qai::mitigation::pipeline::{mitigate, MitigationConfig};
+use qai::quant::{quantize_grid, ErrorBound, QIndex, ResolvedBound};
+
+fn setup(
+    kind: DatasetKind,
+    dims: &[usize],
+    rel: f64,
+    seed: u64,
+) -> (Grid<f32>, Grid<f32>, Grid<QIndex>, ResolvedBound) {
+    let orig = generate(kind, dims, seed);
+    let eb = ErrorBound::relative(rel).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    (orig, dq, q, eb)
+}
+
+#[test]
+fn fig4_quality_ordering_exact_ge_approx_ge_embarrassing() {
+    // The Fig. 4 story on a 64-rank 3D decomposition: exact ≡ sequential,
+    // approximate ≈ exact, embarrassing strictly worse (striping).
+    let (orig, dq, q, eb) = setup(DatasetKind::MirandaLike, &[48, 48, 48], 1e-2, 64);
+    let seq = mitigate(&dq, &q, eb, &MitigationConfig::default());
+    let ssim_seq = ssim(&orig, &seq, 7, 2);
+
+    let run = |strategy| {
+        let cfg = DistributedConfig { ranks: 64, strategy, ..Default::default() };
+        let (out, _) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+        (ssim(&orig, &out, 7, 2), psnr(&orig.data, &out.data), out)
+    };
+    let (ssim_exact, _, out_exact) = run(Strategy::Exact);
+    let (ssim_approx, _, _) = run(Strategy::Approximate);
+    let (ssim_embar, _, _) = run(Strategy::Embarrassing);
+
+    assert_eq!(out_exact.data, seq.data, "exact must be sequential-identical");
+    assert!((ssim_exact - ssim_seq).abs() < 1e-12);
+    assert!(
+        ssim_approx >= ssim_embar,
+        "approx {ssim_approx:.4} < embarrassing {ssim_embar:.4}"
+    );
+    assert!(
+        ssim_exact >= ssim_approx - 1e-6,
+        "exact {ssim_exact:.4} < approx {ssim_approx:.4}"
+    );
+    // all strategies must still beat (or match) the unmitigated data
+    let ssim_dq = ssim(&orig, &dq, 7, 2);
+    assert!(ssim_embar > ssim_dq - 0.02);
+}
+
+#[test]
+fn comm_volume_ordering_matches_paper() {
+    // exact ≫ approximate > embarrassing (= 0)
+    let (_orig, dq, q, eb) = setup(DatasetKind::TurbulenceLike, &[32, 32, 32], 1e-2, 3);
+    let vol = |strategy| {
+        let cfg = DistributedConfig { ranks: 8, strategy, ..Default::default() };
+        let (_, rep) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+        rep.total_bytes()
+    };
+    let v_embar = vol(Strategy::Embarrassing);
+    let v_approx = vol(Strategy::Approximate);
+    let v_exact = vol(Strategy::Exact);
+    assert_eq!(v_embar, 0);
+    assert!(v_approx > 0);
+    assert!(v_exact > 4 * v_approx, "exact {v_exact} vs approx {v_approx}");
+}
+
+#[test]
+fn works_on_2d_decompositions() {
+    let (orig, dq, q, eb) = setup(DatasetKind::ClimateLike, &[128, 128], 1e-2, 5);
+    for strategy in [Strategy::Embarrassing, Strategy::Exact, Strategy::Approximate] {
+        let cfg = DistributedConfig { ranks: 16, strategy, ..Default::default() };
+        let (out, rep) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+        assert_eq!(out.shape, dq.shape);
+        assert!(rep.ranks <= 16);
+        let bound = (1.0 + 0.9) * eb.abs;
+        assert!(qai::metrics::max_abs_error(&orig.data, &out.data) <= bound * (1.0 + 1e-5));
+    }
+}
+
+#[test]
+fn uneven_block_sizes_are_handled() {
+    // 23 is prime: blocks differ in size along every axis.
+    let (_orig, dq, q, eb) = setup(DatasetKind::HurricaneLike, &[23, 23, 23], 1e-2, 6);
+    let seq = mitigate(&dq, &q, eb, &MitigationConfig::default());
+    let cfg = DistributedConfig { ranks: 8, strategy: Strategy::Exact, ..Default::default() };
+    let (out, _) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+    assert_eq!(out.data, seq.data);
+}
+
+#[test]
+fn many_ranks_small_domain_degrades_gracefully() {
+    let (_orig, dq, q, eb) = setup(DatasetKind::MirandaLike, &[6, 6, 6], 1e-2, 7);
+    let cfg =
+        DistributedConfig { ranks: 512, strategy: Strategy::Approximate, ..Default::default() };
+    let (out, rep) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+    assert!(rep.ranks <= 216);
+    assert_eq!(out.shape, dq.shape);
+}
+
+#[test]
+fn homogeneous_field_no_deadlock() {
+    // A constant index field means "no boundaries anywhere": every rank
+    // takes the early-exit path, which must still participate in the
+    // sign-halo round (a missed send would deadlock a neighbor).
+    let dq = Grid::from_vec(vec![1.0f32; 16 * 16 * 16], &[16, 16, 16]);
+    let q = Grid::from_vec(vec![7i64; 16 * 16 * 16], &[16, 16, 16]);
+    let eb = ErrorBound::absolute(0.5).resolve(&dq.data);
+    for strategy in [Strategy::Embarrassing, Strategy::Exact, Strategy::Approximate] {
+        let cfg = DistributedConfig { ranks: 8, strategy, ..Default::default() };
+        let (out, _) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+        assert_eq!(out.data, dq.data, "{strategy:?}");
+    }
+}
+
+#[test]
+fn boundary_only_in_one_rank_block() {
+    // One step in a corner: other ranks have homogeneous indices and must
+    // still cooperate (approximate needs both halo rounds everywhere).
+    let n = 16;
+    let mut q = Grid::<QIndex>::zeros(&[n, n, n]);
+    for i in 0..4 {
+        for j in 0..4 {
+            for k in 0..4 {
+                *q.at_mut(i, j, k) = 1;
+            }
+        }
+    }
+    let dq = Grid::from_vec(q.data.iter().map(|&v| v as f32 * 0.2).collect(), &[n, n, n]);
+    let eb = ErrorBound::absolute(0.1).resolve(&dq.data);
+    let seq = mitigate(&dq, &q, eb, &MitigationConfig::default());
+    let cfg = DistributedConfig { ranks: 8, strategy: Strategy::Exact, ..Default::default() };
+    let (out, _) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+    assert_eq!(out.data, seq.data);
+}

@@ -1,0 +1,85 @@
+//! End-to-end integration: compressor → decompress → mitigate → metrics,
+//! across codecs and datasets — the full user-facing flow of the repo.
+
+use qai::compressors::{cusz::CuszLike, cuszp::CuszpLike, szp::SzpLike, Compressor};
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::filters::{gaussian_filter, uniform_filter, wiener_filter};
+use qai::metrics::{max_abs_error, max_rel_error, psnr, ssim};
+use qai::mitigation::{mitigate, MitigationConfig};
+use qai::quant::ErrorBound;
+
+fn codecs() -> Vec<Box<dyn Compressor>> {
+    vec![Box::new(CuszLike), Box::new(CuszpLike), Box::new(SzpLike { threads: 2 })]
+}
+
+#[test]
+fn every_codec_roundtrips_and_mitigation_improves_quality() {
+    let orig = generate(DatasetKind::MirandaLike, &[40, 40, 40], 2026);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    for codec in codecs() {
+        let stream = codec.compress(&orig, eb).unwrap();
+        let dec = codec.decompress(&stream).unwrap();
+        assert!(max_abs_error(&orig.data, &dec.grid.data) <= eb.abs * (1.0 + 1e-9));
+
+        let fixed = mitigate(&dec.grid, &dec.quant_indices, dec.bound, &MitigationConfig::default());
+        let p0 = psnr(&orig.data, &dec.grid.data);
+        let p1 = psnr(&orig.data, &fixed.data);
+        let s0 = ssim(&orig, &dec.grid, 7, 2);
+        let s1 = ssim(&orig, &fixed, 7, 2);
+        assert!(p1 > p0, "{}: PSNR {p0:.2} -> {p1:.2}", codec.name());
+        assert!(s1 > s0, "{}: SSIM {s0:.4} -> {s1:.4}", codec.name());
+        // relaxed bound guaranteed
+        assert!(max_abs_error(&orig.data, &fixed.data) <= 1.9 * eb.abs * (1.0 + 1e-5));
+    }
+}
+
+#[test]
+fn identical_quant_indices_across_prequant_codecs() {
+    // Pre-quantization decouples the index field from the pipeline: all
+    // three codecs must reconstruct the *same* indices.
+    let orig = generate(DatasetKind::HurricaneLike, &[24, 24, 24], 99);
+    let eb = ErrorBound::relative(1e-3).resolve(&orig.data);
+    let reference = CuszLike.decompress(&CuszLike.compress(&orig, eb).unwrap()).unwrap();
+    for codec in codecs() {
+        let dec = codec.decompress(&codec.compress(&orig, eb).unwrap()).unwrap();
+        assert_eq!(
+            dec.quant_indices.data, reference.quant_indices.data,
+            "{} diverged from cuSZ-like indices",
+            codec.name()
+        );
+    }
+}
+
+#[test]
+fn table2_shape_ours_bounded_filters_not() {
+    // Table II's headline: the compensation respects the relaxed bound
+    // (1+η)ε while Gaussian/uniform filters can blow past it near fronts.
+    let orig = generate(DatasetKind::CombustionLike, &[48, 48, 48], 17);
+    let rel = 1e-3;
+    let eb = ErrorBound::relative(rel).resolve(&orig.data);
+    let dec = CuszLike.decompress(&CuszLike.compress(&orig, eb).unwrap()).unwrap();
+
+    let ours = mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
+    let relaxed = (1.0 + 0.9) * rel;
+    assert!(max_rel_error(&orig.data, &ours.data) <= relaxed * (1.0 + 1e-5));
+
+    let gauss = gaussian_filter(&dec.grid, 1.0);
+    let unif = uniform_filter(&dec.grid);
+    let wien = wiener_filter(&dec.grid, eb.abs);
+    // The sharp flame front guarantees the smoothers break the bound.
+    assert!(max_rel_error(&orig.data, &gauss.data) > relaxed);
+    assert!(max_rel_error(&orig.data, &unif.data) > relaxed);
+    // Wiener is the best-behaved baseline but still has no guarantee;
+    // just check it produced something finite.
+    assert!(wien.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn mitigation_is_deterministic() {
+    let orig = generate(DatasetKind::CosmologyLike, &[32, 32, 32], 4);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let dec = CuszpLike.decompress(&CuszpLike.compress(&orig, eb).unwrap()).unwrap();
+    let a = mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
+    let b = mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
+    assert_eq!(a.data, b.data);
+}

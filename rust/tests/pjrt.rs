@@ -1,0 +1,148 @@
+//! Integration tests for the AOT (JAX/Pallas → HLO text) → PJRT path:
+//! the PJRT backend must agree with the native Rust implementation.
+//!
+//! Requires `make artifacts`; each test skips (with a loud message) if
+//! the artifacts are missing so that a fresh checkout still passes
+//! `cargo test` before its first `make artifacts`.
+
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::metrics::max_abs_error;
+use qai::mitigation::boundary::boundary_and_sign;
+use qai::mitigation::edt::{edt, INF};
+use qai::mitigation::interpolate::compensate;
+use qai::mitigation::pipeline::{mitigate_with_stats, Backend, MitigationConfig};
+use qai::quant::{quantize_grid, ErrorBound};
+use qai::runtime::ops;
+use qai::util::rng::Rng;
+
+fn artifacts_present() -> bool {
+    let dir = std::env::var("QAI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let ok = std::path::Path::new(&dir).join("manifest.txt").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn idw_kernel_matches_native_compensate() {
+    if !artifacts_present() {
+        return;
+    }
+    let n = 100_000; // exercises chunking incl. a partial tail chunk
+    let mut rng = Rng::new(7);
+    let mut data_native: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let d1: Vec<i64> = (0..n)
+        .map(|i| match i % 5 {
+            0 => 0,
+            1 => INF,
+            _ => ((i * 13) % 97 + 1) as i64,
+        })
+        .collect();
+    let d2: Vec<i64> = (0..n)
+        .map(|i| match i % 7 {
+            0 => 0,
+            1 => INF,
+            _ => ((i * 29) % 83 + 1) as i64,
+        })
+        .collect();
+    let sign: Vec<i8> = (0..n).map(|i| [(-1i8), 0, 1][i % 3]).collect();
+    let eta_eps = 0.0123f64;
+
+    let mut data_pjrt = data_native.clone();
+    compensate(&mut data_native, &d1, &d2, &sign, eta_eps, 1);
+    ops::compensate_pjrt(&mut data_pjrt, &d1, &d2, &sign, eta_eps).unwrap();
+
+    let max_dev = data_native
+        .iter()
+        .zip(&data_pjrt)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_dev < 1e-6, "native vs pjrt max dev {max_dev}");
+}
+
+#[test]
+fn boundary_kernel_matches_native_3d() {
+    if !artifacts_present() {
+        return;
+    }
+    // 70³ exercises multi-tile + partial-tile paths of the 64³ stencil.
+    let orig = generate(DatasetKind::MirandaLike, &[70, 70, 70], 5);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, _) = quantize_grid(&orig, eb);
+    let native = boundary_and_sign(&q, 1);
+    let pjrt = ops::boundary_and_sign_pjrt(&q).unwrap();
+    assert_eq!(native.mask.data, pjrt.mask.data, "mask mismatch");
+    assert_eq!(native.sign.data, pjrt.sign.data, "sign mismatch");
+}
+
+#[test]
+fn boundary_kernel_matches_native_2d() {
+    if !artifacts_present() {
+        return;
+    }
+    // 300² exercises multi-tile 2D (256 + partial).
+    let orig = generate(DatasetKind::ClimateLike, &[300, 300], 9);
+    let eb = ErrorBound::relative(5e-3).resolve(&orig.data);
+    let (q, _) = quantize_grid(&orig, eb);
+    let native = boundary_and_sign(&q, 1);
+    let pjrt = ops::boundary_and_sign_pjrt(&q).unwrap();
+    assert_eq!(native.mask.data, pjrt.mask.data);
+    assert_eq!(native.sign.data, pjrt.sign.data);
+}
+
+#[test]
+fn full_pipeline_pjrt_matches_native() {
+    if !artifacts_present() {
+        return;
+    }
+    let orig = generate(DatasetKind::CombustionLike, &[48, 48, 48], 11);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    let native_cfg = MitigationConfig { backend: Backend::Native, ..Default::default() };
+    let pjrt_cfg = MitigationConfig { backend: Backend::Pjrt, ..Default::default() };
+    let (out_native, _) = mitigate_with_stats(&dq, &q, eb, &native_cfg).unwrap();
+    let (out_pjrt, _) = mitigate_with_stats(&dq, &q, eb, &pjrt_cfg).unwrap();
+    let dev = max_abs_error(&out_native.data, &out_pjrt.data);
+    assert!(dev < 1e-6 * eb.abs.max(1.0), "pipeline dev {dev}");
+    // and still within the relaxed bound vs the original
+    let bound = (1.0 + 0.9) * eb.abs;
+    assert!(max_abs_error(&orig.data, &out_pjrt.data) <= bound * (1.0 + 1e-5));
+}
+
+#[test]
+fn prequant_kernel_respects_error_bound() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut rng = Rng::new(21);
+    let data: Vec<f32> = (0..70_000).map(|_| rng.f32() * 10.0 - 5.0).collect();
+    let eps = 0.05f64;
+    let (q, dq) = ops::prequant_pjrt(&data, eps).unwrap();
+    assert_eq!(q.len(), data.len());
+    for (d, r) in data.iter().zip(&dq) {
+        assert!(((d - r) as f64).abs() <= eps * (1.0 + 1e-5), "d={d} r={r}");
+    }
+    // XLA rounds half-to-even; away from ties it must agree with native.
+    let native_eb = qai::quant::ResolvedBound { abs: eps, rel: None };
+    let native_q = qai::quant::quantize(&data, native_eb);
+    let disagreements = q
+        .iter()
+        .zip(&native_q)
+        .filter(|(&a, &b)| a as i64 != b)
+        .count();
+    assert!(
+        disagreements < data.len() / 1000,
+        "too many rounding disagreements: {disagreements}"
+    );
+}
+
+#[test]
+fn pjrt_backend_rejects_1d_grids() {
+    if !artifacts_present() {
+        return;
+    }
+    let q = Grid::from_vec(vec![0i64, 0, 1, 1], &[4]);
+    assert!(ops::boundary_and_sign_pjrt(&q).is_err());
+}
