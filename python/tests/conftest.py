@@ -1,0 +1,96 @@
+"""Test-session setup for the Python (JAX/Pallas) layer.
+
+Two things the offline environment needs (mirroring the Rust side's
+offline substrates, DESIGN.md §10):
+
+1. ``python/`` on ``sys.path`` so ``from compile...`` imports resolve
+   when pytest is invoked from the repo root.
+2. A deterministic stand-in for ``hypothesis`` when the real package is
+   not installed. The stand-in supports exactly the surface these tests
+   use — ``@settings(max_examples=..., deadline=...)``, ``@given(**kw)``
+   with ``st.integers(lo, hi)`` / ``st.floats(lo, hi, allow_nan=False)``
+   — and runs seeded pseudo-random examples so failures reproduce
+   exactly (the same philosophy as Rust's ``util::prop``). When real
+   hypothesis is available it is used untouched.
+"""
+
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+try:  # pragma: no cover - prefer the real thing when present
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+        del allow_nan, allow_infinity  # the stand-in never draws non-finite
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def _given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            # Deliberately *not* functools.wraps: the runner must expose
+            # a zero-argument signature, or pytest would treat the
+            # property's drawn parameters as fixtures.
+            def runner():
+                max_examples = getattr(runner, "_qai_max_examples", _DEFAULT_MAX_EXAMPLES)
+                for case in range(max_examples):
+                    seed = 0xC0FFEE ^ (case * 0x9E3779B9)
+                    rng = random.Random(seed)
+                    drawn_args = [s.example(rng) for s in arg_strategies]
+                    drawn_kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*drawn_args, **drawn_kwargs)
+                    except BaseException as err:
+                        raise AssertionError(
+                            f"property case {case} (seed {seed:#x}) failed with "
+                            f"args={drawn_args} kwargs={drawn_kwargs}: {err}"
+                        ) from err
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.hypothesis_stand_in = True
+            return runner
+
+        return decorate
+
+    def _settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+        del deadline
+
+        def decorate(fn):
+            fn._qai_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.sampled_from = _sampled_from
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.__offline_stand_in__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -3,7 +3,10 @@
 //! Times each pipeline stage (A–E), the end-to-end pipeline, the EDT in
 //! isolation, the compressor codecs, and SSIM, on a 128³ block; prints
 //! MB/s so before/after optimization deltas are directly comparable
-//! (EXPERIMENTS.md §Perf records the iteration log).
+//! (EXPERIMENTS.md §Perf records the iteration log). Also compares the
+//! persistent pool runtime against the legacy fork-join primitives
+//! (dispatch overhead + small-grid mitigation latency) and times the
+//! batched mitigation service.
 
 use qai::bench_support::harness::bench_fn;
 use qai::compressors::{cusz::CuszLike, cuszp::CuszpLike, szp::SzpLike, Compressor};
@@ -14,7 +17,11 @@ use qai::mitigation::edt::edt;
 use qai::mitigation::interpolate::compensate;
 use qai::mitigation::pipeline::{mitigate_with_stats, MitigationConfig};
 use qai::mitigation::sign::propagate_signs;
+use qai::mitigation::{Job, MitigationService};
 use qai::quant::{quantize_grid, ErrorBound};
+use qai::util::{par, pool};
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -80,6 +87,101 @@ fn main() {
     let dec = CuszLike.decompress(&stream).unwrap();
     let r = bench_fn("SSIM (w=7, s=2)", warm, samp, || ssim(&orig, &dec.grid, 7, 2));
     println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    // Pool runtime vs the seed's fork-join primitives: identical work
+    // decomposition and an explicit 4-lane pool (so both sides really
+    // use 4-way parallelism regardless of host size) — the delta is
+    // pure dispatch overhead (the cost mitigate() used to pay 5+ times
+    // per call).
+    println!("\n== pool runtime vs fork-join dispatch (4 threads) ==");
+    let pool_threads = 4usize;
+    let bench_pool = pool::ThreadPool::new(pool_threads);
+    for &(lines, grain) in &[(64usize, 1usize), (4096, 16)] {
+        let sink = AtomicU64::new(0);
+        let r = bench_fn(
+            &format!("pool for_batches ({lines} items, grain {grain})"),
+            warm.max(2),
+            samp.max(5),
+            || {
+                bench_pool.for_batches(lines, pool_threads, grain, |range| {
+                    sink.fetch_add(range.len() as u64, Ordering::Relaxed);
+                });
+            },
+        );
+        let pool_mean = r.mean;
+        let r = bench_fn(
+            &format!("fork-join for_batches ({lines} items, grain {grain})"),
+            warm.max(2),
+            samp.max(5),
+            || {
+                par::parallel_for_batches(lines, pool_threads, grain, |range| {
+                    sink.fetch_add(range.len() as u64, Ordering::Relaxed);
+                });
+            },
+        );
+        println!(
+            "   -> pool dispatch {:.2}x fork-join ({:.1} us vs {:.1} us)",
+            pool_mean / r.mean.max(1e-12),
+            pool_mean * 1e6,
+            r.mean * 1e6
+        );
+        black_box(sink.load(Ordering::Relaxed));
+    }
+
+    // Small-grid mitigation latency: per-step dispatch overhead
+    // dominates here, which is exactly what the persistent pool removes
+    // (acceptance: improved <= 64^3 latency vs the seed fork-join).
+    println!("\n== small-grid threaded mitigation latency (threads = 4, pool) ==");
+    for small in [32usize, 48, 64] {
+        let sdims = [small, small, small];
+        let sorig = generate(DatasetKind::MirandaLike, &sdims, 2);
+        let seb = ErrorBound::relative(1e-2).resolve(&sorig.data);
+        let (sq, sdq) = quantize_grid(&sorig, seb);
+        let cfg = MitigationConfig { threads: 4, ..Default::default() };
+        let r = bench_fn(&format!("mitigate {small}^3 (threads=4)"), warm, samp, || {
+            mitigate_with_stats(&sdq, &sq, seb, &cfg).unwrap()
+        });
+        println!("   -> {:.1} MB/s", r.mbs(small * small * small * 4));
+    }
+
+    // Batched serving layer: N independent fields concurrently on the
+    // shared pool vs a sequential per-field loop.
+    println!("\n== batched mitigation service ==");
+    let batch_n: usize = if quick { 4 } else { 8 };
+    let batch_side = 48usize;
+    let jobs: Vec<Job> = (0..batch_n)
+        .map(|i| {
+            let orig =
+                generate(DatasetKind::CombustionLike, &[batch_side; 3], 100 + i as u64);
+            let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+            let (q, dq) = quantize_grid(&orig, eb);
+            Job::new(dq, q, eb)
+        })
+        .collect();
+    let batch_bytes = batch_n * batch_side.pow(3) * 4;
+    let service = MitigationService::new();
+    let r = bench_fn(
+        &format!("mitigate_batch ({batch_n} x {batch_side}^3)"),
+        warm,
+        samp,
+        || {
+            let results = service.mitigate_batch(&jobs);
+            assert!(results.iter().all(|r| r.is_ok()));
+            results
+        },
+    );
+    println!("   -> {:.1} MB/s aggregate", r.mbs(batch_bytes));
+    let r = bench_fn(
+        &format!("sequential loop ({batch_n} x {batch_side}^3)"),
+        warm,
+        samp,
+        || {
+            jobs.iter()
+                .map(|j| mitigate_with_stats(&j.dq, &j.q, j.eb, &j.cfg).unwrap())
+                .collect::<Vec<_>>()
+        },
+    );
+    println!("   -> {:.1} MB/s aggregate", r.mbs(batch_bytes));
 
     println!("\nhotpath_microbench: OK");
 }

@@ -20,7 +20,8 @@ use crate::compressors::cusz::{read_header, write_header};
 use crate::compressors::huffman;
 use crate::data::grid::Grid;
 use crate::quant::ResolvedBound;
-use crate::util::par::{parallel_for_range, UnsafeSlice};
+use crate::util::par::UnsafeSlice;
+use crate::util::pool;
 use anyhow::{Context, Result};
 
 /// Max interpolation levels: anchors every 2^10 = 1024 points.
@@ -188,7 +189,7 @@ impl Sz3Like {
             {
                 let rs = UnsafeSlice::new(&mut recon);
                 let codes = &codes;
-                parallel_for_range(count, self.threads, 1024, |t| {
+                pool::for_range(count, self.threads, 1024, |t| {
                     let i = h + t * s;
                     // SAFETY: this level writes only positions ≡ h (mod s),
                     // reads only positions ≡ 0 (mod s) — disjoint.

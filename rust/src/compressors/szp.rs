@@ -11,7 +11,7 @@ use crate::compressors::cusz::{read_header, write_header};
 use crate::compressors::{Compressor, Decompressed};
 use crate::data::grid::Grid;
 use crate::quant::{dequantize, quantize, QIndex, ResolvedBound};
-use crate::util::par::parallel_for_range;
+use crate::util::pool;
 use anyhow::Result;
 
 /// Elements per independent block.
@@ -100,7 +100,7 @@ impl Compressor for SzpLike {
         let errors = std::sync::Mutex::new(Vec::new());
         {
             let qslice = crate::util::par::UnsafeSlice::new(&mut q);
-            parallel_for_range(n_blocks, self.threads, 1, |b| {
+            pool::for_range(n_blocks, self.threads, 1, |b| {
                 let start = b * BLOCK;
                 let len = (n - start).min(BLOCK);
                 let blob = &payload[offsets[b]..offsets[b + 1]];

@@ -114,33 +114,35 @@ pub fn run_distributed(
     let (fabric, endpoints) = Fabric::new(n_ranks);
 
     let t_wall = std::time::Instant::now();
-    let results: Vec<(usize, Grid<f32>, f64)> = std::thread::scope(|s| {
-        let handles: Vec<_> = endpoints
-            .into_iter()
-            .map(|mut ep| {
-                let topo = &topo;
-                s.spawn(move || {
-                    let (lo, size) = topo.block(ep.rank);
-                    let block_dq = dq.extract(lo, size);
-                    let block_q = q.extract(lo, size);
-                    let cpu0 = thread_cpu_time();
-                    let out = mitigate_rank(
-                        cfg.strategy,
-                        topo,
-                        &mut ep,
-                        &block_dq,
-                        &block_q,
-                        eb,
-                        cfg.eta,
-                        cfg.threads_per_rank,
-                    );
-                    let cpu = thread_cpu_time() - cpu0;
-                    (ep.rank, out, cpu)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
-    });
+    // Ranks block on each other's sends/recvs, so they need dedicated
+    // concurrent threads (`pool::scope_blocking`, the runtime's escape
+    // hatch for co-blocking task sets); the compute *inside* each rank
+    // (`threads_per_rank`) runs on the shared persistent pool.
+    let tasks: Vec<_> = endpoints
+        .into_iter()
+        .map(|mut ep| {
+            let topo = &topo;
+            move || {
+                let (lo, size) = topo.block(ep.rank);
+                let block_dq = dq.extract(lo, size);
+                let block_q = q.extract(lo, size);
+                let cpu0 = thread_cpu_time();
+                let out = mitigate_rank(
+                    cfg.strategy,
+                    topo,
+                    &mut ep,
+                    &block_dq,
+                    &block_q,
+                    eb,
+                    cfg.eta,
+                    cfg.threads_per_rank,
+                );
+                let cpu = thread_cpu_time() - cpu0;
+                (ep.rank, out, cpu)
+            }
+        })
+        .collect();
+    let results: Vec<(usize, Grid<f32>, f64)> = crate::util::pool::scope_blocking(tasks);
     let wall_s = t_wall.elapsed().as_secs_f64();
 
     let mut out = Grid::<f32>::like(dq);

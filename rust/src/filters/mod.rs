@@ -6,16 +6,24 @@
 //!
 //! Boundary handling is `reflect` (mirror) on every axis, the
 //! scipy.ndimage default, so the Python tests can cross-check numerics.
+//!
+//! The plain `*_filter` entry points run sequentially — they are the
+//! baselines the quality tables time against `threads = 1` mitigation,
+//! so their execution model matches the seed exactly. The `*_threads`
+//! variants fan the independent convolution lines out on the shared
+//! [`crate::util::pool`] with bit-identical output.
 
 pub mod gaussian;
 pub mod uniform;
 pub mod wiener;
 
-pub use gaussian::gaussian_filter;
-pub use uniform::uniform_filter;
-pub use wiener::wiener_filter;
+pub use gaussian::{gaussian_filter, gaussian_filter_threads};
+pub use uniform::{uniform_filter, uniform_filter_threads};
+pub use wiener::{wiener_filter, wiener_filter_threads};
 
 use crate::data::grid::{Grid, Shape};
+use crate::util::par::UnsafeSlice;
+use crate::util::pool;
 
 /// Reflected (mirror) index for out-of-range positions, scipy `reflect`
 /// convention: `(d c b a | a b c d | d c b a)`.
@@ -39,13 +47,14 @@ pub(crate) fn reflect(pos: isize, n: usize) -> usize {
 }
 
 /// Apply a symmetric odd-length 1D kernel separably along every active
-/// axis (unit axes skipped). `kernel.len()` must be odd.
-pub(crate) fn separable_filter(grid: &Grid<f32>, kernel: &[f64]) -> Grid<f32> {
+/// axis (unit axes skipped). `kernel.len()` must be odd. `threads = 1`
+/// is the sequential baseline path (bit-identical to the pool path).
+pub(crate) fn separable_filter(grid: &Grid<f32>, kernel: &[f64], threads: usize) -> Grid<f32> {
     assert!(kernel.len() % 2 == 1, "kernel must be odd-length");
     let shape = grid.shape;
     let mut cur: Vec<f64> = grid.data.iter().map(|&v| v as f64).collect();
     for axis in shape.active_axes().collect::<Vec<_>>() {
-        cur = convolve_axis(&cur, shape, axis, kernel);
+        cur = convolve_axis(&cur, shape, axis, kernel, threads);
     }
     let mut out = Grid::from_vec(cur.iter().map(|&v| v as f32).collect(), shape.user_dims());
     out.shape.ndim = shape.ndim;
@@ -53,7 +62,19 @@ pub(crate) fn separable_filter(grid: &Grid<f32>, kernel: &[f64]) -> Grid<f32> {
 }
 
 /// 1D convolution along `axis` with reflect boundaries.
-pub(crate) fn convolve_axis(data: &[f64], shape: Shape, axis: usize, kernel: &[f64]) -> Vec<f64> {
+///
+/// Lines perpendicular to `axis` are independent, so with `threads > 1`
+/// they run on the shared [`pool`] (batched, with one per-batch line
+/// buffer); `threads = 1` stays a pool-free sequential loop. Each
+/// output value is computed by the same per-line expression regardless
+/// of schedule, so the result is bit-identical across thread counts.
+pub(crate) fn convolve_axis(
+    data: &[f64],
+    shape: Shape,
+    axis: usize,
+    kernel: &[f64],
+    threads: usize,
+) -> Vec<f64> {
     let dims = shape.dims;
     let stride = shape.strides()[axis];
     let n = dims[axis];
@@ -63,10 +84,14 @@ pub(crate) fn convolve_axis(data: &[f64], shape: Shape, axis: usize, kernel: &[f
         1 => (0, 2),
         _ => (0, 1),
     };
+    let n_lines = dims[oa] * dims[ob];
     let mut out = vec![0.0f64; data.len()];
-    let mut line = vec![0.0f64; n];
-    for a in 0..dims[oa] {
-        for b in 0..dims[ob] {
+    let o = UnsafeSlice::new(&mut out);
+    pool::for_batches(n_lines, threads, 8, |lines| {
+        let mut line = vec![0.0f64; n];
+        for lid in lines {
+            let a = lid / dims[ob];
+            let b = lid % dims[ob];
             let base = match axis {
                 0 => shape.idx(0, a, b),
                 1 => shape.idx(a, 0, b),
@@ -81,10 +106,12 @@ pub(crate) fn convolve_axis(data: &[f64], shape: Shape, axis: usize, kernel: &[f
                     let q = reflect(p as isize + t as isize - radius as isize, n);
                     acc += w * line[q];
                 }
-                out[base + p * stride] = acc;
+                // SAFETY: each line id owns a disjoint set of `out`
+                // indices (distinct bases, same in-line offsets).
+                unsafe { o.write(base + p * stride, acc) };
             }
         }
-    }
+    });
     out
 }
 
@@ -109,7 +136,7 @@ mod tests {
     #[test]
     fn identity_kernel_is_noop() {
         let g = Grid::from_vec((0..24).map(|x| x as f32).collect(), &[4, 6]);
-        let out = separable_filter(&g, &[0.0, 1.0, 0.0]);
+        let out = separable_filter(&g, &[0.0, 1.0, 0.0], 1);
         assert_eq!(out.data, g.data);
     }
 
@@ -117,9 +144,25 @@ mod tests {
     fn mean_kernel_preserves_constant() {
         let g = Grid::from_vec(vec![5.0f32; 27], &[3, 3, 3]);
         let k = [1.0 / 3.0; 3];
-        let out = separable_filter(&g, &k);
+        let out = separable_filter(&g, &k, 1);
         for v in out.data {
             assert!((v - 5.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn threaded_filters_match_sequential_bitwise() {
+        let g = Grid::from_vec((0..17 * 13).map(|x| (x as f32 * 0.37).sin()).collect(), &[17, 13]);
+        let k = crate::filters::gaussian::gaussian_kernel(1.0, 1);
+        let seq = separable_filter(&g, &k, 1);
+        for threads in [2usize, 4, 16] {
+            let par = separable_filter(&g, &k, threads);
+            assert_eq!(par.data, seq.data, "threads={threads}");
+        }
+        let seq = wiener_filter(&g, 0.05);
+        let par = wiener_filter_threads(&g, 0.05, 4);
+        assert_eq!(par.data, seq.data);
+        assert_eq!(gaussian_filter_threads(&g, 1.0, 4).data, gaussian_filter(&g, 1.0).data);
+        assert_eq!(uniform_filter_threads(&g, 4).data, uniform_filter(&g).data);
     }
 }

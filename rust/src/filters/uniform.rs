@@ -5,15 +5,28 @@ use crate::data::grid::Grid;
 use crate::filters::separable_filter;
 
 /// Separable mean filter with window extent `size` (odd) per active axis.
+/// Sequential (the quality-baseline execution model).
 pub fn uniform_filter_sized(grid: &Grid<f32>, size: usize) -> Grid<f32> {
-    assert!(size % 2 == 1 && size >= 1);
-    let k = vec![1.0 / size as f64; size];
-    separable_filter(grid, &k)
+    uniform_filter_sized_threads(grid, size, 1)
 }
 
-/// The paper's 3-wide uniform filter.
+/// [`uniform_filter_sized`] with its convolution lines on the shared
+/// pool; output is bit-identical to the sequential path.
+pub fn uniform_filter_sized_threads(grid: &Grid<f32>, size: usize, threads: usize) -> Grid<f32> {
+    assert!(size % 2 == 1 && size >= 1);
+    let k = vec![1.0 / size as f64; size];
+    separable_filter(grid, &k, threads)
+}
+
+/// The paper's 3-wide uniform filter. Sequential.
 pub fn uniform_filter(grid: &Grid<f32>) -> Grid<f32> {
     uniform_filter_sized(grid, 3)
+}
+
+/// [`uniform_filter`] with its convolution lines on the shared pool;
+/// output is bit-identical to the sequential path.
+pub fn uniform_filter_threads(grid: &Grid<f32>, threads: usize) -> Grid<f32> {
+    uniform_filter_sized_threads(grid, 3, threads)
 }
 
 #[cfg(test)]

@@ -22,8 +22,19 @@ pub fn quantization_noise_power(eps_abs: f64) -> f64 {
 }
 
 /// Wiener-filter `grid` with window extent `size` (odd) and noise power
-/// `noise`.
+/// `noise`. Sequential (the quality-baseline execution model).
 pub fn wiener_filter_sized(grid: &Grid<f32>, size: usize, noise: f64) -> Grid<f32> {
+    wiener_filter_sized_threads(grid, size, noise, 1)
+}
+
+/// [`wiener_filter_sized`] with its convolution lines on the shared
+/// pool; output is bit-identical to the sequential path.
+pub fn wiener_filter_sized_threads(
+    grid: &Grid<f32>,
+    size: usize,
+    noise: f64,
+    threads: usize,
+) -> Grid<f32> {
     assert!(size % 2 == 1 && size >= 1);
     assert!(noise >= 0.0);
     let shape = grid.shape;
@@ -35,8 +46,8 @@ pub fn wiener_filter_sized(grid: &Grid<f32>, size: usize, noise: f64) -> Grid<f3
     let mut mean = x.clone();
     let mut m2 = xx;
     for axis in shape.active_axes().collect::<Vec<_>>() {
-        mean = convolve_axis(&mean, shape, axis, &mean_k);
-        m2 = convolve_axis(&m2, shape, axis, &mean_k);
+        mean = convolve_axis(&mean, shape, axis, &mean_k, threads);
+        m2 = convolve_axis(&m2, shape, axis, &mean_k, threads);
     }
 
     let out: Vec<f32> = x
@@ -53,9 +64,15 @@ pub fn wiener_filter_sized(grid: &Grid<f32>, size: usize, noise: f64) -> Grid<f3
     g
 }
 
-/// The paper's 3-wide Wiener filter with ε²/3 noise power.
+/// The paper's 3-wide Wiener filter with ε²/3 noise power. Sequential.
 pub fn wiener_filter(grid: &Grid<f32>, eps_abs: f64) -> Grid<f32> {
     wiener_filter_sized(grid, 3, quantization_noise_power(eps_abs))
+}
+
+/// [`wiener_filter`] with its convolution lines on the shared pool;
+/// output is bit-identical to the sequential path.
+pub fn wiener_filter_threads(grid: &Grid<f32>, eps_abs: f64, threads: usize) -> Grid<f32> {
+    wiener_filter_sized_threads(grid, 3, quantization_noise_power(eps_abs), threads)
 }
 
 #[cfg(test)]

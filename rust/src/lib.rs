@@ -20,7 +20,10 @@
 //!   detection (Alg. 2), exact linear-time Euclidean distance transform
 //!   with feature transform (Alg. 1, Maurer et al.), sign propagation
 //!   (Alg. 3) and inverse-distance-weighted error compensation (Alg. 4),
-//!   sequential and multi-threaded;
+//!   sequential and multi-threaded, plus
+//!   [`mitigation::service::MitigationService`] — the batched serving
+//!   layer that runs many independent fields concurrently on the shared
+//!   pool (the `qai batch` CLI subcommand);
 //! * [`filters`] — the Gaussian / uniform / Wiener baselines of §VIII;
 //! * [`metrics`] — SSIM (QCAT convention), PSNR, max-error, bit-rate;
 //! * [`coordinator`] — the distributed-memory runtime with the paper's
@@ -30,7 +33,11 @@
 //!   path (Python is build-time only);
 //! * [`data`] — grid types, synthetic dataset analogs, raw f32 I/O;
 //! * [`bench_support`] — the offline criterion-like bench harness used by
-//!   the per-figure/table benches.
+//!   the per-figure/table benches;
+//! * [`util`] — offline substrates, including [`util::pool`], the
+//!   persistent work-claiming thread-pool runtime all shared-memory
+//!   parallelism runs on (`threads == 1` stays a zero-overhead inline
+//!   path; warm parallel regions spawn no OS threads).
 //!
 //! ## Quickstart
 //!

@@ -19,7 +19,8 @@
 
 use crate::data::grid::Grid;
 use crate::quant::QIndex;
-use crate::util::par::{parallel_for_range, UnsafeSlice};
+use crate::util::par::UnsafeSlice;
+use crate::util::pool;
 
 /// Output of step A.
 pub struct BoundaryResult {
@@ -48,7 +49,7 @@ pub fn boundary_and_sign(q: &Grid<QIndex>, threads: usize) -> BoundaryResult {
     // Parallelize over the slowest active axis' slices.
     let par_axis = active[0];
     let n_slices = dims[par_axis];
-    parallel_for_range(n_slices, threads, 1, |slice| {
+    pool::for_range(n_slices, threads, 1, |slice| {
         // Interior test per active axis; the parallel axis' coordinate is
         // fixed to `slice`.
         let mut lo = [0usize; 3];
@@ -114,7 +115,7 @@ pub fn boundary_mask<T: PartialEq + Copy + Send + Sync>(g: &Grid<T>, threads: us
     let data = &g.data;
     let ms = UnsafeSlice::new(&mut mask.data);
     let par_axis = active[0];
-    parallel_for_range(dims[par_axis], threads, 1, |slice| {
+    pool::for_range(dims[par_axis], threads, 1, |slice| {
         let mut lo = [0usize; 3];
         let mut hi = dims;
         for &a in &active {

@@ -133,7 +133,7 @@ fn first_pass(
     let f = UnsafeSlice::new(nearest);
     // Incremental index walk instead of `base + p·stride` per element
     // (§Perf iteration 5), lines batched like the Voronoi pass.
-    crate::util::par::parallel_for_batches(n_lines, threads, 16, |lines| {
+    crate::util::pool::for_batches(n_lines, threads, 16, |lines| {
         for lid in lines {
             let base = line_base(shape, axis, lid);
             // forward sweep: distance (in steps) to last feature seen
@@ -192,7 +192,7 @@ fn voronoi_pass(
     let f = UnsafeSlice::new(nearest);
     // Batched lines: the Voronoi scratch (site stacks) is allocated once
     // per batch and reused across its lines — §Perf iteration 2.
-    crate::util::par::parallel_for_batches(n_lines, threads, 16, |lines| {
+    crate::util::pool::for_batches(n_lines, threads, 16, |lines| {
         let mut g: Vec<i64> = Vec::with_capacity(len); // site values f_i
         let mut h: Vec<i64> = Vec::with_capacity(len); // site positions
         let mut ft: Vec<u32> = Vec::with_capacity(len); // site features

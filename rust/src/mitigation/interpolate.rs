@@ -17,7 +17,7 @@
 //! within the relaxed bound `(1+η)·ε` (Table II).
 
 use crate::mitigation::edt::INF;
-use crate::util::par::parallel_chunks_mut;
+use crate::util::pool;
 
 /// IDW weight `k₂/(k₁+k₂)` from *squared* distances, with the limit
 /// conventions above.
@@ -79,7 +79,7 @@ pub fn compensate_adaptive(
         assert!(r > 0.0, "taper radius must be positive");
         1.0 / (r * r)
     });
-    parallel_chunks_mut(data, threads, |start, chunk| {
+    pool::chunks_mut(data, threads, |start, chunk| {
         for (off, v) in chunk.iter_mut().enumerate() {
             let i = start + off;
             let s = sign[i];

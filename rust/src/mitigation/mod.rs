@@ -14,13 +14,17 @@
 //!    `C = k₂/(k₁+k₂) · S · η·ε` added to the decompressed data.
 //!
 //! [`pipeline`] assembles the steps sequentially or with shared-memory
-//! threads (§VII-A); the distributed version lives in
+//! threads (§VII-A) on the persistent pool runtime
+//! ([`crate::util::pool`]); [`service`] batches many independent fields
+//! onto the same pool; the distributed version lives in
 //! [`crate::coordinator`].
 
 pub mod boundary;
 pub mod edt;
 pub mod interpolate;
 pub mod pipeline;
+pub mod service;
 pub mod sign;
 
 pub use pipeline::{mitigate, mitigate_with_stats, Backend, MitigationConfig, PipelineStats};
+pub use service::{Job, JobResult, MitigationService};

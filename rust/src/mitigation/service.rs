@@ -1,0 +1,165 @@
+//! Batched mitigation serving layer.
+//!
+//! The ROADMAP's production scenario is many independent fields arriving
+//! concurrently (one per user request, ensemble member, or timestep).
+//! [`MitigationService`] runs such batches on a persistent
+//! [`pool`](crate::util::pool): jobs execute concurrently as tasks on
+//! the service's pool (the process-global one by default, or the pool
+//! given to [`MitigationService::with_pool`]), while each job's
+//! *internal* steps (A–E) fan out at its own `MitigationConfig::threads`
+//! setting on the **process-global** pool — the pipeline's parallel
+//! substrate is the global pool regardless of which pool carries the
+//! cross-job fan-out (per-step pool-handle plumbing is a ROADMAP
+//! follow-up). Nested regions are safe either way: every region's
+//! opener participates in draining it, so no spawns and no deadlock.
+//!
+//! Guarantees:
+//!
+//! * **Exactness** — each job's output is bit-identical to a standalone
+//!   [`mitigate_with_stats`] call with the same inputs (the pipeline is
+//!   schedule-independent), so batching is a pure throughput knob.
+//! * **Isolation** — a failing job (error *or* panic, e.g. a shape
+//!   mismatch) yields an `Err` in its own slot and cannot poison the
+//!   rest of the batch.
+//! * **Determinism** — outputs depend only on job inputs, never on
+//!   batch order, batch concurrency, or pool sizing.
+
+use crate::data::grid::Grid;
+use crate::mitigation::pipeline::{mitigate_with_stats, MitigationConfig, PipelineStats};
+use crate::quant::{QIndex, ResolvedBound};
+use crate::util::pool::{self, ThreadPool};
+use std::sync::{Arc, Mutex};
+
+/// One unit of batched work: a decompressed field, its quantization
+/// indices, the resolved bound, and the per-job pipeline configuration.
+pub struct Job {
+    /// Decompressed data `d'`.
+    pub dq: Grid<f32>,
+    /// Quantization-index field.
+    pub q: Grid<QIndex>,
+    /// Resolved error bound the field was compressed with.
+    pub eb: ResolvedBound,
+    /// Pipeline configuration (η, per-job threads, backend, taper).
+    pub cfg: MitigationConfig,
+}
+
+impl Job {
+    /// Convenience constructor with the default pipeline configuration.
+    pub fn new(dq: Grid<f32>, q: Grid<QIndex>, eb: ResolvedBound) -> Self {
+        Job { dq, q, eb, cfg: MitigationConfig::default() }
+    }
+}
+
+/// Result slot of one batched job.
+pub type JobResult = anyhow::Result<(Grid<f32>, PipelineStats)>;
+
+/// A mitigation server over a persistent thread pool (the process-wide
+/// [`pool::global`] by default, or an explicitly sized pool for
+/// isolation / sweep experiments).
+#[derive(Default)]
+pub struct MitigationService {
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl MitigationService {
+    /// Service over the process-wide global pool.
+    pub fn new() -> Self {
+        MitigationService { pool: None }
+    }
+
+    /// Service whose *cross-job* fan-out runs on an explicit pool.
+    /// Note: jobs' internal steps still parallelize on the global pool
+    /// (see the module docs), so this bounds batch-level concurrency,
+    /// not total CPU use.
+    pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
+        MitigationService { pool: Some(pool) }
+    }
+
+    fn pool(&self) -> &ThreadPool {
+        self.pool.as_deref().unwrap_or_else(pool::global)
+    }
+
+    /// Run every job, concurrently, on the shared pool; slot `i` of the
+    /// output corresponds to `jobs[i]`. Per-job failures (including
+    /// panics out of the pipeline) are captured in their own slot.
+    pub fn mitigate_batch(&self, jobs: &[Job]) -> Vec<JobResult> {
+        if jobs.is_empty() {
+            return Vec::new();
+        }
+        let pool = self.pool();
+        let slots: Vec<Mutex<Option<JobResult>>> =
+            jobs.iter().map(|_| Mutex::new(None)).collect();
+        pool.for_range(jobs.len(), pool.lanes(), 1, |i| {
+            let job = &jobs[i];
+            let outcome = if job.dq.shape != job.q.shape {
+                Err(anyhow::anyhow!(
+                    "job {i}: data shape {:?} != index shape {:?}",
+                    job.dq.shape.dims,
+                    job.q.shape.dims
+                ))
+            } else {
+                // A panic below (defensive: the pipeline asserts on
+                // internal invariants) must not take down sibling jobs.
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    mitigate_with_stats(&job.dq, &job.q, job.eb, &job.cfg)
+                })) {
+                    Ok(result) => result,
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<String>()
+                            .cloned()
+                            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                            .unwrap_or_else(|| "<non-string panic>".to_string());
+                        Err(anyhow::anyhow!("job {i} panicked: {msg}"))
+                    }
+                }
+            };
+            *slots[i].lock().unwrap() = Some(outcome);
+        });
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().unwrap().expect("every job slot is filled"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::quant::{quantize_grid, ErrorBound};
+
+    fn job(kind: DatasetKind, dims: &[usize], seed: u64) -> Job {
+        let orig = generate(kind, dims, seed);
+        let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+        let (q, dq) = quantize_grid(&orig, eb);
+        Job::new(dq, q, eb)
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        assert!(MitigationService::new().mitigate_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn single_job_matches_direct_call() {
+        let j = job(DatasetKind::ClimateLike, &[48, 48], 3);
+        let direct = mitigate_with_stats(&j.dq, &j.q, j.eb, &j.cfg).unwrap();
+        let service = MitigationService::new();
+        let got = service.mitigate_batch(std::slice::from_ref(&j));
+        let (out, stats) = got.into_iter().next().unwrap().unwrap();
+        assert_eq!(out.data, direct.0.data);
+        assert_eq!(stats.n_boundary1, direct.1.n_boundary1);
+        assert_eq!(stats.n_boundary2, direct.1.n_boundary2);
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error_not_a_panic() {
+        let mut j = job(DatasetKind::ClimateLike, &[16, 16], 1);
+        j.q = Grid::from_vec(vec![0i64; 64], &[8, 8]);
+        let got = MitigationService::new().mitigate_batch(&[j]);
+        assert!(got[0].is_err());
+        let msg = got[0].as_ref().unwrap_err().to_string();
+        assert!(msg.contains("shape"), "msg={msg}");
+    }
+}

@@ -10,7 +10,7 @@
 
 use crate::data::grid::Grid;
 use crate::mitigation::boundary::boundary_mask;
-use crate::util::par::parallel_chunks_mut;
+use crate::util::pool;
 
 /// Propagate boundary signs to the whole domain and derive `B₂`.
 ///
@@ -31,7 +31,7 @@ pub fn propagate_signs(
     {
         let b = &b1.data;
         let src = &sign_at_boundary.data;
-        parallel_chunks_mut(&mut s.data, threads, |start, chunk| {
+        pool::chunks_mut(&mut s.data, threads, |start, chunk| {
             for (off, v) in chunk.iter_mut().enumerate() {
                 let i = start + off;
                 if !b[i] {

@@ -1,8 +1,14 @@
 //! Small infrastructure substrates that would normally come from crates
 //! (`rand`, `rayon`, `proptest`) but are implemented in-repo because the
 //! build environment is offline (DESIGN.md §10).
+//!
+//! Parallelism lives in two modules: [`pool`] is the persistent
+//! thread-pool runtime every hot path uses; [`par`] is the original
+//! fork-join implementation, kept as the overhead baseline for
+//! `hotpath_microbench` and as the provider of [`par::UnsafeSlice`].
 
 pub mod par;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,645 @@
+//! Persistent shared-memory thread-pool runtime.
+//!
+//! The original parallel substrate ([`crate::util::par`]) spawns fresh
+//! OS threads via `std::thread::scope` on *every* call, so one
+//! `mitigate()` run pays fork-join startup five-plus times (steps A–E)
+//! and each SZp/SZ3 block decompression pays it again. This module
+//! replaces that with a **persistent pool**: workers are spawned once
+//! (lazily, for the [`global`] pool) and then parked on a condition
+//! variable; each parallel region is published as a heap-allocated
+//! ticket that woken workers *and the calling thread* drain
+//! cooperatively through an atomic work cursor (self-scheduling — the
+//! pool-level analog of OpenMP `schedule(dynamic)` work stealing).
+//!
+//! Guarantees relied on throughout the crate:
+//!
+//! * **Drop-in semantics** — [`chunks_mut`] / [`for_range`] /
+//!   [`for_batches`] take the same `(…, threads, …)` arguments and use
+//!   the same work decomposition as the `util::par` free functions, so
+//!   outputs are bit-identical to both the fork-join implementation and
+//!   the sequential path (every call site writes disjoint data, making
+//!   results schedule-independent). One deliberate divergence: actual
+//!   concurrency is capped at the pool's lane count — `threads` beyond
+//!   that changes only the work decomposition, not the OS-thread count
+//!   (the fork-join code really spawned `threads` threads). Outputs are
+//!   unaffected; for true oversubscription experiments size an explicit
+//!   [`ThreadPool::new`] or set `QAI_POOL_THREADS`.
+//! * **`threads == 1` is free** — the sequential path runs inline with
+//!   zero synchronization, preserving profiling baselines and the
+//!   default `MitigationConfig` behavior exactly.
+//! * **Zero steady-state spawns** — after the pool is warm, parallel
+//!   regions spawn no OS threads ([`os_thread_spawns`] exposes the
+//!   counter so tests can assert this).
+//! * **Nesting is safe** — a worker executing a task may itself open a
+//!   parallel region (the batched [`crate::mitigation::service`] does
+//!   exactly this). The opener always participates in its own region,
+//!   so progress never depends on other workers being free.
+//!
+//! Mutually-blocking task sets (the coordinator's simulated-MPI ranks,
+//! which block in `recv` on each other) must *not* share pool lanes —
+//! that can deadlock when tasks outnumber workers. [`scope_blocking`]
+//! is the explicit escape hatch: dedicated scoped threads, counted by
+//! the same spawn counter.
+
+use crate::util::par::UnsafeSlice;
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Global count of OS threads ever spawned by this module (pool workers
+/// plus [`scope_blocking`] threads). Tests use it to assert that warm
+/// parallel regions spawn nothing.
+static OS_THREAD_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Total OS threads spawned through the pool runtime so far.
+pub fn os_thread_spawns() -> usize {
+    OS_THREAD_SPAWNS.load(Ordering::SeqCst)
+}
+
+/// One published parallel region. Workers and the caller claim batches
+/// of the index space `0..n` through `cursor`; the caller blocks until
+/// every participant has left the body, then closes the region so late
+/// tickets (still queued behind other regions) become no-ops without
+/// ever touching the by-then-dead closure pointer.
+struct Region {
+    /// Type-erased `&F` living on the caller's stack; valid until the
+    /// region is closed.
+    ctx: *const (),
+    /// Monomorphized trampoline: `call(ctx, start, end)` runs the body
+    /// over one claimed batch.
+    call: unsafe fn(*const (), usize, usize),
+    /// Index-space extent.
+    n: usize,
+    /// Batch size per claim.
+    grain: usize,
+    /// Next unclaimed index.
+    cursor: AtomicUsize,
+    /// Participation bookkeeping (see `run_ticket` / `dispatch`).
+    state: Mutex<RegionState>,
+    /// Signaled when the last participant leaves the body.
+    done: Condvar,
+    /// First panic payload raised inside the body, re-raised by the
+    /// caller after the region quiesces (fork-join parity).
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct RegionState {
+    /// Participants currently inside the body.
+    in_flight: usize,
+    /// Set by the caller once the region is complete; late tickets must
+    /// not enter.
+    closed: bool,
+}
+
+// SAFETY: `ctx` is only dereferenced between a successful `try_enter`
+// and the matching exit, and the caller keeps the referent alive until
+// the region is closed with no participant in flight.
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+/// Sentinel the cursor jumps to when a participant panics, so remaining
+/// batches are abandoned. Far above any real `n`, with headroom so
+/// racing `fetch_add(grain)` increments cannot wrap.
+const CANCELLED: usize = usize::MAX / 2;
+
+impl Region {
+    /// Drain batches until the index space is exhausted. Panics inside
+    /// the body are captured into `panic_payload` (first wins) and
+    /// cancel the remaining work.
+    fn drain(&self) {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+            let start = self.cursor.fetch_add(self.grain, Ordering::Relaxed);
+            if start >= self.n {
+                break;
+            }
+            let end = (start + self.grain).min(self.n);
+            // SAFETY: the caller guarantees `ctx` outlives the open
+            // region, and `call` is the trampoline monomorphized for
+            // the same closure type.
+            unsafe { (self.call)(self.ctx, start, end) };
+        }));
+        if let Err(payload) = result {
+            self.cursor.store(CANCELLED, Ordering::Relaxed);
+            let mut slot = self.panic_payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+
+    /// Worker-side entry: enter (unless closed), drain, exit, and wake
+    /// the caller when this was the last participant.
+    fn run_ticket(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            if st.closed {
+                return;
+            }
+            st.in_flight += 1;
+        }
+        self.drain();
+        let mut st = self.state.lock().unwrap();
+        st.in_flight -= 1;
+        if st.in_flight == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// Shared worker state: a FIFO of region tickets plus shutdown flag.
+struct Injector {
+    queue: Mutex<VecDeque<Arc<Region>>>,
+    ready: Condvar,
+    shutdown: AtomicBool,
+}
+
+fn worker_loop(injector: Arc<Injector>) {
+    loop {
+        let region = {
+            let mut q = injector.queue.lock().unwrap();
+            loop {
+                if injector.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(r) = q.pop_front() {
+                    break r;
+                }
+                q = injector.ready.wait(q).unwrap();
+            }
+        };
+        region.run_ticket();
+    }
+}
+
+/// A persistent worker pool sized for `lanes`-way parallelism (the
+/// caller of a parallel region is always one lane, so `lanes - 1`
+/// workers are spawned). [`ThreadPool::new`] exists for explicit sizing
+/// — e.g. the Fig. 8 thread sweep — while most code uses [`global`].
+pub struct ThreadPool {
+    injector: Arc<Injector>,
+    lanes: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Build a pool for `lanes`-way parallelism (`lanes >= 1`); spawns
+    /// `lanes - 1` persistent workers immediately.
+    pub fn new(lanes: usize) -> Self {
+        let lanes = lanes.max(1);
+        let injector = Arc::new(Injector {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..lanes - 1)
+            .map(|w| {
+                OS_THREAD_SPAWNS.fetch_add(1, Ordering::SeqCst);
+                let inj = injector.clone();
+                std::thread::Builder::new()
+                    .name(format!("qai-pool-{w}"))
+                    .spawn(move || worker_loop(inj))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { injector, lanes, handles }
+    }
+
+    /// Maximum useful parallelism of this pool (workers + caller).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Publish a region over `0..n` with the given `grain`, offer up to
+    /// `extra` tickets to the workers, participate, and block until the
+    /// region quiesces. Re-raises the first panic from the body.
+    fn dispatch<F>(&self, n: usize, grain: usize, extra: usize, body: &F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        unsafe fn trampoline<F: Fn(usize, usize)>(ctx: *const (), start: usize, end: usize) {
+            (*(ctx as *const F))(start, end);
+        }
+        let region = Arc::new(Region {
+            ctx: body as *const F as *const (),
+            call: trampoline::<F>,
+            n,
+            grain: grain.max(1),
+            cursor: AtomicUsize::new(0),
+            state: Mutex::new(RegionState { in_flight: 0, closed: false }),
+            done: Condvar::new(),
+            panic_payload: Mutex::new(None),
+        });
+        let extra = extra.min(self.lanes.saturating_sub(1));
+        if extra > 0 {
+            let mut q = self.injector.queue.lock().unwrap();
+            for _ in 0..extra {
+                q.push_back(region.clone());
+            }
+            drop(q);
+            self.injector.ready.notify_all();
+        }
+
+        // The caller is always a participant: even with every worker
+        // busy (or zero workers), the region completes.
+        region.drain();
+
+        let mut st = region.state.lock().unwrap();
+        while st.in_flight > 0 {
+            st = region.done.wait(st).unwrap();
+        }
+        st.closed = true;
+        drop(st);
+
+        if let Some(payload) = region.panic_payload.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Process `data` in `threads` contiguous chunks, calling
+    /// `f(chunk_start_index, chunk)` on each — drop-in for
+    /// [`crate::util::par::parallel_chunks_mut`] (identical chunk
+    /// decomposition, balanced to within one element).
+    pub fn chunks_mut<T: Send, F>(&self, data: &mut [T], threads: usize, f: F)
+    where
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        if threads <= 1 || n < 2 {
+            f(0, data);
+            return;
+        }
+        let chunks = threads.min(n);
+        let base = n / chunks;
+        let extra = n % chunks;
+        let slice = UnsafeSlice::new(data);
+        let body = |lo: usize, hi: usize| {
+            for c in lo..hi {
+                let start = c * base + c.min(extra);
+                let len = base + usize::from(c < extra);
+                // SAFETY: chunk index ranges are disjoint by construction.
+                let chunk = unsafe { slice.slice_mut(start, len) };
+                f(start, chunk);
+            }
+        };
+        self.dispatch(chunks, 1, chunks - 1, &body);
+    }
+
+    /// Self-scheduled loop over `0..n` claiming `grain` indices at a
+    /// time — drop-in for [`crate::util::par::parallel_for_range`].
+    pub fn for_range<F>(&self, n: usize, threads: usize, grain: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if threads <= 1 || n <= grain {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let body = |lo: usize, hi: usize| {
+            for i in lo..hi {
+                f(i);
+            }
+        };
+        self.dispatch(n, grain.max(1), threads.min(n) - 1, &body);
+    }
+
+    /// Like [`ThreadPool::for_range`] but hands the body whole
+    /// contiguous batches, so per-batch scratch (e.g. the EDT's Voronoi
+    /// stacks) is allocated once per batch — drop-in for
+    /// [`crate::util::par::parallel_for_batches`].
+    pub fn for_batches<F>(&self, n: usize, threads: usize, grain: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let grain = grain.max(1);
+        if threads <= 1 || n <= grain {
+            if n > 0 {
+                f(0..n);
+            }
+            return;
+        }
+        let body = |lo: usize, hi: usize| f(lo..hi);
+        self.dispatch(n, grain, threads.min(n.div_ceil(grain)) - 1, &body);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.injector.shutdown.store(true, Ordering::SeqCst);
+        // Take the queue lock so no worker is between the shutdown
+        // check and the wait when we notify.
+        drop(self.injector.queue.lock().unwrap());
+        self.injector.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Lane count for the global pool: `QAI_POOL_THREADS` if set, else the
+/// host's available parallelism floored at 8, so the Fig. 8-style
+/// thread sweeps (≤ 8) and the batched service get real concurrency
+/// even on small CI hosts (parked workers are nearly free).
+fn default_lanes() -> usize {
+    if let Ok(v) = std::env::var("QAI_POOL_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(8)
+}
+
+/// The process-wide pool, created on first use. Workers persist for the
+/// life of the process (the pool is never dropped).
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(default_lanes()))
+}
+
+/// Useful parallelism of the global pool.
+pub fn parallelism() -> usize {
+    global().lanes()
+}
+
+/// [`ThreadPool::chunks_mut`] on the global pool.
+pub fn chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if threads <= 1 || data.len() < 2 {
+        // Fast path that never touches (or initializes) the pool.
+        f(0, data);
+        return;
+    }
+    global().chunks_mut(data, threads, f)
+}
+
+/// [`ThreadPool::for_range`] on the global pool.
+pub fn for_range<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if threads <= 1 || n <= grain {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    global().for_range(n, threads, grain, f)
+}
+
+/// [`ThreadPool::for_batches`] on the global pool.
+pub fn for_batches<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let grain = grain.max(1);
+    if threads <= 1 || n <= grain {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    global().for_batches(n, threads, grain, f)
+}
+
+/// Run a set of **mutually-blocking** tasks to completion, one
+/// dedicated scoped thread each (single tasks run inline). This exists
+/// for the coordinator's simulated-MPI ranks, which block in `recv` on
+/// one another: multiplexing such tasks onto a bounded worker set can
+/// deadlock, so they must not share pool lanes. Spawns are counted by
+/// [`os_thread_spawns`].
+pub fn scope_blocking<'env, T, F>(tasks: Vec<F>) -> Vec<T>
+where
+    T: Send + 'env,
+    F: FnOnce() -> T + Send + 'env,
+{
+    if tasks.len() <= 1 {
+        return tasks.into_iter().map(|t| t()).collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = tasks
+            .into_iter()
+            .map(|t| {
+                OS_THREAD_SPAWNS.fetch_add(1, Ordering::SeqCst);
+                s.spawn(t)
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("blocking task panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The spawn counter is process-global, so tests that construct
+    /// pools (or assert on the counter) are serialized to keep the
+    /// counter assertions race-free under the parallel test harness.
+    fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(4);
+        for threads in [1, 2, 3, 7, 16] {
+            let mut v = vec![0u32; 1000];
+            pool.chunks_mut(&mut v, threads, |start, chunk| {
+                for (k, x) in chunk.iter_mut().enumerate() {
+                    *x = (start + k) as u32 + 1;
+                }
+            });
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, i as u32 + 1, "threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_decomposition_matches_forkjoin_exactly() {
+        let _g = test_guard();
+        // Same (start, len) pairs as util::par::parallel_chunks_mut.
+        let pool = ThreadPool::new(3);
+        for (n, threads) in [(10, 3), (1000, 7), (5, 8), (2, 2)] {
+            let mut v = vec![0usize; n];
+            let seen = Mutex::new(Vec::new());
+            pool.chunks_mut(&mut v, threads, |start, chunk| {
+                seen.lock().unwrap().push((start, chunk.len()));
+            });
+            let mut got = seen.into_inner().unwrap();
+            got.sort_unstable();
+            let mut want = Vec::new();
+            let chunks = threads.min(n);
+            let base = n / chunks;
+            let extra = n % chunks;
+            let mut start = 0;
+            for c in 0..chunks {
+                let len = base + usize::from(c < extra);
+                want.push((start, len));
+                start += len;
+            }
+            assert_eq!(got, want, "n={n} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_range_visits_each_index_once() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(4);
+        for threads in [1, 2, 4, 8, 64] {
+            let n = 5000;
+            let mut out = vec![0u32; n];
+            let s = UnsafeSlice::new(&mut out);
+            pool.for_range(n, threads, 64, |i| unsafe { s.write(i, i as u32 * 3) });
+            for (i, x) in out.iter().enumerate() {
+                assert_eq!(*x, i as u32 * 3);
+            }
+        }
+    }
+
+    #[test]
+    fn for_batches_covers_range_disjointly() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(4);
+        for (n, grain) in [(0usize, 4usize), (1, 4), (97, 4), (4096, 16), (10, 100)] {
+            let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.for_batches(n, 5, grain, |r| {
+                for i in r {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "n={n} grain={grain} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_requests_run_inline() {
+        let _g = test_guard();
+        // threads == 1 must work even on a zero-worker pool.
+        let pool = ThreadPool::new(1);
+        let mut v = vec![0u8; 16];
+        pool.chunks_mut(&mut v, 1, |_, c| c.iter_mut().for_each(|x| *x = 1));
+        assert!(v.iter().all(|&x| x == 1));
+        pool.for_range(8, 1, 2, |_| {});
+        pool.for_batches(8, 1, 2, |_| {});
+    }
+
+    #[test]
+    fn zero_worker_pool_still_completes_parallel_requests() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(1);
+        let n = 257;
+        let mut out = vec![0u32; n];
+        let s = UnsafeSlice::new(&mut out);
+        pool.for_range(n, 8, 4, |i| unsafe { s.write(i, 7) });
+        assert!(out.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn nested_regions_complete() {
+        let _g = test_guard();
+        // A region body that itself opens a region — the service's
+        // batch-over-pipelines shape.
+        let pool = ThreadPool::new(3);
+        let outer = 6usize;
+        let inner = 64usize;
+        let hits = AtomicUsize::new(0);
+        pool.for_range(outer, 3, 1, |_| {
+            pool.for_range(inner, 3, 8, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), outer * inner);
+    }
+
+    #[test]
+    fn warm_pool_spawns_nothing_per_region() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(4);
+        pool.for_range(128, 4, 8, |_| {}); // warm-up
+        let before = os_thread_spawns();
+        for _ in 0..50 {
+            pool.for_range(512, 4, 8, |i| {
+                std::hint::black_box(i);
+            });
+            let mut v = vec![0u8; 256];
+            pool.chunks_mut(&mut v, 4, |_, c| c.iter_mut().for_each(|x| *x = 1));
+            pool.for_batches(256, 4, 16, |r| {
+                std::hint::black_box(r.len());
+            });
+        }
+        assert_eq!(os_thread_spawns(), before, "warm regions must not spawn OS threads");
+    }
+
+    #[test]
+    fn body_panic_propagates_to_caller() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.for_range(100, 3, 1, |i| {
+                if i == 42 {
+                    panic!("boom at {i}");
+                }
+            });
+        }));
+        let payload = result.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("boom"), "msg={msg}");
+        // The pool must stay usable after a panicked region.
+        let count = AtomicUsize::new(0);
+        pool.for_range(10, 3, 1, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn scope_blocking_runs_mutually_dependent_tasks() {
+        let _g = test_guard();
+        use std::sync::mpsc::channel;
+        let (tx_a, rx_a) = channel::<u32>();
+        let (tx_b, rx_b) = channel::<u32>();
+        let t1 = move || {
+            tx_b.send(1).unwrap();
+            rx_a.recv().unwrap()
+        };
+        let t2 = move || {
+            tx_a.send(2).unwrap();
+            rx_b.recv().unwrap()
+        };
+        let boxed: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![Box::new(t1), Box::new(t2)];
+        let got = scope_blocking(boxed);
+        assert_eq!(got, vec![2, 1]);
+    }
+
+    #[test]
+    fn explicit_pool_drop_joins_workers() {
+        let _g = test_guard();
+        let before = os_thread_spawns();
+        {
+            let pool = ThreadPool::new(3);
+            pool.for_range(64, 3, 4, |_| {});
+        } // drop: workers must exit cleanly
+        assert!(os_thread_spawns() >= before + 2);
+    }
+
+    #[test]
+    fn global_pool_free_functions_work() {
+        let _g = test_guard();
+        let n = 1000;
+        let mut out = vec![0u32; n];
+        let s = UnsafeSlice::new(&mut out);
+        for_range(n, 4, 32, |i| unsafe { s.write(i, i as u32) });
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+        assert!(parallelism() >= 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Property tests for the codec substrates (via `util::prop`): Huffman
+//! encode/decode, `bitio` writer/reader, and the Lorenzo
+//! predict/reconstruct roundtrip — with explicit empty and
+//! single-element coverage.
+
+use qai::compressors::bitio::{unzigzag, zigzag, BitReader, BitWriter};
+use qai::compressors::{huffman, lorenzo};
+use qai::data::grid::Grid;
+use qai::quant::QIndex;
+use qai::util::prop::prop_check;
+
+// ---------------------------------------------------------------- huffman
+
+#[test]
+fn huffman_empty_and_single_element() {
+    // Empty symbol stream.
+    let enc = huffman::encode(&[]);
+    assert_eq!(huffman::decode(&enc).unwrap(), Vec::<u32>::new());
+    // Single-element streams, including extreme symbol values.
+    for s in [0u32, 1, 12345, u32::MAX] {
+        let enc = huffman::encode(&[s]);
+        assert_eq!(huffman::decode(&enc).unwrap(), vec![s], "symbol {s}");
+    }
+}
+
+#[test]
+fn huffman_roundtrip_random_alphabets() {
+    prop_check("huffman roundtrip (random alphabets)", 40, |g| {
+        let n = g.usize_in(0, 1500);
+        // Alphabets from degenerate (1 symbol) to wide/sparse (large
+        // symbol values exercise the u32 codebook headers).
+        let alpha = g.usize_in(1, 300) as u32;
+        let offset = if g.bool_with(0.3) { u32::MAX - 400 } else { 0 };
+        let data: Vec<u32> =
+            (0..n).map(|_| offset + g.usize_in(0, alpha as usize) as u32).collect();
+        let enc = huffman::encode(&data);
+        assert_eq!(huffman::decode(&enc).unwrap(), data);
+    });
+}
+
+#[test]
+fn huffman_roundtrip_skewed_distributions() {
+    prop_check("huffman roundtrip (skewed)", 25, |g| {
+        let n = g.usize_in(1, 2000);
+        let p = g.f64_in(0.5, 0.95);
+        let data: Vec<u32> = (0..n)
+            .map(|_| {
+                let mut v = 0u32;
+                while g.bool_with(p) && v < 40 {
+                    v += 1;
+                }
+                v
+            })
+            .collect();
+        let enc = huffman::encode(&data);
+        let dec = huffman::decode(&enc).unwrap();
+        assert_eq!(dec, data);
+    });
+}
+
+// ------------------------------------------------------------------ bitio
+
+#[test]
+fn bitio_empty_writer_and_exhausted_reader() {
+    let w = BitWriter::new();
+    assert_eq!(w.bit_len(), 0);
+    let bytes = w.into_bytes();
+    assert!(bytes.is_empty());
+    let mut r = BitReader::new(&bytes);
+    assert_eq!(r.read_bits(1), None);
+    assert_eq!(r.read_bit(), None);
+}
+
+#[test]
+fn bitio_single_bit_and_full_width() {
+    let mut w = BitWriter::new();
+    w.write_bit(true);
+    w.write_bits(u64::MAX, 64);
+    let bytes = w.into_bytes();
+    let mut r = BitReader::new(&bytes);
+    assert_eq!(r.read_bit(), Some(true));
+    assert_eq!(r.read_bits(64), Some(u64::MAX));
+}
+
+#[test]
+fn bitio_roundtrip_random_streams() {
+    prop_check("bitio mixed-width roundtrip", 60, |g| {
+        let n = g.usize_in(0, 300);
+        let items: Vec<(u64, u32)> = (0..n)
+            .map(|_| {
+                let w = g.usize_in(1, 64) as u32;
+                let mask = if w == 64 { u64::MAX } else { (1u64 << w) - 1 };
+                (g.rng().next_u64() & mask, w)
+            })
+            .collect();
+        let mut wtr = BitWriter::new();
+        for &(v, w) in &items {
+            wtr.write_bits(v, w);
+        }
+        let total_bits: usize = items.iter().map(|&(_, w)| w as usize).sum();
+        assert_eq!(wtr.bit_len(), total_bits);
+        let bytes = wtr.into_bytes();
+        assert_eq!(bytes.len(), total_bits.div_ceil(8));
+        let mut r = BitReader::new(&bytes);
+        for &(v, w) in &items {
+            assert_eq!(r.read_bits(w), Some(v));
+        }
+        // Reading past the stream (plus padding) must fail, not wrap.
+        assert_eq!(r.read_bits(9), None);
+    });
+}
+
+#[test]
+fn bitio_zigzag_roundtrip_extremes() {
+    for v in [0i64, 1, -1, i64::MAX, i64::MIN, 42, -917] {
+        assert_eq!(unzigzag(zigzag(v)), v, "v={v}");
+    }
+    prop_check("zigzag order-preserving near zero", 100, |g| {
+        let v = (g.rng().next_u64() as i64) >> g.usize_in(1, 40);
+        assert_eq!(unzigzag(zigzag(v)), v);
+    });
+}
+
+// ---------------------------------------------------------------- lorenzo
+
+#[test]
+fn lorenzo_single_element_grids() {
+    for dims in [vec![1usize], vec![1, 1], vec![1, 1, 1]] {
+        let q: Grid<QIndex> = Grid::from_vec(vec![-37], &dims);
+        let r = lorenzo::forward(&q);
+        assert_eq!(r, vec![-37], "dims={dims:?}: sole residual is the value itself");
+        assert_eq!(lorenzo::inverse(&r, q.shape).data, q.data, "dims={dims:?}");
+    }
+}
+
+#[test]
+fn lorenzo_roundtrip_random_index_fields() {
+    prop_check("lorenzo roundtrip (random index fields)", 60, |g| {
+        let ndim = g.usize_in(1, 3);
+        let dims: Vec<usize> = (0..ndim).map(|_| g.usize_in(1, 12)).collect();
+        let n: usize = dims.iter().product();
+        // Index magnitudes from tiny to large (NYX-like ranges).
+        let scale = *g.choose(&[3i64, 100, 1_000_000, 1 << 40]);
+        let vals: Vec<QIndex> = (0..n)
+            .map(|_| (g.rng().next_u64() as i64) % scale)
+            .collect();
+        let q = Grid::from_vec(vals, &dims);
+        let r = lorenzo::forward(&q);
+        assert_eq!(r.len(), n);
+        assert_eq!(lorenzo::inverse(&r, q.shape).data, q.data, "dims={dims:?}");
+    });
+}
+
+#[test]
+fn lorenzo_degenerate_row_and_column_grids() {
+    prop_check("lorenzo roundtrip (1xN / Nx1)", 30, |g| {
+        let n = g.usize_in(1, 40);
+        let vals: Vec<QIndex> = (0..n).map(|_| g.usize_in(0, 500) as i64 - 250).collect();
+        for dims in [vec![1, n], vec![n, 1], vec![1, 1, n], vec![1, n, 1], vec![n, 1, 1]] {
+            let q = Grid::from_vec(vals.clone(), &dims);
+            let r = lorenzo::forward(&q);
+            assert_eq!(lorenzo::inverse(&r, q.shape).data, q.data, "dims={dims:?}");
+        }
+    });
+}
+
+#[test]
+fn lorenzo_forward_then_inverse_is_identity_even_with_extremes() {
+    // Alternating large-magnitude values stress the inclusion–exclusion
+    // corner sums without overflowing i64.
+    let vals: Vec<QIndex> = (0..27)
+        .map(|i| if i % 2 == 0 { 1 << 35 } else { -(1 << 35) })
+        .collect();
+    let q = Grid::from_vec(vals, &[3, 3, 3]);
+    let r = lorenzo::forward(&q);
+    assert_eq!(lorenzo::inverse(&r, q.shape).data, q.data);
+}

@@ -1,0 +1,143 @@
+//! Pool-vs-sequential bit-exactness and steady-state spawn behavior.
+//!
+//! The persistent pool must be a pure throughput knob: for every
+//! dataset, dimensionality (2D/3D, odd sizes, degenerate 1×N and
+//! single-line grids) and thread count (including heavy oversubscription
+//! — more threads than EDT lines), `mitigate` output must be
+//! bit-identical to `threads = 1`. And after warm-up, a threaded
+//! `mitigate()` call must spawn zero OS threads.
+//!
+//! NOTE: this binary deliberately creates no explicit `ThreadPool`s and
+//! never calls `scope_blocking`, so `pool::os_thread_spawns()` can only
+//! move when the global pool is first initialized — which the spawn
+//! test forces before taking its baseline.
+
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::{mitigate, MitigationConfig};
+use qai::quant::{quantize_grid, ErrorBound, QIndex, ResolvedBound};
+use qai::util::pool;
+
+/// Thread counts swept everywhere: sequential, typical, odd, and
+/// heavily oversubscribed (64 ≫ lines of any grid below).
+const THREADS: [usize; 6] = [1, 2, 3, 4, 7, 64];
+
+fn prepared(kind: DatasetKind, dims: &[usize], seed: u64) -> (Grid<f32>, Grid<QIndex>, ResolvedBound) {
+    let orig = generate(kind, dims, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    (dq, q, eb)
+}
+
+fn assert_thread_invariant(kind: DatasetKind, dims: &[usize], seed: u64) {
+    let (dq, q, eb) = prepared(kind, dims, seed);
+    let seq = mitigate(&dq, &q, eb, &MitigationConfig { threads: 1, ..Default::default() });
+    for threads in THREADS {
+        let par = mitigate(&dq, &q, eb, &MitigationConfig { threads, ..Default::default() });
+        assert_eq!(
+            par.data, seq.data,
+            "{kind:?} dims={dims:?} threads={threads}: pool output diverged from sequential"
+        );
+    }
+}
+
+#[test]
+fn matrix_2d_odd_sizes() {
+    assert_thread_invariant(DatasetKind::ClimateLike, &[33, 47], 11);
+    assert_thread_invariant(DatasetKind::CosmologyLike, &[29, 31], 12);
+}
+
+#[test]
+fn matrix_3d_odd_sizes() {
+    assert_thread_invariant(DatasetKind::MirandaLike, &[17, 19, 23], 13);
+    assert_thread_invariant(DatasetKind::CombustionLike, &[21, 13, 27], 14);
+}
+
+#[test]
+fn matrix_3d_cubes() {
+    assert_thread_invariant(DatasetKind::HurricaneLike, &[24, 24, 24], 15);
+    assert_thread_invariant(DatasetKind::TurbulenceLike, &[16, 16, 16], 16);
+}
+
+#[test]
+fn degenerate_single_line_1d() {
+    // One EDT line total: every thread count > 1 is oversubscription.
+    assert_thread_invariant(DatasetKind::ClimateLike, &[97], 17);
+}
+
+#[test]
+fn degenerate_1xn_and_nx1_grids() {
+    assert_thread_invariant(DatasetKind::ClimateLike, &[1, 64], 18);
+    assert_thread_invariant(DatasetKind::ClimateLike, &[64, 1], 19);
+    assert_thread_invariant(DatasetKind::MirandaLike, &[1, 1, 48], 20);
+    assert_thread_invariant(DatasetKind::MirandaLike, &[1, 32, 32], 21);
+}
+
+#[test]
+fn eta_and_taper_variants_also_thread_invariant() {
+    let (dq, q, eb) = prepared(DatasetKind::CombustionLike, &[18, 22, 14], 22);
+    for cfg_base in [
+        MitigationConfig { eta: 0.5, ..Default::default() },
+        MitigationConfig { taper_radius: Some(4.0), ..Default::default() },
+    ] {
+        let seq = mitigate(&dq, &q, eb, &MitigationConfig { threads: 1, ..cfg_base });
+        for threads in THREADS {
+            let par = mitigate(&dq, &q, eb, &MitigationConfig { threads, ..cfg_base });
+            assert_eq!(par.data, seq.data, "cfg={cfg_base:?} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn repeated_threaded_runs_are_identical() {
+    // Schedule nondeterminism must never leak into outputs.
+    let (dq, q, eb) = prepared(DatasetKind::TurbulenceLike, &[20, 20, 20], 23);
+    let cfg = MitigationConfig { threads: 7, ..Default::default() };
+    let first = mitigate(&dq, &q, eb, &cfg);
+    for _ in 0..5 {
+        assert_eq!(mitigate(&dq, &q, eb, &cfg).data, first.data);
+    }
+}
+
+#[test]
+fn warm_pool_mitigate_spawns_no_os_threads() {
+    // Force global-pool initialization and run one throwaway threaded
+    // region so the workers exist…
+    let (dq, q, eb) = prepared(DatasetKind::MirandaLike, &[24, 24, 24], 24);
+    let warm_cfg = MitigationConfig { threads: 4, ..Default::default() };
+    let _ = mitigate(&dq, &q, eb, &warm_cfg);
+
+    // …then every further threaded mitigation must spawn nothing.
+    let before = pool::os_thread_spawns();
+    for threads in [2usize, 4, 16, 64] {
+        let cfg = MitigationConfig { threads, ..Default::default() };
+        let _ = mitigate(&dq, &q, eb, &cfg);
+    }
+    assert_eq!(
+        pool::os_thread_spawns(),
+        before,
+        "warm mitigate() must perform zero std::thread::spawn calls"
+    );
+}
+
+#[test]
+fn block_parallel_codecs_thread_invariant() {
+    use qai::compressors::{sz3::Sz3Like, szp::SzpLike, Compressor};
+    let orig = generate(DatasetKind::CosmologyLike, &[24, 24, 24], 25);
+    let eb = ErrorBound::relative(1e-3).resolve(&orig.data);
+
+    let stream = SzpLike::default().compress(&orig, eb).unwrap();
+    let seq = SzpLike { threads: 1 }.decompress(&stream).unwrap();
+    for threads in THREADS {
+        let par = SzpLike { threads }.decompress(&stream).unwrap();
+        assert_eq!(par.quant_indices.data, seq.quant_indices.data, "szp threads={threads}");
+        assert_eq!(par.grid.data, seq.grid.data, "szp threads={threads}");
+    }
+
+    let stream = Sz3Like::default().compress(&orig, eb).unwrap();
+    let seq = Sz3Like { threads: 1 }.decompress(&stream).unwrap();
+    for threads in THREADS {
+        let par = Sz3Like { threads }.decompress(&stream).unwrap();
+        assert_eq!(par.data, seq.data, "sz3 threads={threads}");
+    }
+}

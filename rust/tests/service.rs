@@ -1,0 +1,140 @@
+//! `MitigationService::mitigate_batch` integration tests: exactness vs
+//! per-field calls, per-job error isolation, determinism of concurrent
+//! batches on the shared pool, and explicit-pool operation.
+
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::{mitigate_with_stats, Job, MitigationConfig, MitigationService};
+use qai::quant::{quantize_grid, ErrorBound};
+use qai::util::pool::ThreadPool;
+use std::sync::Arc;
+
+fn make_job(kind: DatasetKind, dims: &[usize], seed: u64, threads: usize) -> Job {
+    let orig = generate(kind, dims, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    Job { dq, q, eb, cfg: MitigationConfig { threads, ..Default::default() } }
+}
+
+fn mixed_batch() -> Vec<Job> {
+    vec![
+        make_job(DatasetKind::ClimateLike, &[48, 48], 1, 1),
+        make_job(DatasetKind::MirandaLike, &[20, 20, 20], 2, 2),
+        make_job(DatasetKind::CombustionLike, &[16, 24, 18], 3, 4),
+        make_job(DatasetKind::HurricaneLike, &[22, 22, 22], 4, 1),
+        make_job(DatasetKind::ClimateLike, &[33, 47], 5, 3),
+        make_job(DatasetKind::TurbulenceLike, &[14, 14, 14], 6, 2),
+    ]
+}
+
+#[test]
+fn batch_matches_per_field_mitigate_exactly() {
+    let jobs = mixed_batch();
+    let service = MitigationService::new();
+    let results = service.mitigate_batch(&jobs);
+    assert_eq!(results.len(), jobs.len());
+    for (i, (job, result)) in jobs.iter().zip(&results).enumerate() {
+        let (batch_out, batch_stats) = result.as_ref().expect("job must succeed");
+        let (solo_out, solo_stats) = mitigate_with_stats(&job.dq, &job.q, job.eb, &job.cfg).unwrap();
+        assert_eq!(batch_out.data, solo_out.data, "job {i}: output diverged");
+        assert_eq!(batch_stats.n_boundary1, solo_stats.n_boundary1, "job {i}");
+        assert_eq!(batch_stats.n_boundary2, solo_stats.n_boundary2, "job {i}");
+    }
+}
+
+#[test]
+fn per_job_errors_do_not_poison_the_batch() {
+    let mut jobs = mixed_batch();
+    // Poison job 2 with a shape mismatch between data and indices.
+    jobs[2].q = Grid::from_vec(vec![0i64; 8], &[2, 4]);
+    let service = MitigationService::new();
+    let results = service.mitigate_batch(&jobs);
+    for (i, result) in results.iter().enumerate() {
+        if i == 2 {
+            let msg = result.as_ref().unwrap_err().to_string();
+            assert!(msg.contains("shape"), "job 2 error should mention shape: {msg}");
+        } else {
+            let (out, _) = result.as_ref().expect("healthy jobs must still succeed");
+            let (solo, _) =
+                mitigate_with_stats(&jobs[i].dq, &jobs[i].q, jobs[i].eb, &jobs[i].cfg).unwrap();
+            assert_eq!(out.data, solo.data, "job {i} corrupted by sibling failure");
+        }
+    }
+}
+
+#[test]
+fn concurrent_batches_on_shared_pool_are_deterministic() {
+    let jobs = mixed_batch();
+    let reference: Vec<Vec<f32>> = MitigationService::new()
+        .mitigate_batch(&jobs)
+        .into_iter()
+        .map(|r| r.unwrap().0.data)
+        .collect();
+
+    // Several client threads hammer the same global pool with the same
+    // batch concurrently; every client must see identical outputs.
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let jobs = &jobs;
+                let reference = &reference;
+                s.spawn(move || {
+                    let service = MitigationService::new();
+                    for round in 0..3 {
+                        let got = service.mitigate_batch(jobs);
+                        for (i, r) in got.into_iter().enumerate() {
+                            let (out, _) = r.unwrap();
+                            assert_eq!(
+                                out.data, reference[i],
+                                "round {round} job {i}: nondeterministic batch output"
+                            );
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+#[test]
+fn explicit_pool_matches_global_pool() {
+    let jobs = mixed_batch();
+    let global_results = MitigationService::new().mitigate_batch(&jobs);
+    for lanes in [1usize, 2, 5] {
+        let service = MitigationService::with_pool(Arc::new(ThreadPool::new(lanes)));
+        let results = service.mitigate_batch(&jobs);
+        for (i, (a, b)) in global_results.iter().zip(&results).enumerate() {
+            assert_eq!(
+                a.as_ref().unwrap().0.data,
+                b.as_ref().unwrap().0.data,
+                "lanes={lanes} job {i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_of_one_and_empty_batch() {
+    let service = MitigationService::new();
+    assert!(service.mitigate_batch(&[]).is_empty());
+    let jobs = vec![make_job(DatasetKind::CosmologyLike, &[12, 12, 12], 7, 2)];
+    let results = service.mitigate_batch(&jobs);
+    assert_eq!(results.len(), 1);
+    assert!(results[0].is_ok());
+}
+
+#[test]
+fn homogeneous_job_is_identity_inside_a_batch() {
+    let dq = Grid::from_vec(vec![2.5f32; 125], &[5, 5, 5]);
+    let q = Grid::from_vec(vec![3i64; 125], &[5, 5, 5]);
+    let eb = ErrorBound::absolute(0.1).resolve(&dq.data);
+    let jobs = vec![Job::new(dq.clone(), q, eb), make_job(DatasetKind::ClimateLike, &[24, 24], 8, 2)];
+    let results = MitigationService::new().mitigate_batch(&jobs);
+    let (out, stats) = results[0].as_ref().unwrap();
+    assert_eq!(out.data, dq.data);
+    assert_eq!(stats.n_boundary1, 0);
+    assert!(results[1].is_ok());
+}

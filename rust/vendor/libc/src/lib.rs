@@ -1,0 +1,70 @@
+//! Minimal offline stand-in for the `libc` crate.
+//!
+//! The repo uses exactly one libc facility: `clock_gettime` with the
+//! per-thread / per-process CPU-time clocks, for the coordinator's
+//! compute attribution and the Fig. 8 inflation metric. This shim binds
+//! that single symbol directly against the platform C library.
+
+#![allow(non_camel_case_types)]
+
+/// Seconds field of [`timespec`].
+pub type time_t = i64;
+/// Nanoseconds field of [`timespec`].
+pub type c_long = i64;
+/// C `int`.
+pub type c_int = i32;
+/// Clock selector for [`clock_gettime`].
+pub type clockid_t = c_int;
+
+/// POSIX `struct timespec` (LP64 layout).
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct timespec {
+    /// Whole seconds.
+    pub tv_sec: time_t,
+    /// Nanoseconds in `[0, 1e9)`.
+    pub tv_nsec: c_long,
+}
+
+/// CPU time consumed by the whole process.
+#[cfg(target_os = "linux")]
+pub const CLOCK_PROCESS_CPUTIME_ID: clockid_t = 2;
+/// CPU time consumed by the calling thread.
+#[cfg(target_os = "linux")]
+pub const CLOCK_THREAD_CPUTIME_ID: clockid_t = 3;
+
+/// CPU time consumed by the whole process.
+#[cfg(target_os = "macos")]
+pub const CLOCK_PROCESS_CPUTIME_ID: clockid_t = 12;
+/// CPU time consumed by the calling thread.
+#[cfg(target_os = "macos")]
+pub const CLOCK_THREAD_CPUTIME_ID: clockid_t = 16;
+
+extern "C" {
+    /// POSIX `clock_gettime(2)`.
+    pub fn clock_gettime(clk_id: clockid_t, tp: *mut timespec) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_cpu_clock_ticks_forward() {
+        let read = || {
+            let mut ts = timespec { tv_sec: 0, tv_nsec: 0 };
+            let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+            assert_eq!(rc, 0);
+            ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+        };
+        let t0 = read();
+        // Burn a little CPU so the clock must advance.
+        let mut acc = 0u64;
+        for i in 0..200_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        let t1 = read();
+        assert!(t1 >= t0);
+    }
+}
