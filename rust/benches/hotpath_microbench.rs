@@ -17,7 +17,7 @@ use qai::mitigation::edt::edt;
 use qai::mitigation::interpolate::compensate;
 use qai::mitigation::pipeline::{mitigate_with_stats, MitigationConfig};
 use qai::mitigation::sign::propagate_signs;
-use qai::mitigation::{Job, MitigationService};
+use qai::mitigation::{Job, MitigationService, SubmitOptions};
 use qai::quant::{quantize_grid, ErrorBound};
 use qai::util::{par, pool};
 use std::hint::black_box;
@@ -182,6 +182,45 @@ fn main() {
         },
     );
     println!("   -> {:.1} MB/s aggregate", r.mbs(batch_bytes));
+
+    // Streaming admission: the same jobs submitted one by one through
+    // the bounded queue (every 4th interactive), waited on tickets —
+    // the per-job queue overhead vs the batch wrapper is the delta. A
+    // fresh service, so the stats below describe only this section.
+    println!("\n== streaming admission (queue + tickets) ==");
+    let service = MitigationService::new();
+    let r = bench_fn(
+        &format!("submit+wait stream ({batch_n} x {batch_side}^3)"),
+        warm,
+        samp,
+        || {
+            let tickets: Vec<_> = jobs
+                .iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let opts = if i % 4 == 0 {
+                        SubmitOptions::interactive()
+                    } else {
+                        SubmitOptions::bulk()
+                    };
+                    service.submit(j.clone(), opts).expect("admission")
+                })
+                .collect();
+            let reports: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+            assert!(reports.iter().all(|r| r.result.is_ok()));
+            reports
+        },
+    );
+    println!("   -> {:.1} MB/s aggregate", r.mbs(batch_bytes));
+    let st = service.stats();
+    println!(
+        "   -> stats: submitted {} (interactive {} / bulk {}), max queue depth {}, mean queue wait {:.2} ms",
+        st.submitted,
+        st.interactive_done,
+        st.bulk_done,
+        st.max_queue_depth,
+        st.total_queue_wait_s * 1e3 / st.submitted.max(1) as f64
+    );
 
     println!("\nhotpath_microbench: OK");
 }

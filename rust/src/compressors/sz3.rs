@@ -21,7 +21,7 @@ use crate::compressors::huffman;
 use crate::data::grid::Grid;
 use crate::quant::ResolvedBound;
 use crate::util::par::UnsafeSlice;
-use crate::util::pool;
+use crate::util::pool::PoolHandle;
 use anyhow::{Context, Result};
 
 /// Max interpolation levels: anchors every 2^10 = 1024 points.
@@ -137,8 +137,15 @@ impl Sz3Like {
         Ok(out)
     }
 
-    /// Decompress (within-level parallel over `self.threads`).
+    /// Decompress (within-level parallel over `self.threads`, regions
+    /// on the global pool).
     pub fn decompress(&self, buf: &[u8]) -> Result<Grid<f32>> {
+        self.decompress_on(PoolHandle::Global, buf)
+    }
+
+    /// [`Sz3Like::decompress`] with the within-level parallel decode
+    /// confined to `pool` instead of the global one.
+    pub fn decompress_on(&self, pool: PoolHandle<'_>, buf: &[u8]) -> Result<Grid<f32>> {
         let mut off = 0usize;
         let magic = bytes::get_u32(buf, &mut off)?;
         anyhow::ensure!(magic == MAGIC, "not an SZ3-like stream");
@@ -189,7 +196,7 @@ impl Sz3Like {
             {
                 let rs = UnsafeSlice::new(&mut recon);
                 let codes = &codes;
-                pool::for_range(count, self.threads, 1024, |t| {
+                pool.for_range(count, self.threads, 1024, |t| {
                     let i = h + t * s;
                     // SAFETY: this level writes only positions ≡ h (mod s),
                     // reads only positions ≡ 0 (mod s) — disjoint.

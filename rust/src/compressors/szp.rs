@@ -11,7 +11,7 @@ use crate::compressors::cusz::{read_header, write_header};
 use crate::compressors::{Compressor, Decompressed};
 use crate::data::grid::Grid;
 use crate::quant::{dequantize, quantize, QIndex, ResolvedBound};
-use crate::util::pool;
+use crate::util::pool::PoolHandle;
 use anyhow::Result;
 
 /// Elements per independent block.
@@ -31,6 +31,59 @@ pub struct SzpLike {
 impl Default for SzpLike {
     fn default() -> Self {
         SzpLike { threads: 1 }
+    }
+}
+
+impl SzpLike {
+    /// [`Compressor::decompress`] with the block-parallel decode
+    /// confined to `pool` instead of the global one.
+    pub fn decompress_on(&self, pool: PoolHandle<'_>, buf: &[u8]) -> Result<Decompressed> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not an SZp-like stream");
+        let (shape, eb) = read_header(buf, &mut off)?;
+        let n = shape.len();
+        let n_blocks = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(n_blocks == n.div_ceil(BLOCK).max(1), "block count mismatch");
+        let mut offsets = Vec::with_capacity(n_blocks + 1);
+        for _ in 0..=n_blocks {
+            offsets.push(bytes::get_u64(buf, &mut off)? as usize);
+        }
+        let payload = &buf[off..];
+        anyhow::ensure!(
+            *offsets.last().unwrap() <= payload.len(),
+            "payload shorter than offset table claims"
+        );
+
+        // Block-parallel decode into a preallocated index array.
+        let mut q = vec![0 as QIndex; n];
+        let errors = std::sync::Mutex::new(Vec::new());
+        {
+            let qslice = crate::util::par::UnsafeSlice::new(&mut q);
+            pool.for_range(n_blocks, self.threads, 1, |b| {
+                let start = b * BLOCK;
+                let len = (n - start).min(BLOCK);
+                let blob = &payload[offsets[b]..offsets[b + 1]];
+                match decode_block(blob, len) {
+                    Ok(vals) => {
+                        for (t, v) in vals.into_iter().enumerate() {
+                            // SAFETY: blocks cover disjoint index ranges.
+                            unsafe { qslice.write(start + t, v) };
+                        }
+                    }
+                    Err(e) => errors.lock().unwrap().push(format!("block {b}: {e:#}")),
+                }
+            });
+        }
+        let errs = errors.into_inner().unwrap();
+        anyhow::ensure!(errs.is_empty(), "decode failures: {}", errs.join("; "));
+
+        let data = dequantize(&q, eb);
+        let mut grid = Grid::from_vec(data, shape.user_dims());
+        grid.shape.ndim = shape.ndim;
+        let mut qg = Grid::from_vec(q, shape.user_dims());
+        qg.shape.ndim = shape.ndim;
+        Ok(Decompressed { grid, quant_indices: qg, bound: eb })
     }
 }
 
@@ -78,52 +131,7 @@ impl Compressor for SzpLike {
     }
 
     fn decompress(&self, buf: &[u8]) -> Result<Decompressed> {
-        let mut off = 0usize;
-        let magic = bytes::get_u32(buf, &mut off)?;
-        anyhow::ensure!(magic == MAGIC, "not an SZp-like stream");
-        let (shape, eb) = read_header(buf, &mut off)?;
-        let n = shape.len();
-        let n_blocks = bytes::get_u64(buf, &mut off)? as usize;
-        anyhow::ensure!(n_blocks == n.div_ceil(BLOCK).max(1), "block count mismatch");
-        let mut offsets = Vec::with_capacity(n_blocks + 1);
-        for _ in 0..=n_blocks {
-            offsets.push(bytes::get_u64(buf, &mut off)? as usize);
-        }
-        let payload = &buf[off..];
-        anyhow::ensure!(
-            *offsets.last().unwrap() <= payload.len(),
-            "payload shorter than offset table claims"
-        );
-
-        // Block-parallel decode into a preallocated index array.
-        let mut q = vec![0 as QIndex; n];
-        let errors = std::sync::Mutex::new(Vec::new());
-        {
-            let qslice = crate::util::par::UnsafeSlice::new(&mut q);
-            pool::for_range(n_blocks, self.threads, 1, |b| {
-                let start = b * BLOCK;
-                let len = (n - start).min(BLOCK);
-                let blob = &payload[offsets[b]..offsets[b + 1]];
-                match decode_block(blob, len) {
-                    Ok(vals) => {
-                        for (t, v) in vals.into_iter().enumerate() {
-                            // SAFETY: blocks cover disjoint index ranges.
-                            unsafe { qslice.write(start + t, v) };
-                        }
-                    }
-                    Err(e) => errors.lock().unwrap().push(format!("block {b}: {e:#}")),
-                }
-            });
-        }
-        let errs = errors.into_inner().unwrap();
-        anyhow::ensure!(errs.is_empty(), "decode failures: {}", errs.join("; "));
-
-        let data = dequantize(&q, eb);
-        let mut grid = Grid::from_vec(data, shape.user_dims());
-        grid.shape.ndim = shape.ndim;
-        let mut qg = Grid::from_vec(q, shape.user_dims());
-        qg.shape.ndim = shape.ndim;
-        Ok(Decompressed { grid, quant_indices: qg, bound: eb })
+        self.decompress_on(PoolHandle::Global, buf)
     }
 }
 

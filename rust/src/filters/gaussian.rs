@@ -3,6 +3,7 @@
 
 use crate::data::grid::Grid;
 use crate::filters::separable_filter;
+use crate::util::pool::PoolHandle;
 
 /// Discrete, normalized Gaussian taps for the given sigma and radius.
 pub fn gaussian_kernel(sigma: f64, radius: usize) -> Vec<f64> {
@@ -20,13 +21,24 @@ pub fn gaussian_kernel(sigma: f64, radius: usize) -> Vec<f64> {
 /// Separable Gaussian filter with the paper's 3×3(×3) window (radius 1).
 /// Sequential (the quality-baseline execution model).
 pub fn gaussian_filter(grid: &Grid<f32>, sigma: f64) -> Grid<f32> {
-    separable_filter(grid, &gaussian_kernel(sigma, 1), 1)
+    separable_filter(grid, &gaussian_kernel(sigma, 1), 1, PoolHandle::Global)
 }
 
 /// [`gaussian_filter`] with its convolution lines on the shared pool;
 /// output is bit-identical to the sequential path.
 pub fn gaussian_filter_threads(grid: &Grid<f32>, sigma: f64, threads: usize) -> Grid<f32> {
-    separable_filter(grid, &gaussian_kernel(sigma, 1), threads)
+    gaussian_filter_on(PoolHandle::Global, grid, sigma, threads)
+}
+
+/// [`gaussian_filter_threads`] with its parallel regions confined to
+/// `pool`.
+pub fn gaussian_filter_on(
+    pool: PoolHandle<'_>,
+    grid: &Grid<f32>,
+    sigma: f64,
+    threads: usize,
+) -> Grid<f32> {
+    separable_filter(grid, &gaussian_kernel(sigma, 1), threads, pool)
 }
 
 #[cfg(test)]

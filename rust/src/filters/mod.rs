@@ -17,13 +17,13 @@ pub mod gaussian;
 pub mod uniform;
 pub mod wiener;
 
-pub use gaussian::{gaussian_filter, gaussian_filter_threads};
-pub use uniform::{uniform_filter, uniform_filter_threads};
-pub use wiener::{wiener_filter, wiener_filter_threads};
+pub use gaussian::{gaussian_filter, gaussian_filter_on, gaussian_filter_threads};
+pub use uniform::{uniform_filter, uniform_filter_sized_on, uniform_filter_threads};
+pub use wiener::{wiener_filter, wiener_filter_sized_on, wiener_filter_threads};
 
 use crate::data::grid::{Grid, Shape};
 use crate::util::par::UnsafeSlice;
-use crate::util::pool;
+use crate::util::pool::PoolHandle;
 
 /// Reflected (mirror) index for out-of-range positions, scipy `reflect`
 /// convention: `(d c b a | a b c d | d c b a)`.
@@ -48,13 +48,19 @@ pub(crate) fn reflect(pos: isize, n: usize) -> usize {
 
 /// Apply a symmetric odd-length 1D kernel separably along every active
 /// axis (unit axes skipped). `kernel.len()` must be odd. `threads = 1`
-/// is the sequential baseline path (bit-identical to the pool path).
-pub(crate) fn separable_filter(grid: &Grid<f32>, kernel: &[f64], threads: usize) -> Grid<f32> {
+/// is the sequential baseline path (bit-identical to the pool path);
+/// parallel regions are confined to `pool`.
+pub(crate) fn separable_filter(
+    grid: &Grid<f32>,
+    kernel: &[f64],
+    threads: usize,
+    pool: PoolHandle<'_>,
+) -> Grid<f32> {
     assert!(kernel.len() % 2 == 1, "kernel must be odd-length");
     let shape = grid.shape;
     let mut cur: Vec<f64> = grid.data.iter().map(|&v| v as f64).collect();
     for axis in shape.active_axes().collect::<Vec<_>>() {
-        cur = convolve_axis(&cur, shape, axis, kernel, threads);
+        cur = convolve_axis(&cur, shape, axis, kernel, threads, pool);
     }
     let mut out = Grid::from_vec(cur.iter().map(|&v| v as f32).collect(), shape.user_dims());
     out.shape.ndim = shape.ndim;
@@ -64,7 +70,7 @@ pub(crate) fn separable_filter(grid: &Grid<f32>, kernel: &[f64], threads: usize)
 /// 1D convolution along `axis` with reflect boundaries.
 ///
 /// Lines perpendicular to `axis` are independent, so with `threads > 1`
-/// they run on the shared [`pool`] (batched, with one per-batch line
+/// they run on the selected `pool` (batched, with one per-batch line
 /// buffer); `threads = 1` stays a pool-free sequential loop. Each
 /// output value is computed by the same per-line expression regardless
 /// of schedule, so the result is bit-identical across thread counts.
@@ -74,6 +80,7 @@ pub(crate) fn convolve_axis(
     axis: usize,
     kernel: &[f64],
     threads: usize,
+    pool: PoolHandle<'_>,
 ) -> Vec<f64> {
     let dims = shape.dims;
     let stride = shape.strides()[axis];
@@ -87,7 +94,7 @@ pub(crate) fn convolve_axis(
     let n_lines = dims[oa] * dims[ob];
     let mut out = vec![0.0f64; data.len()];
     let o = UnsafeSlice::new(&mut out);
-    pool::for_batches(n_lines, threads, 8, |lines| {
+    pool.for_batches(n_lines, threads, 8, |lines| {
         let mut line = vec![0.0f64; n];
         for lid in lines {
             let a = lid / dims[ob];
@@ -136,7 +143,7 @@ mod tests {
     #[test]
     fn identity_kernel_is_noop() {
         let g = Grid::from_vec((0..24).map(|x| x as f32).collect(), &[4, 6]);
-        let out = separable_filter(&g, &[0.0, 1.0, 0.0], 1);
+        let out = separable_filter(&g, &[0.0, 1.0, 0.0], 1, PoolHandle::Global);
         assert_eq!(out.data, g.data);
     }
 
@@ -144,7 +151,7 @@ mod tests {
     fn mean_kernel_preserves_constant() {
         let g = Grid::from_vec(vec![5.0f32; 27], &[3, 3, 3]);
         let k = [1.0 / 3.0; 3];
-        let out = separable_filter(&g, &k, 1);
+        let out = separable_filter(&g, &k, 1, PoolHandle::Global);
         for v in out.data {
             assert!((v - 5.0).abs() < 1e-6);
         }
@@ -154,9 +161,9 @@ mod tests {
     fn threaded_filters_match_sequential_bitwise() {
         let g = Grid::from_vec((0..17 * 13).map(|x| (x as f32 * 0.37).sin()).collect(), &[17, 13]);
         let k = crate::filters::gaussian::gaussian_kernel(1.0, 1);
-        let seq = separable_filter(&g, &k, 1);
+        let seq = separable_filter(&g, &k, 1, PoolHandle::Global);
         for threads in [2usize, 4, 16] {
-            let par = separable_filter(&g, &k, threads);
+            let par = separable_filter(&g, &k, threads, PoolHandle::Global);
             assert_eq!(par.data, seq.data, "threads={threads}");
         }
         let seq = wiener_filter(&g, 0.05);

@@ -3,6 +3,7 @@
 
 use crate::data::grid::Grid;
 use crate::filters::separable_filter;
+use crate::util::pool::PoolHandle;
 
 /// Separable mean filter with window extent `size` (odd) per active axis.
 /// Sequential (the quality-baseline execution model).
@@ -13,9 +14,20 @@ pub fn uniform_filter_sized(grid: &Grid<f32>, size: usize) -> Grid<f32> {
 /// [`uniform_filter_sized`] with its convolution lines on the shared
 /// pool; output is bit-identical to the sequential path.
 pub fn uniform_filter_sized_threads(grid: &Grid<f32>, size: usize, threads: usize) -> Grid<f32> {
+    uniform_filter_sized_on(PoolHandle::Global, grid, size, threads)
+}
+
+/// [`uniform_filter_sized_threads`] with its parallel regions confined
+/// to `pool`.
+pub fn uniform_filter_sized_on(
+    pool: PoolHandle<'_>,
+    grid: &Grid<f32>,
+    size: usize,
+    threads: usize,
+) -> Grid<f32> {
     assert!(size % 2 == 1 && size >= 1);
     let k = vec![1.0 / size as f64; size];
-    separable_filter(grid, &k, threads)
+    separable_filter(grid, &k, threads, pool)
 }
 
 /// The paper's 3-wide uniform filter. Sequential.

@@ -14,6 +14,7 @@
 
 use crate::data::grid::Grid;
 use crate::filters::convolve_axis;
+use crate::util::pool::PoolHandle;
 
 /// Noise-power estimate the paper uses for quantization noise at
 /// absolute bound `eps_abs`.
@@ -35,6 +36,18 @@ pub fn wiener_filter_sized_threads(
     noise: f64,
     threads: usize,
 ) -> Grid<f32> {
+    wiener_filter_sized_on(PoolHandle::Global, grid, size, noise, threads)
+}
+
+/// [`wiener_filter_sized_threads`] with its parallel regions confined
+/// to `pool`.
+pub fn wiener_filter_sized_on(
+    pool: PoolHandle<'_>,
+    grid: &Grid<f32>,
+    size: usize,
+    noise: f64,
+    threads: usize,
+) -> Grid<f32> {
     assert!(size % 2 == 1 && size >= 1);
     assert!(noise >= 0.0);
     let shape = grid.shape;
@@ -46,8 +59,8 @@ pub fn wiener_filter_sized_threads(
     let mut mean = x.clone();
     let mut m2 = xx;
     for axis in shape.active_axes().collect::<Vec<_>>() {
-        mean = convolve_axis(&mean, shape, axis, &mean_k, threads);
-        m2 = convolve_axis(&m2, shape, axis, &mean_k, threads);
+        mean = convolve_axis(&mean, shape, axis, &mean_k, threads, pool);
+        m2 = convolve_axis(&m2, shape, axis, &mean_k, threads, pool);
     }
 
     let out: Vec<f32> = x

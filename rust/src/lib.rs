@@ -21,9 +21,11 @@
 //!   with feature transform (Alg. 1, Maurer et al.), sign propagation
 //!   (Alg. 3) and inverse-distance-weighted error compensation (Alg. 4),
 //!   sequential and multi-threaded, plus
-//!   [`mitigation::service::MitigationService`] — the batched serving
-//!   layer that runs many independent fields concurrently on the shared
-//!   pool (the `qai batch` CLI subcommand);
+//!   [`mitigation::service::MitigationService`] — the streaming serving
+//!   layer: a bounded admission queue ([`mitigation::admission`]) with
+//!   backpressure, priority classes, completion tickets, and deadline
+//!   accounting over the shared (or a confined) pool — the `qai batch`
+//!   and `qai serve` CLI subcommands;
 //! * [`filters`] — the Gaussian / uniform / Wiener baselines of §VIII;
 //! * [`metrics`] — SSIM (QCAT convention), PSNR, max-error, bit-rate;
 //! * [`coordinator`] — the distributed-memory runtime with the paper's
@@ -37,7 +39,18 @@
 //! * [`util`] — offline substrates, including [`util::pool`], the
 //!   persistent work-claiming thread-pool runtime all shared-memory
 //!   parallelism runs on (`threads == 1` stays a zero-overhead inline
-//!   path; warm parallel regions spawn no OS threads).
+//!   path; warm parallel regions spawn no OS threads), with
+//!   [`util::pool::PoolHandle`] selecting which pool a region opens on.
+//!
+//! ## Guides
+//!
+//! * `docs/ARCHITECTURE.md` — top-to-bottom tour (data → quant →
+//!   compressors → mitigation steps A–E → service/admission →
+//!   coordinator) with the data-flow diagram and module pointers.
+//! * `docs/SERVING.md` — operator guide for the admission queue:
+//!   capacity sizing, backpressure semantics, priority classes,
+//!   deadline stats, and CLI usage.
+//! * `ROADMAP.md` — north star and open items.
 //!
 //! ## Quickstart
 //!

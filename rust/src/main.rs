@@ -8,6 +8,9 @@
 //! * `demo`       — full synthetic round trip with quality metrics
 //! * `batch`      — many independent fields through the batched
 //!                  mitigation service on the shared thread pool
+//! * `serve`      — stream jobs through the bounded admission queue
+//!                  (priorities, backpressure, deadlines; see
+//!                  docs/SERVING.md)
 //! * `distributed`— run the MPI-analog coordinator on a synthetic field
 //! * `info`       — PJRT platform + artifact inventory
 //!
@@ -20,10 +23,15 @@ use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
 use qai::data::io;
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{bit_rate, max_rel_error, psnr, ssim};
-use qai::mitigation::{mitigate_with_stats, Backend, Job, MitigationConfig, MitigationService};
+use qai::mitigation::{
+    mitigate_with_stats, Backend, Job, MitigationConfig, MitigationService, ServiceConfig,
+    SubmitError, SubmitOptions,
+};
 use qai::quant::ErrorBound;
-use qai::util::pool;
+use qai::util::pool::{self, ThreadPool};
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -49,6 +57,7 @@ fn run(args: &Args) -> Result<()> {
         Some("decompress") => cmd_decompress(args),
         Some("demo") => cmd_demo(args),
         Some("batch") => cmd_batch(args),
+        Some("serve") => cmd_serve(args),
         Some("distributed") => cmd_distributed(args),
         Some("info") => cmd_info(args),
         Some("help") | None => {
@@ -80,6 +89,14 @@ SUBCOMMANDS
               (N independent fields through the batched mitigation
                service on the shared persistent thread pool;
                --threads is the per-job pipeline parallelism)
+  serve       --jobs N [--capacity C] [--interactive-every K]
+              [--deadline-ms D] [--lanes L] [--dataset ...] [--dims AxBxC]
+              [--rel 1e-2] [--eta 0.9] [--threads N] [--seed N]
+              (stream N fields through the bounded admission queue:
+               every K-th job is interactive-class, --capacity bounds
+               queued jobs and exercises backpressure, --deadline-ms
+               tags jobs with a completion budget, --lanes > 0 confines
+               the whole service to a private pool; see docs/SERVING.md)
   distributed [--dataset ...] [--dims AxBxC] [--rel 1e-2] [--ranks N]
               [--strategy embarrassing|exact|approximate] [--seed N]
   info        (PJRT platform + artifacts present)
@@ -316,6 +333,122 @@ fn cmd_batch(args: &Args) -> Result<()> {
             psnr_after / ok as f64
         );
     }
+    anyhow::ensure!(failures == 0, "{failures} job(s) failed");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs_n: usize = args.get_parse("jobs", 32)?;
+    anyhow::ensure!(jobs_n > 0, "--jobs must be positive");
+    let kind = dataset(&args.get_or("dataset", "miranda"))?;
+    let default_dims = if kind == DatasetKind::ClimateLike { "128x128" } else { "32x32x32" };
+    let dims = parse_dims(&args.get_or("dims", default_dims))?;
+    let bound = bound_from(args)?;
+    let seed: u64 = args.get_parse("seed", 42)?;
+    let capacity: usize = args.get_parse("capacity", 16)?;
+    let interactive_every: usize = args.get_parse("interactive-every", 4)?;
+    let deadline_ms: u64 = args.get_parse("deadline-ms", 0)?;
+    let lanes: usize = args.get_parse("lanes", 0)?;
+    let cfg = MitigationConfig {
+        eta: args.get_parse("eta", 0.9)?,
+        threads: args.get_parse("threads", 1)?,
+        ..Default::default()
+    };
+    args.finish()?;
+
+    let service = MitigationService::with_config(ServiceConfig {
+        pool: (lanes > 0).then(|| Arc::new(ThreadPool::new(lanes))),
+        capacity,
+        ..Default::default()
+    });
+
+    // Quantize-only ingest — `qai batch` exercises the codec path; this
+    // subcommand is about the admission queue itself.
+    let mut inputs = Vec::with_capacity(jobs_n);
+    for i in 0..jobs_n {
+        let orig = generate(kind, &dims, seed + i as u64);
+        let eb = bound.resolve(&orig.data);
+        let (q, dq) = qai::quant::quantize_grid(&orig, eb);
+        inputs.push(Job { dq, q, eb, cfg });
+    }
+    let n_elems: usize = inputs.iter().map(|j| j.dq.len()).sum();
+
+    // Stream the jobs in: try_submit first, and on backpressure fall
+    // back to a blocking submit (counting how often the queue pushed
+    // back).
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::with_capacity(jobs_n);
+    let mut backpressure_hits = 0usize;
+    for (i, job) in inputs.into_iter().enumerate() {
+        let mut opts = if interactive_every > 0 && i % interactive_every == 0 {
+            SubmitOptions::interactive()
+        } else {
+            SubmitOptions::bulk()
+        };
+        if deadline_ms > 0 {
+            opts = opts.with_deadline(Duration::from_millis(deadline_ms));
+        }
+        let ticket = match service.try_submit(job, opts) {
+            Ok(t) => t,
+            Err(e @ SubmitError::QueueFull(_)) => {
+                backpressure_hits += 1;
+                service
+                    .submit(e.into_job(), opts)
+                    .map_err(|e| anyhow::anyhow!("blocking submit failed: {e}"))?
+            }
+            Err(e) => anyhow::bail!("submission failed: {e}"),
+        };
+        tickets.push((i, ticket));
+    }
+
+    let mut failures = 0usize;
+    let mut missed = 0usize;
+    let mut max_wait = Duration::ZERO;
+    for (i, ticket) in tickets {
+        let report = ticket.wait();
+        max_wait = max_wait.max(report.queue_wait);
+        if report.deadline_missed {
+            missed += 1;
+        }
+        if let Err(e) = &report.result {
+            failures += 1;
+            eprintln!("job {i} (seq {}) failed: {e:#}", report.seq);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let st = service.stats();
+    println!(
+        "serve: {jobs_n} x {} {:?} jobs, capacity {capacity}, pool lanes = {}",
+        kind.paper_name(),
+        dims,
+        if lanes > 0 { lanes } else { pool::parallelism() }
+    );
+    println!(
+        "admitted {} (rejected-then-blocked {backpressure_hits}), completed {}, failed {}",
+        st.submitted, st.completed, st.failed
+    );
+    println!(
+        "priorities: interactive {} / bulk {}; max queue depth {}; max queue wait {:.1} ms",
+        st.interactive_done,
+        st.bulk_done,
+        st.max_queue_depth,
+        max_wait.as_secs_f64() * 1e3
+    );
+    if deadline_ms > 0 {
+        println!(
+            "deadlines: {} set, {} missed ({missed} observed on tickets)",
+            st.deadlines_set, st.deadlines_missed
+        );
+    }
+    println!(
+        "throughput: {:.1} fields/s, {:.1} MB/s aggregate ({:.3}s wall); mean queue wait {:.1} ms, mean exec {:.1} ms",
+        jobs_n as f64 / wall.max(1e-12),
+        (n_elems * 4) as f64 / 1e6 / wall.max(1e-12),
+        wall,
+        st.total_queue_wait_s * 1e3 / jobs_n as f64,
+        st.total_exec_s * 1e3 / jobs_n as f64
+    );
     anyhow::ensure!(failures == 0, "{failures} job(s) failed");
     Ok(())
 }

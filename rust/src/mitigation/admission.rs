@@ -1,0 +1,714 @@
+//! Streaming admission for the mitigation service: a bounded two-class
+//! submission queue with explicit backpressure, per-job completion
+//! tickets, and deadline accounting.
+//!
+//! The ROADMAP's production scenario is a steady stream of independent
+//! fields arriving from many users, not pre-assembled slices. This
+//! module replaces the slice-in/vec-out batch front door with the
+//! serving-layer primitives that scenario needs:
+//!
+//! * **Bounded queue + backpressure** — submissions beyond the
+//!   configured capacity are rejected
+//!   ([`SubmitError::QueueFull`], via
+//!   [`try_submit`](crate::mitigation::service::MitigationService::try_submit))
+//!   or block until space frees
+//!   ([`submit`](crate::mitigation::service::MitigationService::submit),
+//!   optionally bounded by a timeout). An unbounded queue would just
+//!   move the overload into memory; a bounded one pushes it back to
+//!   the caller, where load shedding and retry policy live.
+//! * **Priority classes** — [`Priority::Interactive`] jobs are always
+//!   dequeued before queued [`Priority::Bulk`] jobs, so latency-bound
+//!   traffic overtakes backfill under contention.
+//! * **Completion tickets** — every accepted job yields a [`JobTicket`]
+//!   the caller can block on, poll, or wait on with a timeout; the
+//!   resolved [`JobReport`] carries the pipeline result plus queue-wait
+//!   / execution durations and the deadline verdict.
+//! * **Deadline accounting** — a submission may carry a completion
+//!   budget; jobs that overrun are flagged in their report and counted
+//!   in the [`ServiceStats`] snapshot.
+//!
+//! A single scheduler thread (spawned lazily on first submission,
+//! counted by [`crate::util::pool::os_thread_spawns`]) drains the
+//! queue: each dequeued job is handed to the service's
+//! [`ThreadPool`](crate::util::pool::ThreadPool) as a detached task.
+//! Up to `lanes` jobs are admitted in flight — `workers` (= lanes − 1)
+//! execute concurrently and one more sits staged so a freed worker
+//! starts immediately; the scheduler itself never executes jobs
+//! (except on a single-lane pool, inline in admission order), keeping
+//! admission of later interactive jobs responsive. Size the pool one
+//! lane larger if you need exactly `n` jobs truly concurrent. A
+//! job's *internal* steps A–E run on the **same pool**
+//! through the [`PoolHandle`](crate::util::pool::PoolHandle) plumbing —
+//! a service built with
+//! [`with_pool`](crate::mitigation::service::MitigationService::with_pool)
+//! confines everything it does, cross-job and intra-job, to that pool
+//! (the confinement tests prove the global pool is never touched). On
+//! a single-lane pool the scheduler runs jobs inline, strictly in
+//! admission order.
+//!
+//! Execution remains bit-exact: the pipeline is schedule-independent,
+//! so a job's output through the queue is identical to a standalone
+//! [`mitigate_with_stats`](crate::mitigation::pipeline::mitigate_with_stats)
+//! call, whatever the pool, priority, or contention.
+//!
+//! # Examples
+//!
+//! ```
+//! use qai::data::synthetic::{generate, DatasetKind};
+//! use qai::mitigation::admission::SubmitOptions;
+//! use qai::mitigation::{Job, MitigationService};
+//! use qai::quant::{quantize_grid, ErrorBound};
+//! use std::time::Duration;
+//!
+//! let orig = generate(DatasetKind::ClimateLike, &[16, 16], 1);
+//! let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+//! let (q, dq) = quantize_grid(&orig, eb);
+//!
+//! let service = MitigationService::new();
+//! let opts = SubmitOptions::interactive().with_deadline(Duration::from_secs(60));
+//! let ticket = service.submit(Job::new(dq, q, eb), opts).unwrap();
+//! let report = ticket.wait();
+//! assert!(report.result.is_ok());
+//! assert!(!report.deadline_missed);
+//! assert_eq!(service.stats().completed, 1);
+//! ```
+
+#![deny(missing_docs)]
+
+use crate::mitigation::pipeline::mitigate_with_stats_on;
+use crate::mitigation::service::{Job, JobResult};
+use crate::util::pool::{self, PoolHandle, ThreadPool};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Scheduling class of a submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive: dequeued before any queued [`Priority::Bulk`]
+    /// job, whatever the arrival order.
+    Interactive,
+    /// Throughput traffic (the default): drained in FIFO order once no
+    /// interactive job is waiting.
+    #[default]
+    Bulk,
+}
+
+/// Per-submission options: scheduling class, completion deadline, and
+/// (for blocking submits) how long to wait for queue space.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Scheduling class.
+    pub priority: Priority,
+    /// Completion budget measured from submission. A job whose
+    /// queue-wait plus execution exceeds it still completes, but is
+    /// flagged in its [`JobReport`] and counted in
+    /// [`ServiceStats::deadlines_missed`].
+    pub deadline: Option<Duration>,
+    /// Upper bound on how long a blocking submit may wait for queue
+    /// space (`None` = wait indefinitely). Ignored by `try_submit`.
+    pub timeout: Option<Duration>,
+}
+
+impl SubmitOptions {
+    /// Interactive-class submission with no deadline or timeout.
+    pub fn interactive() -> Self {
+        SubmitOptions { priority: Priority::Interactive, ..Default::default() }
+    }
+
+    /// Bulk-class submission with no deadline or timeout (the default).
+    pub fn bulk() -> Self {
+        SubmitOptions::default()
+    }
+
+    /// Attach a completion deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Bound a blocking submit's wait for queue space.
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = Some(timeout);
+        self
+    }
+}
+
+/// Why a submission was not admitted. Every variant hands the job back
+/// so the caller can shed, retry, or reroute it.
+pub enum SubmitError {
+    /// The bounded queue is at capacity (`try_submit` only; a blocking
+    /// submit waits instead).
+    QueueFull(Job),
+    /// A blocking submit exhausted its [`SubmitOptions::timeout`]
+    /// without space freeing.
+    Timeout(Job),
+    /// The service is shutting down and accepts nothing.
+    Shutdown(Job),
+}
+
+impl SubmitError {
+    /// Recover the rejected job for a retry.
+    pub fn into_job(self) -> Job {
+        match self {
+            SubmitError::QueueFull(job)
+            | SubmitError::Timeout(job)
+            | SubmitError::Shutdown(job) => job,
+        }
+    }
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Deliberately compact: the carried job embeds full grids.
+        f.write_str(match self {
+            SubmitError::QueueFull(_) => "QueueFull(..)",
+            SubmitError::Timeout(_) => "Timeout(..)",
+            SubmitError::Shutdown(_) => "Shutdown(..)",
+        })
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SubmitError::QueueFull(_) => "admission queue is full",
+            SubmitError::Timeout(_) => "timed out waiting for admission-queue space",
+            SubmitError::Shutdown(_) => "mitigation service is shutting down",
+        })
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Completion record of one admitted job.
+#[derive(Debug)]
+pub struct JobReport {
+    /// Pipeline outcome: the compensated grid plus per-step stats, or
+    /// the error (shape mismatch, pipeline failure, captured panic, or
+    /// cancellation at shutdown).
+    pub result: JobResult,
+    /// Global dequeue sequence number of this service, assigned when
+    /// the scheduler pops the job — queued interactive jobs therefore
+    /// always carry smaller numbers than the bulk jobs they overtook.
+    /// `u64::MAX` for jobs cancelled before ever being scheduled.
+    pub seq: u64,
+    /// Class the job was submitted with.
+    pub priority: Priority,
+    /// Submission → start of pipeline execution.
+    pub queue_wait: Duration,
+    /// Pipeline execution duration.
+    pub exec: Duration,
+    /// Deadline the job was submitted with, if any.
+    pub deadline: Option<Duration>,
+    /// True iff a deadline was set and `queue_wait + exec` exceeded it.
+    pub deadline_missed: bool,
+}
+
+/// Completion handle for one admitted job.
+///
+/// The ticket resolves exactly once — when the job completes, fails, or
+/// is cancelled by service shutdown — so [`JobTicket::wait`] always
+/// returns eventually on a *draining* service. On a paused service
+/// nothing runs: `wait` blocks until some other thread resumes the
+/// service (or drops it, which cancels the job).
+pub struct JobTicket {
+    state: Arc<TicketState>,
+}
+
+struct TicketState {
+    slot: Mutex<Option<JobReport>>,
+    done: Condvar,
+}
+
+impl JobTicket {
+    fn new() -> (JobTicket, Arc<TicketState>) {
+        let state = Arc::new(TicketState { slot: Mutex::new(None), done: Condvar::new() });
+        (JobTicket { state: state.clone() }, state)
+    }
+
+    /// Block until the job's report is available.
+    pub fn wait(self) -> JobReport {
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(report) = slot.take() {
+                return report;
+            }
+            slot = self.state.done.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: the report if the job finished, the ticket
+    /// back otherwise.
+    pub fn try_wait(self) -> Result<JobReport, JobTicket> {
+        let taken = self.state.slot.lock().unwrap().take();
+        match taken {
+            Some(report) => Ok(report),
+            None => Err(self),
+        }
+    }
+
+    /// [`JobTicket::wait`] bounded by `timeout`; the ticket comes back
+    /// if the job is still running.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<JobReport, JobTicket> {
+        let give_up = Instant::now() + timeout;
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(report) = slot.take() {
+                return Ok(report);
+            }
+            let now = Instant::now();
+            if now >= give_up {
+                drop(slot);
+                return Err(self);
+            }
+            slot = self.state.done.wait_timeout(slot, give_up - now).unwrap().0;
+        }
+    }
+
+    /// True once the report is ready (a subsequent `wait` returns
+    /// immediately).
+    pub fn is_complete(&self) -> bool {
+        self.state.slot.lock().unwrap().is_some()
+    }
+}
+
+impl std::fmt::Debug for JobTicket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobTicket").field("complete", &self.is_complete()).finish()
+    }
+}
+
+/// Point-in-time snapshot of a service's admission counters.
+///
+/// All `u64` fields are monotonic totals since the service was built;
+/// `queue_depth` / `running` are instantaneous gauges. Counter values
+/// are deterministic functions of the submission history (timings are
+/// not), which the stats-determinism tests rely on.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServiceStats {
+    /// Jobs accepted into the queue (rejections not included).
+    pub submitted: u64,
+    /// `try_submit` calls rejected because the queue was at capacity.
+    pub rejected_full: u64,
+    /// Blocking submits that gave up after their timeout.
+    pub submit_timeouts: u64,
+    /// Jobs whose pipeline ran to success.
+    pub completed: u64,
+    /// Jobs whose pipeline returned an error or panicked.
+    pub failed: u64,
+    /// Jobs cancelled at shutdown before they ever ran.
+    pub cancelled: u64,
+    /// Finished (completed or failed) interactive-class jobs.
+    pub interactive_done: u64,
+    /// Finished (completed or failed) bulk-class jobs.
+    pub bulk_done: u64,
+    /// Jobs submitted with a deadline.
+    pub deadlines_set: u64,
+    /// Jobs that finished after their deadline had already passed.
+    pub deadlines_missed: u64,
+    /// High-water mark of the queued-job count.
+    pub max_queue_depth: usize,
+    /// Jobs waiting in the queue right now.
+    pub queue_depth: usize,
+    /// Jobs executing right now.
+    pub running: usize,
+    /// Total seconds finished jobs spent waiting in the queue.
+    pub total_queue_wait_s: f64,
+    /// Total seconds finished jobs spent executing.
+    pub total_exec_s: f64,
+}
+
+/// One queued submission.
+struct Pending {
+    job: Job,
+    priority: Priority,
+    deadline: Option<Duration>,
+    enqueued: Instant,
+    ticket: Arc<TicketState>,
+}
+
+struct QueueInner {
+    interactive: VecDeque<Pending>,
+    bulk: VecDeque<Pending>,
+    /// Jobs dispatched but not yet finished.
+    running: usize,
+    paused: bool,
+    shutdown: bool,
+}
+
+impl QueueInner {
+    fn depth(&self) -> usize {
+        self.interactive.len() + self.bulk.len()
+    }
+
+    fn pop(&mut self) -> Option<Pending> {
+        self.interactive.pop_front().or_else(|| self.bulk.pop_front())
+    }
+}
+
+/// State shared between the service handle, the scheduler thread, and
+/// in-flight job tasks. Lock order: `queue` before `stats`, never the
+/// reverse.
+struct Shared {
+    queue: Mutex<QueueInner>,
+    /// Wakes the scheduler: job arrival, unpause, slot freed, shutdown.
+    work: Condvar,
+    /// Wakes blocked submitters: job dequeued, shutdown.
+    space: Condvar,
+    /// Monotonic counters; the two gauge fields inside stay zero and
+    /// are overwritten at snapshot time.
+    stats: Mutex<ServiceStats>,
+    capacity: usize,
+    next_seq: AtomicU64,
+    /// Explicit pool, or `None` for the global one (resolved lazily so
+    /// an idle service never forces global-pool creation).
+    pool: Option<Arc<ThreadPool>>,
+}
+
+impl Shared {
+    /// The pool this service runs everything on.
+    fn thread_pool(&self) -> &ThreadPool {
+        self.pool.as_deref().unwrap_or_else(pool::global)
+    }
+}
+
+/// The admission queue plus its scheduler thread. Owned by the
+/// `MitigationService`; dropping it cancels queued jobs (their tickets
+/// resolve with an error), waits for in-flight jobs to finish, and
+/// joins the scheduler.
+pub(crate) struct Admission {
+    shared: Arc<Shared>,
+    scheduler: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Admission {
+    pub(crate) fn new(pool: Option<Arc<ThreadPool>>, capacity: usize, start_paused: bool) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueInner {
+                interactive: VecDeque::new(),
+                bulk: VecDeque::new(),
+                running: 0,
+                paused: start_paused,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            stats: Mutex::new(ServiceStats::default()),
+            capacity: capacity.max(1),
+            next_seq: AtomicU64::new(0),
+            pool,
+        });
+        Admission { shared, scheduler: Mutex::new(None) }
+    }
+
+    /// Spawn the scheduler thread on first use.
+    fn ensure_scheduler(&self) {
+        let mut slot = self.scheduler.lock().unwrap();
+        if slot.is_none() {
+            pool::note_os_thread_spawn();
+            let shared = self.shared.clone();
+            let handle = std::thread::Builder::new()
+                .name("qai-admission".into())
+                .spawn(move || scheduler_loop(shared))
+                .expect("spawn admission scheduler");
+            *slot = Some(handle);
+        }
+    }
+
+    /// Append an accepted job to its class queue and bump counters.
+    /// Caller holds the queue lock and has verified there is space.
+    fn enqueue(&self, q: &mut QueueInner, job: Job, opts: SubmitOptions) -> JobTicket {
+        let (ticket, state) = JobTicket::new();
+        let pending = Pending {
+            job,
+            priority: opts.priority,
+            deadline: opts.deadline,
+            enqueued: Instant::now(),
+            ticket: state,
+        };
+        match opts.priority {
+            Priority::Interactive => q.interactive.push_back(pending),
+            Priority::Bulk => q.bulk.push_back(pending),
+        }
+        let depth = q.depth();
+        let mut st = self.shared.stats.lock().unwrap();
+        st.submitted += 1;
+        if opts.deadline.is_some() {
+            st.deadlines_set += 1;
+        }
+        if depth > st.max_queue_depth {
+            st.max_queue_depth = depth;
+        }
+        ticket
+    }
+
+    pub(crate) fn try_submit(
+        &self,
+        job: Job,
+        opts: SubmitOptions,
+    ) -> Result<JobTicket, SubmitError> {
+        let ticket = {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                return Err(SubmitError::Shutdown(job));
+            }
+            if q.depth() >= self.shared.capacity {
+                drop(q);
+                self.shared.stats.lock().unwrap().rejected_full += 1;
+                return Err(SubmitError::QueueFull(job));
+            }
+            self.enqueue(&mut q, job, opts)
+        };
+        self.shared.work.notify_all();
+        self.ensure_scheduler();
+        Ok(ticket)
+    }
+
+    pub(crate) fn submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
+        let give_up = opts.timeout.map(|t| Instant::now() + t);
+        let ticket = {
+            let mut q = self.shared.queue.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    return Err(SubmitError::Shutdown(job));
+                }
+                if q.depth() < self.shared.capacity {
+                    break;
+                }
+                match give_up {
+                    None => q = self.shared.space.wait(q).unwrap(),
+                    Some(deadline) => {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            drop(q);
+                            self.shared.stats.lock().unwrap().submit_timeouts += 1;
+                            return Err(SubmitError::Timeout(job));
+                        }
+                        q = self.shared.space.wait_timeout(q, deadline - now).unwrap().0;
+                    }
+                }
+            }
+            self.enqueue(&mut q, job, opts)
+        };
+        self.shared.work.notify_all();
+        self.ensure_scheduler();
+        Ok(ticket)
+    }
+
+    pub(crate) fn pause(&self) {
+        self.shared.queue.lock().unwrap().paused = true;
+    }
+
+    pub(crate) fn resume(&self) {
+        self.shared.queue.lock().unwrap().paused = false;
+        self.shared.work.notify_all();
+    }
+
+    pub(crate) fn stats(&self) -> ServiceStats {
+        // Gauges first (queue → stats lock order); the two reads are
+        // not atomic together, which a snapshot can tolerate.
+        let (queue_depth, running) = {
+            let q = self.shared.queue.lock().unwrap();
+            (q.depth(), q.running)
+        };
+        let mut snapshot = *self.shared.stats.lock().unwrap();
+        snapshot.queue_depth = queue_depth;
+        snapshot.running = running;
+        snapshot
+    }
+}
+
+impl Drop for Admission {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        self.shared.space.notify_all();
+        if let Some(handle) = self.scheduler.lock().unwrap().take() {
+            let _ = handle.join();
+        }
+        // The scheduler has seen every in-flight job finish, but the
+        // finished task closures may still hold clones of `shared` for
+        // a few more instructions (and, through it, the pool Arc).
+        // Wait for those to release so the final drop of `Shared` —
+        // which may drop the pool and join its workers — runs on this
+        // thread, never on a pool worker joining itself. No new clones
+        // can appear: the scheduler has exited and submissions are
+        // rejected with `Shutdown`.
+        while Arc::strong_count(&self.shared) > 1 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+/// Drain loop: pop the highest-priority job whenever a concurrency slot
+/// is free and hand it to the pool as a detached task. On shutdown,
+/// cancel everything still queued and wait for in-flight jobs so no
+/// ticket is ever left unresolved.
+fn scheduler_loop(shared: Arc<Shared>) {
+    loop {
+        let popped = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    break None;
+                }
+                if !q.paused && q.depth() > 0 {
+                    // Resolved lazily: an explicit-pool service must
+                    // never touch the global pool, and a global-pool
+                    // service only once a job actually exists.
+                    //
+                    // Admit up to `lanes` jobs: `workers` can execute
+                    // at once, and one more sits staged in the pool
+                    // queue so a freed worker starts its next job
+                    // without a scheduler round-trip. The scheduler
+                    // itself never executes (except on a single-lane
+                    // pool) — executing here would stall admission of
+                    // later, possibly interactive, jobs.
+                    if q.running < shared.thread_pool().lanes() {
+                        q.running += 1;
+                        break q.pop();
+                    }
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        let Some(pending) = popped else { break };
+        shared.space.notify_all();
+        let seq = shared.next_seq.fetch_add(1, Ordering::SeqCst);
+        dispatch_job(&shared, pending, seq);
+    }
+
+    cancel_queued(&shared);
+    let mut q = shared.queue.lock().unwrap();
+    while q.running > 0 {
+        q = shared.work.wait(q).unwrap();
+    }
+}
+
+/// Run `pending` as a detached pool task, or inline on a single-lane
+/// pool (where a detached task would never be picked up; inline
+/// execution there serializes jobs in admission order, which the
+/// deterministic-ordering tests rely on).
+fn dispatch_job(shared: &Arc<Shared>, pending: Pending, seq: u64) {
+    let task_shared = shared.clone();
+    let task = move || run_job(task_shared, pending, seq);
+    let tp = shared.thread_pool();
+    if tp.workers() == 0 {
+        task();
+    } else {
+        tp.submit_task(Box::new(task));
+    }
+}
+
+/// Execute one job's pipeline on the service pool, resolve its ticket,
+/// account stats, and free the concurrency slot.
+fn run_job(shared: Arc<Shared>, pending: Pending, seq: u64) {
+    let start = Instant::now();
+    let queue_wait = start.duration_since(pending.enqueued);
+    let handle = PoolHandle::Explicit(shared.thread_pool());
+
+    // Error text stays slot-agnostic: the seq lives in the JobReport,
+    // and the batch wrapper re-labels errors with its own slot index.
+    let job = &pending.job;
+    let result: JobResult = if job.dq.shape != job.q.shape {
+        Err(anyhow::anyhow!(
+            "data shape {:?} != index shape {:?}",
+            job.dq.shape.dims,
+            job.q.shape.dims
+        ))
+    } else {
+        // A panic below (defensive: the pipeline asserts on internal
+        // invariants) must not take down the worker or sibling jobs.
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            mitigate_with_stats_on(handle, &job.dq, &job.q, job.eb, &job.cfg)
+        })) {
+            Ok(result) => result,
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                Err(anyhow::anyhow!("pipeline panicked: {msg}"))
+            }
+        }
+    };
+
+    let exec = start.elapsed();
+    let deadline_missed = pending.deadline.is_some_and(|d| queue_wait + exec > d);
+    {
+        let mut st = shared.stats.lock().unwrap();
+        if result.is_ok() {
+            st.completed += 1;
+        } else {
+            st.failed += 1;
+        }
+        match pending.priority {
+            Priority::Interactive => st.interactive_done += 1,
+            Priority::Bulk => st.bulk_done += 1,
+        }
+        if deadline_missed {
+            st.deadlines_missed += 1;
+        }
+        st.total_queue_wait_s += queue_wait.as_secs_f64();
+        st.total_exec_s += exec.as_secs_f64();
+    }
+    fulfill(
+        &pending.ticket,
+        JobReport {
+            result,
+            seq,
+            priority: pending.priority,
+            queue_wait,
+            exec,
+            deadline: pending.deadline,
+            deadline_missed,
+        },
+    );
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.running -= 1;
+    }
+    shared.work.notify_all();
+}
+
+/// Resolve every still-queued ticket with a shutdown error.
+fn cancel_queued(shared: &Shared) {
+    let drained: Vec<Pending> = {
+        let mut q = shared.queue.lock().unwrap();
+        let mut all: Vec<Pending> = q.interactive.drain(..).collect();
+        all.extend(q.bulk.drain(..));
+        all
+    };
+    if drained.is_empty() {
+        return;
+    }
+    shared.stats.lock().unwrap().cancelled += drained.len() as u64;
+    for p in drained {
+        let queue_wait = p.enqueued.elapsed();
+        fulfill(
+            &p.ticket,
+            JobReport {
+                result: Err(anyhow::anyhow!("mitigation service shut down before the job ran")),
+                seq: u64::MAX,
+                priority: p.priority,
+                queue_wait,
+                exec: Duration::ZERO,
+                deadline: p.deadline,
+                deadline_missed: p.deadline.is_some_and(|d| queue_wait > d),
+            },
+        );
+    }
+    shared.space.notify_all();
+}
+
+fn fulfill(ticket: &Arc<TicketState>, report: JobReport) {
+    let mut slot = ticket.slot.lock().unwrap();
+    *slot = Some(report);
+    ticket.done.notify_all();
+}

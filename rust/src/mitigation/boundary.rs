@@ -20,7 +20,7 @@
 use crate::data::grid::Grid;
 use crate::quant::QIndex;
 use crate::util::par::UnsafeSlice;
-use crate::util::pool;
+use crate::util::pool::PoolHandle;
 
 /// Output of step A.
 pub struct BoundaryResult {
@@ -30,8 +30,18 @@ pub struct BoundaryResult {
     pub sign: Grid<i8>,
 }
 
-/// Detect quantization boundaries and their error signs.
+/// Detect quantization boundaries and their error signs (parallel
+/// regions on the global pool).
 pub fn boundary_and_sign(q: &Grid<QIndex>, threads: usize) -> BoundaryResult {
+    boundary_and_sign_on(PoolHandle::Global, q, threads)
+}
+
+/// [`boundary_and_sign`] with its parallel regions confined to `pool`.
+pub fn boundary_and_sign_on(
+    pool: PoolHandle<'_>,
+    q: &Grid<QIndex>,
+    threads: usize,
+) -> BoundaryResult {
     let shape = q.shape;
     let mut mask = Grid::<bool>::like(q);
     let mut sign = Grid::<i8>::like(q);
@@ -49,7 +59,7 @@ pub fn boundary_and_sign(q: &Grid<QIndex>, threads: usize) -> BoundaryResult {
     // Parallelize over the slowest active axis' slices.
     let par_axis = active[0];
     let n_slices = dims[par_axis];
-    pool::for_range(n_slices, threads, 1, |slice| {
+    pool.for_range(n_slices, threads, 1, |slice| {
         // Interior test per active axis; the parallel axis' coordinate is
         // fixed to `slice`.
         let mut lo = [0usize; 3];
@@ -104,6 +114,15 @@ pub fn boundary_and_sign(q: &Grid<QIndex>, threads: usize) -> BoundaryResult {
 /// Generic neighbor-differs boundary mask (used by step C to derive the
 /// sign-flipping boundary `B₂` from the propagated sign map).
 pub fn boundary_mask<T: PartialEq + Copy + Send + Sync>(g: &Grid<T>, threads: usize) -> Grid<bool> {
+    boundary_mask_on(PoolHandle::Global, g, threads)
+}
+
+/// [`boundary_mask`] with its parallel regions confined to `pool`.
+pub fn boundary_mask_on<T: PartialEq + Copy + Send + Sync>(
+    pool: PoolHandle<'_>,
+    g: &Grid<T>,
+    threads: usize,
+) -> Grid<bool> {
     let shape = g.shape;
     let mut mask = Grid::<bool>::like(g);
     let dims = shape.dims;
@@ -115,7 +134,7 @@ pub fn boundary_mask<T: PartialEq + Copy + Send + Sync>(g: &Grid<T>, threads: us
     let data = &g.data;
     let ms = UnsafeSlice::new(&mut mask.data);
     let par_axis = active[0];
-    pool::for_range(dims[par_axis], threads, 1, |slice| {
+    pool.for_range(dims[par_axis], threads, 1, |slice| {
         let mut lo = [0usize; 3];
         let mut hi = dims;
         for &a in &active {

@@ -16,6 +16,7 @@
 
 use crate::data::grid::{Grid, Shape};
 use crate::util::par::UnsafeSlice;
+use crate::util::pool::PoolHandle;
 
 /// "Infinite" squared distance (no boundary found yet); chosen so that
 /// `INF + coordinate²` cannot overflow i64.
@@ -52,8 +53,19 @@ impl EdtResult {
 
 /// Compute the exact EDT of `mask` (true = boundary/feature point).
 /// `with_features` additionally computes the nearest-feature index map.
-/// `threads` parallelizes the independent lines of each pass.
+/// `threads` parallelizes the independent lines of each pass (regions
+/// on the global pool).
 pub fn edt(mask: &Grid<bool>, with_features: bool, threads: usize) -> EdtResult {
+    edt_on(PoolHandle::Global, mask, with_features, threads)
+}
+
+/// [`edt`] with its parallel line passes confined to `pool`.
+pub fn edt_on(
+    pool: PoolHandle<'_>,
+    mask: &Grid<bool>,
+    with_features: bool,
+    threads: usize,
+) -> EdtResult {
     let shape = mask.shape;
     let n = shape.len();
     let mut dist_sq = vec![INF; n];
@@ -76,11 +88,11 @@ pub fn edt(mask: &Grid<bool>, with_features: bool, threads: usize) -> EdtResult 
     }
 
     // First active axis: 1D two-sweep propagation per line.
-    first_pass(&mut dist_sq, &mut nearest, shape, axes[0], with_features, threads);
+    first_pass(pool, &mut dist_sq, &mut nearest, shape, axes[0], with_features, threads);
 
     // Remaining axes: Voronoi construction/query per line.
     for &axis in &axes[1..] {
-        voronoi_pass(&mut dist_sq, &mut nearest, shape, axis, with_features, threads);
+        voronoi_pass(pool, &mut dist_sq, &mut nearest, shape, axis, with_features, threads);
     }
 
     EdtResult { dist_sq, nearest: with_features.then_some(nearest) }
@@ -121,6 +133,7 @@ fn line_base(shape: Shape, axis: usize, lid: usize) -> usize {
 
 /// 1D two-sweep squared-distance propagation along `axis`.
 fn first_pass(
+    pool: PoolHandle<'_>,
     dist_sq: &mut [i64],
     nearest: &mut [u32],
     shape: Shape,
@@ -133,7 +146,7 @@ fn first_pass(
     let f = UnsafeSlice::new(nearest);
     // Incremental index walk instead of `base + p·stride` per element
     // (§Perf iteration 5), lines batched like the Voronoi pass.
-    crate::util::pool::for_batches(n_lines, threads, 16, |lines| {
+    pool.for_batches(n_lines, threads, 16, |lines| {
         for lid in lines {
             let base = line_base(shape, axis, lid);
             // forward sweep: distance (in steps) to last feature seen
@@ -180,6 +193,7 @@ fn first_pass(
 
 /// One `VoronoiEDT` pass (Alg. 1) along `axis`, lines in parallel.
 fn voronoi_pass(
+    pool: PoolHandle<'_>,
     dist_sq: &mut [i64],
     nearest: &mut [u32],
     shape: Shape,
@@ -192,7 +206,7 @@ fn voronoi_pass(
     let f = UnsafeSlice::new(nearest);
     // Batched lines: the Voronoi scratch (site stacks) is allocated once
     // per batch and reused across its lines — §Perf iteration 2.
-    crate::util::pool::for_batches(n_lines, threads, 16, |lines| {
+    pool.for_batches(n_lines, threads, 16, |lines| {
         let mut g: Vec<i64> = Vec::with_capacity(len); // site values f_i
         let mut h: Vec<i64> = Vec::with_capacity(len); // site positions
         let mut ft: Vec<u32> = Vec::with_capacity(len); // site features

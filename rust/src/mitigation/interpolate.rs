@@ -17,7 +17,7 @@
 //! within the relaxed bound `(1+η)·ε` (Table II).
 
 use crate::mitigation::edt::INF;
-use crate::util::pool;
+use crate::util::pool::PoolHandle;
 
 /// IDW weight `k₂/(k₁+k₂)` from *squared* distances, with the limit
 /// conventions above.
@@ -72,6 +72,31 @@ pub fn compensate_adaptive(
     taper_radius: Option<f64>,
     threads: usize,
 ) {
+    compensate_adaptive_on(
+        PoolHandle::Global,
+        data,
+        dist1_sq,
+        dist2_sq,
+        sign,
+        eta_eps,
+        taper_radius,
+        threads,
+    )
+}
+
+/// [`compensate_adaptive`] with its parallel regions confined to
+/// `pool`.
+#[allow(clippy::too_many_arguments)]
+pub fn compensate_adaptive_on(
+    pool: PoolHandle<'_>,
+    data: &mut [f32],
+    dist1_sq: &[i64],
+    dist2_sq: &[i64],
+    sign: &[i8],
+    eta_eps: f64,
+    taper_radius: Option<f64>,
+    threads: usize,
+) {
     assert_eq!(data.len(), dist1_sq.len());
     assert_eq!(data.len(), dist2_sq.len());
     assert_eq!(data.len(), sign.len());
@@ -79,7 +104,7 @@ pub fn compensate_adaptive(
         assert!(r > 0.0, "taper radius must be positive");
         1.0 / (r * r)
     });
-    pool::chunks_mut(data, threads, |start, chunk| {
+    pool.chunks_mut(data, threads, |start, chunk| {
         for (off, v) in chunk.iter_mut().enumerate() {
             let i = start + off;
             let s = sign[i];

@@ -15,10 +15,13 @@
 //!
 //! [`pipeline`] assembles the steps sequentially or with shared-memory
 //! threads (§VII-A) on the persistent pool runtime
-//! ([`crate::util::pool`]); [`service`] batches many independent fields
-//! onto the same pool; the distributed version lives in
-//! [`crate::coordinator`].
+//! ([`crate::util::pool`]); [`service`] serves many independent fields
+//! through the streaming [`admission`] queue onto the same pool (or a
+//! confined one — every step accepts a
+//! [`PoolHandle`](crate::util::pool::PoolHandle) via its `*_on`
+//! variant); the distributed version lives in [`crate::coordinator`].
 
+pub mod admission;
 pub mod boundary;
 pub mod edt;
 pub mod interpolate;
@@ -26,5 +29,9 @@ pub mod pipeline;
 pub mod service;
 pub mod sign;
 
-pub use pipeline::{mitigate, mitigate_with_stats, Backend, MitigationConfig, PipelineStats};
-pub use service::{Job, JobResult, MitigationService};
+pub use admission::{JobReport, JobTicket, Priority, ServiceStats, SubmitError, SubmitOptions};
+pub use pipeline::{
+    mitigate, mitigate_with_stats, mitigate_with_stats_on, Backend, MitigationConfig,
+    PipelineStats,
+};
+pub use service::{Job, JobResult, MitigationService, ServiceConfig, DEFAULT_QUEUE_CAPACITY};

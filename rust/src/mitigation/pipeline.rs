@@ -4,10 +4,11 @@
 //! executables (see `crate::runtime`).
 
 use crate::data::grid::Grid;
-use crate::mitigation::boundary::boundary_and_sign;
-use crate::mitigation::edt::edt;
-use crate::mitigation::sign::propagate_signs;
+use crate::mitigation::boundary::boundary_and_sign_on;
+use crate::mitigation::edt::edt_on;
+use crate::mitigation::sign::propagate_signs_on;
 use crate::quant::{QIndex, ResolvedBound};
+use crate::util::pool::PoolHandle;
 use crate::util::timer::Stopwatch;
 
 /// Which engine executes steps A (boundary/sign) and E (IDW compensate).
@@ -95,6 +96,21 @@ pub fn mitigate_with_stats(
     eb: ResolvedBound,
     cfg: &MitigationConfig,
 ) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
+    mitigate_with_stats_on(PoolHandle::Global, dq, q, eb, cfg)
+}
+
+/// [`mitigate_with_stats`] with every parallel region of steps A–E
+/// confined to `pool` — the substrate behind
+/// [`crate::mitigation::service::MitigationService::with_pool`]. The
+/// PJRT backend hands steps A/E to the device runtime, which `pool`
+/// does not govern; steps B–D still honor it.
+pub fn mitigate_with_stats_on(
+    pool: PoolHandle<'_>,
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    cfg: &MitigationConfig,
+) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
     assert_eq!(dq.shape, q.shape, "data/index shape mismatch");
     anyhow::ensure!(
         cfg.taper_radius.is_none() || cfg.backend == Backend::Native,
@@ -106,7 +122,7 @@ pub fn mitigate_with_stats(
 
     // Step A: quantization boundaries + signs.
     let bres = match cfg.backend {
-        Backend::Native => sw.time(|| boundary_and_sign(q, threads)),
+        Backend::Native => sw.time(|| boundary_and_sign_on(pool, q, threads)),
         Backend::Pjrt => sw.time(|| crate::runtime::ops::boundary_and_sign_pjrt(q))?,
     };
     stats.t_boundary = std::mem::take(&mut sw).secs();
@@ -119,19 +135,20 @@ pub fn mitigate_with_stats(
 
     // Step B: EDT to B₁ with feature transform.
     let mut sw = Stopwatch::new();
-    let edt1 = sw.time(|| edt(&bres.mask, true, threads));
+    let edt1 = sw.time(|| edt_on(pool, &bres.mask, true, threads));
     stats.t_edt1 = std::mem::take(&mut sw).secs();
 
     // Step C: propagate signs, build B₂.
     let mut sw = Stopwatch::new();
-    let (s, b2) =
-        sw.time(|| propagate_signs(&bres.mask, &bres.sign, edt1.nearest.as_ref().unwrap(), threads));
+    let (s, b2) = sw.time(|| {
+        propagate_signs_on(pool, &bres.mask, &bres.sign, edt1.nearest.as_ref().unwrap(), threads)
+    });
     stats.t_sign = std::mem::take(&mut sw).secs();
     stats.n_boundary2 = b2.data.iter().filter(|&&b| b).count();
 
     // Step D: EDT to B₂ (distances only — indices unused, paper §VI-D).
     let mut sw = Stopwatch::new();
-    let edt2 = sw.time(|| edt(&b2, false, threads));
+    let edt2 = sw.time(|| edt_on(pool, &b2, false, threads));
     stats.t_edt2 = std::mem::take(&mut sw).secs();
 
     // Step E: interpolate and compensate.
@@ -140,7 +157,8 @@ pub fn mitigate_with_stats(
     let mut sw = Stopwatch::new();
     match cfg.backend {
         Backend::Native => sw.time(|| {
-            crate::mitigation::interpolate::compensate_adaptive(
+            crate::mitigation::interpolate::compensate_adaptive_on(
+                pool,
                 &mut out.data,
                 &edt1.dist_sq,
                 &edt2.dist_sq,

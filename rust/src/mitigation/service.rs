@@ -1,37 +1,69 @@
-//! Batched mitigation serving layer.
+//! The mitigation serving layer: jobs, the service façade, and its
+//! configuration.
 //!
-//! The ROADMAP's production scenario is many independent fields arriving
+//! [`MitigationService`] is the front door the ROADMAP's
+//! production scenario talks to: many independent fields arriving
 //! concurrently (one per user request, ensemble member, or timestep).
-//! [`MitigationService`] runs such batches on a persistent
-//! [`pool`](crate::util::pool): jobs execute concurrently as tasks on
-//! the service's pool (the process-global one by default, or the pool
-//! given to [`MitigationService::with_pool`]), while each job's
-//! *internal* steps (A–E) fan out at its own `MitigationConfig::threads`
-//! setting on the **process-global** pool — the pipeline's parallel
-//! substrate is the global pool regardless of which pool carries the
-//! cross-job fan-out (per-step pool-handle plumbing is a ROADMAP
-//! follow-up). Nested regions are safe either way: every region's
-//! opener participates in draining it, so no spawns and no deadlock.
+//! Jobs stream in through the bounded admission queue
+//! ([`crate::mitigation::admission`]) via [`MitigationService::submit`]
+//! / [`MitigationService::try_submit`], execute on a persistent
+//! [`pool`](crate::util::pool) — the process-global one by default, or
+//! the pool given to [`MitigationService::with_pool`] — and resolve
+//! per-job [`JobTicket`]s. The legacy slice-in/vec-out
+//! [`MitigationService::mitigate_batch`] survives as a thin wrapper
+//! over the same queue.
+//!
+//! Pool confinement: a service built [`with_pool`] runs **everything**
+//! on that pool — the cross-job fan-out *and* each job's internal steps
+//! A–E, via the [`PoolHandle`](crate::util::pool::PoolHandle) plumbing
+//! through the pipeline. The global pool is never touched, which the
+//! confinement test suite asserts.
 //!
 //! Guarantees:
 //!
 //! * **Exactness** — each job's output is bit-identical to a standalone
-//!   [`mitigate_with_stats`] call with the same inputs (the pipeline is
-//!   schedule-independent), so batching is a pure throughput knob.
+//!   [`mitigate_with_stats`](crate::mitigation::pipeline::mitigate_with_stats)
+//!   call with the same inputs (the pipeline is schedule-independent),
+//!   so batching and queueing are pure throughput knobs.
 //! * **Isolation** — a failing job (error *or* panic, e.g. a shape
-//!   mismatch) yields an `Err` in its own slot and cannot poison the
-//!   rest of the batch.
+//!   mismatch) resolves only its own ticket with an `Err` and cannot
+//!   poison sibling jobs.
 //! * **Determinism** — outputs depend only on job inputs, never on
-//!   batch order, batch concurrency, or pool sizing.
+//!   queue order, concurrency, priorities, or pool sizing.
+//!
+//! [`with_pool`]: MitigationService::with_pool
+//!
+//! # Examples
+//!
+//! ```
+//! use qai::data::synthetic::{generate, DatasetKind};
+//! use qai::mitigation::admission::SubmitOptions;
+//! use qai::mitigation::{Job, MitigationService};
+//! use qai::quant::{quantize_grid, ErrorBound};
+//!
+//! let orig = generate(DatasetKind::ClimateLike, &[16, 16], 7);
+//! let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+//! let (q, dq) = quantize_grid(&orig, eb);
+//!
+//! let service = MitigationService::new();
+//! let ticket = service.submit(Job::new(dq, q, eb), SubmitOptions::bulk()).unwrap();
+//! let (grid, stats) = ticket.wait().result.unwrap();
+//! assert_eq!(grid.len(), 16 * 16);
+//! assert!(stats.total() >= 0.0);
+//! ```
+
+#![deny(missing_docs)]
 
 use crate::data::grid::Grid;
-use crate::mitigation::pipeline::{mitigate_with_stats, MitigationConfig, PipelineStats};
+use crate::mitigation::admission::{Admission, JobTicket, ServiceStats, SubmitError, SubmitOptions};
+use crate::mitigation::pipeline::{MitigationConfig, PipelineStats};
 use crate::quant::{QIndex, ResolvedBound};
-use crate::util::pool::{self, ThreadPool};
-use std::sync::{Arc, Mutex};
+use crate::util::pool::ThreadPool;
+use std::sync::Arc;
 
-/// One unit of batched work: a decompressed field, its quantization
+/// One unit of served work: a decompressed field, its quantization
 /// indices, the resolved bound, and the per-job pipeline configuration.
+#[derive(Clone)]
 pub struct Job {
     /// Decompressed data `d'`.
     pub dq: Grid<f32>,
@@ -50,75 +82,132 @@ impl Job {
     }
 }
 
-/// Result slot of one batched job.
+/// Result of one served job.
 pub type JobResult = anyhow::Result<(Grid<f32>, PipelineStats)>;
 
-/// A mitigation server over a persistent thread pool (the process-wide
-/// [`pool::global`] by default, or an explicitly sized pool for
-/// isolation / sweep experiments).
-#[derive(Default)]
+/// Default bound on the number of queued (not yet running) jobs.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+
+/// Construction-time knobs of a [`MitigationService`].
+#[derive(Clone)]
+pub struct ServiceConfig {
+    /// Pool that carries the cross-job fan-out **and** every job's
+    /// internal steps; `None` uses the process-global pool.
+    pub pool: Option<Arc<ThreadPool>>,
+    /// Bounded admission-queue capacity (values below 1 are clamped
+    /// to 1). See [`DEFAULT_QUEUE_CAPACITY`].
+    pub capacity: usize,
+    /// Start with draining paused: submissions are accepted (up to
+    /// capacity) but nothing runs until
+    /// [`MitigationService::resume`]. Used by maintenance drains and
+    /// the deterministic ordering tests.
+    pub start_paused: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { pool: None, capacity: DEFAULT_QUEUE_CAPACITY, start_paused: false }
+    }
+}
+
+/// A mitigation server: a bounded streaming admission queue over a
+/// persistent thread pool (the process-wide
+/// [`pool::global`](crate::util::pool::global) by default, or an
+/// explicitly sized pool for isolation).
 pub struct MitigationService {
-    pool: Option<Arc<ThreadPool>>,
+    admission: Admission,
+}
+
+impl Default for MitigationService {
+    fn default() -> Self {
+        MitigationService::new()
+    }
 }
 
 impl MitigationService {
-    /// Service over the process-wide global pool.
+    /// Service over the process-wide global pool with default settings.
     pub fn new() -> Self {
-        MitigationService { pool: None }
+        MitigationService::with_config(ServiceConfig::default())
     }
 
-    /// Service whose *cross-job* fan-out runs on an explicit pool.
-    /// Note: jobs' internal steps still parallelize on the global pool
-    /// (see the module docs), so this bounds batch-level concurrency,
-    /// not total CPU use.
+    /// Service confined to an explicit pool: the cross-job fan-out and
+    /// each job's internal steps A–E all run on `pool`, never the
+    /// global one.
     pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
-        MitigationService { pool: Some(pool) }
+        MitigationService::with_config(ServiceConfig { pool: Some(pool), ..Default::default() })
     }
 
-    fn pool(&self) -> &ThreadPool {
-        self.pool.as_deref().unwrap_or_else(pool::global)
+    /// Service with explicit [`ServiceConfig`] knobs.
+    pub fn with_config(cfg: ServiceConfig) -> Self {
+        MitigationService { admission: Admission::new(cfg.pool, cfg.capacity, cfg.start_paused) }
     }
 
-    /// Run every job, concurrently, on the shared pool; slot `i` of the
-    /// output corresponds to `jobs[i]`. Per-job failures (including
-    /// panics out of the pipeline) are captured in their own slot.
+    /// Non-blocking admission: enqueue `job` or fail immediately with
+    /// [`SubmitError::QueueFull`] (carrying the job back) when the
+    /// queue is at capacity.
+    pub fn try_submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
+        self.admission.try_submit(job, opts)
+    }
+
+    /// Blocking admission: wait for queue space, bounded by
+    /// `opts.timeout` if set ([`SubmitError::Timeout`] on expiry).
+    pub fn submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
+        self.admission.submit(job, opts)
+    }
+
+    /// Stop draining the queue. Submissions are still accepted until
+    /// the queue fills; jobs already running finish normally.
+    pub fn pause(&self) {
+        self.admission.pause();
+    }
+
+    /// Resume draining after [`MitigationService::pause`] (or a
+    /// [`ServiceConfig::start_paused`] construction).
+    pub fn resume(&self) {
+        self.admission.resume();
+    }
+
+    /// Snapshot of the admission counters and gauges.
+    pub fn stats(&self) -> ServiceStats {
+        self.admission.stats()
+    }
+
+    /// Compatibility wrapper over the queue: run every job and return
+    /// slot `i` of the output for `jobs[i]`, exactly like the original
+    /// slice-in/vec-out batch API. Per-job failures (including panics
+    /// out of the pipeline) are captured in their own slot, and outputs
+    /// are bit-identical to per-field
+    /// [`mitigate_with_stats`](crate::mitigation::pipeline::mitigate_with_stats)
+    /// calls.
+    ///
+    /// Jobs are cloned into the queue (the streaming API takes
+    /// ownership; this borrowed-slice shim predates it) and submitted
+    /// as [`Priority::Bulk`](crate::mitigation::admission::Priority),
+    /// blocking for space when the batch exceeds the queue capacity —
+    /// so do not call it on a paused service with a batch larger than
+    /// the capacity.
     pub fn mitigate_batch(&self, jobs: &[Job]) -> Vec<JobResult> {
         if jobs.is_empty() {
             return Vec::new();
         }
-        let pool = self.pool();
-        let slots: Vec<Mutex<Option<JobResult>>> =
-            jobs.iter().map(|_| Mutex::new(None)).collect();
-        pool.for_range(jobs.len(), pool.lanes(), 1, |i| {
-            let job = &jobs[i];
-            let outcome = if job.dq.shape != job.q.shape {
-                Err(anyhow::anyhow!(
-                    "job {i}: data shape {:?} != index shape {:?}",
-                    job.dq.shape.dims,
-                    job.q.shape.dims
-                ))
-            } else {
-                // A panic below (defensive: the pipeline asserts on
-                // internal invariants) must not take down sibling jobs.
-                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    mitigate_with_stats(&job.dq, &job.q, job.eb, &job.cfg)
-                })) {
-                    Ok(result) => result,
-                    Err(payload) => {
-                        let msg = payload
-                            .downcast_ref::<String>()
-                            .cloned()
-                            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
-                            .unwrap_or_else(|| "<non-string panic>".to_string());
-                        Err(anyhow::anyhow!("job {i} panicked: {msg}"))
-                    }
-                }
-            };
-            *slots[i].lock().unwrap() = Some(outcome);
-        });
-        slots
+        let tickets: Vec<JobTicket> = jobs
+            .iter()
+            .map(|job| {
+                // Infallible while `&self` is alive: shutdown only
+                // happens in drop, and no timeout is set.
+                self.submit(job.clone(), SubmitOptions::bulk())
+                    .unwrap_or_else(|e| panic!("batch admission failed: {e}"))
+            })
+            .collect();
+        tickets
             .into_iter()
-            .map(|slot| slot.into_inner().unwrap().expect("every job slot is filled"))
+            .enumerate()
+            .map(|(i, ticket)| {
+                // Re-label errors with the batch slot (the queue's own
+                // messages are slot-agnostic), matching the original
+                // slice-in/vec-out API.
+                ticket.wait().result.map_err(|e| anyhow::anyhow!("job {i}: {e:#}"))
+            })
             .collect()
     }
 }
@@ -127,6 +216,7 @@ impl MitigationService {
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate, DatasetKind};
+    use crate::mitigation::pipeline::mitigate_with_stats;
     use crate::quant::{quantize_grid, ErrorBound};
 
     fn job(kind: DatasetKind, dims: &[usize], seed: u64) -> Job {
@@ -143,6 +233,9 @@ mod tests {
 
     #[test]
     fn single_job_matches_direct_call() {
+        // Serialized: first submit spawns a counted scheduler thread
+        // (see `pool::test_guard`).
+        let _g = crate::util::pool::test_guard();
         let j = job(DatasetKind::ClimateLike, &[48, 48], 3);
         let direct = mitigate_with_stats(&j.dq, &j.q, j.eb, &j.cfg).unwrap();
         let service = MitigationService::new();
@@ -155,11 +248,30 @@ mod tests {
 
     #[test]
     fn shape_mismatch_is_an_error_not_a_panic() {
+        let _g = crate::util::pool::test_guard();
         let mut j = job(DatasetKind::ClimateLike, &[16, 16], 1);
         j.q = Grid::from_vec(vec![0i64; 64], &[8, 8]);
         let got = MitigationService::new().mitigate_batch(&[j]);
         assert!(got[0].is_err());
         let msg = got[0].as_ref().unwrap_err().to_string();
         assert!(msg.contains("shape"), "msg={msg}");
+    }
+
+    #[test]
+    fn batch_updates_service_stats() {
+        let _g = crate::util::pool::test_guard();
+        let service = MitigationService::new();
+        let jobs = vec![
+            job(DatasetKind::ClimateLike, &[24, 24], 2),
+            job(DatasetKind::ClimateLike, &[24, 24], 3),
+        ];
+        let results = service.mitigate_batch(&jobs);
+        assert!(results.iter().all(|r| r.is_ok()));
+        let st = service.stats();
+        assert_eq!(st.submitted, 2);
+        assert_eq!(st.completed, 2);
+        assert_eq!(st.bulk_done, 2);
+        assert_eq!(st.failed, 0);
+        assert_eq!(st.queue_depth, 0);
     }
 }

@@ -9,16 +9,28 @@
 //! halfway between two quantization boundaries of opposite sign).
 
 use crate::data::grid::Grid;
-use crate::mitigation::boundary::boundary_mask;
-use crate::util::pool;
+use crate::mitigation::boundary::boundary_mask_on;
+use crate::util::pool::PoolHandle;
 
-/// Propagate boundary signs to the whole domain and derive `B₂`.
+/// Propagate boundary signs to the whole domain and derive `B₂`
+/// (parallel regions on the global pool).
 ///
 /// * `b1` — quantization-boundary mask from step A;
 /// * `sign_at_boundary` — sign map valid on `b1` points;
 /// * `nearest` — feature transform from step B (`I₁`);
 /// * returns `(S, B₂)`: the complete sign map and sign-flip boundary.
 pub fn propagate_signs(
+    b1: &Grid<bool>,
+    sign_at_boundary: &Grid<i8>,
+    nearest: &[u32],
+    threads: usize,
+) -> (Grid<i8>, Grid<bool>) {
+    propagate_signs_on(PoolHandle::Global, b1, sign_at_boundary, nearest, threads)
+}
+
+/// [`propagate_signs`] with its parallel regions confined to `pool`.
+pub fn propagate_signs_on(
+    pool: PoolHandle<'_>,
     b1: &Grid<bool>,
     sign_at_boundary: &Grid<i8>,
     nearest: &[u32],
@@ -31,7 +43,7 @@ pub fn propagate_signs(
     {
         let b = &b1.data;
         let src = &sign_at_boundary.data;
-        pool::chunks_mut(&mut s.data, threads, |start, chunk| {
+        pool.chunks_mut(&mut s.data, threads, |start, chunk| {
             for (off, v) in chunk.iter_mut().enumerate() {
                 let i = start + off;
                 if !b[i] {
@@ -41,7 +53,7 @@ pub fn propagate_signs(
             }
         });
     }
-    let b2 = boundary_mask(&s, threads);
+    let b2 = boundary_mask_on(pool, &s, threads);
     (s, b2)
 }
 

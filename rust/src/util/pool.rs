@@ -40,6 +40,37 @@
 //! that can deadlock when tasks outnumber workers. [`scope_blocking`]
 //! is the explicit escape hatch: dedicated scoped threads, counted by
 //! the same spawn counter.
+//!
+//! # Choosing a pool: [`PoolHandle`]
+//!
+//! Most code does not care which pool it runs on and uses the free
+//! functions ([`chunks_mut`] / [`for_range`] / [`for_batches`]), which
+//! target the lazily-created [`global`] pool. Code that must **confine**
+//! its parallelism — e.g. a [`crate::mitigation::service`] job whose
+//! service was built with an explicit pool — threads a [`PoolHandle`]
+//! down instead. `PoolHandle::Global` behaves exactly like the free
+//! functions (including never forcing global-pool creation on the
+//! `threads == 1` fast path); `PoolHandle::Explicit` opens every region
+//! on the given pool and nowhere else. [`ThreadPool::regions_opened`]
+//! and [`global_is_initialized`] make confinement observable in tests.
+//!
+//! # Examples
+//!
+//! ```
+//! use qai::util::pool::ThreadPool;
+//!
+//! let pool = ThreadPool::new(2);
+//! let mut data = vec![0u32; 64];
+//! pool.chunks_mut(&mut data, 2, |start, chunk| {
+//!     for (k, v) in chunk.iter_mut().enumerate() {
+//!         *v = (start + k) as u32;
+//!     }
+//! });
+//! assert_eq!(data[10], 10);
+//! assert!(pool.regions_opened() >= 1);
+//! ```
+
+#![deny(missing_docs)]
 
 use crate::util::par::UnsafeSlice;
 use std::collections::VecDeque;
@@ -47,10 +78,18 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Global count of OS threads ever spawned by this module (pool workers
-/// plus [`scope_blocking`] threads). Tests use it to assert that warm
-/// parallel regions spawn nothing.
+/// Global count of OS threads ever spawned by this module and the
+/// serving layer built on it (pool workers, [`scope_blocking`] threads,
+/// and the admission scheduler of [`crate::mitigation::service`]).
+/// Tests use it to assert that warm parallel regions spawn nothing.
 static OS_THREAD_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Record one OS-thread spawn in [`os_thread_spawns`]. For runtime
+/// threads spawned outside this module (the admission scheduler), so
+/// the "zero steady-state spawns" accounting stays complete.
+pub(crate) fn note_os_thread_spawn() {
+    OS_THREAD_SPAWNS.fetch_add(1, Ordering::SeqCst);
+}
 
 /// Total OS threads spawned through the pool runtime so far.
 pub fn os_thread_spawns() -> usize {
@@ -147,28 +186,42 @@ impl Region {
     }
 }
 
-/// Shared worker state: a FIFO of region tickets plus shutdown flag.
+/// One queued unit of pool work: a ticket of a parallel region, or a
+/// detached one-shot task (the admission scheduler's job bodies). Tasks
+/// are fire-and-forget: they run exactly once on some worker, so they
+/// are only correct on pools that *have* workers — callers must fall
+/// back to inline execution on a single-lane pool (see
+/// [`ThreadPool::submit_task`]).
+enum Ticket {
+    Region(Arc<Region>),
+    Task(Box<dyn FnOnce() + Send>),
+}
+
+/// Shared worker state: a FIFO of tickets plus shutdown flag.
 struct Injector {
-    queue: Mutex<VecDeque<Arc<Region>>>,
+    queue: Mutex<VecDeque<Ticket>>,
     ready: Condvar,
     shutdown: AtomicBool,
 }
 
 fn worker_loop(injector: Arc<Injector>) {
     loop {
-        let region = {
+        let ticket = {
             let mut q = injector.queue.lock().unwrap();
             loop {
                 if injector.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                if let Some(r) = q.pop_front() {
-                    break r;
+                if let Some(t) = q.pop_front() {
+                    break t;
                 }
                 q = injector.ready.wait(q).unwrap();
             }
         };
-        region.run_ticket();
+        match ticket {
+            Ticket::Region(region) => region.run_ticket(),
+            Ticket::Task(task) => task(),
+        }
     }
 }
 
@@ -180,6 +233,9 @@ pub struct ThreadPool {
     injector: Arc<Injector>,
     lanes: usize,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Parallel regions ever opened on this pool (see
+    /// [`ThreadPool::regions_opened`]).
+    regions: AtomicUsize,
 }
 
 impl ThreadPool {
@@ -202,12 +258,39 @@ impl ThreadPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { injector, lanes, handles }
+        ThreadPool { injector, lanes, handles, regions: AtomicUsize::new(0) }
     }
 
     /// Maximum useful parallelism of this pool (workers + caller).
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// Number of persistent worker threads (`lanes - 1`).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// How many parallel regions have been opened on this pool so far.
+    /// Sequential fast paths (`threads == 1`, or work too small to
+    /// split) do not open a region. Confinement tests use this to prove
+    /// that a job's internal steps really ran on a specific pool.
+    pub fn regions_opened(&self) -> usize {
+        self.regions.load(Ordering::SeqCst)
+    }
+
+    /// Enqueue a detached one-shot task for some worker to run.
+    ///
+    /// Unlike regions, nobody participates on the caller's thread and
+    /// nobody waits: on a pool with zero workers the task would never
+    /// run, so callers (the admission scheduler) must check
+    /// [`ThreadPool::workers`] and execute inline when it is zero.
+    pub(crate) fn submit_task(&self, task: Box<dyn FnOnce() + Send>) {
+        debug_assert!(self.workers() > 0, "detached task on a worker-less pool never runs");
+        let mut q = self.injector.queue.lock().unwrap();
+        q.push_back(Ticket::Task(task));
+        drop(q);
+        self.injector.ready.notify_one();
     }
 
     /// Publish a region over `0..n` with the given `grain`, offer up to
@@ -220,6 +303,7 @@ impl ThreadPool {
         unsafe fn trampoline<F: Fn(usize, usize)>(ctx: *const (), start: usize, end: usize) {
             (*(ctx as *const F))(start, end);
         }
+        self.regions.fetch_add(1, Ordering::SeqCst);
         let region = Arc::new(Region {
             ctx: body as *const F as *const (),
             call: trampoline::<F>,
@@ -234,7 +318,7 @@ impl ThreadPool {
         if extra > 0 {
             let mut q = self.injector.queue.lock().unwrap();
             for _ in 0..extra {
-                q.push_back(region.clone());
+                q.push_back(Ticket::Region(region.clone()));
             }
             drop(q);
             self.injector.ready.notify_all();
@@ -351,11 +435,91 @@ fn default_lanes() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(8)
 }
 
+static GLOBAL_POOL: OnceLock<ThreadPool> = OnceLock::new();
+
 /// The process-wide pool, created on first use. Workers persist for the
 /// life of the process (the pool is never dropped).
 pub fn global() -> &'static ThreadPool {
-    static POOL: OnceLock<ThreadPool> = OnceLock::new();
-    POOL.get_or_init(|| ThreadPool::new(default_lanes()))
+    GLOBAL_POOL.get_or_init(|| ThreadPool::new(default_lanes()))
+}
+
+/// Whether the global pool has been created yet. Sequential fast paths
+/// and pool-confined work never force its creation, which the
+/// pool-confinement tests assert through this probe.
+pub fn global_is_initialized() -> bool {
+    GLOBAL_POOL.get().is_some()
+}
+
+/// Which pool a parallel region runs on.
+///
+/// `Global` matches the module's free functions exactly — including the
+/// guarantee that `threads == 1` work runs inline without ever creating
+/// the global pool. `Explicit` confines every region to the given pool:
+/// nothing escapes to the global one, which is what lets
+/// [`crate::mitigation::service::MitigationService::with_pool`] bound a
+/// job's *internal* parallelism, not just the cross-job fan-out.
+#[derive(Clone, Copy, Default)]
+pub enum PoolHandle<'p> {
+    /// The lazily-created process-wide pool ([`global`]).
+    #[default]
+    Global,
+    /// An explicit pool; every region opens on it and nowhere else.
+    Explicit(&'p ThreadPool),
+}
+
+impl<'p> PoolHandle<'p> {
+    /// Resolve to a concrete pool, creating the global pool if this is
+    /// `Global` and it does not exist yet.
+    pub fn resolve(self) -> &'p ThreadPool {
+        match self {
+            PoolHandle::Global => global(),
+            PoolHandle::Explicit(pool) => pool,
+        }
+    }
+
+    /// [`ThreadPool::chunks_mut`] on the selected pool; `threads <= 1`
+    /// (or trivially small data) runs inline without resolving it.
+    pub fn chunks_mut<T: Send, F>(self, data: &mut [T], threads: usize, f: F)
+    where
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if threads <= 1 || data.len() < 2 {
+            f(0, data);
+            return;
+        }
+        self.resolve().chunks_mut(data, threads, f)
+    }
+
+    /// [`ThreadPool::for_range`] on the selected pool; `threads <= 1`
+    /// (or `n <= grain`) runs inline without resolving it.
+    pub fn for_range<F>(self, n: usize, threads: usize, grain: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if threads <= 1 || n <= grain {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        self.resolve().for_range(n, threads, grain, f)
+    }
+
+    /// [`ThreadPool::for_batches`] on the selected pool; `threads <= 1`
+    /// (or `n <= grain`) runs inline without resolving it.
+    pub fn for_batches<F>(self, n: usize, threads: usize, grain: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let grain = grain.max(1);
+        if threads <= 1 || n <= grain {
+            if n > 0 {
+                f(0..n);
+            }
+            return;
+        }
+        self.resolve().for_batches(n, threads, grain, f)
+    }
 }
 
 /// Useful parallelism of the global pool.
@@ -363,46 +527,31 @@ pub fn parallelism() -> usize {
     global().lanes()
 }
 
-/// [`ThreadPool::chunks_mut`] on the global pool.
+/// [`ThreadPool::chunks_mut`] on the global pool (`threads <= 1` never
+/// touches or initializes it).
 pub fn chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
 {
-    if threads <= 1 || data.len() < 2 {
-        // Fast path that never touches (or initializes) the pool.
-        f(0, data);
-        return;
-    }
-    global().chunks_mut(data, threads, f)
+    PoolHandle::Global.chunks_mut(data, threads, f)
 }
 
-/// [`ThreadPool::for_range`] on the global pool.
+/// [`ThreadPool::for_range`] on the global pool (`threads <= 1` never
+/// touches or initializes it).
 pub fn for_range<F>(n: usize, threads: usize, grain: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
-    if threads <= 1 || n <= grain {
-        for i in 0..n {
-            f(i);
-        }
-        return;
-    }
-    global().for_range(n, threads, grain, f)
+    PoolHandle::Global.for_range(n, threads, grain, f)
 }
 
-/// [`ThreadPool::for_batches`] on the global pool.
+/// [`ThreadPool::for_batches`] on the global pool (`threads <= 1` never
+/// touches or initializes it).
 pub fn for_batches<F>(n: usize, threads: usize, grain: usize, f: F)
 where
     F: Fn(Range<usize>) + Sync,
 {
-    let grain = grain.max(1);
-    if threads <= 1 || n <= grain {
-        if n > 0 {
-            f(0..n);
-        }
-        return;
-    }
-    global().for_batches(n, threads, grain, f)
+    PoolHandle::Global.for_batches(n, threads, grain, f)
 }
 
 /// Run a set of **mutually-blocking** tasks to completion, one
@@ -431,17 +580,20 @@ where
     })
 }
 
+/// The spawn counter is process-global, so unit tests anywhere in the
+/// crate that spawn counted OS threads (explicit pools, services and
+/// their admission schedulers, `scope_blocking`) or assert on the
+/// counter must serialize on this guard to keep the counter assertions
+/// race-free under the parallel test harness.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// The spawn counter is process-global, so tests that construct
-    /// pools (or assert on the counter) are serialized to keep the
-    /// counter assertions race-free under the parallel test harness.
-    fn test_guard() -> std::sync::MutexGuard<'static, ()> {
-        static GUARD: Mutex<()> = Mutex::new(());
-        GUARD.lock().unwrap_or_else(|e| e.into_inner())
-    }
 
     #[test]
     fn chunks_cover_everything_once() {
@@ -628,6 +780,63 @@ mod tests {
             pool.for_range(64, 3, 4, |_| {});
         } // drop: workers must exit cleanly
         assert!(os_thread_spawns() >= before + 2);
+    }
+
+    #[test]
+    fn scope_blocking_rank_set_larger_than_pool_size() {
+        let _g = test_guard();
+        // Regression (coordinator path): mutually-blocking rank sets
+        // must get one dedicated thread each, never pool lanes — with
+        // more ranks than any pool has lanes, multiplexing onto a
+        // bounded worker set would deadlock. The barrier forces every
+        // rank to be alive at the same instant, so this hangs (and the
+        // harness times out) if ranks ever share threads.
+        let pool = ThreadPool::new(2); // deliberately smaller than the rank set
+        assert!(pool.lanes() < 12);
+        let barrier = Arc::new(std::sync::Barrier::new(12));
+        let tasks: Vec<_> = (0..12usize)
+            .map(|rank| {
+                let b = barrier.clone();
+                move || {
+                    b.wait();
+                    rank
+                }
+            })
+            .collect();
+        let got = scope_blocking(tasks);
+        assert_eq!(got, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn detached_tasks_run_on_workers() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(2);
+        let (tx, rx) = std::sync::mpsc::channel();
+        pool.submit_task(Box::new(move || {
+            tx.send(42u32).unwrap();
+        }));
+        let got = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(got, 42);
+    }
+
+    #[test]
+    fn explicit_handle_opens_regions_only_on_its_pool() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(3);
+        let before = pool.regions_opened();
+        let handle = PoolHandle::Explicit(&pool);
+        let hits = AtomicUsize::new(0);
+        handle.for_range(100, 3, 4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.regions_opened(), before + 1);
+        // Sequential requests stay inline: no region opened anywhere.
+        handle.for_range(100, 1, 4, |_| {});
+        let mut v = vec![0u8; 8];
+        handle.chunks_mut(&mut v, 1, |_, c| c.iter_mut().for_each(|x| *x = 1));
+        handle.for_batches(8, 1, 2, |_| {});
+        assert_eq!(pool.regions_opened(), before + 1);
     }
 
     #[test]

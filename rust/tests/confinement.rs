@@ -1,0 +1,72 @@
+//! Pool-confinement proof: a job submitted to a
+//! `MitigationService::with_pool` service runs its *internal* steps
+//! A–E only on that pool.
+//!
+//! This file is its own test binary (= its own process) on purpose: the
+//! strongest observable is that the **global pool is never created**.
+//! `pool::global_is_initialized()` flips the moment anything falls back
+//! to the global pool, so every assertion here would catch a single
+//! stray call site. Do not add tests to this binary that touch the
+//! global pool.
+
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::{
+    mitigate, Job, MitigationConfig, MitigationService, ServiceConfig, SubmitOptions,
+};
+use qai::quant::{quantize_grid, ErrorBound};
+use qai::util::pool::{self, ThreadPool};
+use std::sync::Arc;
+
+#[test]
+fn private_pool_job_runs_internal_steps_only_on_that_pool() {
+    let orig = generate(DatasetKind::MirandaLike, &[32, 32, 32], 11);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+
+    // Expected output from the sequential path, which runs inline and
+    // touches no pool at all (so the probe below is still meaningful).
+    let expected = mitigate(&dq, &q, eb, &MitigationConfig { threads: 1, ..Default::default() });
+    assert!(
+        !pool::global_is_initialized(),
+        "threads == 1 mitigation must not create the global pool"
+    );
+
+    // A 4-lane private pool carries the whole service: admission
+    // fan-out AND the job's internal steps at threads = 4.
+    let private = Arc::new(ThreadPool::new(4));
+    let regions_before = private.regions_opened();
+    let service = MitigationService::with_config(ServiceConfig {
+        pool: Some(private.clone()),
+        capacity: 4,
+        start_paused: false,
+    });
+    let job = Job { dq, q, eb, cfg: MitigationConfig { threads: 4, ..Default::default() } };
+    let report = service.submit(job, SubmitOptions::interactive()).unwrap().wait();
+    let (out, stats) = report.result.expect("confined job must succeed");
+
+    // Bit-identical to the sequential reference…
+    assert_eq!(out.data, expected.data, "pool confinement must not change outputs");
+    assert!(stats.n_boundary1 > 0, "test field must actually exercise the pipeline");
+    // …with the parallel steps demonstrably on the private pool…
+    assert!(
+        private.regions_opened() > regions_before,
+        "threads = 4 steps must open parallel regions on the private pool"
+    );
+    // …and nothing on the global one.
+    assert!(
+        !pool::global_is_initialized(),
+        "no step of a pool-confined job may fall back to the global pool"
+    );
+
+    // A second batch through the compatibility wrapper stays confined
+    // too (homogeneous index grid: cheap identity job).
+    let job2 = Job {
+        dq: expected.clone(),
+        q: qai::Grid::<i64>::like(&expected),
+        eb,
+        cfg: MitigationConfig { threads: 2, ..Default::default() },
+    };
+    let results = service.mitigate_batch(std::slice::from_ref(&job2));
+    assert!(results[0].is_ok());
+    assert!(!pool::global_is_initialized(), "mitigate_batch must stay confined as well");
+}

@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Offline markdown link checker for the docs job.
+
+Scans the given markdown files (and, for directories, every ``*.md``
+inside them) for inline links/images ``[text](target)`` and reference
+definitions ``[label]: target``, then verifies that every *relative*
+target resolves to an existing file or directory, relative to the file
+containing the link. Anchors (``#section``) are stripped; external
+schemes (``http://``, ``https://``, ``mailto:``) and bare in-page
+anchors are skipped — the build environment is offline by design.
+
+Exit status: 0 when every relative link resolves, 1 otherwise (with one
+``file: target`` line per broken link on stderr).
+
+Usage: ``python3 tools/check_links.py docs README.md ROADMAP.md``
+"""
+
+import re
+import sys
+from pathlib import Path
+
+INLINE_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REF_DEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def collect_files(args):
+    files = []
+    for arg in args:
+        path = Path(arg)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.md")))
+        elif path.exists():
+            files.append(path)
+        else:
+            print(f"check_links: no such file or directory: {arg}", file=sys.stderr)
+            sys.exit(2)
+    return files
+
+
+def targets_in(text):
+    # Fenced code blocks routinely contain bracket syntax that is not a
+    # link (e.g. Rust attributes); strip them before scanning.
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for match in INLINE_LINK.finditer(text):
+        yield match.group(1)
+    for match in REF_DEF.finditer(text):
+        yield match.group(1)
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    broken = []
+    checked = 0
+    for md in collect_files(sys.argv[1:]):
+        text = md.read_text(encoding="utf-8")
+        for target in targets_in(text):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            if not (md.parent / rel).exists():
+                broken.append(f"{md}: {target}")
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"check_links: {checked} relative link(s) checked, {len(broken)} broken")
+    sys.exit(1 if broken else 0)
+
+
+if __name__ == "__main__":
+    main()
