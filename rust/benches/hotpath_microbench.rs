@@ -15,13 +15,45 @@ use qai::metrics::ssim;
 use qai::mitigation::boundary::boundary_and_sign;
 use qai::mitigation::edt::edt;
 use qai::mitigation::interpolate::compensate;
-use qai::mitigation::pipeline::{mitigate_with_stats, MitigationConfig};
+use qai::mitigation::pipeline::{mitigate_with_stats, mitigate_with_stats_on, MitigationConfig};
 use qai::mitigation::sign::propagate_signs;
 use qai::mitigation::{Job, MitigationService, SubmitOptions};
 use qai::quant::{quantize_grid, ErrorBound};
-use qai::util::{par, pool};
+use qai::util::arena::{Arena, ArenaHandle};
+use qai::util::pool::{self, PoolHandle};
 use std::hint::black_box;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Minimal copy of the retired `util::par` fork-join primitive, kept
+/// here (and only here) as the dispatch-overhead baseline the pool
+/// runtime is compared against: fresh `std::thread::scope` threads on
+/// every call, self-scheduled over `grain`-sized batches.
+fn forkjoin_for_batches<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let grain = grain.max(1);
+    if threads <= 1 || n <= grain {
+        if n > 0 {
+            f(0..n);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.div_ceil(grain)) {
+            let next = &next;
+            let fr = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                fr(start..(start + grain).min(n));
+            });
+        }
+    });
+}
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -114,7 +146,7 @@ fn main() {
             warm.max(2),
             samp.max(5),
             || {
-                par::parallel_for_batches(lines, pool_threads, grain, |range| {
+                forkjoin_for_batches(lines, pool_threads, grain, |range| {
                     sink.fetch_add(range.len() as u64, Ordering::Relaxed);
                 });
             },
@@ -142,6 +174,59 @@ fn main() {
             mitigate_with_stats(&sdq, &sq, seb, &cfg).unwrap()
         });
         println!("   -> {:.1} MB/s", r.mbs(small * small * small * 4));
+    }
+
+    // Scratch-buffer arena: the same mitigation with every full-grid
+    // buffer recycled vs allocated fresh per call. The delta is pure
+    // allocator traffic — the cost a warm serving path no longer pays.
+    println!("\n== arena scratch reuse vs fresh alloc (mitigate 64^3, threads = 1) ==");
+    {
+        let adims = [64usize; 3];
+        let aorig = generate(DatasetKind::MirandaLike, &adims, 3);
+        let aeb = ErrorBound::relative(1e-2).resolve(&aorig.data);
+        let (aq, adq) = quantize_grid(&aorig, aeb);
+        let cfg = MitigationConfig::default();
+        let abytes = adims.iter().product::<usize>() * 4;
+        let r = bench_fn("fresh-alloc mitigate", warm, samp, || {
+            mitigate_with_stats_on(PoolHandle::Global, ArenaHandle::Fresh, &adq, &aq, aeb, &cfg)
+                .unwrap()
+        });
+        println!("   -> {:.1} MB/s", r.mbs(abytes));
+        let arena = Arena::new();
+        // Warm the free lists, then recycle the output each iteration
+        // so the steady state allocates nothing.
+        let (warm_out, _) = mitigate_with_stats_on(
+            PoolHandle::Global,
+            ArenaHandle::Pooled(&arena),
+            &adq,
+            &aq,
+            aeb,
+            &cfg,
+        )
+        .unwrap();
+        arena.adopt(warm_out.data);
+        let misses_before = arena.stats().misses;
+        let r = bench_fn("arena-reuse mitigate", warm, samp, || {
+            let (out, stats) = mitigate_with_stats_on(
+                PoolHandle::Global,
+                ArenaHandle::Pooled(&arena),
+                &adq,
+                &aq,
+                aeb,
+                &cfg,
+            )
+            .unwrap();
+            arena.adopt(out.data);
+            stats
+        });
+        let ast = arena.stats();
+        println!(
+            "   -> {:.1} MB/s ({} hits, {} warm misses, {:.0}% reuse)",
+            r.mbs(abytes),
+            ast.hits,
+            ast.misses - misses_before,
+            ast.reuse_fraction() * 100.0
+        );
     }
 
     // Batched serving layer: N independent fields concurrently on the

@@ -20,8 +20,8 @@ use crate::compressors::cusz::{read_header, write_header};
 use crate::compressors::huffman;
 use crate::data::grid::Grid;
 use crate::quant::ResolvedBound;
-use crate::util::par::UnsafeSlice;
-use crate::util::pool::PoolHandle;
+use crate::util::arena::ArenaHandle;
+use crate::util::pool::{PoolHandle, UnsafeSlice};
 use anyhow::{Context, Result};
 
 /// Max interpolation levels: anchors every 2^10 = 1024 points.
@@ -138,14 +138,25 @@ impl Sz3Like {
     }
 
     /// Decompress (within-level parallel over `self.threads`, regions
-    /// on the global pool).
+    /// on the global pool, buffers freshly allocated).
     pub fn decompress(&self, buf: &[u8]) -> Result<Grid<f32>> {
-        self.decompress_on(PoolHandle::Global, buf)
+        self.decompress_on(PoolHandle::Global, ArenaHandle::Fresh, buf)
     }
 
     /// [`Sz3Like::decompress`] with the within-level parallel decode
-    /// confined to `pool` instead of the global one.
-    pub fn decompress_on(&self, pool: PoolHandle<'_>, buf: &[u8]) -> Result<Grid<f32>> {
+    /// confined to `pool` instead of the global one, and the full-grid
+    /// buffers (reconstruction output and the residual-code scratch)
+    /// acquired from `arena`. The reconstruction escapes inside the
+    /// returned grid and is accounted as detached; hand it back with
+    /// [`crate::util::arena::Arena::adopt`] to keep warm decodes
+    /// allocation-free. (The entropy coder still allocates its symbol
+    /// buffer internally.)
+    pub fn decompress_on(
+        &self,
+        pool: PoolHandle<'_>,
+        arena: ArenaHandle<'_>,
+        buf: &[u8],
+    ) -> Result<Grid<f32>> {
         let mut off = 0usize;
         let magic = bytes::get_u32(buf, &mut off)?;
         anyhow::ensure!(magic == MAGIC, "not an SZ3-like stream");
@@ -156,7 +167,37 @@ impl Sz3Like {
 
         let n_anchors = bytes::get_u64(buf, &mut off)? as usize;
         anyhow::ensure!(n_anchors == n.div_ceil(anchor_stride), "anchor count mismatch");
-        let mut recon = vec![0.0f32; n];
+        let mut recon = arena.take_filled(n, 0.0f32);
+        // From here on every early error must give the lease back.
+        if let Err(e) =
+            self.decode_into(pool, arena, buf, off, n_anchors, anchor_stride, lv, eb, &mut recon)
+        {
+            arena.give(recon);
+            return Err(e);
+        }
+        arena.detach(&recon);
+        let mut grid = Grid::from_vec(recon, shape.user_dims());
+        grid.shape.ndim = shape.ndim;
+        Ok(grid)
+    }
+
+    /// The fallible body of [`Sz3Like::decompress_on`] after the output
+    /// lease is taken: anchors, outliers, entropy decode, and the
+    /// level replay into `recon`.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_into(
+        &self,
+        pool: PoolHandle<'_>,
+        arena: ArenaHandle<'_>,
+        buf: &[u8],
+        mut off: usize,
+        n_anchors: usize,
+        anchor_stride: usize,
+        lv: u32,
+        eb: ResolvedBound,
+        recon: &mut [f32],
+    ) -> Result<()> {
+        let n = recon.len();
         for a in 0..n_anchors {
             let bits = bytes::get_u32(buf, &mut off)?;
             recon[a * anchor_stride] = f32::from_bits(bits);
@@ -169,52 +210,55 @@ impl Sz3Like {
         }
         let symbols = huffman::decode(&buf[off..]).context("huffman payload")?;
 
-        // Rebuild codes.
-        let mut next_outlier = 0usize;
-        let mut codes = Vec::with_capacity(symbols.len());
-        for &s in &symbols {
-            let zz = if s as u64 == ESCAPE {
-                anyhow::ensure!(next_outlier < outliers.len(), "missing outlier");
-                let v = outliers[next_outlier];
-                next_outlier += 1;
-                v
-            } else {
-                s as u64
-            };
-            codes.push(unzigzag(zz));
-        }
-
-        // Replay levels; within a level all predictions read only coarser
-        // positions, so the level is embarrassingly parallel.
-        let two_eps = 2.0 * eb.abs;
-        let mut code_base = 0usize;
-        for lvl in (1..=lv).rev() {
-            let s = 1usize << lvl;
-            let h = s >> 1;
-            let count = if n > h { (n - h).div_ceil(s) } else { 0 };
-            anyhow::ensure!(code_base + count <= codes.len(), "codes exhausted at level {lvl}");
-            {
-                let rs = UnsafeSlice::new(&mut recon);
-                let codes = &codes;
-                pool.for_range(count, self.threads, 1024, |t| {
-                    let i = h + t * s;
-                    // SAFETY: this level writes only positions ≡ h (mod s),
-                    // reads only positions ≡ 0 (mod s) — disjoint.
-                    let pred = {
-                        let r = unsafe { rs.slice_mut(0, n) };
-                        predict(r, i, h)
-                    };
-                    let code = codes[code_base + t];
-                    unsafe { rs.write(i, (pred + code as f64 * two_eps) as f32) };
-                });
+        // Rebuild codes into leased scratch (given back below — it
+        // never escapes this function; stale lease: the zip loop
+        // writes every slot before any read).
+        let mut codes: Vec<i64> = arena.take_stale(symbols.len());
+        let replay = (|| -> Result<()> {
+            let mut next_outlier = 0usize;
+            for (slot, &s) in codes.iter_mut().zip(&symbols) {
+                let zz = if s as u64 == ESCAPE {
+                    anyhow::ensure!(next_outlier < outliers.len(), "missing outlier");
+                    let v = outliers[next_outlier];
+                    next_outlier += 1;
+                    v
+                } else {
+                    s as u64
+                };
+                *slot = unzigzag(zz);
             }
-            code_base += count;
-        }
-        anyhow::ensure!(code_base == codes.len(), "trailing codes in stream");
 
-        let mut grid = Grid::from_vec(recon, shape.user_dims());
-        grid.shape.ndim = shape.ndim;
-        Ok(grid)
+            // Replay levels; within a level all predictions read only
+            // coarser positions, so the level is embarrassingly parallel.
+            let two_eps = 2.0 * eb.abs;
+            let mut code_base = 0usize;
+            for lvl in (1..=lv).rev() {
+                let s = 1usize << lvl;
+                let h = s >> 1;
+                let count = if n > h { (n - h).div_ceil(s) } else { 0 };
+                anyhow::ensure!(code_base + count <= codes.len(), "codes exhausted at level {lvl}");
+                {
+                    let rs = UnsafeSlice::new(recon);
+                    let codes = &codes;
+                    pool.for_range(count, self.threads, 1024, |t| {
+                        let i = h + t * s;
+                        // SAFETY: this level writes only positions ≡ h (mod s),
+                        // reads only positions ≡ 0 (mod s) — disjoint.
+                        let pred = {
+                            let r = unsafe { rs.slice_mut(0, n) };
+                            predict(r, i, h)
+                        };
+                        let code = codes[code_base + t];
+                        unsafe { rs.write(i, (pred + code as f64 * two_eps) as f32) };
+                    });
+                }
+                code_base += count;
+            }
+            anyhow::ensure!(code_base == codes.len(), "trailing codes in stream");
+            Ok(())
+        })();
+        arena.give(codes);
+        replay
     }
 }
 

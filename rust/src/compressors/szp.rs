@@ -10,7 +10,8 @@ use crate::compressors::bitio::{bytes, unzigzag, zigzag, BitReader, BitWriter};
 use crate::compressors::cusz::{read_header, write_header};
 use crate::compressors::{Compressor, Decompressed};
 use crate::data::grid::Grid;
-use crate::quant::{dequantize, quantize, QIndex, ResolvedBound};
+use crate::quant::{dequantize_into, quantize, QIndex, ResolvedBound};
+use crate::util::arena::ArenaHandle;
 use crate::util::pool::PoolHandle;
 use anyhow::Result;
 
@@ -36,8 +37,18 @@ impl Default for SzpLike {
 
 impl SzpLike {
     /// [`Compressor::decompress`] with the block-parallel decode
-    /// confined to `pool` instead of the global one.
-    pub fn decompress_on(&self, pool: PoolHandle<'_>, buf: &[u8]) -> Result<Decompressed> {
+    /// confined to `pool` instead of the global one, and the two
+    /// full-grid output buffers (index field and reconstructed data)
+    /// acquired from `arena`. Both escape inside the returned
+    /// [`Decompressed`] and are accounted as detached; hand them back
+    /// with [`crate::util::arena::Arena::adopt`] to keep warm decodes
+    /// allocation-free.
+    pub fn decompress_on(
+        &self,
+        pool: PoolHandle<'_>,
+        arena: ArenaHandle<'_>,
+        buf: &[u8],
+    ) -> Result<Decompressed> {
         let mut off = 0usize;
         let magic = bytes::get_u32(buf, &mut off)?;
         anyhow::ensure!(magic == MAGIC, "not an SZp-like stream");
@@ -50,16 +61,25 @@ impl SzpLike {
             offsets.push(bytes::get_u64(buf, &mut off)? as usize);
         }
         let payload = &buf[off..];
+        // Monotonic + bounded end ⇒ every per-block slice below is in
+        // range; a corrupted table errors here instead of panicking
+        // inside a pool worker.
+        anyhow::ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "offset table is not monotonically non-decreasing"
+        );
         anyhow::ensure!(
             *offsets.last().unwrap() <= payload.len(),
             "payload shorter than offset table claims"
         );
 
-        // Block-parallel decode into a preallocated index array.
-        let mut q = vec![0 as QIndex; n];
+        // Block-parallel decode into a preallocated index array (stale
+        // lease: on success every element of every block is written,
+        // and on a decode error the buffer is returned unread).
+        let mut q: Vec<QIndex> = arena.take_stale(n);
         let errors = std::sync::Mutex::new(Vec::new());
         {
-            let qslice = crate::util::par::UnsafeSlice::new(&mut q);
+            let qslice = crate::util::pool::UnsafeSlice::new(&mut q);
             pool.for_range(n_blocks, self.threads, 1, |b| {
                 let start = b * BLOCK;
                 let len = (n - start).min(BLOCK);
@@ -76,9 +96,16 @@ impl SzpLike {
             });
         }
         let errs = errors.into_inner().unwrap();
-        anyhow::ensure!(errs.is_empty(), "decode failures: {}", errs.join("; "));
+        if !errs.is_empty() {
+            arena.give(q);
+            anyhow::bail!("decode failures: {}", errs.join("; "));
+        }
 
-        let data = dequantize(&q, eb);
+        // Stale lease: dequantize_into overwrites every element.
+        let mut data: Vec<f32> = arena.take_stale(n);
+        dequantize_into(&q, eb, &mut data);
+        arena.detach(&q);
+        arena.detach(&data);
         let mut grid = Grid::from_vec(data, shape.user_dims());
         grid.shape.ndim = shape.ndim;
         let mut qg = Grid::from_vec(q, shape.user_dims());
@@ -131,7 +158,7 @@ impl Compressor for SzpLike {
     }
 
     fn decompress(&self, buf: &[u8]) -> Result<Decompressed> {
-        self.decompress_on(PoolHandle::Global, buf)
+        self.decompress_on(PoolHandle::Global, ArenaHandle::Fresh, buf)
     }
 }
 
@@ -191,6 +218,24 @@ mod tests {
         let d = SzpLike::default().decompress(&stream).unwrap();
         assert_eq!(d.quant_indices.data.len(), 1);
         assert!((d.grid.data[0] - 3.25).abs() <= 0.5);
+    }
+
+    #[test]
+    fn corrupted_offset_table_is_an_error_not_a_panic() {
+        let g = generate(DatasetKind::ClimateLike, &[64, 64], 9); // 4096 elems = 4 blocks
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let mut stream = SzpLike::default().compress(&g, eb).unwrap();
+        // Walk to the offset table: magic, header, block count.
+        let mut off = 0usize;
+        bytes::get_u32(&stream, &mut off).unwrap();
+        read_header(&stream, &mut off).unwrap();
+        let n_blocks = bytes::get_u64(&stream, &mut off).unwrap() as usize;
+        assert!(n_blocks >= 2);
+        // Make the second offset non-monotonic (and way out of range)
+        // while the final offset stays valid.
+        stream[off + 8..off + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = SzpLike::default().decompress(&stream).unwrap_err();
+        assert!(err.to_string().contains("offset table"), "err={err:#}");
     }
 
     #[test]

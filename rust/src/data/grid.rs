@@ -6,6 +6,15 @@
 //! (d2 fastest-varying); lower-dimensional data uses leading dims of 1.
 //! Algorithms that walk neighbors simply skip axes of extent 1, which
 //! makes the boundary/EDT/filter code dimension-generic for free.
+//!
+//! [`SharedGrid`] is the zero-copy companion: an `Arc`-backed,
+//! immutable view of a [`Grid`] whose clone is a pointer bump. It is
+//! the currency of the serving layer — a
+//! [`Job`](crate::mitigation::service::Job) holds its inputs as
+//! `SharedGrid`s so submission, queueing, and batch fan-out move
+//! pointers instead of copying fields.
+
+use std::sync::Arc;
 
 /// Shape of a grid, normalized to 3 dims (leading 1s for 1D/2D data).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,6 +197,97 @@ impl Grid<f32> {
     }
 }
 
+/// An immutable, cheaply-cloneable (`Arc`-backed) shared grid.
+///
+/// The read-only currency of the data plane: cloning a `SharedGrid` is
+/// a reference-count bump, never a data copy, so job payloads can fan
+/// out through queues and batches for free. All of [`Grid`]'s read API
+/// is available through `Deref`. Two escape hatches exist for the rare
+/// writer: [`SharedGrid::make_mut`] (copy-on-write — clones the
+/// underlying grid only if other handles still share it) and
+/// [`SharedGrid::into_grid`] (unwrap, cloning only when shared).
+///
+/// Sharing is observable: [`SharedGrid::ptr_eq`] and
+/// [`SharedGrid::handle_count`] let tests prove a path moved pointers
+/// instead of copying grids.
+pub struct SharedGrid<T = f32> {
+    inner: Arc<Grid<T>>,
+}
+
+impl<T> Clone for SharedGrid<T> {
+    fn clone(&self) -> Self {
+        SharedGrid { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> std::ops::Deref for SharedGrid<T> {
+    type Target = Grid<T>;
+    fn deref(&self) -> &Grid<T> {
+        &self.inner
+    }
+}
+
+impl<T> From<Grid<T>> for SharedGrid<T> {
+    fn from(grid: Grid<T>) -> Self {
+        SharedGrid { inner: Arc::new(grid) }
+    }
+}
+
+impl<T> From<Arc<Grid<T>>> for SharedGrid<T> {
+    fn from(inner: Arc<Grid<T>>) -> Self {
+        SharedGrid { inner }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for SharedGrid<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedGrid")
+            .field("handles", &self.handle_count())
+            .field("grid", &*self.inner)
+            .finish()
+    }
+}
+
+impl<T: PartialEq> PartialEq for SharedGrid<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.ptr_eq(other) || *self.inner == *other.inner
+    }
+}
+
+impl<T> SharedGrid<T> {
+    /// Wrap an owned grid (equivalent to `.into()`).
+    pub fn new(grid: Grid<T>) -> Self {
+        grid.into()
+    }
+
+    /// True iff both handles share the same allocation — the zero-copy
+    /// observable: a path that moved this grid by pointer preserves it,
+    /// a path that deep-copied cannot.
+    pub fn ptr_eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+
+    /// Number of live handles to this allocation.
+    pub fn handle_count(&self) -> usize {
+        Arc::strong_count(&self.inner)
+    }
+}
+
+impl<T: Clone> SharedGrid<T> {
+    /// Copy-on-write access: mutate in place when this is the only
+    /// handle, otherwise clone the grid first (other handles keep the
+    /// old data).
+    pub fn make_mut(&mut self) -> &mut Grid<T> {
+        Arc::make_mut(&mut self.inner)
+    }
+
+    /// Unwrap into an owned [`Grid`], cloning only if other handles
+    /// still share the allocation.
+    pub fn into_grid(self) -> Grid<T> {
+        Arc::try_unwrap(self.inner).unwrap_or_else(|arc| (*arc).clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,5 +356,42 @@ mod tests {
         let g = Grid::from_vec((0..12).map(|x| x as f32).collect(), &[3, 4]);
         assert_eq!(g.at(0, 2, 3), 11.0);
         assert_eq!(g.at(0, 0, 1), 1.0);
+    }
+
+    #[test]
+    fn shared_grid_clone_is_a_pointer_bump() {
+        let g: SharedGrid<f32> = Grid::from_vec(vec![1.0; 8], &[8]).into();
+        let h = g.clone();
+        assert!(g.ptr_eq(&h));
+        assert_eq!(g.handle_count(), 2);
+        // Read API flows through Deref.
+        assert_eq!(h.len(), 8);
+        assert_eq!(h.at(0, 0, 3), 1.0);
+    }
+
+    #[test]
+    fn shared_grid_copy_on_write() {
+        let mut g: SharedGrid<f32> = Grid::from_vec(vec![0.0; 4], &[4]).into();
+        let snapshot = g.clone();
+        *g.make_mut().at_mut(0, 0, 0) = 9.0;
+        assert!(!g.ptr_eq(&snapshot), "make_mut on a shared handle must detach");
+        assert_eq!(snapshot.at(0, 0, 0), 0.0, "other handles keep the old data");
+        assert_eq!(g.at(0, 0, 0), 9.0);
+        // Sole handle: mutation stays in place.
+        let mut sole: SharedGrid<f32> = Grid::from_vec(vec![0.0; 4], &[4]).into();
+        let before = sole.data.as_ptr();
+        *sole.make_mut().at_mut(0, 0, 1) = 5.0;
+        assert_eq!(sole.data.as_ptr(), before);
+    }
+
+    #[test]
+    fn shared_grid_into_grid_unwraps_or_clones() {
+        let g: SharedGrid<f32> = Grid::from_vec(vec![2.0; 4], &[4]).into();
+        let keep = g.clone();
+        let owned = g.into_grid(); // shared: clones
+        assert_eq!(owned.data, keep.data);
+        let sole: SharedGrid<f32> = Grid::from_vec(vec![3.0; 2], &[2]).into();
+        let owned = sole.into_grid(); // sole handle: moves
+        assert_eq!(owned.data, vec![3.0; 2]);
     }
 }

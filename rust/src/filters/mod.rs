@@ -22,8 +22,7 @@ pub use uniform::{uniform_filter, uniform_filter_sized_on, uniform_filter_thread
 pub use wiener::{wiener_filter, wiener_filter_sized_on, wiener_filter_threads};
 
 use crate::data::grid::{Grid, Shape};
-use crate::util::par::UnsafeSlice;
-use crate::util::pool::PoolHandle;
+use crate::util::pool::{PoolHandle, UnsafeSlice};
 
 /// Reflected (mirror) index for out-of-range positions, scipy `reflect`
 /// convention: `(d c b a | a b c d | d c b a)`.

@@ -40,7 +40,12 @@
 //!   persistent work-claiming thread-pool runtime all shared-memory
 //!   parallelism runs on (`threads == 1` stays a zero-overhead inline
 //!   path; warm parallel regions spawn no OS threads), with
-//!   [`util::pool::PoolHandle`] selecting which pool a region opens on.
+//!   [`util::pool::PoolHandle`] selecting which pool a region opens on;
+//!   and [`util::arena`], the size-classed scratch-buffer arena the
+//!   zero-copy data plane recycles every full-grid buffer through
+//!   (warm same-shaped jobs allocate nothing, counter-proven), with
+//!   [`util::arena::ArenaHandle`] selecting it per call and
+//!   [`data::grid::SharedGrid`] making job payloads `Arc`-shared.
 //!
 //! ## Guides
 //!
@@ -85,5 +90,5 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
-pub use data::grid::Grid;
+pub use data::grid::{Grid, SharedGrid};
 pub use quant::{ErrorBound, ResolvedBound};

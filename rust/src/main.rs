@@ -90,13 +90,15 @@ SUBCOMMANDS
                service on the shared persistent thread pool;
                --threads is the per-job pipeline parallelism)
   serve       --jobs N [--capacity C] [--interactive-every K]
-              [--deadline-ms D] [--lanes L] [--dataset ...] [--dims AxBxC]
-              [--rel 1e-2] [--eta 0.9] [--threads N] [--seed N]
+              [--deadline-ms D] [--lanes L] [--metrics] [--dataset ...]
+              [--dims AxBxC] [--rel 1e-2] [--eta 0.9] [--threads N]
+              [--seed N]
               (stream N fields through the bounded admission queue:
                every K-th job is interactive-class, --capacity bounds
                queued jobs and exercises backpressure, --deadline-ms
                tags jobs with a completion budget, --lanes > 0 confines
-               the whole service to a private pool; see docs/SERVING.md)
+               the whole service to a private pool, --metrics appends a
+               scrapeable key=value stats line; see docs/SERVING.md)
   distributed [--dataset ...] [--dims AxBxC] [--rel 1e-2] [--ranks N]
               [--strategy embarrassing|exact|approximate] [--seed N]
   info        (PJRT platform + artifacts present)
@@ -283,7 +285,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let stream = codec.compress(&orig, eb)?;
         total_stream += stream.len();
         let dec = codec.decompress(&stream)?;
-        jobs.push(Job { dq: dec.grid, q: dec.quant_indices, eb: dec.bound, cfg });
+        jobs.push(Job::with_config(dec.grid, dec.quant_indices, dec.bound, cfg));
         originals.push(orig);
     }
 
@@ -349,6 +351,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let interactive_every: usize = args.get_parse("interactive-every", 4)?;
     let deadline_ms: u64 = args.get_parse("deadline-ms", 0)?;
     let lanes: usize = args.get_parse("lanes", 0)?;
+    let metrics = args.get_bool("metrics");
     let cfg = MitigationConfig {
         eta: args.get_parse("eta", 0.9)?,
         threads: args.get_parse("threads", 1)?,
@@ -369,7 +372,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let orig = generate(kind, &dims, seed + i as u64);
         let eb = bound.resolve(&orig.data);
         let (q, dq) = qai::quant::quantize_grid(&orig, eb);
-        inputs.push(Job { dq, q, eb, cfg });
+        inputs.push(Job::with_config(dq, q, eb, cfg));
     }
     let n_elems: usize = inputs.iter().map(|j| j.dq.len()).sum();
 
@@ -449,6 +452,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         st.total_queue_wait_s * 1e3 / jobs_n as f64,
         st.total_exec_s * 1e3 / jobs_n as f64
     );
+    let ast = service.arena_stats();
+    println!(
+        "arena: {:.0}% buffer reuse ({} hits / {} misses), {} B pooled",
+        ast.reuse_fraction() * 100.0,
+        ast.hits,
+        ast.misses,
+        ast.bytes_pooled
+    );
+    if metrics {
+        println!("{}", service.metrics_text());
+    }
     anyhow::ensure!(failures == 0, "{failures} job(s) failed");
     Ok(())
 }

@@ -77,6 +77,7 @@
 
 use crate::mitigation::pipeline::mitigate_with_stats_on;
 use crate::mitigation::service::{Job, JobResult};
+use crate::util::arena::{Arena, ArenaHandle};
 use crate::util::pool::{self, PoolHandle, ThreadPool};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -161,7 +162,7 @@ impl SubmitError {
 
 impl std::fmt::Debug for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        // Deliberately compact: the carried job embeds full grids.
+        // Deliberately compact: the carried job references full grids.
         f.write_str(match self {
             SubmitError::QueueFull(_) => "QueueFull(..)",
             SubmitError::Timeout(_) => "Timeout(..)",
@@ -365,6 +366,10 @@ struct Shared {
     /// Explicit pool, or `None` for the global one (resolved lazily so
     /// an idle service never forces global-pool creation).
     pool: Option<Arc<ThreadPool>>,
+    /// Per-service scratch-buffer arena: every job's full-grid
+    /// temporaries and output buffer cycle through it, so warm
+    /// same-shaped jobs allocate nothing.
+    arena: Arena,
 }
 
 impl Shared {
@@ -399,8 +404,14 @@ impl Admission {
             capacity: capacity.max(1),
             next_seq: AtomicU64::new(0),
             pool,
+            arena: Arena::new(),
         });
         Admission { shared, scheduler: Mutex::new(None) }
+    }
+
+    /// The service's scratch-buffer arena.
+    pub(crate) fn arena(&self) -> &Arena {
+        &self.shared.arena
     }
 
     /// Spawn the scheduler thread on first use.
@@ -625,7 +636,14 @@ fn run_job(shared: Arc<Shared>, pending: Pending, seq: u64) {
         // A panic below (defensive: the pipeline asserts on internal
         // invariants) must not take down the worker or sibling jobs.
         match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            mitigate_with_stats_on(handle, &job.dq, &job.q, job.eb, &job.cfg)
+            mitigate_with_stats_on(
+                handle,
+                ArenaHandle::Pooled(&shared.arena),
+                &job.dq,
+                &job.q,
+                job.eb,
+                &job.cfg,
+            )
         })) {
             Ok(result) => result,
             Err(payload) => {

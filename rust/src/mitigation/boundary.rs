@@ -19,10 +19,12 @@
 
 use crate::data::grid::Grid;
 use crate::quant::QIndex;
-use crate::util::par::UnsafeSlice;
-use crate::util::pool::PoolHandle;
+use crate::util::arena::ArenaHandle;
+use crate::util::pool::{PoolHandle, UnsafeSlice};
 
-/// Output of step A.
+/// Output of step A. With a pooled [`ArenaHandle`] both grids' buffers
+/// are arena leases the caller must [`give`](crate::util::arena::Arena::give)
+/// back (the pipeline does).
 pub struct BoundaryResult {
     /// `B₁`: true at quantization-boundary points.
     pub mask: Grid<bool>,
@@ -31,20 +33,22 @@ pub struct BoundaryResult {
 }
 
 /// Detect quantization boundaries and their error signs (parallel
-/// regions on the global pool).
+/// regions on the global pool, buffers freshly allocated).
 pub fn boundary_and_sign(q: &Grid<QIndex>, threads: usize) -> BoundaryResult {
-    boundary_and_sign_on(PoolHandle::Global, q, threads)
+    boundary_and_sign_on(PoolHandle::Global, ArenaHandle::Fresh, q, threads)
 }
 
-/// [`boundary_and_sign`] with its parallel regions confined to `pool`.
+/// [`boundary_and_sign`] with its parallel regions confined to `pool`
+/// and its full-grid outputs acquired from `arena`.
 pub fn boundary_and_sign_on(
     pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
     q: &Grid<QIndex>,
     threads: usize,
 ) -> BoundaryResult {
     let shape = q.shape;
-    let mut mask = Grid::<bool>::like(q);
-    let mut sign = Grid::<i8>::like(q);
+    let mut mask = Grid { shape, data: arena.take_filled(shape.len(), false) };
+    let mut sign = Grid { shape, data: arena.take_filled(shape.len(), 0i8) };
     let dims = shape.dims;
     let strides = shape.strides();
     let active: Vec<usize> = shape.active_axes().collect();
@@ -114,17 +118,19 @@ pub fn boundary_and_sign_on(
 /// Generic neighbor-differs boundary mask (used by step C to derive the
 /// sign-flipping boundary `B₂` from the propagated sign map).
 pub fn boundary_mask<T: PartialEq + Copy + Send + Sync>(g: &Grid<T>, threads: usize) -> Grid<bool> {
-    boundary_mask_on(PoolHandle::Global, g, threads)
+    boundary_mask_on(PoolHandle::Global, ArenaHandle::Fresh, g, threads)
 }
 
-/// [`boundary_mask`] with its parallel regions confined to `pool`.
+/// [`boundary_mask`] with its parallel regions confined to `pool` and
+/// its output mask acquired from `arena`.
 pub fn boundary_mask_on<T: PartialEq + Copy + Send + Sync>(
     pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
     g: &Grid<T>,
     threads: usize,
 ) -> Grid<bool> {
     let shape = g.shape;
-    let mut mask = Grid::<bool>::like(g);
+    let mut mask = Grid { shape, data: arena.take_filled(shape.len(), false) };
     let dims = shape.dims;
     let strides = shape.strides();
     let active: Vec<usize> = shape.active_axes().collect();

@@ -15,14 +15,16 @@
 //! parallelizations split the work (§VII).
 
 use crate::data::grid::{Grid, Shape};
-use crate::util::par::UnsafeSlice;
-use crate::util::pool::PoolHandle;
+use crate::util::arena::ArenaHandle;
+use crate::util::pool::{PoolHandle, UnsafeSlice};
 
 /// "Infinite" squared distance (no boundary found yet); chosen so that
 /// `INF + coordinate²` cannot overflow i64.
 pub const INF: i64 = i64::MAX / 4;
 
-/// Result of an EDT pass.
+/// Result of an EDT pass. With a pooled [`ArenaHandle`] both vectors
+/// are arena leases the caller must
+/// [`give`](crate::util::arena::Arena::give) back (the pipeline does).
 pub struct EdtResult {
     /// Squared distance to the nearest boundary point, per grid point.
     pub dist_sq: Vec<i64>,
@@ -54,24 +56,26 @@ impl EdtResult {
 /// Compute the exact EDT of `mask` (true = boundary/feature point).
 /// `with_features` additionally computes the nearest-feature index map.
 /// `threads` parallelizes the independent lines of each pass (regions
-/// on the global pool).
+/// on the global pool, buffers freshly allocated).
 pub fn edt(mask: &Grid<bool>, with_features: bool, threads: usize) -> EdtResult {
-    edt_on(PoolHandle::Global, mask, with_features, threads)
+    edt_on(PoolHandle::Global, ArenaHandle::Fresh, mask, with_features, threads)
 }
 
-/// [`edt`] with its parallel line passes confined to `pool`.
+/// [`edt`] with its parallel line passes confined to `pool` and its
+/// full-grid outputs acquired from `arena`.
 pub fn edt_on(
     pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
     mask: &Grid<bool>,
     with_features: bool,
     threads: usize,
 ) -> EdtResult {
     let shape = mask.shape;
     let n = shape.len();
-    let mut dist_sq = vec![INF; n];
-    let mut nearest = if with_features { vec![u32::MAX; n] } else { Vec::new() };
-
     assert!(n <= u32::MAX as usize, "grid too large for u32 feature transform");
+    let mut dist_sq = arena.take_filled(n, INF);
+    let mut nearest =
+        if with_features { arena.take_filled(n, u32::MAX) } else { Vec::new() };
     for (i, &m) in mask.data.iter().enumerate() {
         if m {
             dist_sq[i] = 0;

@@ -34,4 +34,6 @@ pub use pipeline::{
     mitigate, mitigate_with_stats, mitigate_with_stats_on, Backend, MitigationConfig,
     PipelineStats,
 };
-pub use service::{Job, JobResult, MitigationService, ServiceConfig, DEFAULT_QUEUE_CAPACITY};
+pub use service::{
+    render_metrics, Job, JobResult, MitigationService, ServiceConfig, DEFAULT_QUEUE_CAPACITY,
+};

@@ -11,7 +11,17 @@
 //! the pool given to [`MitigationService::with_pool`] — and resolve
 //! per-job [`JobTicket`]s. The legacy slice-in/vec-out
 //! [`MitigationService::mitigate_batch`] survives as a thin wrapper
-//! over the same queue.
+//! over the same queue (with an owning
+//! [`mitigate_batch_owned`](MitigationService::mitigate_batch_owned)
+//! sibling that skips even the pointer clones).
+//!
+//! The data plane is zero-copy: [`Job`] payloads are `Arc`-backed
+//! [`SharedGrid`]s, so submission and queueing move pointers, and every
+//! full-grid scratch buffer plus the output of each job cycles through
+//! the service's per-service [`Arena`] — a warm same-shaped job
+//! allocates no full-grid buffers at all (see
+//! [`MitigationService::arena_stats`] and the [`Job`] ownership
+//! contract).
 //!
 //! Pool confinement: a service built [`with_pool`] runs **everything**
 //! on that pool — the cross-job fan-out *and* each job's internal steps
@@ -54,21 +64,37 @@
 
 #![deny(missing_docs)]
 
-use crate::data::grid::Grid;
+use crate::data::grid::{Grid, SharedGrid};
 use crate::mitigation::admission::{Admission, JobTicket, ServiceStats, SubmitError, SubmitOptions};
 use crate::mitigation::pipeline::{MitigationConfig, PipelineStats};
 use crate::quant::{QIndex, ResolvedBound};
+use crate::util::arena::{Arena, ArenaStats};
 use crate::util::pool::ThreadPool;
 use std::sync::Arc;
 
 /// One unit of served work: a decompressed field, its quantization
 /// indices, the resolved bound, and the per-job pipeline configuration.
+///
+/// # Sharing & ownership contract
+///
+/// The grids are held as [`SharedGrid`]s — immutable, `Arc`-backed
+/// payloads. Cloning a `Job` (and everything the service does with one:
+/// [`MitigationService::submit`], the admission queue, the
+/// [`mitigate_batch`](MitigationService::mitigate_batch) compat
+/// wrapper) is a pointer bump; grid data is **never copied** on the
+/// submission path, which [`SharedGrid::ptr_eq`] makes observable. A
+/// caller may keep clones of the inputs while the job is queued or
+/// running, and may mutate its copy only through the copy-on-write
+/// escape hatch ([`SharedGrid::make_mut`]), which cannot affect a job
+/// already submitted. Outputs are freshly-owned [`Grid`]s: the service
+/// allocates them (from its arena), the caller owns them, and
+/// [`MitigationService::recycle`] optionally hands their buffers back.
 #[derive(Clone)]
 pub struct Job {
-    /// Decompressed data `d'`.
-    pub dq: Grid<f32>,
-    /// Quantization-index field.
-    pub q: Grid<QIndex>,
+    /// Decompressed data `d'` (shared, immutable).
+    pub dq: SharedGrid<f32>,
+    /// Quantization-index field (shared, immutable).
+    pub q: SharedGrid<QIndex>,
     /// Resolved error bound the field was compressed with.
     pub eb: ResolvedBound,
     /// Pipeline configuration (η, per-job threads, backend, taper).
@@ -77,8 +103,23 @@ pub struct Job {
 
 impl Job {
     /// Convenience constructor with the default pipeline configuration.
-    pub fn new(dq: Grid<f32>, q: Grid<QIndex>, eb: ResolvedBound) -> Self {
-        Job { dq, q, eb, cfg: MitigationConfig::default() }
+    /// Accepts owned [`Grid`]s or pre-shared [`SharedGrid`]s.
+    pub fn new(
+        dq: impl Into<SharedGrid<f32>>,
+        q: impl Into<SharedGrid<QIndex>>,
+        eb: ResolvedBound,
+    ) -> Self {
+        Job::with_config(dq, q, eb, MitigationConfig::default())
+    }
+
+    /// [`Job::new`] with an explicit pipeline configuration.
+    pub fn with_config(
+        dq: impl Into<SharedGrid<f32>>,
+        q: impl Into<SharedGrid<QIndex>>,
+        eb: ResolvedBound,
+        cfg: MitigationConfig,
+    ) -> Self {
+        Job { dq: dq.into(), q: q.into(), eb, cfg }
     }
 }
 
@@ -172,6 +213,35 @@ impl MitigationService {
         self.admission.stats()
     }
 
+    /// A handle to this service's scratch-buffer arena (every job's
+    /// full-grid temporaries and output buffers cycle through it).
+    /// Handles share state, so one kept by a test or an operator
+    /// dashboard observes the live counters — including after the
+    /// service itself is dropped.
+    pub fn arena(&self) -> Arena {
+        self.admission.arena().clone()
+    }
+
+    /// Snapshot of the arena's reuse counters and gauges.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.admission.arena().stats()
+    }
+
+    /// Hand a finished output grid's buffer back to the service arena,
+    /// so the next same-shaped job's output is allocation-free too.
+    /// Entirely optional — outputs are plain owned [`Grid`]s and may
+    /// simply be dropped.
+    pub fn recycle(&self, grid: Grid<f32>) {
+        self.admission.arena().adopt(grid.data);
+    }
+
+    /// Queue and arena counters rendered as one scrapeable
+    /// `key=value …` text line (the `qai serve --metrics` format). See
+    /// [`render_metrics`].
+    pub fn metrics_text(&self) -> String {
+        render_metrics(&self.stats(), &self.arena_stats())
+    }
+
     /// Compatibility wrapper over the queue: run every job and return
     /// slot `i` of the output for `jobs[i]`, exactly like the original
     /// slice-in/vec-out batch API. Per-job failures (including panics
@@ -180,22 +250,32 @@ impl MitigationService {
     /// [`mitigate_with_stats`](crate::mitigation::pipeline::mitigate_with_stats)
     /// calls.
     ///
-    /// Jobs are cloned into the queue (the streaming API takes
-    /// ownership; this borrowed-slice shim predates it) and submitted
-    /// as [`Priority::Bulk`](crate::mitigation::admission::Priority),
+    /// Cloning a [`Job`] into the queue is an `Arc` pointer bump — grid
+    /// data is shared with the caller's slice, never copied (see the
+    /// [`Job`] ownership contract). Jobs are submitted as
+    /// [`Priority::Bulk`](crate::mitigation::admission::Priority),
     /// blocking for space when the batch exceeds the queue capacity —
     /// so do not call it on a paused service with a batch larger than
     /// the capacity.
     pub fn mitigate_batch(&self, jobs: &[Job]) -> Vec<JobResult> {
+        self.mitigate_batch_owned(jobs.to_vec())
+    }
+
+    /// Owning form of [`mitigate_batch`](MitigationService::mitigate_batch):
+    /// takes the jobs by value and moves them straight into the queue —
+    /// no per-job clone at all, not even of the `Arc` pointers.
+    /// Identical semantics otherwise (bulk class, per-slot error
+    /// labeling, bit-identical outputs).
+    pub fn mitigate_batch_owned(&self, jobs: Vec<Job>) -> Vec<JobResult> {
         if jobs.is_empty() {
             return Vec::new();
         }
         let tickets: Vec<JobTicket> = jobs
-            .iter()
+            .into_iter()
             .map(|job| {
                 // Infallible while `&self` is alive: shutdown only
                 // happens in drop, and no timeout is set.
-                self.submit(job.clone(), SubmitOptions::bulk())
+                self.submit(job, SubmitOptions::bulk())
                     .unwrap_or_else(|e| panic!("batch admission failed: {e}"))
             })
             .collect();
@@ -210,6 +290,43 @@ impl MitigationService {
             })
             .collect()
     }
+}
+
+/// Render service and arena counters as one space-separated
+/// `key=value` line — stable keys, no units, floats in seconds — for
+/// scraping from `qai serve --metrics` output.
+pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
+    format!(
+        "submitted={} rejected_full={} submit_timeouts={} completed={} failed={} \
+         cancelled={} interactive_done={} bulk_done={} deadlines_set={} \
+         deadlines_missed={} max_queue_depth={} queue_depth={} running={} \
+         total_queue_wait_s={:.6} total_exec_s={:.6} arena_hits={} arena_misses={} \
+         arena_returns={} arena_detached={} arena_adopted={} arena_dropped={} \
+         arena_bytes_outstanding={} arena_bytes_pooled={}",
+        stats.submitted,
+        stats.rejected_full,
+        stats.submit_timeouts,
+        stats.completed,
+        stats.failed,
+        stats.cancelled,
+        stats.interactive_done,
+        stats.bulk_done,
+        stats.deadlines_set,
+        stats.deadlines_missed,
+        stats.max_queue_depth,
+        stats.queue_depth,
+        stats.running,
+        stats.total_queue_wait_s,
+        stats.total_exec_s,
+        arena.hits,
+        arena.misses,
+        arena.returns,
+        arena.detached,
+        arena.adopted,
+        arena.dropped,
+        arena.bytes_outstanding,
+        arena.bytes_pooled,
+    )
 }
 
 #[cfg(test)]
@@ -250,7 +367,7 @@ mod tests {
     fn shape_mismatch_is_an_error_not_a_panic() {
         let _g = crate::util::pool::test_guard();
         let mut j = job(DatasetKind::ClimateLike, &[16, 16], 1);
-        j.q = Grid::from_vec(vec![0i64; 64], &[8, 8]);
+        j.q = Grid::from_vec(vec![0i64; 64], &[8, 8]).into();
         let got = MitigationService::new().mitigate_batch(&[j]);
         assert!(got[0].is_err());
         let msg = got[0].as_ref().unwrap_err().to_string();

@@ -10,10 +10,11 @@
 
 use crate::data::grid::Grid;
 use crate::mitigation::boundary::boundary_mask_on;
+use crate::util::arena::ArenaHandle;
 use crate::util::pool::PoolHandle;
 
 /// Propagate boundary signs to the whole domain and derive `B₂`
-/// (parallel regions on the global pool).
+/// (parallel regions on the global pool, buffers freshly allocated).
 ///
 /// * `b1` — quantization-boundary mask from step A;
 /// * `sign_at_boundary` — sign map valid on `b1` points;
@@ -25,12 +26,22 @@ pub fn propagate_signs(
     nearest: &[u32],
     threads: usize,
 ) -> (Grid<i8>, Grid<bool>) {
-    propagate_signs_on(PoolHandle::Global, b1, sign_at_boundary, nearest, threads)
+    propagate_signs_on(
+        PoolHandle::Global,
+        ArenaHandle::Fresh,
+        b1,
+        sign_at_boundary,
+        nearest,
+        threads,
+    )
 }
 
-/// [`propagate_signs`] with its parallel regions confined to `pool`.
+/// [`propagate_signs`] with its parallel regions confined to `pool` and
+/// both full-grid outputs acquired from `arena` (the caller gives them
+/// back; the pipeline does).
 pub fn propagate_signs_on(
     pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
     b1: &Grid<bool>,
     sign_at_boundary: &Grid<i8>,
     nearest: &[u32],
@@ -39,7 +50,8 @@ pub fn propagate_signs_on(
     assert_eq!(b1.shape, sign_at_boundary.shape);
     assert_eq!(nearest.len(), b1.len());
 
-    let mut s = sign_at_boundary.clone();
+    let mut s =
+        Grid { shape: sign_at_boundary.shape, data: arena.take_copy(&sign_at_boundary.data) };
     {
         let b = &b1.data;
         let src = &sign_at_boundary.data;
@@ -53,7 +65,7 @@ pub fn propagate_signs_on(
             }
         });
     }
-    let b2 = boundary_mask_on(pool, &s, threads);
+    let b2 = boundary_mask_on(pool, arena, &s, threads);
     (s, b2)
 }
 

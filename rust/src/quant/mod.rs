@@ -101,8 +101,21 @@ pub fn quantize(data: &[f32], eb: ResolvedBound) -> Vec<QIndex> {
 
 /// Reconstruct from indices: `d'_i = 2 q_i ε`.
 pub fn dequantize(q: &[QIndex], eb: ResolvedBound) -> Vec<f32> {
+    let mut out = vec![0.0f32; q.len()];
+    dequantize_into(q, eb, &mut out);
+    out
+}
+
+/// [`dequantize`] into a caller-provided buffer (`out.len() ==
+/// q.len()`), so decoders can reconstruct into recycled scratch from
+/// [`crate::util::arena`] instead of allocating per call. Every element
+/// of `out` is overwritten.
+pub fn dequantize_into(q: &[QIndex], eb: ResolvedBound, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len(), "dequantize buffer length mismatch");
     let two_eps = 2.0 * eb.abs;
-    q.iter().map(|&qi| (qi as f64 * two_eps) as f32).collect()
+    for (o, &qi) in out.iter_mut().zip(q) {
+        *o = (qi as f64 * two_eps) as f32;
+    }
 }
 
 /// Quantize-then-dequantize convenience: what a pre-quantization

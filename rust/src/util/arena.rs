@@ -1,0 +1,598 @@
+//! Reusable scratch-buffer arena for the mitigation data plane.
+//!
+//! One warm `mitigate()` call needs eight full-grid buffers (boundary
+//! mask, sign map, two distance fields, the feature transform, the
+//! propagated signs, the sign-flip mask, and the output), and the block
+//! decoders need two more per field. Allocating them fresh per job makes
+//! the allocator — not the math — the hot path once a service runs many
+//! same-shaped jobs back to back. This module provides the fix: a
+//! thread-safe **size-classed free list**, keyed by `(element type,
+//! length)`, that hands previously-used buffers back out instead of
+//! allocating.
+//!
+//! Design points:
+//!
+//! * **Exact-length classes** — a buffer is only reused for a request of
+//!   the same element type and the same length, so every consumer can
+//!   (and must) fully re-initialize it: [`Arena::take_filled`] /
+//!   [`Arena::take_copy`] do this for them, and [`Arena::take_stale`]
+//!   callers provably overwrite every element themselves. Outputs are
+//!   therefore bit-identical to the fresh-allocation path by
+//!   construction, which the arena test suite sweeps across datasets ×
+//!   dims × threads.
+//! * **Explicit lifecycle** — [`take_filled`](Arena::take_filled) /
+//!   [`take_copy`](Arena::take_copy) lease a buffer out,
+//!   [`give`](Arena::give) returns it, [`detach`](Arena::detach)
+//!   records that a leased buffer escapes to the caller (a pipeline
+//!   output embedded in a returned [`Grid`](crate::data::grid::Grid)),
+//!   and [`adopt`](Arena::adopt) recycles a foreign buffer (e.g. an
+//!   output the caller hands back via
+//!   [`MitigationService::recycle`](crate::mitigation::service::MitigationService::recycle)).
+//! * **Counter-proven reuse** — [`ArenaStats`] exposes hit/miss/return
+//!   counters and a bytes-outstanding gauge, mirroring the
+//!   `os_thread_spawns` trick from the pool runtime: tests assert that a
+//!   warm same-shaped job performs **zero** new full-grid allocations
+//!   (miss counter unchanged) and that bytes-outstanding returns to
+//!   zero once all lessees are done.
+//! * **Bounded retention** — each `(type, length)` class keeps at most
+//!   [`MAX_FREE_PER_CLASS`] buffers, the total parked across *all*
+//!   classes is capped at [`MAX_POOLED_BYTES`], and emptied classes
+//!   are removed from the map; surplus `give`s fall through to the
+//!   allocator (counted in [`ArenaStats::dropped`]), so a service that
+//!   sees many distinct shapes cannot hoard unbounded memory.
+//!   [`Arena::with_limits`] tightens both knobs per deployment.
+//!
+//! [`Arena`] is a cheaply-cloneable handle (shared interior, like a
+//! pool `Arc`); [`ArenaHandle`] is the `Copy` selector threaded through
+//! the pipeline — [`ArenaHandle::Fresh`] preserves the historical
+//! allocate-per-call behavior exactly and touches no counters, which is
+//! what every standalone entry point (`mitigate`, `edt`, `decompress`)
+//! defaults to.
+//!
+//! Accounting caveat: a panic between a `take` and its `give` frees the
+//! buffer to the allocator as usual but leaves `bytes_outstanding`
+//! non-zero — the gauge tracks *accounted* leases, not RAII ownership.
+//! The service catches per-job panics, so its leak test only covers the
+//! normal completion path.
+//!
+//! # Examples
+//!
+//! ```
+//! use qai::util::arena::Arena;
+//!
+//! let arena = Arena::new();
+//! let buf: Vec<f32> = arena.take_filled(1024, 0.0);
+//! arena.give(buf); // back to the free list
+//! let again: Vec<f32> = arena.take_filled(1024, 0.0);
+//! assert_eq!(arena.stats().hits, 1);
+//! arena.give(again);
+//! assert_eq!(arena.stats().bytes_outstanding, 0);
+//! ```
+
+#![deny(missing_docs)]
+
+use std::any::{Any, TypeId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default maximum buffers retained per `(element type, length)`
+/// class; surplus returns are dropped to the allocator. Eight covers
+/// every full-grid buffer one pipeline run cycles through a single
+/// class.
+pub const MAX_FREE_PER_CLASS: usize = 8;
+
+/// Default cap on total bytes parked across *all* free lists (1 GiB).
+/// The per-class cap alone would not bound a workload of many distinct
+/// shapes — each new `(type, length)` pair opens a fresh class — so
+/// returns and adoptions that would push the pooled total past this
+/// cap are dropped to the allocator instead (counted in
+/// [`ArenaStats::dropped`]). Enforced exactly: the gauge is only
+/// touched under the free-list lock.
+pub const MAX_POOLED_BYTES: u64 = 1 << 30;
+
+/// Point-in-time snapshot of an arena's counters.
+///
+/// All `u64` fields are monotonic totals since the arena was built;
+/// `bytes_outstanding` / `bytes_pooled` are instantaneous gauges.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Take requests served from the free list (no allocation).
+    pub hits: u64,
+    /// Take requests that had to allocate fresh.
+    pub misses: u64,
+    /// Leased buffers returned via [`Arena::give`].
+    pub returns: u64,
+    /// Leased buffers that escaped via [`Arena::detach`] (pipeline
+    /// outputs embedded in grids handed to the caller).
+    pub detached: u64,
+    /// Foreign buffers recycled via [`Arena::adopt`].
+    pub adopted: u64,
+    /// Returned/adopted buffers dropped because their class was full.
+    pub dropped: u64,
+    /// Bytes currently leased out (taken, neither given nor detached).
+    pub bytes_outstanding: u64,
+    /// Bytes currently parked in the free lists.
+    pub bytes_pooled: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of takes served without allocating (0 when idle).
+    pub fn reuse_fraction(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One free-list class: recycled buffers of a single `(type, length)`.
+type FreeList = Vec<Box<dyn Any + Send>>;
+
+struct ArenaInner {
+    classes: Mutex<HashMap<(TypeId, usize), FreeList>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returns: AtomicU64,
+    detached: AtomicU64,
+    adopted: AtomicU64,
+    dropped: AtomicU64,
+    bytes_outstanding: AtomicU64,
+    bytes_pooled: AtomicU64,
+    /// Retention limits (see [`MAX_FREE_PER_CLASS`] / [`MAX_POOLED_BYTES`]).
+    per_class_cap: usize,
+    max_pooled_bytes: u64,
+}
+
+/// A thread-safe scratch-buffer arena. Cloning the handle shares the
+/// same free lists and counters (the service clones one handle into
+/// every job); the backing storage is freed when the last handle drops.
+#[derive(Clone)]
+pub struct Arena {
+    inner: Arc<ArenaInner>,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Arena::new()
+    }
+}
+
+impl std::fmt::Debug for Arena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Arena").field("stats", &self.stats()).finish()
+    }
+}
+
+fn bytes_of<T>(len: usize) -> u64 {
+    (len * std::mem::size_of::<T>()) as u64
+}
+
+impl Arena {
+    /// An arena with the default retention limits
+    /// ([`MAX_FREE_PER_CLASS`], [`MAX_POOLED_BYTES`]).
+    pub fn new() -> Self {
+        Arena::with_limits(MAX_FREE_PER_CLASS, MAX_POOLED_BYTES)
+    }
+
+    /// An arena with explicit retention limits: at most `per_class_cap`
+    /// free buffers per `(type, length)` class and at most
+    /// `max_pooled_bytes` parked in total. Use to bound a deployment
+    /// that serves many distinct grid shapes.
+    pub fn with_limits(per_class_cap: usize, max_pooled_bytes: u64) -> Self {
+        Arena {
+            inner: Arc::new(ArenaInner {
+                classes: Mutex::new(HashMap::new()),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                returns: AtomicU64::new(0),
+                detached: AtomicU64::new(0),
+                adopted: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+                bytes_outstanding: AtomicU64::new(0),
+                bytes_pooled: AtomicU64::new(0),
+                per_class_cap,
+                max_pooled_bytes,
+            }),
+        }
+    }
+
+    /// Pop a recycled buffer of exactly `len` elements of `T`, or `None`
+    /// on a class miss. Contents are whatever the previous user left.
+    /// Emptied classes are removed so a stream of one-off shapes cannot
+    /// grow the map without bound. The `bytes_pooled` gauge is updated
+    /// while the class lock is held (here and in [`Arena::park`]), so
+    /// it can never transiently underflow.
+    fn pop<T: Send + 'static>(&self, len: usize) -> Option<Vec<T>> {
+        let key = (TypeId::of::<T>(), len);
+        let mut classes = self.inner.classes.lock().unwrap();
+        let list = classes.get_mut(&key)?;
+        let boxed = list.pop()?;
+        if list.is_empty() {
+            classes.remove(&key);
+        }
+        self.inner.bytes_pooled.fetch_sub(bytes_of::<T>(len), Ordering::Relaxed);
+        drop(classes);
+        let vec = *boxed.downcast::<Vec<T>>().expect("arena class type confusion");
+        debug_assert_eq!(vec.len(), len);
+        Some(vec)
+    }
+
+    /// Park `vec` in its class free list unless a retention limit says
+    /// drop it. Shared by [`Arena::give`] and [`Arena::adopt`], which
+    /// differ only in how the lease accounting treats the buffer.
+    fn park<T: Send + 'static>(&self, vec: Vec<T>) {
+        let len = vec.len();
+        let bytes = bytes_of::<T>(len);
+        let key = (TypeId::of::<T>(), len);
+        let mut classes = self.inner.classes.lock().unwrap();
+        // Gauge reads/writes happen under the lock, so this check is
+        // exact, not racy.
+        let over_total =
+            self.inner.bytes_pooled.load(Ordering::Relaxed) + bytes > self.inner.max_pooled_bytes;
+        let list = classes.entry(key).or_default();
+        if over_total || list.len() >= self.inner.per_class_cap {
+            if list.is_empty() {
+                classes.remove(&key);
+            }
+            drop(classes);
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        list.push(Box::new(vec));
+        self.inner.bytes_pooled.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Account one lease of `len` elements of `T` and pop a recycled
+    /// buffer for it: `Some` is a hit, `None` a miss (the caller
+    /// allocates). The single home of the hit/miss/outstanding
+    /// bookkeeping, so the `take_*` front ends cannot drift apart.
+    fn lease<T: Send + 'static>(&self, len: usize) -> Option<Vec<T>> {
+        let popped = self.pop::<T>(len);
+        let counter = if popped.is_some() { &self.inner.hits } else { &self.inner.misses };
+        counter.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes_outstanding.fetch_add(bytes_of::<T>(len), Ordering::Relaxed);
+        popped
+    }
+
+    /// Lease a buffer of `len` elements, every element set to `fill` —
+    /// the arena equivalent of `vec![fill; len]`. Zero-length requests
+    /// bypass the arena entirely.
+    pub fn take_filled<T: Copy + Send + 'static>(&self, len: usize, fill: T) -> Vec<T> {
+        if len == 0 {
+            return Vec::new();
+        }
+        match self.lease::<T>(len) {
+            Some(mut vec) => {
+                vec.fill(fill);
+                vec
+            }
+            None => vec![fill; len],
+        }
+    }
+
+    /// Lease a buffer holding a copy of `src` — the arena equivalent of
+    /// `src.to_vec()`.
+    pub fn take_copy<T: Copy + Send + 'static>(&self, src: &[T]) -> Vec<T> {
+        if src.is_empty() {
+            return Vec::new();
+        }
+        match self.lease::<T>(src.len()) {
+            Some(mut vec) => {
+                vec.copy_from_slice(src);
+                vec
+            }
+            None => src.to_vec(),
+        }
+    }
+
+    /// Lease a buffer of `len` elements **without initializing it**:
+    /// recycled buffers keep their stale (but memory-safe — every
+    /// element is an initialized `T`) previous contents; fresh
+    /// allocations are `T::default()`-filled. For consumers that
+    /// provably overwrite every element before reading (the decoders'
+    /// reconstruction passes), where [`Arena::take_filled`]'s fill
+    /// would be a wasted full-buffer memset on the warm path.
+    pub fn take_stale<T: Copy + Default + Send + 'static>(&self, len: usize) -> Vec<T> {
+        if len == 0 {
+            return Vec::new();
+        }
+        match self.lease::<T>(len) {
+            Some(vec) => vec,
+            None => vec![T::default(); len],
+        }
+    }
+
+    /// Return a leased buffer to its free list. Must only be called
+    /// with buffers obtained from [`Arena::take_filled`] /
+    /// [`Arena::take_copy`] on this arena (the lease accounting
+    /// underflows otherwise); recycle foreign buffers with
+    /// [`Arena::adopt`].
+    pub fn give<T: Copy + Send + 'static>(&self, vec: Vec<T>) {
+        if vec.is_empty() {
+            return;
+        }
+        self.inner.returns.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes_outstanding.fetch_sub(bytes_of::<T>(vec.len()), Ordering::Relaxed);
+        self.park(vec);
+    }
+
+    /// Record that a leased buffer escapes to the caller (it will never
+    /// be `give`n back — e.g. it now backs an output grid the user
+    /// owns). Clears it from the outstanding gauge.
+    pub fn detach<T: Copy + Send + 'static>(&self, escaped: &[T]) {
+        if escaped.is_empty() {
+            return;
+        }
+        self.inner.detached.fetch_add(1, Ordering::Relaxed);
+        self.inner.bytes_outstanding.fetch_sub(bytes_of::<T>(escaped.len()), Ordering::Relaxed);
+    }
+
+    /// Recycle a buffer the arena never leased (e.g. an output grid the
+    /// caller is done with). It joins the free list without touching
+    /// the lease accounting, making warm outputs allocation-free too.
+    pub fn adopt<T: Copy + Send + 'static>(&self, vec: Vec<T>) {
+        if vec.is_empty() {
+            return;
+        }
+        self.inner.adopted.fetch_add(1, Ordering::Relaxed);
+        self.park(vec);
+    }
+
+    /// Snapshot the counters and gauges.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            hits: self.inner.hits.load(Ordering::Relaxed),
+            misses: self.inner.misses.load(Ordering::Relaxed),
+            returns: self.inner.returns.load(Ordering::Relaxed),
+            detached: self.inner.detached.load(Ordering::Relaxed),
+            adopted: self.inner.adopted.load(Ordering::Relaxed),
+            dropped: self.inner.dropped.load(Ordering::Relaxed),
+            bytes_outstanding: self.inner.bytes_outstanding.load(Ordering::Relaxed),
+            bytes_pooled: self.inner.bytes_pooled.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Which arena (if any) a scratch acquisition goes through.
+///
+/// Mirrors [`PoolHandle`](crate::util::pool::PoolHandle): most code
+/// does not care and uses [`ArenaHandle::Fresh`], which is a direct
+/// pass-through to the allocator — bit- and behavior-identical to the
+/// historical `vec![..]` paths, with zero bookkeeping. The serving
+/// layer threads [`ArenaHandle::Pooled`] down so every full-grid
+/// buffer of a job is recycled across jobs.
+#[derive(Clone, Copy, Default)]
+pub enum ArenaHandle<'a> {
+    /// Allocate fresh and drop on return — the historical behavior.
+    #[default]
+    Fresh,
+    /// Lease from / return to the given arena.
+    Pooled(&'a Arena),
+}
+
+impl ArenaHandle<'_> {
+    /// [`Arena::take_filled`], or `vec![fill; len]` when `Fresh`.
+    pub fn take_filled<T: Copy + Send + 'static>(self, len: usize, fill: T) -> Vec<T> {
+        match self {
+            ArenaHandle::Fresh => vec![fill; len],
+            ArenaHandle::Pooled(a) => a.take_filled(len, fill),
+        }
+    }
+
+    /// [`Arena::take_copy`], or `src.to_vec()` when `Fresh`.
+    pub fn take_copy<T: Copy + Send + 'static>(self, src: &[T]) -> Vec<T> {
+        match self {
+            ArenaHandle::Fresh => src.to_vec(),
+            ArenaHandle::Pooled(a) => a.take_copy(src),
+        }
+    }
+
+    /// [`Arena::take_stale`], or `vec![T::default(); len]` when
+    /// `Fresh`. Callers must overwrite every element before reading.
+    pub fn take_stale<T: Copy + Default + Send + 'static>(self, len: usize) -> Vec<T> {
+        match self {
+            ArenaHandle::Fresh => vec![T::default(); len],
+            ArenaHandle::Pooled(a) => a.take_stale(len),
+        }
+    }
+
+    /// [`Arena::give`], or a plain drop when `Fresh`.
+    pub fn give<T: Copy + Send + 'static>(self, vec: Vec<T>) {
+        match self {
+            ArenaHandle::Fresh => drop(vec),
+            ArenaHandle::Pooled(a) => a.give(vec),
+        }
+    }
+
+    /// [`Arena::detach`]; no-op when `Fresh`.
+    pub fn detach<T: Copy + Send + 'static>(self, escaped: &[T]) {
+        if let ArenaHandle::Pooled(a) = self {
+            a.detach(escaped);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let arena = Arena::new();
+        let a: Vec<i64> = arena.take_filled(100, 7);
+        assert!(a.iter().all(|&v| v == 7));
+        let st = arena.stats();
+        assert_eq!((st.hits, st.misses), (0, 1));
+        assert_eq!(st.bytes_outstanding, 800);
+        arena.give(a);
+        let st = arena.stats();
+        assert_eq!(st.bytes_outstanding, 0);
+        assert_eq!(st.bytes_pooled, 800);
+        let b: Vec<i64> = arena.take_filled(100, -3);
+        assert!(b.iter().all(|&v| v == -3), "recycled buffer must be re-initialized");
+        let st = arena.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert_eq!(st.bytes_pooled, 0);
+        arena.give(b);
+    }
+
+    #[test]
+    fn classes_are_type_and_length_exact() {
+        let arena = Arena::new();
+        let a: Vec<f32> = arena.take_filled(64, 0.0);
+        arena.give(a);
+        // Same length, different type: miss.
+        let b: Vec<u32> = arena.take_filled(64, 0);
+        // Same type, different length: miss.
+        let c: Vec<f32> = arena.take_filled(65, 0.0);
+        assert_eq!(arena.stats().hits, 0);
+        assert_eq!(arena.stats().misses, 3);
+        arena.give(b);
+        arena.give(c);
+    }
+
+    #[test]
+    fn take_stale_skips_reinitialization() {
+        let arena = Arena::new();
+        let mut v: Vec<i64> = arena.take_stale(4);
+        assert_eq!(v, vec![0; 4], "fresh stale leases are default-filled");
+        v.copy_from_slice(&[1, 2, 3, 4]);
+        arena.give(v);
+        let v: Vec<i64> = arena.take_stale(4);
+        assert_eq!(v, vec![1, 2, 3, 4], "recycled stale lease keeps previous contents");
+        assert_eq!(arena.stats().hits, 1);
+        arena.give(v);
+    }
+
+    #[test]
+    fn take_copy_matches_source() {
+        let arena = Arena::new();
+        let src: Vec<f32> = (0..50).map(|i| i as f32 * 0.5).collect();
+        let a = arena.take_copy(&src);
+        assert_eq!(a, src);
+        arena.give(a);
+        let b = arena.take_copy(&src);
+        assert_eq!(b, src);
+        assert_eq!(arena.stats().hits, 1);
+        arena.give(b);
+    }
+
+    #[test]
+    fn detach_clears_outstanding_without_pooling() {
+        let arena = Arena::new();
+        let out: Vec<f32> = arena.take_filled(32, 1.0);
+        arena.detach(&out);
+        let st = arena.stats();
+        assert_eq!(st.bytes_outstanding, 0);
+        assert_eq!(st.bytes_pooled, 0);
+        assert_eq!(st.detached, 1);
+        // The buffer escaped; taking again is a miss.
+        let next: Vec<f32> = arena.take_filled(32, 2.0);
+        assert_eq!(arena.stats().misses, 2);
+        arena.give(next);
+        drop(out);
+    }
+
+    #[test]
+    fn adopt_feeds_the_free_list() {
+        let arena = Arena::new();
+        arena.adopt(vec![0.25f32; 16]);
+        let st = arena.stats();
+        assert_eq!(st.adopted, 1);
+        assert_eq!(st.bytes_outstanding, 0);
+        let v: Vec<f32> = arena.take_filled(16, 0.0);
+        assert_eq!(arena.stats().hits, 1);
+        arena.give(v);
+    }
+
+    #[test]
+    fn class_capacity_is_bounded() {
+        let arena = Arena::new();
+        for _ in 0..(MAX_FREE_PER_CLASS + 3) {
+            arena.adopt(vec![0u32; 8]);
+        }
+        let st = arena.stats();
+        assert_eq!(st.dropped, 3);
+        assert_eq!(st.bytes_pooled, (MAX_FREE_PER_CLASS * 8 * 4) as u64);
+    }
+
+    #[test]
+    fn total_pooled_bytes_are_soft_capped_across_classes() {
+        // 100-byte cap: distinct lengths open distinct classes, so the
+        // per-class cap alone would retain all of these.
+        let arena = Arena::with_limits(8, 100);
+        arena.adopt(vec![0u8; 60]); // pooled: 60
+        arena.adopt(vec![0u8; 30]); // pooled: 90
+        arena.adopt(vec![0u8; 20]); // 90 + 20 > 100 → dropped
+        arena.adopt(vec![0u8; 10]); // pooled: 100
+        let st = arena.stats();
+        assert_eq!(st.bytes_pooled, 100);
+        assert_eq!(st.dropped, 1);
+    }
+
+    #[test]
+    fn emptied_classes_are_removed_from_the_map() {
+        let arena = Arena::new();
+        let v: Vec<i64> = arena.take_filled(7, 0); // miss
+        arena.give(v); // class (i64, 7) holds one buffer
+        assert_eq!(arena.inner.classes.lock().unwrap().len(), 1);
+        let v: Vec<i64> = arena.take_filled(7, 0); // hit: pops the last buffer
+        assert_eq!(
+            arena.inner.classes.lock().unwrap().len(),
+            0,
+            "popping a class empty must remove its map entry"
+        );
+        assert_eq!(arena.stats().hits, 1);
+        arena.detach(&v); // balance the lease accounting
+    }
+
+    #[test]
+    fn zero_length_bypasses_counters() {
+        let arena = Arena::new();
+        let v: Vec<i8> = arena.take_filled(0, 0);
+        arena.give(v);
+        arena.detach::<i8>(&[]);
+        arena.adopt::<i8>(Vec::new());
+        assert_eq!(arena.stats(), ArenaStats::default());
+    }
+
+    #[test]
+    fn fresh_handle_is_a_pure_passthrough() {
+        let h = ArenaHandle::Fresh;
+        let v: Vec<f32> = h.take_filled(10, 3.0);
+        assert_eq!(v, vec![3.0; 10]);
+        let c = h.take_copy(&v);
+        assert_eq!(c, v);
+        h.give(v);
+        h.detach(&c);
+        h.give(c);
+    }
+
+    #[test]
+    fn handles_share_state_across_clones_and_threads() {
+        let arena = Arena::new();
+        let a2 = arena.clone();
+        let t = std::thread::spawn(move || {
+            let v: Vec<i64> = a2.take_filled(256, 0);
+            a2.give(v);
+        });
+        t.join().unwrap();
+        let v: Vec<i64> = arena.take_filled(256, 1);
+        assert_eq!(arena.stats().hits, 1);
+        arena.give(v);
+    }
+
+    #[test]
+    fn reuse_fraction_reported() {
+        let arena = Arena::new();
+        assert_eq!(arena.stats().reuse_fraction(), 0.0);
+        let v: Vec<f32> = arena.take_filled(4, 0.0);
+        arena.give(v);
+        let v: Vec<f32> = arena.take_filled(4, 0.0);
+        assert!((arena.stats().reuse_fraction() - 0.5).abs() < 1e-12);
+        arena.give(v);
+    }
+}

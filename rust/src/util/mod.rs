@@ -2,12 +2,14 @@
 //! (`rand`, `rayon`, `proptest`) but are implemented in-repo because the
 //! build environment is offline (DESIGN.md §10).
 //!
-//! Parallelism lives in two modules: [`pool`] is the persistent
-//! thread-pool runtime every hot path uses; [`par`] is the original
-//! fork-join implementation, kept as the overhead baseline for
-//! `hotpath_microbench` and as the provider of [`par::UnsafeSlice`].
+//! Shared-memory parallelism runs on [`pool`], the persistent
+//! thread-pool runtime (which also hosts [`pool::UnsafeSlice`], the
+//! disjoint-writes cell of every parallel kernel); full-grid scratch
+//! buffers are recycled through [`arena`]. The original fork-join
+//! substrate (`util::par`) is retired — a minimal copy survives only
+//! inside `hotpath_microbench` as the dispatch-overhead baseline.
 
-pub mod par;
+pub mod arena;
 pub mod pool;
 pub mod prop;
 pub mod rng;

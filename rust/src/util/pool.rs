@@ -1,10 +1,10 @@
 //! Persistent shared-memory thread-pool runtime.
 //!
-//! The original parallel substrate ([`crate::util::par`]) spawns fresh
-//! OS threads via `std::thread::scope` on *every* call, so one
-//! `mitigate()` run pays fork-join startup five-plus times (steps A–E)
-//! and each SZp/SZ3 block decompression pays it again. This module
-//! replaces that with a **persistent pool**: workers are spawned once
+//! The original parallel substrate (the retired `util::par` fork-join
+//! module) spawned fresh OS threads via `std::thread::scope` on *every*
+//! call, so one `mitigate()` run paid fork-join startup five-plus times
+//! (steps A–E) and each SZp/SZ3 block decompression paid it again. This
+//! module replaces that with a **persistent pool**: workers are spawned once
 //! (lazily, for the [`global`] pool) and then parked on a condition
 //! variable; each parallel region is published as a heap-allocated
 //! ticket that woken workers *and the calling thread* drain
@@ -15,7 +15,7 @@
 //!
 //! * **Drop-in semantics** — [`chunks_mut`] / [`for_range`] /
 //!   [`for_batches`] take the same `(…, threads, …)` arguments and use
-//!   the same work decomposition as the `util::par` free functions, so
+//!   the same work decomposition as the old fork-join free functions, so
 //!   outputs are bit-identical to both the fork-join implementation and
 //!   the sequential path (every call site writes disjoint data, making
 //!   results schedule-independent). One deliberate divergence: actual
@@ -72,7 +72,6 @@
 
 #![deny(missing_docs)]
 
-use crate::util::par::UnsafeSlice;
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -341,9 +340,9 @@ impl ThreadPool {
     }
 
     /// Process `data` in `threads` contiguous chunks, calling
-    /// `f(chunk_start_index, chunk)` on each — drop-in for
-    /// [`crate::util::par::parallel_chunks_mut`] (identical chunk
-    /// decomposition, balanced to within one element).
+    /// `f(chunk_start_index, chunk)` on each — drop-in for the retired
+    /// fork-join `parallel_chunks_mut` (identical chunk decomposition,
+    /// balanced to within one element).
     pub fn chunks_mut<T: Send, F>(&self, data: &mut [T], threads: usize, f: F)
     where
         F: Fn(usize, &mut [T]) + Sync,
@@ -370,7 +369,7 @@ impl ThreadPool {
     }
 
     /// Self-scheduled loop over `0..n` claiming `grain` indices at a
-    /// time — drop-in for [`crate::util::par::parallel_for_range`].
+    /// time — drop-in for the retired fork-join `parallel_for_range`.
     pub fn for_range<F>(&self, n: usize, threads: usize, grain: usize, f: F)
     where
         F: Fn(usize) + Sync,
@@ -391,8 +390,8 @@ impl ThreadPool {
 
     /// Like [`ThreadPool::for_range`] but hands the body whole
     /// contiguous batches, so per-batch scratch (e.g. the EDT's Voronoi
-    /// stacks) is allocated once per batch — drop-in for
-    /// [`crate::util::par::parallel_for_batches`].
+    /// stacks) is allocated once per batch — drop-in for the retired
+    /// fork-join `parallel_for_batches`.
     pub fn for_batches<F>(&self, n: usize, threads: usize, grain: usize, f: F)
     where
         F: Fn(Range<usize>) + Sync,
@@ -552,6 +551,72 @@ where
     F: Fn(Range<usize>) + Sync,
 {
     PoolHandle::Global.for_batches(n, threads, grain, f)
+}
+
+/// A slice wrapper that asserts disjoint-index writes at the type
+/// level's edge: workers write through raw pointers. The caller must
+/// guarantee that no index is written by two workers (all users in this
+/// crate index by disjoint line/block decompositions). This is the
+/// disjoint-writes cell every parallel kernel in the crate builds on
+/// (it moved here from the retired fork-join module, whose only
+/// surviving piece it is).
+pub struct UnsafeSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for UnsafeSlice<'_, T> {}
+unsafe impl<T: Send> Sync for UnsafeSlice<'_, T> {}
+
+impl<'a, T> UnsafeSlice<'a, T> {
+    /// Wrap a mutable slice for disjoint parallel writes.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        UnsafeSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// Length of the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `value` at `i`.
+    ///
+    /// # Safety
+    /// `i < len` and no other thread concurrently reads or writes `i`.
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = value;
+    }
+
+    /// Read the value at `i` (T: Copy).
+    ///
+    /// # Safety
+    /// `i < len` and no other thread concurrently writes `i`.
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// Get a mutable sub-slice `[start, start+len)`.
+    ///
+    /// # Safety
+    /// The range is in bounds and not aliased by any concurrent access.
+    #[inline]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &'a mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
 }
 
 /// Run a set of **mutually-blocking** tasks to completion, one

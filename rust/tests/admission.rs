@@ -25,7 +25,7 @@ fn make_job(dims: &[usize], seed: u64, threads: usize) -> Job {
     let orig = generate(DatasetKind::ClimateLike, dims, seed);
     let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
     let (q, dq) = quantize_grid(&orig, eb);
-    Job { dq, q, eb, cfg: MitigationConfig { threads, ..Default::default() } }
+    Job::with_config(dq, q, eb, MitigationConfig { threads, ..Default::default() })
 }
 
 /// A tiny job whose pipeline is effectively zero-duration: a single
@@ -252,7 +252,7 @@ fn stats_counters_deterministic_under_single_thread() {
         );
         // A shape-mismatched job: fails deterministically.
         let mut bad = make_job(&[18, 18], 6, 1);
-        bad.q = Grid::from_vec(vec![0i64; 4], &[2, 2]);
+        bad.q = Grid::from_vec(vec![0i64; 4], &[2, 2]).into();
         tickets.push(service.try_submit(bad, SubmitOptions::bulk()).unwrap());
         // Over-capacity rejection: deterministic counter bump.
         let service_full = paused_service(1, 1);

@@ -1,0 +1,284 @@
+//! Zero-copy data-plane proofs: arena-backed scratch reuse and
+//! `Arc`-backed job payloads.
+//!
+//! Three invariant families:
+//!
+//! 1. **Bit-exactness** — the arena path produces byte-identical
+//!    outputs to the fresh-allocation path, cold and warm, across
+//!    datasets × dims × thread counts (buffer recycling must be purely
+//!    an allocator optimization).
+//! 2. **Warm-path allocation proof** — a second same-shaped job through
+//!    one service performs zero new full-grid allocations (arena miss
+//!    counter unchanged), the arena analog of the pool runtime's
+//!    `os_thread_spawns` trick.
+//! 3. **Zero-copy submission** — `submit` / `mitigate_batch` move `Arc`
+//!    pointers, never grid bytes, observable through `SharedGrid`
+//!    pointer identity and handle counts; and the lease accounting
+//!    drains to zero (no leaks) once jobs are done.
+
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::pipeline::{mitigate_with_stats, mitigate_with_stats_on};
+use qai::mitigation::{Job, MitigationConfig, MitigationService, ServiceConfig, SubmitOptions};
+use qai::quant::{quantize_grid, ErrorBound, ResolvedBound};
+use qai::util::arena::{Arena, ArenaHandle};
+use qai::util::pool::PoolHandle;
+
+fn field(kind: DatasetKind, dims: &[usize], seed: u64) -> (Grid<f32>, Grid<i64>, ResolvedBound) {
+    let orig = generate(kind, dims, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    (dq, q, eb)
+}
+
+#[test]
+fn arena_path_is_bit_exact_across_datasets_dims_threads() {
+    let cases: &[(DatasetKind, &[usize])] = &[
+        (DatasetKind::ClimateLike, &[40, 40]),
+        (DatasetKind::MirandaLike, &[18, 18, 18]),
+        (DatasetKind::CombustionLike, &[14, 14, 14]),
+        (DatasetKind::HurricaneLike, &[200]),
+    ];
+    for &(kind, dims) in cases {
+        let (dq, q, eb) = field(kind, dims, 9);
+        for threads in [1usize, 4] {
+            let cfg = MitigationConfig { threads, ..Default::default() };
+            let (fresh, fresh_stats) = mitigate_with_stats(&dq, &q, eb, &cfg).unwrap();
+            let arena = Arena::new();
+            // Cold pass (populates the free lists), then a warm pass
+            // that runs entirely on recycled buffers.
+            for pass in 0..2 {
+                let (out, stats) = mitigate_with_stats_on(
+                    PoolHandle::Global,
+                    ArenaHandle::Pooled(&arena),
+                    &dq,
+                    &q,
+                    eb,
+                    &cfg,
+                )
+                .unwrap();
+                assert_eq!(
+                    out.data, fresh.data,
+                    "kind={kind:?} dims={dims:?} threads={threads} pass={pass}"
+                );
+                assert_eq!(stats.n_boundary1, fresh_stats.n_boundary1);
+                assert_eq!(stats.n_boundary2, fresh_stats.n_boundary2);
+            }
+            assert!(arena.stats().hits > 0, "warm pass must reuse buffers");
+        }
+    }
+}
+
+#[test]
+fn warm_repeat_job_allocates_zero_full_grid_buffers() {
+    let (dq, q, eb) = field(DatasetKind::MirandaLike, &[24, 24, 24], 5);
+    let job = Job::new(dq.clone(), q.clone(), eb);
+    let (reference, _) = mitigate_with_stats(&dq, &q, eb, &job.cfg).unwrap();
+
+    let service = MitigationService::new();
+    let out1 = service
+        .submit(job.clone(), SubmitOptions::bulk())
+        .unwrap()
+        .wait()
+        .result
+        .unwrap()
+        .0;
+    assert_eq!(out1.data, reference.data);
+    // Hand the output buffer back so the warm job's output is
+    // allocation-free too.
+    service.recycle(out1);
+
+    let cold = service.arena_stats();
+    assert!(cold.misses > 0, "the cold job must have populated the arena");
+
+    let out2 = service
+        .submit(job, SubmitOptions::bulk())
+        .unwrap()
+        .wait()
+        .result
+        .unwrap()
+        .0;
+    let warm = service.arena_stats();
+    assert_eq!(
+        warm.misses, cold.misses,
+        "a warm same-shaped job must allocate zero new full-grid buffers"
+    );
+    assert!(warm.hits > cold.hits, "the warm job must have drawn from the free lists");
+    assert_eq!(out2.data, reference.data, "warm output must stay bit-identical");
+}
+
+#[test]
+fn lease_accounting_returns_to_zero_and_survives_service_drop() {
+    let service = MitigationService::new();
+    let arena = service.arena();
+    let mut results = Vec::new();
+    for (dims, seed) in [(&[20, 20, 20][..], 1u64), (&[16, 16][..], 2), (&[20, 20, 20][..], 3)] {
+        let (dq, q, eb) = field(DatasetKind::CombustionLike, dims, seed);
+        let ticket = service.submit(Job::new(dq, q, eb), SubmitOptions::bulk()).unwrap();
+        results.push(ticket.wait().result.unwrap().0);
+    }
+    let st = arena.stats();
+    assert_eq!(
+        st.bytes_outstanding, 0,
+        "every intermediate lease must be back once all jobs completed"
+    );
+    assert_eq!(st.detached as usize, results.len(), "one detached output per job");
+    drop(service);
+    // The kept handle still observes the (quiescent) counters.
+    let st = arena.stats();
+    assert_eq!(st.bytes_outstanding, 0, "no leases may leak across service shutdown");
+    assert_eq!(st.returns + st.detached, st.hits + st.misses, "takes must balance");
+}
+
+#[test]
+fn job_clone_and_requeue_share_grid_allocations() {
+    let (dq, q, eb) = field(DatasetKind::ClimateLike, &[16, 16], 7);
+    let job = Job::new(dq, q, eb);
+    let twin = job.clone();
+    assert!(job.dq.ptr_eq(&twin.dq), "Job::clone must share the data grid");
+    assert!(job.q.ptr_eq(&twin.q), "Job::clone must share the index grid");
+
+    // A rejected submission hands back the very same allocation.
+    let service = MitigationService::with_config(ServiceConfig {
+        capacity: 1,
+        start_paused: true,
+        ..Default::default()
+    });
+    let _queued = service.try_submit(job, SubmitOptions::bulk()).unwrap();
+    let bounced = service.try_submit(twin.clone(), SubmitOptions::bulk()).unwrap_err().into_job();
+    assert!(bounced.dq.ptr_eq(&twin.dq), "a bounced job must carry the original payload");
+    drop(service); // cancels the queued job
+}
+
+#[test]
+fn submit_and_batch_move_pointers_not_grid_bytes() {
+    // A queued job holds a second handle to the caller's allocation —
+    // a deep copy would leave the caller's handle count at one.
+    let (dq, q, eb) = field(DatasetKind::ClimateLike, &[12, 12], 3);
+    let job = Job::new(dq, q, eb);
+    let service = MitigationService::with_config(ServiceConfig {
+        capacity: 4,
+        start_paused: true,
+        ..Default::default()
+    });
+    assert_eq!(job.dq.handle_count(), 1);
+    let ticket = service.submit(job.clone(), SubmitOptions::bulk()).unwrap();
+    assert_eq!(job.dq.handle_count(), 2, "submit must move the Arc, not copy the grid");
+    assert_eq!(job.q.handle_count(), 2);
+    service.resume();
+    assert!(ticket.wait().result.is_ok());
+    // The job task may hold its handle for a few more instructions
+    // after resolving the ticket; poll briefly.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while job.dq.handle_count() != 1 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "the service must drop its handle after the job"
+        );
+        std::thread::yield_now();
+    }
+
+    // Same through the compat batch wrapper, mid-flight on a paused
+    // service drained from another thread.
+    let service = MitigationService::with_config(ServiceConfig {
+        capacity: 4,
+        start_paused: true,
+        ..Default::default()
+    });
+    let batch = vec![job.clone()];
+    let waiter = {
+        let service = &service;
+        let batch = &batch;
+        std::thread::scope(|s| {
+            let handle = s.spawn(move || service.mitigate_batch(batch));
+            // Wait until the batch job is queued, then observe sharing.
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+            while service.stats().submitted < 1 {
+                assert!(std::time::Instant::now() < deadline, "job never queued");
+                std::thread::yield_now();
+            }
+            assert_eq!(
+                job.dq.handle_count(),
+                3, // caller's `job` + `batch` slot + the queued clone
+                "mitigate_batch must clone pointers, not grid data"
+            );
+            service.resume();
+            handle.join().expect("batch thread")
+        })
+    };
+    assert!(waiter[0].is_ok());
+}
+
+#[test]
+fn block_decoders_reuse_buffers_bit_exactly() {
+    use qai::compressors::{szp::SzpLike, Compressor};
+
+    let orig = generate(DatasetKind::CosmologyLike, &[24, 24, 24], 11);
+    let eb = ErrorBound::relative(1e-3).resolve(&orig.data);
+    let codec = SzpLike { threads: 2 };
+    let stream = codec.compress(&orig, eb).unwrap();
+    let fresh = codec.decompress(&stream).unwrap();
+
+    let arena = Arena::new();
+    let d1 = codec.decompress_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream).unwrap();
+    assert_eq!(d1.grid.data, fresh.grid.data);
+    assert_eq!(d1.quant_indices.data, fresh.quant_indices.data);
+    let cold_misses = arena.stats().misses;
+    // Recycle the outputs; the next decode of the same stream must not
+    // allocate any full-grid buffer.
+    arena.adopt(d1.grid.data);
+    arena.adopt(d1.quant_indices.data);
+    let d2 = codec.decompress_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream).unwrap();
+    assert_eq!(d2.grid.data, fresh.grid.data);
+    assert_eq!(d2.quant_indices.data, fresh.quant_indices.data);
+    let st = arena.stats();
+    assert_eq!(st.misses, cold_misses, "warm SZp decode must be allocation-free");
+    assert_eq!(st.bytes_outstanding, 0);
+}
+
+#[test]
+fn sz3_decoder_reuses_buffers_bit_exactly() {
+    use qai::compressors::sz3::Sz3Like;
+
+    let orig = generate(DatasetKind::TurbulenceLike, &[18, 18, 18], 13);
+    let eb = ErrorBound::relative(1e-3).resolve(&orig.data);
+    let codec = Sz3Like { threads: 2 };
+    let stream = codec.compress(&orig, eb).unwrap();
+    let fresh = codec.decompress(&stream).unwrap();
+
+    let arena = Arena::new();
+    let d1 = codec.decompress_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream).unwrap();
+    assert_eq!(d1.data, fresh.data);
+    let cold_misses = arena.stats().misses;
+    arena.adopt(d1.data);
+    let d2 = codec.decompress_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream).unwrap();
+    assert_eq!(d2.data, fresh.data);
+    let st = arena.stats();
+    assert_eq!(st.misses, cold_misses, "warm SZ3 decode must be allocation-free");
+    assert_eq!(st.bytes_outstanding, 0);
+}
+
+#[test]
+fn metrics_line_is_scrapeable_key_value_text() {
+    let service = MitigationService::new();
+    let (dq, q, eb) = field(DatasetKind::ClimateLike, &[16, 16], 21);
+    let out = service
+        .submit(Job::new(dq, q, eb), SubmitOptions::bulk())
+        .unwrap()
+        .wait()
+        .result
+        .unwrap()
+        .0;
+    service.recycle(out);
+    let line = service.metrics_text();
+    assert!(!line.contains('\n'), "metrics must be a single line");
+    for token in line.split_whitespace() {
+        let (key, value) = token.split_once('=').expect("key=value tokens");
+        assert!(!key.is_empty() && !value.is_empty(), "token {token:?}");
+    }
+    assert!(line.contains("submitted=1"), "line={line}");
+    assert!(line.contains("completed=1"), "line={line}");
+    assert!(line.contains("arena_misses="), "line={line}");
+    assert!(line.contains("arena_adopted=1"), "line={line}");
+    assert!(line.contains("arena_bytes_outstanding=0"), "line={line}");
+}

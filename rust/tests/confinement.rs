@@ -40,7 +40,7 @@ fn private_pool_job_runs_internal_steps_only_on_that_pool() {
         capacity: 4,
         start_paused: false,
     });
-    let job = Job { dq, q, eb, cfg: MitigationConfig { threads: 4, ..Default::default() } };
+    let job = Job::with_config(dq, q, eb, MitigationConfig { threads: 4, ..Default::default() });
     let report = service.submit(job, SubmitOptions::interactive()).unwrap().wait();
     let (out, stats) = report.result.expect("confined job must succeed");
 
@@ -60,12 +60,12 @@ fn private_pool_job_runs_internal_steps_only_on_that_pool() {
 
     // A second batch through the compatibility wrapper stays confined
     // too (homogeneous index grid: cheap identity job).
-    let job2 = Job {
-        dq: expected.clone(),
-        q: qai::Grid::<i64>::like(&expected),
+    let job2 = Job::with_config(
+        expected.clone(),
+        qai::Grid::<i64>::like(&expected),
         eb,
-        cfg: MitigationConfig { threads: 2, ..Default::default() },
-    };
+        MitigationConfig { threads: 2, ..Default::default() },
+    );
     let results = service.mitigate_batch(std::slice::from_ref(&job2));
     assert!(results[0].is_ok());
     assert!(!pool::global_is_initialized(), "mitigate_batch must stay confined as well");

@@ -13,7 +13,7 @@ fn make_job(kind: DatasetKind, dims: &[usize], seed: u64, threads: usize) -> Job
     let orig = generate(kind, dims, seed);
     let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
     let (q, dq) = quantize_grid(&orig, eb);
-    Job { dq, q, eb, cfg: MitigationConfig { threads, ..Default::default() } }
+    Job::with_config(dq, q, eb, MitigationConfig { threads, ..Default::default() })
 }
 
 fn mixed_batch() -> Vec<Job> {
@@ -46,7 +46,7 @@ fn batch_matches_per_field_mitigate_exactly() {
 fn per_job_errors_do_not_poison_the_batch() {
     let mut jobs = mixed_batch();
     // Poison job 2 with a shape mismatch between data and indices.
-    jobs[2].q = Grid::from_vec(vec![0i64; 8], &[2, 4]);
+    jobs[2].q = Grid::from_vec(vec![0i64; 8], &[2, 4]).into();
     let service = MitigationService::new();
     let results = service.mitigate_batch(&jobs);
     for (i, result) in results.iter().enumerate() {
