@@ -10,8 +10,9 @@ use qai::bench_support::tables::Table;
 use qai::compressors::{cusz::CuszLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{psnr, ssim};
-use qai::mitigation::{mitigate, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
 use qai::quant::ErrorBound;
+use qai::SharedGrid;
 
 fn main() -> anyhow::Result<()> {
     let orig = generate(DatasetKind::HurricaneLike, &[64, 128, 128], 48);
@@ -23,13 +24,15 @@ fn main() -> anyhow::Result<()> {
     for (label, rel) in points {
         let eb = ErrorBound::relative(rel).resolve(&orig.data);
         let dec = codec.decompress(&codec.compress(&orig, eb)?)?;
-        let fixed = mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
+        let dq: SharedGrid<f32> = dec.grid.into();
+        let request = MitigationRequest::new(dq.clone(), dec.quant_indices, eb);
+        let fixed = engine::execute(&request)?.output;
         table.row(&[
             label.to_string(),
             format!("{rel:.0e}"),
-            format!("{:.4}", ssim(&orig, &dec.grid, 7, 2)),
+            format!("{:.4}", ssim(&orig, &dq, 7, 2)),
             format!("{:.4}", ssim(&orig, &fixed, 7, 2)),
-            format!("{:.2}", psnr(&orig.data, &dec.grid.data)),
+            format!("{:.2}", psnr(&orig.data, &dq.data)),
             format!("{:.2}", psnr(&orig.data, &fixed.data)),
         ]);
 
@@ -42,7 +45,7 @@ fn main() -> anyhow::Result<()> {
                     "{:>4} {:>10.4} {:>10.4} {:>10.4}",
                     k,
                     orig.at(32, 64, k),
-                    dec.grid.at(32, 64, k),
+                    dq.at(32, 64, k),
                     fixed.at(32, 64, k)
                 );
             }

@@ -19,8 +19,10 @@ use qai::compressors::{cusz::CuszLike, Compressor};
 use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
 use qai::data::synthetic::{field_catalog, DatasetKind};
 use qai::metrics::{bit_rate, max_rel_error, psnr, ssim};
-use qai::mitigation::{mitigate_with_stats, Backend, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
+use qai::mitigation::{Backend, MitigationConfig};
 use qai::quant::ErrorBound;
+use qai::SharedGrid;
 
 fn main() -> anyhow::Result<()> {
     let dims = [512, 1024]; // CESM-like aspect (scaled from 1800×3600)
@@ -49,6 +51,10 @@ fn main() -> anyhow::Result<()> {
             let eb = ErrorBound::relative(rel).resolve(&field.grid.data);
             let stream = codec.compress(&field.grid, eb)?;
             let dec = codec.decompress(&stream)?;
+            // Shared handles: requests and metrics reuse the same
+            // allocations without copying field data.
+            let dq: SharedGrid<f32> = dec.grid.into();
+            let qg: SharedGrid<i64> = dec.quant_indices.into();
 
             // Distributed mitigation: 16 ranks, approximate strategy.
             let cfg = DistributedConfig {
@@ -56,24 +62,22 @@ fn main() -> anyhow::Result<()> {
                 strategy: Strategy::Approximate,
                 ..Default::default()
             };
-            let (fixed, _rep) = run_distributed(&dec.grid, &dec.quant_indices, eb, &cfg)?;
+            let (fixed, _rep) = run_distributed(&dq, &qg, eb, &cfg)?;
 
             // PJRT lane: sequential pipeline through the AOT artifacts,
             // cross-checked against the native path.
             if artifacts_ok && rel == 1e-2 {
                 let pjrt_cfg = MitigationConfig { backend: Backend::Pjrt, ..Default::default() };
-                let native_cfg = MitigationConfig::default();
-                let (out_pjrt, _) =
-                    mitigate_with_stats(&dec.grid, &dec.quant_indices, eb, &pjrt_cfg)?;
-                let (out_native, _) =
-                    mitigate_with_stats(&dec.grid, &dec.quant_indices, eb, &native_cfg)?;
+                let base = MitigationRequest::new(dq.clone(), qg.clone(), eb);
+                let out_pjrt = engine::execute(&base.clone().config(pjrt_cfg))?.output;
+                let out_native = engine::execute(&base)?.output;
                 let dev = qai::metrics::max_abs_error(&out_pjrt.data, &out_native.data);
                 anyhow::ensure!(dev < 1e-6, "PJRT/native divergence {dev}");
             }
 
-            let s0 = ssim(&field.grid, &dec.grid, 7, 2);
+            let s0 = ssim(&field.grid, &dq, 7, 2);
             let s1 = ssim(&field.grid, &fixed, 7, 2);
-            let p0 = psnr(&field.grid.data, &dec.grid.data);
+            let p0 = psnr(&field.grid.data, &dq.data);
             let p1 = psnr(&field.grid.data, &fixed.data);
             let mr = max_rel_error(&field.grid.data, &fixed.data);
             let gain = (s1 - s0) / s0.abs().max(1e-12) * 100.0;

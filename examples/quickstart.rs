@@ -10,8 +10,10 @@
 use qai::compressors::{cusz::CuszLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{bit_rate, max_rel_error, psnr, ssim};
-use qai::mitigation::{mitigate_with_stats, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
+use qai::mitigation::MitigationConfig;
 use qai::quant::ErrorBound;
+use qai::SharedGrid;
 
 fn main() -> anyhow::Result<()> {
     // 1. A real-ish small workload: 64³ density field (Fig. 2's analog).
@@ -33,25 +35,32 @@ fn main() -> anyhow::Result<()> {
     // 3. Decompress: the reconstruction carries posterization artifacts.
     let dec = codec.decompress(&stream)?;
 
-    // 4. Mitigate (Alg. 4): boundary detection -> EDT -> sign propagation
-    //    -> EDT -> IDW compensation.
+    // 4. Mitigate (Alg. 4) through the engine front door: boundary
+    //    detection -> EDT -> sign propagation -> EDT -> IDW
+    //    compensation. The shared handle keeps the decompressed field
+    //    alive for the before/after metrics without copying it.
     let cfg = MitigationConfig::default(); // η = 0.9, native backend
-    let (fixed, stats) = mitigate_with_stats(&dec.grid, &dec.quant_indices, dec.bound, &cfg)?;
+    let dq: SharedGrid<f32> = dec.grid.into();
+    let request = MitigationRequest::new(dq.clone(), dec.quant_indices, dec.bound)
+        .config(cfg)
+        .with_stats(true);
+    let resp = engine::execute(&request)?;
+    let (fixed, stats) = (resp.output, resp.stats.expect("stats requested"));
 
     // 5. Quality report.
     println!(
         "SSIM  {:.4} -> {:.4}",
-        ssim(&orig, &dec.grid, 7, 2),
+        ssim(&orig, &dq, 7, 2),
         ssim(&orig, &fixed, 7, 2)
     );
     println!(
         "PSNR  {:.2} dB -> {:.2} dB",
-        psnr(&orig.data, &dec.grid.data),
+        psnr(&orig.data, &dq.data),
         psnr(&orig.data, &fixed.data)
     );
     println!(
         "max relative error {:.5} -> {:.5} (relaxed bound {:.5})",
-        max_rel_error(&orig.data, &dec.grid.data),
+        max_rel_error(&orig.data, &dq.data),
         max_rel_error(&orig.data, &fixed.data),
         (1.0 + cfg.eta) * eb.rel.unwrap()
     );

@@ -6,8 +6,10 @@ use qai::bench_support::tables::Table;
 use qai::compressors::{cusz::CuszLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{max_rel_error, psnr, ssim};
-use qai::mitigation::{mitigate, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
+use qai::mitigation::MitigationConfig;
 use qai::quant::ErrorBound;
+use qai::SharedGrid;
 
 fn main() {
     let etas = [0.0, 0.5, 0.7, 0.8, 0.9, 1.0];
@@ -20,12 +22,16 @@ fn main() {
         let orig = generate(kind, &dims, 9);
         let eb = ErrorBound::relative(rel).resolve(&orig.data);
         let dec = CuszLike.decompress(&CuszLike.compress(&orig, eb).unwrap()).unwrap();
+        // Shared handles: each per-η request clone is a pointer bump.
+        let dq: SharedGrid<f32> = dec.grid.into();
+        let qg: SharedGrid<i64> = dec.quant_indices.into();
 
         let mut table = Table::new(&["eta", "SSIM", "PSNR(dB)", "max_rel_err", "<=(1+eta)eps"]);
         let mut best = (0.0f64, f64::NEG_INFINITY);
         for &eta in &etas {
             let cfg = MitigationConfig { eta, ..Default::default() };
-            let out = mitigate(&dec.grid, &dec.quant_indices, eb, &cfg);
+            let request = MitigationRequest::new(dq.clone(), qg.clone(), eb).config(cfg);
+            let out = engine::execute(&request).unwrap().output;
             let s = ssim(&orig, &out, 7, 2);
             let p = psnr(&orig.data, &out.data);
             let e = max_rel_error(&orig.data, &out.data);

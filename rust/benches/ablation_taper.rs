@@ -11,8 +11,10 @@ use qai::bench_support::tables::Table;
 use qai::data::grid::Grid;
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{max_rel_error, psnr, ssim};
-use qai::mitigation::{mitigate, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
+use qai::mitigation::MitigationConfig;
 use qai::quant::{quantize_grid, ErrorBound};
+use qai::SharedGrid;
 
 /// A CESM-like field with *hard* saturation (exactly-flat plateaus) —
 /// the paper's known-limitation regime.
@@ -36,6 +38,9 @@ fn main() {
     for (name, orig) in cases {
         let eb = ErrorBound::relative(rel).resolve(&orig.data);
         let (q, dq) = quantize_grid(&orig, eb);
+        // Shared handles: per-radius request clones are pointer bumps.
+        let dq: SharedGrid<f32> = dq.into();
+        let q: SharedGrid<i64> = q.into();
         let s_dq = ssim(&orig, &dq, 7, 2);
         let p_dq = psnr(&orig.data, &dq.data);
 
@@ -49,7 +54,8 @@ fn main() {
         let mut results = Vec::new();
         for r in radii {
             let cfg = MitigationConfig { taper_radius: r, ..Default::default() };
-            let out = mitigate(&dq, &q, eb, &cfg);
+            let request = MitigationRequest::new(dq.clone(), q.clone(), eb).config(cfg);
+            let out = engine::execute(&request).unwrap().output;
             let s = ssim(&orig, &out, 7, 2);
             let p = psnr(&orig.data, &out.data);
             results.push((r, s, p));

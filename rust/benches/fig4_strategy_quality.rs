@@ -9,7 +9,7 @@ use qai::coordinator::topology::Topology;
 use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{psnr, ssim};
-use qai::mitigation::pipeline::{mitigate, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
 use qai::quant::{quantize_grid, ErrorBound};
 
 fn main() {
@@ -17,7 +17,9 @@ fn main() {
     let orig = generate(DatasetKind::MirandaLike, &dims, 4);
     let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
     let (q, dq) = quantize_grid(&orig, eb);
-    let seq = mitigate(&dq, &q, eb, &MitigationConfig::default());
+    let seq = engine::execute(&MitigationRequest::new(dq.clone(), q.clone(), eb))
+        .unwrap()
+        .output;
 
     // Identify cells within 2 of a rank face for the striping metric.
     let topo = Topology::new(64, orig.shape);

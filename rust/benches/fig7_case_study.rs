@@ -6,8 +6,9 @@ use qai::bench_support::tables::Table;
 use qai::compressors::{cusz::CuszLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{psnr, ssim};
-use qai::mitigation::{mitigate, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
 use qai::quant::ErrorBound;
+use qai::SharedGrid;
 
 fn main() {
     let orig = generate(DatasetKind::HurricaneLike, &[64, 128, 128], 48);
@@ -23,10 +24,12 @@ fn main() {
         let eb = ErrorBound::relative(rel).resolve(&orig.data);
         let stream = codec.compress(&orig, eb).unwrap();
         let dec = codec.decompress(&stream).unwrap();
-        let fixed = mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
-        let s0 = ssim(&orig, &dec.grid, 7, 2);
+        let dq: SharedGrid<f32> = dec.grid.into();
+        let request = MitigationRequest::new(dq.clone(), dec.quant_indices, eb);
+        let fixed = engine::execute(&request).unwrap().output;
+        let s0 = ssim(&orig, &dq, 7, 2);
         let s1 = ssim(&orig, &fixed, 7, 2);
-        let p0 = psnr(&orig.data, &dec.grid.data);
+        let p0 = psnr(&orig.data, &dq.data);
         let p1 = psnr(&orig.data, &fixed.data);
         rows.push((label, s1 - s0, p1 - p0));
         table.row(&[

@@ -13,7 +13,8 @@
 use qai::bench_support::tables::Table;
 use qai::compressors::{sz3::Sz3Like, szp::SzpLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
-use qai::mitigation::pipeline::{mitigate_with_stats, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
+use qai::mitigation::pipeline::MitigationConfig;
 use qai::quant::ErrorBound;
 use qai::util::timer::thread_cpu_time;
 
@@ -52,11 +53,14 @@ fn main() {
 
         // Ours: the mitigation pipeline.
         let (q, dq) = qai::quant::quantize_grid(&orig, eb);
+        let dq: qai::SharedGrid<f32> = dq.into();
+        let q: qai::SharedGrid<i64> = q.into();
         let mut base_cpu = 0.0;
         for &t in threads_sweep {
             let cfg = MitigationConfig { threads: t, ..Default::default() };
+            let request = MitigationRequest::new(dq.clone(), q.clone(), eb).config(cfg);
             let cpu = cpu_time(|| {
-                let _ = mitigate_with_stats(&dq, &q, eb, &cfg).unwrap();
+                let _ = engine::execute(&request).unwrap();
             });
             if t == 1 {
                 base_cpu = cpu;

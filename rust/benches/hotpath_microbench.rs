@@ -14,10 +14,10 @@ use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::ssim;
 use qai::mitigation::boundary::boundary_and_sign;
 use qai::mitigation::edt::edt;
+use qai::mitigation::engine::{self, Engine, MitigationRequest};
 use qai::mitigation::interpolate::compensate;
-use qai::mitigation::pipeline::{mitigate_with_stats, mitigate_with_stats_on, MitigationConfig};
+use qai::mitigation::pipeline::MitigationConfig;
 use qai::mitigation::sign::propagate_signs;
-use qai::mitigation::{Job, MitigationService, SubmitOptions};
 use qai::quant::{quantize_grid, ErrorBound};
 use qai::util::arena::{Arena, ArenaHandle};
 use qai::util::pool::{self, PoolHandle};
@@ -94,8 +94,9 @@ fn main() {
     });
     println!("   -> {:.1} MB/s", r.mbs(bytes));
 
+    let e2e_request = MitigationRequest::new(dq.clone(), q.clone(), eb).with_stats(true);
     let r = bench_fn("pipeline end-to-end", warm, samp, || {
-        mitigate_with_stats(&dq, &q, eb, &MitigationConfig::default()).unwrap()
+        engine::execute(&e2e_request).unwrap()
     });
     println!("   -> {:.1} MB/s (paper §Perf target: >= ~10 MB/s/rank class)", r.mbs(bytes));
 
@@ -170,8 +171,9 @@ fn main() {
         let seb = ErrorBound::relative(1e-2).resolve(&sorig.data);
         let (sq, sdq) = quantize_grid(&sorig, seb);
         let cfg = MitigationConfig { threads: 4, ..Default::default() };
+        let request = MitigationRequest::new(sdq, sq, seb).config(cfg).with_stats(true);
         let r = bench_fn(&format!("mitigate {small}^3 (threads=4)"), warm, samp, || {
-            mitigate_with_stats(&sdq, &sq, seb, &cfg).unwrap()
+            engine::execute(&request).unwrap()
         });
         println!("   -> {:.1} MB/s", r.mbs(small * small * small * 4));
     }
@@ -185,39 +187,26 @@ fn main() {
         let aorig = generate(DatasetKind::MirandaLike, &adims, 3);
         let aeb = ErrorBound::relative(1e-2).resolve(&aorig.data);
         let (aq, adq) = quantize_grid(&aorig, aeb);
-        let cfg = MitigationConfig::default();
         let abytes = adims.iter().product::<usize>() * 4;
+        let arena_request = MitigationRequest::new(adq, aq, aeb).with_stats(true);
         let r = bench_fn("fresh-alloc mitigate", warm, samp, || {
-            mitigate_with_stats_on(PoolHandle::Global, ArenaHandle::Fresh, &adq, &aq, aeb, &cfg)
-                .unwrap()
+            engine::execute_on(PoolHandle::Global, ArenaHandle::Fresh, &arena_request).unwrap()
         });
         println!("   -> {:.1} MB/s", r.mbs(abytes));
         let arena = Arena::new();
         // Warm the free lists, then recycle the output each iteration
         // so the steady state allocates nothing.
-        let (warm_out, _) = mitigate_with_stats_on(
-            PoolHandle::Global,
-            ArenaHandle::Pooled(&arena),
-            &adq,
-            &aq,
-            aeb,
-            &cfg,
-        )
-        .unwrap();
-        arena.adopt(warm_out.data);
+        let warm_resp =
+            engine::execute_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &arena_request)
+                .unwrap();
+        arena.adopt(warm_resp.output.data);
         let misses_before = arena.stats().misses;
         let r = bench_fn("arena-reuse mitigate", warm, samp, || {
-            let (out, stats) = mitigate_with_stats_on(
-                PoolHandle::Global,
-                ArenaHandle::Pooled(&arena),
-                &adq,
-                &aq,
-                aeb,
-                &cfg,
-            )
-            .unwrap();
-            arena.adopt(out.data);
-            stats
+            let resp =
+                engine::execute_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &arena_request)
+                    .unwrap();
+            arena.adopt(resp.output.data);
+            resp.stats
         });
         let ast = arena.stats();
         println!(
@@ -230,27 +219,30 @@ fn main() {
     }
 
     // Batched serving layer: N independent fields concurrently on the
-    // shared pool vs a sequential per-field loop.
-    println!("\n== batched mitigation service ==");
+    // shared pool (through the engine batch path) vs a sequential
+    // per-field loop.
+    println!("\n== engine batch path ==");
     let batch_n: usize = if quick { 4 } else { 8 };
     let batch_side = 48usize;
-    let jobs: Vec<Job> = (0..batch_n)
+    let batch_requests: Vec<MitigationRequest> = (0..batch_n)
         .map(|i| {
             let orig =
                 generate(DatasetKind::CombustionLike, &[batch_side; 3], 100 + i as u64);
             let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
             let (q, dq) = quantize_grid(&orig, eb);
-            Job::new(dq, q, eb)
+            MitigationRequest::new(dq, q, eb)
         })
         .collect();
     let batch_bytes = batch_n * batch_side.pow(3) * 4;
-    let service = MitigationService::new();
+    let batch_engine = Engine::builder().build();
     let r = bench_fn(
-        &format!("mitigate_batch ({batch_n} x {batch_side}^3)"),
+        &format!("Engine::run_batch ({batch_n} x {batch_side}^3)"),
         warm,
         samp,
         || {
-            let results = service.mitigate_batch(&jobs);
+            // Request clones are Arc pointer bumps, matching the old
+            // slice-based wrapper's per-call cost.
+            let results = batch_engine.run_batch(batch_requests.clone());
             assert!(results.iter().all(|r| r.is_ok()));
             results
         },
@@ -261,45 +253,46 @@ fn main() {
         warm,
         samp,
         || {
-            jobs.iter()
-                .map(|j| mitigate_with_stats(&j.dq, &j.q, j.eb, &j.cfg).unwrap())
+            batch_requests
+                .iter()
+                .map(|req| engine::execute(req).unwrap())
                 .collect::<Vec<_>>()
         },
     );
     println!("   -> {:.1} MB/s aggregate", r.mbs(batch_bytes));
 
-    // Streaming admission: the same jobs submitted one by one through
+    // Streaming admission: the same fields submitted one by one through
     // the bounded queue (every 4th interactive), waited on tickets —
-    // the per-job queue overhead vs the batch wrapper is the delta. A
-    // fresh service, so the stats below describe only this section.
-    println!("\n== streaming admission (queue + tickets) ==");
-    let service = MitigationService::new();
+    // the per-job queue overhead vs the batch path is the delta. A
+    // fresh engine, so the stats below describe only this section; two
+    // shards exercise the router on every submission.
+    println!("\n== streaming admission (sharded engine, queue + tickets) ==");
+    let stream_engine = Engine::builder().shards(2).shared_arena(true).build();
     let r = bench_fn(
-        &format!("submit+wait stream ({batch_n} x {batch_side}^3)"),
+        &format!("submit+wait stream ({batch_n} x {batch_side}^3, 2 shards)"),
         warm,
         samp,
         || {
-            let tickets: Vec<_> = jobs
+            let tickets: Vec<_> = batch_requests
                 .iter()
                 .enumerate()
-                .map(|(i, j)| {
-                    let opts = if i % 4 == 0 {
-                        SubmitOptions::interactive()
-                    } else {
-                        SubmitOptions::bulk()
-                    };
-                    service.submit(j.clone(), opts).expect("admission")
+                .map(|(i, req)| {
+                    let mut req = req.clone().tenant(format!("bench-t{}", i % 3));
+                    if i % 4 == 0 {
+                        req = req.interactive();
+                    }
+                    stream_engine.submit(req).expect("admission")
                 })
                 .collect();
-            let reports: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
-            assert!(reports.iter().all(|r| r.result.is_ok()));
-            reports
+            let responses: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+            assert!(responses.iter().all(|r| r.is_ok()));
+            responses
         },
     );
     println!("   -> {:.1} MB/s aggregate", r.mbs(batch_bytes));
-    let st = service.stats();
+    let st = stream_engine.stats().aggregate();
     println!(
-        "   -> stats: submitted {} (interactive {} / bulk {}), max queue depth {}, mean queue wait {:.2} ms",
+        "   -> stats: submitted {} (interactive {} / bulk {}), max shard queue depth {}, mean queue wait {:.2} ms",
         st.submitted,
         st.interactive_done,
         st.bulk_done,

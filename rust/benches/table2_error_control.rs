@@ -9,7 +9,7 @@ use qai::compressors::{cusz::CuszLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::filters::{gaussian_filter, uniform_filter, wiener_filter};
 use qai::metrics::max_rel_error;
-use qai::mitigation::{mitigate, MitigationConfig};
+use qai::mitigation::engine::{self, MitigationRequest};
 use qai::quant::ErrorBound;
 
 fn main() {
@@ -37,7 +37,8 @@ fn main() {
         let e_gauss = max_rel_error(&orig.data, &gaussian_filter(&dec.grid, 1.0).data);
         let e_unif = max_rel_error(&orig.data, &uniform_filter(&dec.grid).data);
         let e_wien = max_rel_error(&orig.data, &wiener_filter(&dec.grid, eb.abs).data);
-        let ours = mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
+        let request = MitigationRequest::new(dec.grid, dec.quant_indices, eb);
+        let ours = engine::execute(&request).unwrap().output;
         let e_ours = max_rel_error(&orig.data, &ours.data);
 
         any_filter_violates |= e_gauss > relaxed || e_unif > relaxed;

@@ -6,7 +6,7 @@ use crate::compressors::{cusz::CuszLike, cuszp::CuszpLike, Compressor};
 use crate::data::synthetic::{generate, DatasetKind};
 use crate::filters::{gaussian_filter, uniform_filter, wiener_filter};
 use crate::metrics::{bit_rate, psnr, ssim};
-use crate::mitigation::{mitigate, MitigationConfig};
+use crate::mitigation::engine::{self, MitigationRequest};
 use crate::quant::ErrorBound;
 
 /// One rate-distortion measurement cell.
@@ -53,17 +53,21 @@ pub fn sweep(quick: bool) -> Vec<RdPoint> {
                 let stream = codec.compress(&orig, eb).unwrap();
                 let dec = codec.decompress(&stream).unwrap();
 
-                let ours =
-                    mitigate(&dec.grid, &dec.quant_indices, eb, &MitigationConfig::default());
-                let gauss = gaussian_filter(&dec.grid, 1.0);
-                let unif = uniform_filter(&dec.grid);
-                let wien = wiener_filter(&dec.grid, eb.abs);
+                // Shared handle: the request payload is a pointer
+                // bump, and the decompressed field stays readable for
+                // the baselines and metrics.
+                let dq: crate::data::grid::SharedGrid<f32> = dec.grid.into();
+                let request = MitigationRequest::new(dq.clone(), dec.quant_indices, eb);
+                let ours = engine::execute(&request).expect("mitigation failed").output;
+                let gauss = gaussian_filter(&dq, 1.0);
+                let unif = uniform_filter(&dq);
+                let wien = wiener_filter(&dq, eb.abs);
 
                 let eval = |g: &crate::Grid<f32>| {
                     (ssim(&orig, g, 7, 2), psnr(&orig.data, &g.data))
                 };
                 let methods = vec![
-                    ("quantized", eval(&dec.grid).0, eval(&dec.grid).1),
+                    ("quantized", eval(&*dq).0, eval(&*dq).1),
                     ("gaussian", eval(&gauss).0, eval(&gauss).1),
                     ("uniform", eval(&unif).0, eval(&unif).1),
                     ("wiener", eval(&wien).0, eval(&wien).1),

@@ -1,8 +1,9 @@
 //! Hand-rolled CLI argument parsing (no `clap` offline — DESIGN.md §10).
 //!
-//! Supports `--flag value`, `--flag=value` and boolean `--flag` forms,
-//! plus positional arguments, with typed accessors and an
-//! unknown-flag check so typos fail loudly.
+//! Supports `--flag value`, `--flag=value` and boolean `--flag` /
+//! `--flag=false` forms, plus positional arguments, with typed
+//! accessors and an unknown-flag check that fails loudly and suggests
+//! the nearest valid key for likely typos.
 
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -69,9 +70,19 @@ impl Args {
         }
     }
 
-    /// Boolean flag (present or `=true`).
-    pub fn get_bool(&self, key: &str) -> bool {
-        matches!(self.get(key).as_deref(), Some("true") | Some("1") | Some("yes"))
+    /// Boolean flag: absent → `false`; bare `--flag` or
+    /// `--flag=true|1|yes` → `true`; `--flag=false|0|no` → `false`;
+    /// any other value is an error (it used to be silently `false`,
+    /// hiding typos like `--metrics=ture`).
+    pub fn get_bool(&self, key: &str) -> Result<bool> {
+        match self.get(key).as_deref() {
+            None => Ok(false),
+            Some("true" | "1" | "yes") => Ok(true),
+            Some("false" | "0" | "no") => Ok(false),
+            Some(other) => {
+                anyhow::bail!("--{key} expects a boolean (true/false/1/0/yes/no), got {other:?}")
+            }
+        }
     }
 
     /// Positional arguments.
@@ -79,14 +90,59 @@ impl Args {
         &self.positional
     }
 
-    /// Error on flags nobody consumed (call after all `get*`s).
+    /// Error on flags nobody consumed (call after all `get*`s), with a
+    /// nearest-valid-key suggestion for likely typos.
     pub fn finish(&self) -> Result<()> {
         let consumed = self.consumed.borrow();
-        let unknown: Vec<&String> =
-            self.flags.keys().filter(|k| !consumed.contains(k)).collect();
-        anyhow::ensure!(unknown.is_empty(), "unknown flags: {unknown:?}");
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(k))
+            .map(|k| match nearest_key(k, &consumed) {
+                Some(best) => format!("--{k} (did you mean --{best}?)"),
+                None => format!("--{k}"),
+            })
+            .collect();
+        anyhow::ensure!(unknown.is_empty(), "unknown flags: {}", unknown.join(", "));
         Ok(())
     }
+}
+
+/// The closest key the program actually looked up, if it is close
+/// enough to be a plausible typo (edit distance ≤ 2 and smaller than
+/// the flag's own length). Ties resolve to the lexicographically
+/// smallest candidate, keeping error text deterministic.
+fn nearest_key<'a>(unknown: &str, candidates: &'a [String]) -> Option<&'a str> {
+    let mut best: Option<(usize, &str)> = None;
+    for cand in candidates {
+        let cand = cand.as_str();
+        let d = edit_distance(unknown, cand);
+        let better = match best {
+            None => true,
+            Some((bd, bc)) => d < bd || (d == bd && cand < bc),
+        };
+        if better {
+            best = Some((d, cand));
+        }
+    }
+    best.filter(|&(d, _)| d <= 2 && d < unknown.len()).map(|(_, c)| c)
+}
+
+/// Plain Levenshtein distance, small inputs only (flag names).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
 }
 
 /// Parse a `AxBxC` dims string into a dims vector.
@@ -114,8 +170,25 @@ mod tests {
         assert_eq!(a.command.as_deref(), Some("compress"));
         assert_eq!(a.get("rel").as_deref(), Some("1e-3"));
         assert_eq!(a.get("codec").as_deref(), Some("cusz"));
-        assert!(a.get_bool("verbose"));
+        assert!(a.get_bool("verbose").unwrap());
         a.finish().unwrap();
+    }
+
+    #[test]
+    fn bool_flags_accept_explicit_values() {
+        let a = parse(&["x", "--metrics=false", "--verbose=true", "--quiet=no"]);
+        assert!(!a.get_bool("metrics").unwrap());
+        assert!(a.get_bool("verbose").unwrap());
+        assert!(!a.get_bool("quiet").unwrap());
+        assert!(!a.get_bool("absent").unwrap());
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn bool_flag_rejects_garbage_values() {
+        let a = parse(&["x", "--metrics=ture"]);
+        let err = a.get_bool("metrics").unwrap_err().to_string();
+        assert!(err.contains("expects a boolean"), "err={err}");
     }
 
     #[test]
@@ -131,6 +204,34 @@ mod tests {
         let a = parse(&["x", "--oops", "1"]);
         let _ = a.get("threads");
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn unknown_flag_suggests_the_nearest_valid_key() {
+        let a = parse(&["x", "--thread", "4"]);
+        let _ = a.get("threads");
+        let _ = a.get("capacity");
+        let err = a.finish().unwrap_err().to_string();
+        assert!(
+            err.contains("--thread (did you mean --threads?)"),
+            "err={err}"
+        );
+
+        // Far-off garbage gets no suggestion.
+        let b = parse(&["x", "--zzzzzzzz", "1"]);
+        let _ = b.get("threads");
+        let err = b.finish().unwrap_err().to_string();
+        assert!(err.contains("--zzzzzzzz"), "err={err}");
+        assert!(!err.contains("did you mean"), "err={err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("thread", "threads"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

@@ -124,8 +124,11 @@ pub fn run_distributed(
             let topo = &topo;
             move || {
                 let (lo, size) = topo.block(ep.rank);
-                let block_dq = dq.extract(lo, size);
-                let block_q = q.extract(lo, size);
+                // Shared handles: the embarrassing strategy passes the
+                // blocks into an engine request without copying them.
+                let block_dq: crate::data::grid::SharedGrid<f32> = dq.extract(lo, size).into();
+                let block_q: crate::data::grid::SharedGrid<crate::quant::QIndex> =
+                    q.extract(lo, size).into();
                 let cpu0 = thread_cpu_time();
                 let out = mitigate_rank(
                     cfg.strategy,
@@ -168,6 +171,10 @@ pub fn run_distributed(
 
 #[cfg(test)]
 mod tests {
+    // The deprecated `mitigate` wrapper is the sequential reference
+    // these tests compare the distributed strategies against.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::data::synthetic::{generate, DatasetKind};
     use crate::metrics::{max_abs_error, ssim};

@@ -19,11 +19,12 @@
 use crate::coordinator::halo::{exchange, ghosted_axes, pad, unpad};
 use crate::coordinator::topology::Topology;
 use crate::coordinator::transport::Endpoint;
-use crate::data::grid::Grid;
+use crate::data::grid::{Grid, SharedGrid};
 use crate::mitigation::boundary::{boundary_and_sign, boundary_mask, BoundaryResult};
 use crate::mitigation::edt::edt;
+use crate::mitigation::engine::{self, MitigationRequest};
 use crate::mitigation::interpolate::compensate;
-use crate::mitigation::pipeline::{mitigate, MitigationConfig};
+use crate::mitigation::pipeline::MitigationConfig;
 use crate::mitigation::sign::propagate_signs;
 use crate::quant::{QIndex, ResolvedBound};
 
@@ -69,14 +70,16 @@ impl Strategy {
 }
 
 /// Run one rank's share of the mitigation. `block_dq`/`block_q` are the
-/// rank's local blocks; returns the compensated local block.
+/// rank's local blocks (shared handles, so the embarrassing strategy's
+/// request payload is a pointer bump); returns the compensated local
+/// block.
 #[allow(clippy::too_many_arguments)]
 pub fn mitigate_rank(
     strategy: Strategy,
     topo: &Topology,
     ep: &mut Endpoint,
-    block_dq: &Grid<f32>,
-    block_q: &Grid<QIndex>,
+    block_dq: &SharedGrid<f32>,
+    block_q: &SharedGrid<QIndex>,
     eb: ResolvedBound,
     eta: f64,
     threads: usize,
@@ -84,7 +87,9 @@ pub fn mitigate_rank(
     match strategy {
         Strategy::Embarrassing => {
             let cfg = MitigationConfig { eta, threads, ..Default::default() };
-            mitigate(block_dq, block_q, eb, &cfg)
+            let request =
+                MitigationRequest::new(block_dq.clone(), block_q.clone(), eb).config(cfg);
+            engine::execute(&request).expect("mitigation failed").output
         }
         Strategy::Approximate => {
             mitigate_rank_approximate(topo, ep, block_dq, block_q, eb, eta, threads)

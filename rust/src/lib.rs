@@ -21,11 +21,17 @@
 //!   with feature transform (Alg. 1, Maurer et al.), sign propagation
 //!   (Alg. 3) and inverse-distance-weighted error compensation (Alg. 4),
 //!   sequential and multi-threaded, plus
-//!   [`mitigation::service::MitigationService`] — the streaming serving
-//!   layer: a bounded admission queue ([`mitigation::admission`]) with
-//!   backpressure, priority classes, completion tickets, and deadline
-//!   accounting over the shared (or a confined) pool — the `qai batch`
-//!   and `qai serve` CLI subcommands;
+//!   [`mitigation::engine`] — the **one front door** for running it: a
+//!   typed [`MitigationRequest`](mitigation::engine::MitigationRequest)
+//!   → [`Engine`](mitigation::engine::Engine) request/response API over
+//!   sharded bounded admission queues ([`mitigation::admission`]) with
+//!   backpressure, priority classes + EDF dispatch, completion tickets,
+//!   deadline accounting, consistent-hash tenant routing, and
+//!   per-tenant admission quotas — the `qai batch` and `qai serve` CLI
+//!   subcommands (the legacy
+//!   [`MitigationService`](mitigation::service::MitigationService) and
+//!   `mitigate*` free functions remain as deprecated bit-identical
+//!   wrappers);
 //! * [`filters`] — the Gaussian / uniform / Wiener baselines of §VIII;
 //! * [`metrics`] — SSIM (QCAT convention), PSNR, max-error, bit-rate;
 //! * [`coordinator`] — the distributed-memory runtime with the paper's
@@ -63,17 +69,20 @@
 //! use qai::data::synthetic::{DatasetKind, generate};
 //! use qai::quant::ErrorBound;
 //! use qai::compressors::{Compressor, cusz::CuszLike};
-//! use qai::mitigation::{MitigationConfig, mitigate};
+//! use qai::mitigation::engine::{self, MitigationRequest};
 //! use qai::metrics::ssim::ssim;
+//! use qai::SharedGrid;
 //!
 //! let field = generate(DatasetKind::ClimateLike, &[256, 256], 42);
 //! let eb = ErrorBound::relative(1e-2).resolve(&field.data);
 //! let codec = CuszLike::default();
 //! let compressed = codec.compress(&field, eb).unwrap();
 //! let decoded = codec.decompress(&compressed).unwrap();
-//! let fixed = mitigate(&decoded.grid, &decoded.quant_indices, eb,
-//!                      &MitigationConfig::default());
-//! let before = ssim(&field, &decoded.grid, 7, 2);
+//! // Zero-copy handle so the decoded field survives for the metrics.
+//! let dq: SharedGrid<f32> = decoded.grid.into();
+//! let request = MitigationRequest::new(dq.clone(), decoded.quant_indices, eb);
+//! let fixed = engine::execute(&request).unwrap().output;
+//! let before = ssim(&field, &dq, 7, 2);
 //! let after = ssim(&field, &fixed, 7, 2);
 //! assert!(after >= before);
 //! ```

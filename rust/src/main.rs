@@ -23,14 +23,12 @@ use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
 use qai::data::io;
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{bit_rate, max_rel_error, psnr, ssim};
-use qai::mitigation::{
-    mitigate_with_stats, Backend, Job, MitigationConfig, MitigationService, ServiceConfig,
-    SubmitError, SubmitOptions,
-};
+use qai::mitigation::engine::{self, Engine, MitigationRequest};
+use qai::mitigation::{Backend, Job, MitigationConfig, SubmitError};
 use qai::quant::ErrorBound;
-use qai::util::pool::{self, ThreadPool};
+use qai::util::pool;
+use qai::SharedGrid;
 use std::path::PathBuf;
-use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -86,19 +84,24 @@ SUBCOMMANDS
               [--taper R]
   batch       --jobs N [--dataset ...] [--dims AxBxC] [--rel 1e-2]
               [--codec cusz|cuszp|szp] [--eta 0.9] [--threads N] [--seed N]
-              (N independent fields through the batched mitigation
-               service on the shared persistent thread pool;
-               --threads is the per-job pipeline parallelism)
-  serve       --jobs N [--capacity C] [--interactive-every K]
-              [--deadline-ms D] [--lanes L] [--metrics] [--dataset ...]
-              [--dims AxBxC] [--rel 1e-2] [--eta 0.9] [--threads N]
-              [--seed N]
-              (stream N fields through the bounded admission queue:
-               every K-th job is interactive-class, --capacity bounds
-               queued jobs and exercises backpressure, --deadline-ms
-               tags jobs with a completion budget, --lanes > 0 confines
-               the whole service to a private pool, --metrics appends a
-               scrapeable key=value stats line; see docs/SERVING.md)
+              (N independent fields through the engine's batch path on
+               the shared persistent thread pool; --threads is the
+               per-job pipeline parallelism)
+  serve       --jobs N [--shards S] [--capacity C] [--tenants T]
+              [--quota Q] [--interactive-every K] [--deadline-ms D]
+              [--lanes L] [--metrics] [--dataset ...] [--dims AxBxC]
+              [--rel 1e-2] [--eta 0.9] [--threads N] [--seed N]
+              (stream N fields through the sharded engine: --shards
+               admission-queue shards behind the tenant router,
+               --tenants > 0 tags jobs round-robin with tenant ids
+               t0..t{T-1}, --quota > 0 caps each tenant's in-flight
+               jobs, every K-th job is interactive-class, --capacity
+               bounds each shard's queue and exercises backpressure,
+               --deadline-ms tags jobs with a completion budget
+               (dispatched EDF within a class), --lanes > 0 gives each
+               shard a private L-lane pool, --metrics appends the
+               scrapeable per-shard/per-tenant key=value stats lines;
+               see docs/SERVING.md)
   distributed [--dataset ...] [--dims AxBxC] [--rel 1e-2] [--ranks N]
               [--strategy embarrassing|exact|approximate] [--seed N]
   info        (PJRT platform + artifacts present)
@@ -174,7 +177,7 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.require("input")?);
     let output = PathBuf::from(args.require("output")?);
     let codec = codec(&args.get_or("codec", "cusz"))?;
-    let do_mitigate = args.get_bool("mitigate");
+    let do_mitigate = args.get_bool("mitigate")?;
     let cfg = MitigationConfig {
         eta: args.get_parse("eta", 0.9)?,
         threads: args.get_parse("threads", 1)?,
@@ -186,15 +189,20 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let stream = io::read_bytes(&input)?;
     let dec = codec.decompress(&stream)?;
     let out = if do_mitigate {
-        let (fixed, stats) = mitigate_with_stats(&dec.grid, &dec.quant_indices, dec.bound, &cfg)?;
+        let n = dec.grid.len();
+        let request = MitigationRequest::new(dec.grid, dec.quant_indices, dec.bound)
+            .config(cfg)
+            .with_stats(true);
+        let resp = engine::execute(&request)?;
+        let stats = resp.stats.expect("stats requested");
         println!(
             "mitigated in {:.3}s ({:.1} MB/s, |B1|={}, |B2|={})",
             stats.total(),
-            stats.throughput_mbs(dec.grid.len()),
+            stats.throughput_mbs(n),
             stats.n_boundary1,
             stats.n_boundary2
         );
-        fixed
+        resp.output
     } else {
         dec.grid
     };
@@ -222,7 +230,14 @@ fn cmd_demo(args: &Args) -> Result<()> {
     let eb = bound.resolve(&orig.data);
     let stream = codec.compress(&orig, eb)?;
     let dec = codec.decompress(&stream)?;
-    let (fixed, stats) = mitigate_with_stats(&dec.grid, &dec.quant_indices, dec.bound, &cfg)?;
+    // Keep a zero-copy handle on the decompressed field for the
+    // before/after metrics; the request shares the same allocation.
+    let dq: SharedGrid<f32> = dec.grid.into();
+    let request = MitigationRequest::new(dq.clone(), dec.quant_indices, dec.bound)
+        .config(cfg)
+        .with_stats(true);
+    let resp = engine::execute(&request)?;
+    let (fixed, stats) = (resp.output, resp.stats.expect("stats requested"));
 
     println!(
         "dataset={} dims={dims:?} codec={} eps_abs={:.3e}",
@@ -236,13 +251,13 @@ fn cmd_demo(args: &Args) -> Result<()> {
         (orig.len() * 4) as f64 / stream.len() as f64,
         bit_rate(stream.len(), orig.len())
     );
-    let (s0, s1) = (ssim(&orig, &dec.grid, 7, 2), ssim(&orig, &fixed, 7, 2));
-    let (p0, p1) = (psnr(&orig.data, &dec.grid.data), psnr(&orig.data, &fixed.data));
+    let (s0, s1) = (ssim(&orig, &dq, 7, 2), ssim(&orig, &fixed, 7, 2));
+    let (p0, p1) = (psnr(&orig.data, &dq.data), psnr(&orig.data, &fixed.data));
     println!("SSIM: {s0:.4} -> {s1:.4} ({:+.2}%)", (s1 - s0) / s0.abs().max(1e-12) * 100.0);
     println!("PSNR: {p0:.2} dB -> {p1:.2} dB");
     println!(
         "max rel err: {:.5} -> {:.5} (relaxed bound {:.5})",
-        max_rel_error(&orig.data, &dec.grid.data),
+        max_rel_error(&orig.data, &dq.data),
         max_rel_error(&orig.data, &fixed.data),
         (1.0 + cfg.eta) * eb.rel.unwrap_or(eb.abs / orig.value_range() as f64)
     );
@@ -277,7 +292,8 @@ fn cmd_batch(args: &Args) -> Result<()> {
 
     // Full ingest path per job: synthesize → compress → decompress.
     let mut originals = Vec::with_capacity(jobs_n);
-    let mut jobs = Vec::with_capacity(jobs_n);
+    let mut dqs: Vec<SharedGrid<f32>> = Vec::with_capacity(jobs_n);
+    let mut requests = Vec::with_capacity(jobs_n);
     let mut total_stream = 0usize;
     for i in 0..jobs_n {
         let orig = generate(kind, &dims, seed + i as u64);
@@ -285,24 +301,28 @@ fn cmd_batch(args: &Args) -> Result<()> {
         let stream = codec.compress(&orig, eb)?;
         total_stream += stream.len();
         let dec = codec.decompress(&stream)?;
-        jobs.push(Job::with_config(dec.grid, dec.quant_indices, dec.bound, cfg));
+        let dq: SharedGrid<f32> = dec.grid.into();
+        dqs.push(dq.clone());
+        requests.push(
+            MitigationRequest::new(dq, dec.quant_indices, dec.bound).config(cfg),
+        );
         originals.push(orig);
     }
 
-    let service = MitigationService::new();
+    let engine = Engine::builder().build();
     let t0 = std::time::Instant::now();
-    let results = service.mitigate_batch(&jobs);
+    let results = engine.run_batch(requests);
     let wall = t0.elapsed().as_secs_f64();
 
-    let n_elems: usize = jobs.iter().map(|j| j.dq.len()).sum();
+    let n_elems: usize = dqs.iter().map(|g| g.len()).sum();
     let mut failures = 0usize;
     let mut psnr_before = 0.0f64;
     let mut psnr_after = 0.0f64;
     for (i, result) in results.iter().enumerate() {
         match result {
-            Ok((fixed, _stats)) => {
-                psnr_before += psnr(&originals[i].data, &jobs[i].dq.data);
-                psnr_after += psnr(&originals[i].data, &fixed.data);
+            Ok(resp) => {
+                psnr_before += psnr(&originals[i].data, &dqs[i].data);
+                psnr_after += psnr(&originals[i].data, &resp.output.data);
             }
             Err(e) => {
                 failures += 1;
@@ -312,7 +332,7 @@ fn cmd_batch(args: &Args) -> Result<()> {
     }
     let ok = jobs_n - failures;
     println!(
-        "batch: {jobs_n} x {} {:?} jobs via {} (pool lanes = {}, per-job threads = {})",
+        "batch: {jobs_n} x {} {:?} jobs via {} (engine pool lanes = {}, per-job threads = {})",
         kind.paper_name(),
         dims,
         codec.name(),
@@ -347,11 +367,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dims = parse_dims(&args.get_or("dims", default_dims))?;
     let bound = bound_from(args)?;
     let seed: u64 = args.get_parse("seed", 42)?;
+    let shards: usize = args.get_parse("shards", 1)?;
+    anyhow::ensure!(shards > 0, "--shards must be positive");
     let capacity: usize = args.get_parse("capacity", 16)?;
+    let tenants_n: usize = args.get_parse("tenants", 0)?;
+    let quota: u64 = args.get_parse("quota", 0)?;
     let interactive_every: usize = args.get_parse("interactive-every", 4)?;
     let deadline_ms: u64 = args.get_parse("deadline-ms", 0)?;
     let lanes: usize = args.get_parse("lanes", 0)?;
-    let metrics = args.get_bool("metrics");
+    let metrics = args.get_bool("metrics")?;
     let cfg = MitigationConfig {
         eta: args.get_parse("eta", 0.9)?,
         threads: args.get_parse("threads", 1)?,
@@ -359,14 +383,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     args.finish()?;
 
-    let service = MitigationService::with_config(ServiceConfig {
-        pool: (lanes > 0).then(|| Arc::new(ThreadPool::new(lanes))),
-        capacity,
-        ..Default::default()
-    });
+    let mut builder = Engine::builder().shards(shards).capacity(capacity);
+    if lanes > 0 {
+        builder = builder.lanes_per_shard(lanes);
+    }
+    if quota > 0 {
+        builder = builder.default_quota(quota);
+    }
+    let engine = builder.build();
 
     // Quantize-only ingest — `qai batch` exercises the codec path; this
-    // subcommand is about the admission queue itself.
+    // subcommand is about the serving engine itself.
     let mut inputs = Vec::with_capacity(jobs_n);
     for i in 0..jobs_n {
         let orig = generate(kind, &dims, seed + i as u64);
@@ -376,63 +403,98 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let n_elems: usize = inputs.iter().map(|j| j.dq.len()).sum();
 
-    // Stream the jobs in: try_submit first, and on backpressure fall
-    // back to a blocking submit (counting how often the queue pushed
-    // back).
+    // A rejected submission hands the Job back; this rebuilds the full
+    // request (class, deadline, tenant) for slot `i` around it.
+    let request_for = |job: Job, i: usize| {
+        let mut req = MitigationRequest::from_job(job);
+        if interactive_every > 0 && i % interactive_every == 0 {
+            req = req.interactive();
+        }
+        if deadline_ms > 0 {
+            req = req.deadline(Duration::from_millis(deadline_ms));
+        }
+        if tenants_n > 0 {
+            req = req.tenant(format!("t{}", i % tenants_n));
+        }
+        req
+    };
+
+    // Stream the jobs in: try_submit first; on backpressure fall back
+    // to a blocking submit, and on a quota rejection back off briefly
+    // and retry (counting both).
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(jobs_n);
     let mut backpressure_hits = 0usize;
-    for (i, job) in inputs.into_iter().enumerate() {
-        let mut opts = if interactive_every > 0 && i % interactive_every == 0 {
-            SubmitOptions::interactive()
-        } else {
-            SubmitOptions::bulk()
-        };
-        if deadline_ms > 0 {
-            opts = opts.with_deadline(Duration::from_millis(deadline_ms));
-        }
-        let ticket = match service.try_submit(job, opts) {
-            Ok(t) => t,
-            Err(e @ SubmitError::QueueFull(_)) => {
-                backpressure_hits += 1;
-                service
-                    .submit(e.into_job(), opts)
-                    .map_err(|e| anyhow::anyhow!("blocking submit failed: {e}"))?
+    let mut quota_hits = 0usize;
+    for i in 0..jobs_n {
+        let mut request = request_for(inputs[i].clone(), i);
+        let ticket = loop {
+            match engine.try_submit(request) {
+                Ok(t) => break t,
+                Err(SubmitError::QueueFull(job)) => {
+                    backpressure_hits += 1;
+                    match engine.submit(request_for(job, i)) {
+                        Ok(t) => break t,
+                        Err(SubmitError::QuotaExceeded(job)) => {
+                            quota_hits += 1;
+                            request = request_for(job, i);
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(e) => anyhow::bail!("blocking submit failed: {e}"),
+                    }
+                }
+                Err(SubmitError::QuotaExceeded(job)) => {
+                    quota_hits += 1;
+                    request = request_for(job, i);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("submission failed: {e}"),
             }
-            Err(e) => anyhow::bail!("submission failed: {e}"),
         };
         tickets.push((i, ticket));
     }
+    drop(inputs);
 
     let mut failures = 0usize;
     let mut missed = 0usize;
     let mut max_wait = Duration::ZERO;
     for (i, ticket) in tickets {
-        let report = ticket.wait();
-        max_wait = max_wait.max(report.queue_wait);
-        if report.deadline_missed {
-            missed += 1;
-        }
-        if let Err(e) = &report.result {
-            failures += 1;
-            eprintln!("job {i} (seq {}) failed: {e:#}", report.seq);
+        match ticket.wait() {
+            Ok(resp) => {
+                max_wait = max_wait.max(resp.queue_wait);
+                if resp.deadline_missed {
+                    missed += 1;
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("job {i} failed: {e:#}");
+            }
         }
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let st = service.stats();
+    let stats = engine.stats();
+    let st = stats.aggregate();
     println!(
-        "serve: {jobs_n} x {} {:?} jobs, capacity {capacity}, pool lanes = {}",
+        "serve: {jobs_n} x {} {:?} jobs, {shards} shard(s), capacity {capacity}/shard, pool lanes = {}",
         kind.paper_name(),
         dims,
         if lanes > 0 { lanes } else { pool::parallelism() }
     );
+    if tenants_n > 0 {
+        println!(
+            "tenants: {tenants_n} round-robin, quota {} in-flight each, {} quota rejections (retried {quota_hits})",
+            if quota > 0 { quota.to_string() } else { "unlimited".to_string() },
+            stats.quota_rejections()
+        );
+    }
     println!(
         "admitted {} (rejected-then-blocked {backpressure_hits}), completed {}, failed {}",
         st.submitted, st.completed, st.failed
     );
     println!(
-        "priorities: interactive {} / bulk {}; max queue depth {}; max queue wait {:.1} ms",
+        "priorities: interactive {} / bulk {}; max shard queue depth {}; max queue wait {:.1} ms",
         st.interactive_done,
         st.bulk_done,
         st.max_queue_depth,
@@ -440,7 +502,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if deadline_ms > 0 {
         println!(
-            "deadlines: {} set, {} missed ({missed} observed on tickets)",
+            "deadlines: {} set, {} missed ({missed} observed on tickets; EDF within class)",
             st.deadlines_set, st.deadlines_missed
         );
     }
@@ -452,7 +514,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         st.total_queue_wait_s * 1e3 / jobs_n as f64,
         st.total_exec_s * 1e3 / jobs_n as f64
     );
-    let ast = service.arena_stats();
+    let ast = engine.arena_stats();
     println!(
         "arena: {:.0}% buffer reuse ({} hits / {} misses), {} B pooled",
         ast.reuse_fraction() * 100.0,
@@ -461,7 +523,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ast.bytes_pooled
     );
     if metrics {
-        println!("{}", service.metrics_text());
+        println!("{}", engine.metrics_text());
     }
     anyhow::ensure!(failures == 0, "{failures} job(s) failed");
     Ok(())

@@ -19,6 +19,12 @@
 //! * **Priority classes** — [`Priority::Interactive`] jobs are always
 //!   dequeued before queued [`Priority::Bulk`] jobs, so latency-bound
 //!   traffic overtakes backfill under contention.
+//! * **EDF within a class** — inside one priority class, queued jobs
+//!   that carry a deadline are dequeued earliest-deadline-first;
+//!   deadline-less jobs drain FIFO after every deadline-carrying job
+//!   of their class. (ROADMAP follow-up: deadline-aware scheduling
+//!   instead of plain FIFO.) Arrival order still breaks ties, so
+//!   deadline-free workloads behave exactly as before.
 //! * **Completion tickets** — every accepted job yields a [`JobTicket`]
 //!   the caller can block on, poll, or wait on with a timeout; the
 //!   resolved [`JobReport`] carries the pipeline result plus queue-wait
@@ -51,12 +57,12 @@
 //! [`mitigate_with_stats`](crate::mitigation::pipeline::mitigate_with_stats)
 //! call, whatever the pool, priority, or contention.
 //!
-//! # Examples
+//! This layer is consumed through the typed front door,
+//! [`crate::mitigation::engine`]:
 //!
 //! ```
 //! use qai::data::synthetic::{generate, DatasetKind};
-//! use qai::mitigation::admission::SubmitOptions;
-//! use qai::mitigation::{Job, MitigationService};
+//! use qai::mitigation::engine::{Engine, MitigationRequest};
 //! use qai::quant::{quantize_grid, ErrorBound};
 //! use std::time::Duration;
 //!
@@ -64,18 +70,18 @@
 //! let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
 //! let (q, dq) = quantize_grid(&orig, eb);
 //!
-//! let service = MitigationService::new();
-//! let opts = SubmitOptions::interactive().with_deadline(Duration::from_secs(60));
-//! let ticket = service.submit(Job::new(dq, q, eb), opts).unwrap();
-//! let report = ticket.wait();
-//! assert!(report.result.is_ok());
-//! assert!(!report.deadline_missed);
-//! assert_eq!(service.stats().completed, 1);
+//! let engine = Engine::builder().build();
+//! let request = MitigationRequest::new(dq, q, eb)
+//!     .interactive()
+//!     .deadline(Duration::from_secs(60));
+//! let response = engine.run(request).unwrap();
+//! assert!(!response.deadline_missed);
+//! assert_eq!(engine.stats().aggregate().completed, 1);
 //! ```
 
 #![deny(missing_docs)]
 
-use crate::mitigation::pipeline::mitigate_with_stats_on;
+use crate::mitigation::pipeline::run_pipeline;
 use crate::mitigation::service::{Job, JobResult};
 use crate::util::arena::{Arena, ArenaHandle};
 use crate::util::pool::{self, PoolHandle, ThreadPool};
@@ -147,6 +153,11 @@ pub enum SubmitError {
     Timeout(Job),
     /// The service is shutting down and accepts nothing.
     Shutdown(Job),
+    /// The request's tenant is at its concurrent-admission quota
+    /// (engine-level admission control; see
+    /// [`EngineBuilder::quota`](crate::mitigation::engine::EngineBuilder::quota)).
+    /// Resolves as soon as one of the tenant's in-flight jobs finishes.
+    QuotaExceeded(Job),
 }
 
 impl SubmitError {
@@ -155,7 +166,8 @@ impl SubmitError {
         match self {
             SubmitError::QueueFull(job)
             | SubmitError::Timeout(job)
-            | SubmitError::Shutdown(job) => job,
+            | SubmitError::Shutdown(job)
+            | SubmitError::QuotaExceeded(job) => job,
         }
     }
 }
@@ -167,6 +179,7 @@ impl std::fmt::Debug for SubmitError {
             SubmitError::QueueFull(_) => "QueueFull(..)",
             SubmitError::Timeout(_) => "Timeout(..)",
             SubmitError::Shutdown(_) => "Shutdown(..)",
+            SubmitError::QuotaExceeded(_) => "QuotaExceeded(..)",
         })
     }
 }
@@ -177,6 +190,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::QueueFull(_) => "admission queue is full",
             SubmitError::Timeout(_) => "timed out waiting for admission-queue space",
             SubmitError::Shutdown(_) => "mitigation service is shutting down",
+            SubmitError::QuotaExceeded(_) => "per-tenant admission quota exceeded",
         })
     }
 }
@@ -321,13 +335,30 @@ pub struct ServiceStats {
     pub total_exec_s: f64,
 }
 
+/// An opaque token attached to a submission by the engine layer. It is
+/// dropped exactly when the job leaves the service — on completion,
+/// failure, or shutdown cancellation, in each case *before* the
+/// ticket resolves, so a client that waited on the ticket can reuse
+/// the slot immediately — which the engine uses (via a `Drop` impl) to
+/// release the tenant's admission-quota slot. A failed admission never
+/// stores the token, so the caller's copy drops immediately and the
+/// quota slot frees with it.
+pub(crate) type AdmissionLease = Box<dyn std::any::Any + Send>;
+
 /// One queued submission.
 struct Pending {
     job: Job,
     priority: Priority,
     deadline: Option<Duration>,
+    /// Absolute deadline instant (enqueue time + deadline), the EDF
+    /// sort key within a priority class. `None` sorts after every
+    /// deadline-carrying job.
+    deadline_at: Option<Instant>,
     enqueued: Instant,
     ticket: Arc<TicketState>,
+    /// Engine-layer quota token; explicitly dropped just before the
+    /// job's ticket is fulfilled (or the job is cancelled).
+    lease: Option<AdmissionLease>,
 }
 
 struct QueueInner {
@@ -344,8 +375,36 @@ impl QueueInner {
         self.interactive.len() + self.bulk.len()
     }
 
+    /// Dequeue the next job: strict interactive-over-bulk, and
+    /// earliest-deadline-first within a class (deadline-less jobs drain
+    /// FIFO after all deadline-carrying jobs of their class; arrival
+    /// order breaks ties).
     fn pop(&mut self) -> Option<Pending> {
-        self.interactive.pop_front().or_else(|| self.bulk.pop_front())
+        Self::pop_edf(&mut self.interactive).or_else(|| Self::pop_edf(&mut self.bulk))
+    }
+
+    fn pop_edf(queue: &mut VecDeque<Pending>) -> Option<Pending> {
+        if queue.len() <= 1 {
+            return queue.pop_front();
+        }
+        // O(depth) scan per dequeue — fine at serving-queue depths
+        // (default capacity 256) and free for deadline-less workloads
+        // (the first entry wins immediately).
+        let mut best = 0usize;
+        let mut best_deadline = queue[0].deadline_at;
+        for (i, pending) in queue.iter().enumerate().skip(1) {
+            if let Some(d) = pending.deadline_at {
+                let earlier = match best_deadline {
+                    None => true,
+                    Some(b) => d < b,
+                };
+                if earlier {
+                    best = i;
+                    best_deadline = Some(d);
+                }
+            }
+        }
+        queue.remove(best)
     }
 }
 
@@ -389,7 +448,12 @@ pub(crate) struct Admission {
 }
 
 impl Admission {
-    pub(crate) fn new(pool: Option<Arc<ThreadPool>>, capacity: usize, start_paused: bool) -> Self {
+    pub(crate) fn new(
+        pool: Option<Arc<ThreadPool>>,
+        capacity: usize,
+        start_paused: bool,
+        arena: Arena,
+    ) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueInner {
                 interactive: VecDeque::new(),
@@ -404,7 +468,7 @@ impl Admission {
             capacity: capacity.max(1),
             next_seq: AtomicU64::new(0),
             pool,
-            arena: Arena::new(),
+            arena,
         });
         Admission { shared, scheduler: Mutex::new(None) }
     }
@@ -430,14 +494,27 @@ impl Admission {
 
     /// Append an accepted job to its class queue and bump counters.
     /// Caller holds the queue lock and has verified there is space.
-    fn enqueue(&self, q: &mut QueueInner, job: Job, opts: SubmitOptions) -> JobTicket {
+    fn enqueue(
+        &self,
+        q: &mut QueueInner,
+        job: Job,
+        opts: SubmitOptions,
+        lease: Option<AdmissionLease>,
+    ) -> JobTicket {
         let (ticket, state) = JobTicket::new();
+        let enqueued = Instant::now();
         let pending = Pending {
             job,
             priority: opts.priority,
             deadline: opts.deadline,
-            enqueued: Instant::now(),
+            // checked_add: an absurd deadline (e.g. Duration::MAX) must
+            // not panic under the queue lock — an unrepresentable
+            // instant just sorts after every finite deadline, like no
+            // deadline at all.
+            deadline_at: opts.deadline.and_then(|d| enqueued.checked_add(d)),
+            enqueued,
             ticket: state,
+            lease,
         };
         match opts.priority {
             Priority::Interactive => q.interactive.push_back(pending),
@@ -460,6 +537,18 @@ impl Admission {
         job: Job,
         opts: SubmitOptions,
     ) -> Result<JobTicket, SubmitError> {
+        self.try_submit_leased(job, opts, None)
+    }
+
+    /// [`Admission::try_submit`] with an engine-layer quota lease. On
+    /// rejection the lease never enters the queue and is dropped here,
+    /// releasing the quota slot immediately.
+    pub(crate) fn try_submit_leased(
+        &self,
+        job: Job,
+        opts: SubmitOptions,
+        lease: Option<AdmissionLease>,
+    ) -> Result<JobTicket, SubmitError> {
         let ticket = {
             let mut q = self.shared.queue.lock().unwrap();
             if q.shutdown {
@@ -470,7 +559,7 @@ impl Admission {
                 self.shared.stats.lock().unwrap().rejected_full += 1;
                 return Err(SubmitError::QueueFull(job));
             }
-            self.enqueue(&mut q, job, opts)
+            self.enqueue(&mut q, job, opts, lease)
         };
         self.shared.work.notify_all();
         self.ensure_scheduler();
@@ -478,6 +567,17 @@ impl Admission {
     }
 
     pub(crate) fn submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
+        self.submit_leased(job, opts, None)
+    }
+
+    /// [`Admission::submit`] with an engine-layer quota lease (see
+    /// [`Admission::try_submit_leased`]).
+    pub(crate) fn submit_leased(
+        &self,
+        job: Job,
+        opts: SubmitOptions,
+        lease: Option<AdmissionLease>,
+    ) -> Result<JobTicket, SubmitError> {
         let give_up = opts.timeout.map(|t| Instant::now() + t);
         let ticket = {
             let mut q = self.shared.queue.lock().unwrap();
@@ -501,7 +601,7 @@ impl Admission {
                     }
                 }
             }
-            self.enqueue(&mut q, job, opts)
+            self.enqueue(&mut q, job, opts, lease)
         };
         self.shared.work.notify_all();
         self.ensure_scheduler();
@@ -618,7 +718,7 @@ fn dispatch_job(shared: &Arc<Shared>, pending: Pending, seq: u64) {
 
 /// Execute one job's pipeline on the service pool, resolve its ticket,
 /// account stats, and free the concurrency slot.
-fn run_job(shared: Arc<Shared>, pending: Pending, seq: u64) {
+fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
     let start = Instant::now();
     let queue_wait = start.duration_since(pending.enqueued);
     let handle = PoolHandle::Explicit(shared.thread_pool());
@@ -636,7 +736,7 @@ fn run_job(shared: Arc<Shared>, pending: Pending, seq: u64) {
         // A panic below (defensive: the pipeline asserts on internal
         // invariants) must not take down the worker or sibling jobs.
         match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            mitigate_with_stats_on(
+            run_pipeline(
                 handle,
                 ArenaHandle::Pooled(&shared.arena),
                 &job.dq,
@@ -676,6 +776,10 @@ fn run_job(shared: Arc<Shared>, pending: Pending, seq: u64) {
         st.total_queue_wait_s += queue_wait.as_secs_f64();
         st.total_exec_s += exec.as_secs_f64();
     }
+    // Release the engine-layer quota slot *before* resolving the
+    // ticket, so a client that waited on it can resubmit immediately
+    // without a spurious QuotaExceeded.
+    drop(pending.lease.take());
     fulfill(
         &pending.ticket,
         JobReport {
@@ -707,8 +811,10 @@ fn cancel_queued(shared: &Shared) {
         return;
     }
     shared.stats.lock().unwrap().cancelled += drained.len() as u64;
-    for p in drained {
+    for mut p in drained {
         let queue_wait = p.enqueued.elapsed();
+        // Quota slot freed before the ticket resolves (see run_job).
+        drop(p.lease.take());
         fulfill(
             &p.ticket,
             JobReport {

@@ -1,0 +1,1009 @@
+//! The one front door for mitigation work: a typed request/response
+//! API over sharded admission queues, with tenant-aware routing and
+//! per-tenant admission quotas.
+//!
+//! Three PRs of organic growth scattered the entry points across
+//! layers — `mitigate` / `mitigate_with_stats` / `mitigate_with_stats_on`,
+//! three `MitigationService` constructors, `SubmitOptions`, and two
+//! `mitigate_batch*` variants — and every new capability (pool
+//! confinement, arenas, deadlines) added another positional-argument
+//! variant. This module collapses that combinatorics into two types:
+//!
+//! * [`MitigationRequest`] — a builder carrying the payload
+//!   (`Arc`-backed [`SharedGrid`]s, so building and submitting never
+//!   copy field data), the [`MitigationConfig`], the scheduling class,
+//!   an optional completion deadline, an optional blocking-submit
+//!   timeout, an optional tenant id, and a per-step-stats opt-in.
+//! * [`Engine`] — `N` admission-queue shards behind a router (built via
+//!   [`EngineBuilder`]: shard count, per-shard queue/pool config,
+//!   shared-vs-per-shard arena, quota table). Requests with a tenant id
+//!   route by consistent hash, so one tenant's jobs always land on the
+//!   same shard (cache-warm arenas, per-tenant ordering); tenant-less
+//!   requests fall back to the least-loaded shard. Per-tenant quotas
+//!   bound how many of a tenant's jobs may be in flight at once
+//!   ([`SubmitError::QuotaExceeded`]); within each shard, dispatch is
+//!   earliest-deadline-first inside a priority class.
+//!
+//! Execution is **bit-identical** to the legacy entry points: every
+//! path runs the same pipeline substrate, so sharding, routing, and
+//! quotas are pure scheduling/throughput knobs (the engine exactness
+//! matrix in `rust/tests/engine.rs` proves it against the legacy
+//! paths). The legacy functions survive as `#[deprecated]` thin
+//! wrappers; `docs/SERVING.md` has the old-call → new-request migration
+//! table.
+//!
+//! For one-off synchronous work with no queue at all, use the free
+//! functions: [`execute`] (caller thread, global pool, fresh arena —
+//! the exact legacy `mitigate_with_stats` behavior) or [`execute_on`]
+//! (explicit pool + arena — the legacy `mitigate_with_stats_on`).
+//!
+//! # Examples
+//!
+//! ```
+//! use qai::data::synthetic::{generate, DatasetKind};
+//! use qai::mitigation::engine::{Engine, MitigationRequest};
+//! use qai::quant::{quantize_grid, ErrorBound};
+//!
+//! let orig = generate(DatasetKind::ClimateLike, &[16, 16], 7);
+//! let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+//! let (q, dq) = quantize_grid(&orig, eb);
+//!
+//! let engine = Engine::builder().shards(2).quota("acme", 4).build();
+//! let response = engine
+//!     .run(MitigationRequest::new(dq, q, eb).tenant("acme").with_stats(true))
+//!     .unwrap();
+//! assert_eq!(response.output.len(), 16 * 16);
+//! assert!(response.stats.unwrap().total() >= 0.0);
+//! ```
+
+#![deny(missing_docs)]
+
+use crate::data::grid::{Grid, SharedGrid};
+use crate::mitigation::admission::{
+    Admission, AdmissionLease, JobReport, Priority, ServiceStats, SubmitError, SubmitOptions,
+};
+use crate::mitigation::pipeline::{run_pipeline, MitigationConfig, PipelineStats};
+use crate::mitigation::service::{render_metrics_labeled, Job, ServiceConfig};
+use crate::quant::{QIndex, ResolvedBound};
+use crate::util::arena::{Arena, ArenaHandle, ArenaStats};
+use crate::util::pool::{PoolHandle, ThreadPool};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One typed unit of mitigation work: payload, pipeline configuration,
+/// and scheduling metadata, assembled with chainable builder methods.
+///
+/// The payload is held as `Arc`-backed [`SharedGrid`]s — building a
+/// request from pre-shared grids is a pointer bump, and a rejected
+/// submission hands the same allocation back inside the
+/// [`SubmitError`] (recover it with [`SubmitError::into_job`] and
+/// [`MitigationRequest::from_job`]).
+#[derive(Clone)]
+pub struct MitigationRequest {
+    pub(crate) job: Job,
+    pub(crate) priority: Priority,
+    pub(crate) deadline: Option<Duration>,
+    pub(crate) timeout: Option<Duration>,
+    pub(crate) tenant: Option<String>,
+    pub(crate) collect_stats: bool,
+}
+
+impl MitigationRequest {
+    /// A bulk-priority request with the default pipeline configuration,
+    /// no deadline, no tenant, and per-step stats off. Accepts owned
+    /// [`Grid`]s or pre-shared [`SharedGrid`]s.
+    pub fn new(
+        dq: impl Into<SharedGrid<f32>>,
+        q: impl Into<SharedGrid<QIndex>>,
+        eb: ResolvedBound,
+    ) -> Self {
+        MitigationRequest::from_job(Job::new(dq, q, eb))
+    }
+
+    /// Wrap an existing [`Job`] (payload + pipeline config) with
+    /// default scheduling metadata — the bridge from the legacy API and
+    /// from jobs recovered out of a [`SubmitError`].
+    pub fn from_job(job: Job) -> Self {
+        MitigationRequest {
+            job,
+            priority: Priority::Bulk,
+            deadline: None,
+            timeout: None,
+            tenant: None,
+            collect_stats: false,
+        }
+    }
+
+    /// Replace the pipeline configuration (η, per-job threads, backend,
+    /// taper).
+    pub fn config(mut self, cfg: MitigationConfig) -> Self {
+        self.job.cfg = cfg;
+        self
+    }
+
+    /// Set the scheduling class explicitly.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Shorthand for [`Priority::Interactive`].
+    pub fn interactive(self) -> Self {
+        self.priority(Priority::Interactive)
+    }
+
+    /// Shorthand for [`Priority::Bulk`] (the default).
+    pub fn bulk(self) -> Self {
+        self.priority(Priority::Bulk)
+    }
+
+    /// Attach a completion budget measured from submission. Jobs with
+    /// deadlines are dispatched earliest-deadline-first within their
+    /// priority class; an overrun job still completes but is flagged in
+    /// its [`MitigationResponse`] and in the shard stats.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Bound how long a blocking [`Engine::submit`] may wait for queue
+    /// space (ignored by [`Engine::try_submit`]).
+    pub fn submit_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = Some(timeout);
+        self
+    }
+
+    /// Tag the request with a tenant id: routes it to the tenant's
+    /// consistent-hash shard and subjects it to the tenant's admission
+    /// quota (if one is configured).
+    pub fn tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// Opt into per-step pipeline stats on the response (off by
+    /// default; the stats are cheap but rarely needed in production).
+    pub fn with_stats(mut self, collect: bool) -> Self {
+        self.collect_stats = collect;
+        self
+    }
+
+    /// The payload + pipeline config this request carries.
+    pub fn job(&self) -> &Job {
+        &self.job
+    }
+
+    /// The tenant id, if any.
+    pub fn tenant_id(&self) -> Option<&str> {
+        self.tenant.as_deref()
+    }
+
+    /// Recover the payload, dropping the scheduling metadata.
+    pub fn into_job(self) -> Job {
+        self.job
+    }
+
+    fn submit_options(&self) -> SubmitOptions {
+        SubmitOptions {
+            priority: self.priority,
+            deadline: self.deadline,
+            timeout: self.timeout,
+        }
+    }
+}
+
+impl std::fmt::Debug for MitigationRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MitigationRequest")
+            .field("dims", &self.job.dq.shape.user_dims())
+            .field("priority", &self.priority)
+            .field("deadline", &self.deadline)
+            .field("tenant", &self.tenant)
+            .field("collect_stats", &self.collect_stats)
+            .finish()
+    }
+}
+
+/// The outcome of one successfully executed request.
+#[derive(Debug)]
+pub struct MitigationResponse {
+    /// The compensated field (freshly owned; hand its buffer back via
+    /// [`Engine::recycle`] to make warm outputs allocation-free).
+    pub output: Grid<f32>,
+    /// Per-step pipeline stats — `Some` iff the request opted in with
+    /// [`MitigationRequest::with_stats`].
+    pub stats: Option<PipelineStats>,
+    /// Shard the job ran on (`None` for the synchronous [`execute`] /
+    /// [`execute_on`] paths, which bypass the queue).
+    pub shard: Option<usize>,
+    /// Tenant the request was tagged with.
+    pub tenant: Option<String>,
+    /// The shard's dequeue sequence number (`None` off-queue).
+    pub seq: Option<u64>,
+    /// Scheduling class the request ran as.
+    pub priority: Priority,
+    /// Submission → start of pipeline execution (zero off-queue).
+    pub queue_wait: Duration,
+    /// Pipeline execution duration.
+    pub exec: Duration,
+    /// Deadline the request carried, if any.
+    pub deadline: Option<Duration>,
+    /// True iff a deadline was set and `queue_wait + exec` exceeded it.
+    pub deadline_missed: bool,
+}
+
+/// Completion handle for one admitted request. Resolves exactly once;
+/// [`ResponseTicket::wait`] always returns eventually on a draining
+/// engine (see the admission-layer ticket contract).
+pub struct ResponseTicket {
+    inner: crate::mitigation::admission::JobTicket,
+    shard: usize,
+    tenant: Option<String>,
+    collect_stats: bool,
+}
+
+impl ResponseTicket {
+    /// Shard the request was routed to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Tenant the request was tagged with.
+    pub fn tenant(&self) -> Option<&str> {
+        self.tenant.as_deref()
+    }
+
+    /// True once the response is ready (a subsequent `wait` returns
+    /// immediately).
+    pub fn is_complete(&self) -> bool {
+        self.inner.is_complete()
+    }
+
+    /// Block until the job finishes and convert its report.
+    pub fn wait(self) -> anyhow::Result<MitigationResponse> {
+        let ResponseTicket { inner, shard, tenant, collect_stats } = self;
+        into_response(inner.wait(), Some(shard), tenant, collect_stats)
+    }
+
+    /// Non-blocking poll: the response if the job finished, the ticket
+    /// back otherwise.
+    pub fn try_wait(self) -> Result<anyhow::Result<MitigationResponse>, ResponseTicket> {
+        let ResponseTicket { inner, shard, tenant, collect_stats } = self;
+        match inner.try_wait() {
+            Ok(report) => Ok(into_response(report, Some(shard), tenant, collect_stats)),
+            Err(inner) => Err(ResponseTicket { inner, shard, tenant, collect_stats }),
+        }
+    }
+
+    /// [`ResponseTicket::wait`] bounded by `timeout`; the ticket comes
+    /// back if the job is still running.
+    pub fn wait_timeout(
+        self,
+        timeout: Duration,
+    ) -> Result<anyhow::Result<MitigationResponse>, ResponseTicket> {
+        let ResponseTicket { inner, shard, tenant, collect_stats } = self;
+        match inner.wait_timeout(timeout) {
+            Ok(report) => Ok(into_response(report, Some(shard), tenant, collect_stats)),
+            Err(inner) => Err(ResponseTicket { inner, shard, tenant, collect_stats }),
+        }
+    }
+}
+
+impl std::fmt::Debug for ResponseTicket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResponseTicket")
+            .field("shard", &self.shard)
+            .field("tenant", &self.tenant)
+            .field("complete", &self.is_complete())
+            .finish()
+    }
+}
+
+fn into_response(
+    report: JobReport,
+    shard: Option<usize>,
+    tenant: Option<String>,
+    collect_stats: bool,
+) -> anyhow::Result<MitigationResponse> {
+    let (output, stats) = report.result?;
+    Ok(MitigationResponse {
+        output,
+        stats: if collect_stats { Some(stats) } else { None },
+        shard,
+        tenant,
+        seq: Some(report.seq),
+        priority: report.priority,
+        queue_wait: report.queue_wait,
+        exec: report.exec,
+        deadline: report.deadline,
+        deadline_missed: report.deadline_missed,
+    })
+}
+
+/// Run a request synchronously on the caller thread — global pool,
+/// fresh (non-recycling) arena — bypassing every queue. Bit-identical
+/// to the legacy `mitigate_with_stats` free function, which is now a
+/// wrapper over this substrate.
+pub fn execute(request: &MitigationRequest) -> anyhow::Result<MitigationResponse> {
+    execute_on(PoolHandle::Global, ArenaHandle::Fresh, request)
+}
+
+/// [`execute`] with the pipeline's parallel regions confined to `pool`
+/// and its full-grid buffers acquired through `arena` — the single
+/// replacement for the legacy `*_on` variant combinatorics.
+pub fn execute_on(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    request: &MitigationRequest,
+) -> anyhow::Result<MitigationResponse> {
+    let job = &request.job;
+    let start = Instant::now();
+    let (output, stats) = run_pipeline(pool, arena, &job.dq, &job.q, job.eb, &job.cfg)?;
+    let exec = start.elapsed();
+    Ok(MitigationResponse {
+        output,
+        stats: if request.collect_stats { Some(stats) } else { None },
+        shard: None,
+        tenant: request.tenant.clone(),
+        seq: None,
+        priority: request.priority,
+        queue_wait: Duration::ZERO,
+        exec,
+        deadline: request.deadline,
+        deadline_missed: request.deadline.is_some_and(|d| exec > d),
+    })
+}
+
+/// Point-in-time snapshot of one tenant's engine-level accounting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Tenant id.
+    pub tenant: String,
+    /// Configured max in-flight admissions (`None` = unlimited).
+    pub quota: Option<u64>,
+    /// Requests admitted for this tenant.
+    pub submitted: u64,
+    /// Requests rejected with [`SubmitError::QuotaExceeded`].
+    pub rejected_quota: u64,
+    /// Requests currently admitted and not yet finished (gauge).
+    pub in_flight: u64,
+}
+
+/// Point-in-time snapshot of a whole engine: per-shard admission
+/// counters plus per-tenant quota accounting.
+#[derive(Debug, Clone)]
+pub struct EngineStats {
+    /// One [`ServiceStats`] per shard, indexed by shard id.
+    pub shards: Vec<ServiceStats>,
+    /// Per-tenant accounting, sorted by tenant id.
+    pub tenants: Vec<TenantStats>,
+}
+
+impl EngineStats {
+    /// Sum the per-shard counters into one engine-wide view. Gauges
+    /// (`queue_depth`, `running`) and duration totals add across
+    /// shards; `max_queue_depth` is the max over per-shard high-water
+    /// marks (per-shard peaks need not coincide in time, so a sum would
+    /// overstate the global peak).
+    pub fn aggregate(&self) -> ServiceStats {
+        let mut agg = ServiceStats::default();
+        for s in &self.shards {
+            agg.submitted += s.submitted;
+            agg.rejected_full += s.rejected_full;
+            agg.submit_timeouts += s.submit_timeouts;
+            agg.completed += s.completed;
+            agg.failed += s.failed;
+            agg.cancelled += s.cancelled;
+            agg.interactive_done += s.interactive_done;
+            agg.bulk_done += s.bulk_done;
+            agg.deadlines_set += s.deadlines_set;
+            agg.deadlines_missed += s.deadlines_missed;
+            agg.max_queue_depth = agg.max_queue_depth.max(s.max_queue_depth);
+            agg.queue_depth += s.queue_depth;
+            agg.running += s.running;
+            agg.total_queue_wait_s += s.total_queue_wait_s;
+            agg.total_exec_s += s.total_exec_s;
+        }
+        agg
+    }
+
+    /// Total quota rejections across all tenants.
+    pub fn quota_rejections(&self) -> u64 {
+        self.tenants.iter().map(|t| t.rejected_quota).sum()
+    }
+}
+
+/// Soft cap on dynamically-tracked tenants. When the table is at the
+/// cap and an unseen tenant id arrives, one idle (zero in-flight)
+/// dynamically-created entry is evicted — its counters reset if the
+/// tenant returns — so high-cardinality tenant ids (per-user,
+/// per-session) cannot grow the table, the stats snapshot, or the
+/// metrics output without bound. Entries configured with
+/// [`EngineBuilder::quota`] are never evicted, and entries with jobs
+/// in flight are kept (quota correctness wins over the cap, so the
+/// table can transiently exceed it — bounded by the number of
+/// distinct tenants simultaneously in flight).
+pub const MAX_TRACKED_TENANTS: usize = 4096;
+
+/// Per-tenant engine-level accounting.
+struct TenantEntry {
+    quota: Option<u64>,
+    /// True for tenants pre-configured via [`EngineBuilder::quota`]
+    /// (never evicted from the tracking table).
+    configured: bool,
+    /// Shared with the [`QuotaLease`]s attached to this tenant's
+    /// in-flight jobs, which decrement it on drop.
+    in_flight: Arc<AtomicU64>,
+    submitted: u64,
+    rejected_quota: u64,
+}
+
+/// Dropped by the admission layer exactly when the job leaves the
+/// service (completion, failure, cancellation, or failed admission) —
+/// releasing the tenant's quota slot.
+struct QuotaLease {
+    in_flight: Arc<AtomicU64>,
+}
+
+impl Drop for QuotaLease {
+    fn drop(&mut self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Stable (cross-run, cross-platform) 64-bit FNV-1a — the consistent
+/// tenant → shard hash. `std`'s `DefaultHasher` is randomized per
+/// process, which would break router determinism.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Make a tenant id safe to embed as a `key=value` metrics token.
+fn metrics_safe(tenant: &str) -> String {
+    tenant
+        .chars()
+        .map(|c| if c.is_whitespace() || c == '=' { '_' } else { c })
+        .collect()
+}
+
+/// Builder for an [`Engine`]: shard count, per-shard queue/pool
+/// configuration, arena sharing policy, and the per-tenant quota
+/// table.
+///
+/// # Examples
+///
+/// ```
+/// use qai::mitigation::engine::Engine;
+/// use qai::util::pool::ThreadPool;
+/// use std::sync::Arc;
+///
+/// // Two shards confined to one shared 4-lane pool, a shared arena,
+/// // 32 queued jobs per shard, "acme" capped at 8 in-flight jobs and
+/// // everyone else at 16.
+/// let engine = Engine::builder()
+///     .shards(2)
+///     .capacity(32)
+///     .pool(Arc::new(ThreadPool::new(4)))
+///     .shared_arena(true)
+///     .quota("acme", 8)
+///     .default_quota(16)
+///     .build();
+/// assert_eq!(engine.shards(), 2);
+/// let acme = engine.tenant_stats("acme").unwrap();
+/// assert_eq!((acme.quota, acme.submitted, acme.in_flight), (Some(8), 0, 0));
+/// ```
+#[derive(Clone, Default)]
+pub struct EngineBuilder {
+    shards: usize,
+    template: ServiceConfig,
+    lanes_per_shard: Option<usize>,
+    shared_arena: bool,
+    quotas: Vec<(String, u64)>,
+    default_quota: Option<u64>,
+}
+
+impl EngineBuilder {
+    /// Number of admission-queue shards (minimum 1; the default).
+    /// Each shard has its own bounded queue and scheduler; a tenant's
+    /// requests consistently hash to one shard.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Per-shard bounded queue capacity (default
+    /// [`DEFAULT_QUEUE_CAPACITY`](crate::mitigation::service::DEFAULT_QUEUE_CAPACITY)).
+    pub fn capacity(mut self, capacity: usize) -> Self {
+        self.template.capacity = capacity;
+        self
+    }
+
+    /// Confine every shard (cross-job fan-out and each job's internal
+    /// steps A–E) to one shared explicit pool. Mutually exclusive with
+    /// [`EngineBuilder::lanes_per_shard`], which takes precedence.
+    pub fn pool(mut self, pool: Arc<ThreadPool>) -> Self {
+        self.template.pool = Some(pool);
+        self
+    }
+
+    /// Give each shard its own private pool of `lanes` lanes — hard
+    /// CPU isolation between shards. Overrides
+    /// [`EngineBuilder::pool`].
+    pub fn lanes_per_shard(mut self, lanes: usize) -> Self {
+        self.lanes_per_shard = Some(lanes.max(1));
+        self
+    }
+
+    /// Share one scratch-buffer arena across all shards (default:
+    /// one arena per shard). Sharing lets same-shaped jobs recycle
+    /// buffers across shard boundaries — the right choice when shards
+    /// exist for queue isolation rather than memory isolation.
+    pub fn shared_arena(mut self, shared: bool) -> Self {
+        self.shared_arena = shared;
+        self
+    }
+
+    /// Start with all shards paused (nothing runs until
+    /// [`Engine::resume`]); used by maintenance drains and the
+    /// deterministic ordering tests.
+    pub fn start_paused(mut self, paused: bool) -> Self {
+        self.template.start_paused = paused;
+        self
+    }
+
+    /// Apply a full per-shard [`ServiceConfig`] template (queue
+    /// capacity, pool, paused start, and — if set — an explicit arena,
+    /// which implies [`EngineBuilder::shared_arena`] across shards).
+    pub fn shard_config(mut self, cfg: ServiceConfig) -> Self {
+        self.template = cfg;
+        self
+    }
+
+    /// Cap `tenant` at `max_in_flight` concurrently admitted requests.
+    /// The `max_in_flight + 1`-th submission while all are in flight is
+    /// rejected with [`SubmitError::QuotaExceeded`] and hands the job
+    /// back for retry; the slot frees as soon as one of the tenant's
+    /// jobs finishes (or is cancelled).
+    pub fn quota(mut self, tenant: impl Into<String>, max_in_flight: u64) -> Self {
+        self.quotas.push((tenant.into(), max_in_flight));
+        self
+    }
+
+    /// Quota applied to tenants without an explicit
+    /// [`EngineBuilder::quota`] entry (default: unlimited).
+    pub fn default_quota(mut self, max_in_flight: u64) -> Self {
+        self.default_quota = Some(max_in_flight);
+        self
+    }
+
+    /// Build the engine: spawn-ready shards (schedulers start lazily on
+    /// first submission), the router, and the pre-populated quota
+    /// table.
+    pub fn build(self) -> Engine {
+        let n = self.shards.max(1);
+        // An explicit arena in the template is shared by definition;
+        // otherwise the policy knob decides shared-vs-per-shard.
+        let shared_arena = match self.template.arena.clone() {
+            Some(arena) => Some(arena),
+            None if self.shared_arena => Some(Arena::new()),
+            None => None,
+        };
+        let shards: Vec<Admission> = (0..n)
+            .map(|_| {
+                let pool = match self.lanes_per_shard {
+                    Some(lanes) => Some(Arc::new(ThreadPool::new(lanes))),
+                    None => self.template.pool.clone(),
+                };
+                let arena = shared_arena.clone().unwrap_or_default();
+                Admission::new(
+                    pool,
+                    self.template.capacity,
+                    self.template.start_paused,
+                    arena,
+                )
+            })
+            .collect();
+        let mut tenants = BTreeMap::new();
+        for (tenant, max) in self.quotas {
+            tenants.insert(
+                tenant,
+                TenantEntry {
+                    quota: Some(max),
+                    configured: true,
+                    in_flight: Arc::new(AtomicU64::new(0)),
+                    submitted: 0,
+                    rejected_quota: 0,
+                },
+            );
+        }
+        Engine {
+            shards,
+            tenants: Mutex::new(tenants),
+            default_quota: self.default_quota,
+            shared_arena,
+        }
+    }
+}
+
+/// A sharded mitigation engine: `N` bounded admission queues behind a
+/// consistent-hash router, with per-tenant admission quotas and
+/// EDF-within-priority dispatch. See the [module docs](self) for the
+/// full model and [`EngineBuilder`] for construction.
+pub struct Engine {
+    shards: Vec<Admission>,
+    tenants: Mutex<BTreeMap<String, TenantEntry>>,
+    default_quota: Option<u64>,
+    /// `Some` when all shards share one arena (for aggregate stats
+    /// that must not double-count).
+    shared_arena: Option<Arena>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::builder().build()
+    }
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// A single-shard engine from a legacy [`ServiceConfig`] — the
+    /// substrate under the deprecated `MitigationService`
+    /// constructors.
+    pub(crate) fn single(cfg: ServiceConfig) -> Engine {
+        Engine::builder().shard_config(cfg).build()
+    }
+
+    /// Direct admission-layer access for the legacy service wrapper.
+    pub(crate) fn admission(&self, shard: usize) -> &Admission {
+        &self.shards[shard]
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a tenant's requests consistently hash to. Stable
+    /// across runs and platforms (FNV-1a), so a deployment can predict
+    /// placement.
+    pub fn shard_for_tenant(&self, tenant: &str) -> usize {
+        (fnv1a(tenant.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    /// Route a request: tenants hash consistently; tenant-less
+    /// requests go to the least-loaded shard (fewest queued + running,
+    /// ties to the lowest index).
+    fn route(&self, tenant: Option<&str>) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        match tenant {
+            Some(t) => self.shard_for_tenant(t),
+            None => {
+                let mut best = 0usize;
+                let mut best_load = usize::MAX;
+                for (i, shard) in self.shards.iter().enumerate() {
+                    let st = shard.stats();
+                    let load = st.queue_depth + st.running;
+                    if load < best_load {
+                        best = i;
+                        best_load = load;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Check the tenant's quota and claim a slot. `Err` means at
+    /// quota; `Ok` carries the lease whose drop releases the slot.
+    fn admit_tenant(&self, tenant: &str) -> Result<AdmissionLease, ()> {
+        let mut table = self.tenants.lock().unwrap();
+        if !table.contains_key(tenant) && table.len() >= MAX_TRACKED_TENANTS {
+            // Make room: evict the first idle dynamically-created
+            // entry (deterministic: BTreeMap order). See
+            // [`MAX_TRACKED_TENANTS`].
+            let victim = table
+                .iter()
+                .find(|(_, e)| !e.configured && e.in_flight.load(Ordering::SeqCst) == 0)
+                .map(|(id, _)| id.clone());
+            if let Some(id) = victim {
+                table.remove(&id);
+            }
+        }
+        let default_quota = self.default_quota;
+        let entry = table.entry(tenant.to_string()).or_insert_with(|| TenantEntry {
+            quota: default_quota,
+            configured: false,
+            in_flight: Arc::new(AtomicU64::new(0)),
+            submitted: 0,
+            rejected_quota: 0,
+        });
+        if let Some(max) = entry.quota {
+            if entry.in_flight.load(Ordering::SeqCst) >= max {
+                entry.rejected_quota += 1;
+                return Err(());
+            }
+        }
+        entry.in_flight.fetch_add(1, Ordering::SeqCst);
+        entry.submitted += 1;
+        Ok(Box::new(QuotaLease { in_flight: entry.in_flight.clone() }))
+    }
+
+    fn submit_inner(
+        &self,
+        request: MitigationRequest,
+        blocking: bool,
+    ) -> Result<ResponseTicket, SubmitError> {
+        let opts = request.submit_options();
+        let MitigationRequest { job, tenant, collect_stats, .. } = request;
+        let lease = match tenant.as_deref() {
+            Some(t) => match self.admit_tenant(t) {
+                Ok(lease) => Some(lease),
+                Err(()) => return Err(SubmitError::QuotaExceeded(job)),
+            },
+            None => None,
+        };
+        let shard = self.route(tenant.as_deref());
+        // On rejection the admission layer drops the lease before
+        // returning, so the quota slot frees with the error.
+        let admitted = if blocking {
+            self.shards[shard].submit_leased(job, opts, lease)
+        } else {
+            self.shards[shard].try_submit_leased(job, opts, lease)
+        };
+        match admitted {
+            Ok(inner) => Ok(ResponseTicket { inner, shard, tenant, collect_stats }),
+            Err(e) => {
+                // The queue pushed back (full/timeout/shutdown): undo
+                // the tenant's `submitted` bump so the counter reports
+                // only requests actually admitted.
+                if let Some(t) = tenant.as_deref() {
+                    if let Some(entry) = self.tenants.lock().unwrap().get_mut(t) {
+                        // Saturating: the entry could in principle have
+                        // been evicted and recreated in between.
+                        entry.submitted = entry.submitted.saturating_sub(1);
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Non-blocking admission: route and enqueue the request, or fail
+    /// immediately — [`SubmitError::QuotaExceeded`] when the tenant is
+    /// at quota, [`SubmitError::QueueFull`] when the routed shard's
+    /// queue is at capacity. Every error hands the job back.
+    pub fn try_submit(&self, request: MitigationRequest) -> Result<ResponseTicket, SubmitError> {
+        self.submit_inner(request, false)
+    }
+
+    /// Blocking admission: wait for queue space on the routed shard,
+    /// bounded by [`MitigationRequest::submit_timeout`] if set. Quota
+    /// rejection is immediate (it does not wait for a slot): shed or
+    /// retry on [`SubmitError::QuotaExceeded`].
+    pub fn submit(&self, request: MitigationRequest) -> Result<ResponseTicket, SubmitError> {
+        self.submit_inner(request, true)
+    }
+
+    /// Submit (blocking) and wait: the one-call request → response
+    /// path.
+    pub fn run(&self, request: MitigationRequest) -> anyhow::Result<MitigationResponse> {
+        match self.submit(request) {
+            Ok(ticket) => ticket.wait(),
+            Err(e) => Err(anyhow::anyhow!("submission failed: {e}")),
+        }
+    }
+
+    /// Run every request and return slot `i` of the output for
+    /// `requests[i]` — the typed replacement for the legacy
+    /// `mitigate_batch*` wrappers (which now delegate here).
+    /// Submissions block for queue space; per-request failures
+    /// (including quota rejections and pipeline panics) land in their
+    /// own slot and cannot poison siblings.
+    pub fn run_batch(
+        &self,
+        requests: Vec<MitigationRequest>,
+    ) -> Vec<anyhow::Result<MitigationResponse>> {
+        if requests.is_empty() {
+            return Vec::new();
+        }
+        let submitted: Vec<anyhow::Result<ResponseTicket>> = requests
+            .into_iter()
+            .map(|request| {
+                self.submit(request).map_err(|e| anyhow::anyhow!("batch admission failed: {e}"))
+            })
+            .collect();
+        submitted
+            .into_iter()
+            .map(|ticket| match ticket {
+                Ok(ticket) => ticket.wait(),
+                Err(e) => Err(e),
+            })
+            .collect()
+    }
+
+    /// Stop draining every shard queue (submissions are still accepted
+    /// until each queue fills; running jobs finish normally).
+    pub fn pause(&self) {
+        for shard in &self.shards {
+            shard.pause();
+        }
+    }
+
+    /// Resume draining after [`Engine::pause`] (or a paused build).
+    pub fn resume(&self) {
+        for shard in &self.shards {
+            shard.resume();
+        }
+    }
+
+    /// Admission counters of one shard.
+    pub fn shard_stats(&self, shard: usize) -> ServiceStats {
+        self.shards[shard].stats()
+    }
+
+    /// One tenant's engine-level accounting. `Some` for tenants
+    /// pre-configured with [`EngineBuilder::quota`] and for any tenant
+    /// that has attempted a submission; `None` for ids the engine has
+    /// never seen.
+    pub fn tenant_stats(&self, tenant: &str) -> Option<TenantStats> {
+        let table = self.tenants.lock().unwrap();
+        table.get(tenant).map(|e| TenantStats {
+            tenant: tenant.to_string(),
+            quota: e.quota,
+            submitted: e.submitted,
+            rejected_quota: e.rejected_quota,
+            in_flight: e.in_flight.load(Ordering::SeqCst),
+        })
+    }
+
+    /// Full engine snapshot: per-shard admission counters plus
+    /// per-tenant quota accounting (sorted by tenant id).
+    pub fn stats(&self) -> EngineStats {
+        let shards = self.shards.iter().map(|s| s.stats()).collect();
+        let tenants = {
+            let table = self.tenants.lock().unwrap();
+            table
+                .iter()
+                .map(|(tenant, e)| TenantStats {
+                    tenant: tenant.clone(),
+                    quota: e.quota,
+                    submitted: e.submitted,
+                    rejected_quota: e.rejected_quota,
+                    in_flight: e.in_flight.load(Ordering::SeqCst),
+                })
+                .collect()
+        };
+        EngineStats { shards, tenants }
+    }
+
+    /// A handle to one shard's scratch-buffer arena (with a shared
+    /// arena, every shard returns the same one).
+    pub fn shard_arena(&self, shard: usize) -> Arena {
+        self.shards[shard].arena().clone()
+    }
+
+    /// Aggregate arena counters: the shared arena's stats when shards
+    /// share one, otherwise the field-wise sum over per-shard arenas.
+    pub fn arena_stats(&self) -> ArenaStats {
+        if let Some(arena) = &self.shared_arena {
+            return arena.stats();
+        }
+        let mut agg = ArenaStats::default();
+        for shard in &self.shards {
+            let s = shard.arena().stats();
+            agg.hits += s.hits;
+            agg.misses += s.misses;
+            agg.returns += s.returns;
+            agg.detached += s.detached;
+            agg.adopted += s.adopted;
+            agg.dropped += s.dropped;
+            agg.bytes_outstanding += s.bytes_outstanding;
+            agg.bytes_pooled += s.bytes_pooled;
+        }
+        agg
+    }
+
+    /// Hand a finished output grid's buffer back for reuse — into the
+    /// shared arena when one exists, shard 0's otherwise. (To target a
+    /// specific shard's arena under per-shard isolation, go through
+    /// [`Engine::shard_arena`] and [`Arena::adopt`].)
+    pub fn recycle(&self, grid: Grid<f32>) {
+        match &self.shared_arena {
+            Some(arena) => arena.adopt(grid.data),
+            None => self.shards[0].arena().adopt(grid.data),
+        }
+    }
+
+    /// Engine counters rendered as scrapeable `key=value` text, one
+    /// line per scope: an aggregate `scope=engine` line, one
+    /// `shard=<i>` line per shard, and one `tenant=<id>` line per
+    /// tenant. Every line is independently parseable `key=value`
+    /// tokens (the `qai serve --metrics` format).
+    pub fn metrics_text(&self) -> String {
+        let stats = self.stats();
+        let agg = stats.aggregate();
+        let arena_agg = self.arena_stats();
+        let nshards = self.shards.len().to_string();
+        let quota_rejections = stats.quota_rejections().to_string();
+        let mut out = render_metrics_labeled(
+            &[
+                ("scope", "engine"),
+                ("shards", nshards.as_str()),
+                ("quota_rejections", quota_rejections.as_str()),
+            ],
+            &agg,
+            &arena_agg,
+        );
+        for (i, shard) in self.shards.iter().enumerate() {
+            out.push('\n');
+            let idx = i.to_string();
+            out.push_str(&render_metrics_labeled(
+                &[("shard", idx.as_str())],
+                &shard.stats(),
+                &shard.arena().stats(),
+            ));
+        }
+        for t in &stats.tenants {
+            out.push('\n');
+            out.push_str(&format!(
+                "tenant={} quota={} submitted={} rejected_quota={} in_flight={}",
+                metrics_safe(&t.tenant),
+                t.quota.map_or_else(|| "unlimited".to_string(), |q| q.to_string()),
+                t.submitted,
+                t.rejected_quota,
+                t.in_flight,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_is_stable() {
+        // Pinned values: the router hash must never drift across
+        // refactors, or tenants silently migrate between shards.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn builder_clamps_shards_to_one() {
+        let engine = Engine::builder().shards(0).build();
+        assert_eq!(engine.shards(), 1);
+    }
+
+    #[test]
+    fn tenant_routing_is_deterministic() {
+        let engine = Engine::builder().shards(4).build();
+        for tenant in ["alpha", "beta", "gamma", ""] {
+            let first = engine.shard_for_tenant(tenant);
+            assert!(first < 4);
+            for _ in 0..3 {
+                assert_eq!(engine.shard_for_tenant(tenant), first);
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_safe_escapes_token_breakers() {
+        assert_eq!(metrics_safe("a b=c"), "a_b_c");
+        assert_eq!(metrics_safe("plain"), "plain");
+    }
+}

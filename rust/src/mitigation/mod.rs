@@ -15,25 +15,32 @@
 //!
 //! [`pipeline`] assembles the steps sequentially or with shared-memory
 //! threads (§VII-A) on the persistent pool runtime
-//! ([`crate::util::pool`]); [`service`] serves many independent fields
-//! through the streaming [`admission`] queue onto the same pool (or a
-//! confined one — every step accepts a
-//! [`PoolHandle`](crate::util::pool::PoolHandle) via its `*_on`
-//! variant); the distributed version lives in [`crate::coordinator`].
+//! ([`crate::util::pool`]); [`engine`] is the **one public front door**
+//! for running them — a typed [`MitigationRequest`] → [`Engine`]
+//! request/response API over sharded [`admission`] queues, with
+//! tenant-aware routing and per-tenant quotas. The legacy [`service`]
+//! façade and the `mitigate*` free functions survive as deprecated
+//! bit-identical wrappers; the distributed version lives in
+//! [`crate::coordinator`].
 
 pub mod admission;
 pub mod boundary;
 pub mod edt;
+pub mod engine;
 pub mod interpolate;
 pub mod pipeline;
 pub mod service;
 pub mod sign;
 
 pub use admission::{JobReport, JobTicket, Priority, ServiceStats, SubmitError, SubmitOptions};
-pub use pipeline::{
-    mitigate, mitigate_with_stats, mitigate_with_stats_on, Backend, MitigationConfig,
-    PipelineStats,
+pub use engine::{
+    Engine, EngineBuilder, EngineStats, MitigationRequest, MitigationResponse, ResponseTicket,
+    TenantStats,
 };
+#[allow(deprecated)]
+pub use pipeline::{mitigate, mitigate_with_stats, mitigate_with_stats_on};
+pub use pipeline::{Backend, MitigationConfig, PipelineStats};
 pub use service::{
-    render_metrics, Job, JobResult, MitigationService, ServiceConfig, DEFAULT_QUEUE_CAPACITY,
+    render_metrics, render_metrics_labeled, Job, JobResult, MitigationService, ServiceConfig,
+    DEFAULT_QUEUE_CAPACITY,
 };

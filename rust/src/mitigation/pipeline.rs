@@ -2,6 +2,11 @@
 //! sequential or shared-memory parallel (§VII-A), with an optional PJRT
 //! backend that runs steps A and E in the AOT-compiled JAX/Pallas
 //! executables (see `crate::runtime`).
+//!
+//! The public entry point for running the pipeline is
+//! [`crate::mitigation::engine`] (`MitigationRequest` → `execute` /
+//! `Engine::run`); the free functions here survive as deprecated
+//! bit-identical wrappers over the same substrate.
 
 use crate::data::grid::Grid;
 use crate::mitigation::boundary::boundary_and_sign_on;
@@ -79,34 +84,66 @@ impl PipelineStats {
 /// Run Algorithm 4 on decompressed data `dq` with quantization indices
 /// `q` and resolved bound `eb`; returns the compensated field.
 ///
-/// Native backend only — use [`mitigate_with_stats`] for the PJRT path.
+/// Native backend only — use the stats opt-in on the request for the
+/// PJRT path.
+#[deprecated(
+    note = "build a `mitigation::engine::MitigationRequest` and call `engine::execute` \
+            (or `Engine::run` for the queued path); see docs/SERVING.md for the migration table"
+)]
 pub fn mitigate(
     dq: &Grid<f32>,
     q: &Grid<QIndex>,
     eb: ResolvedBound,
     cfg: &MitigationConfig,
 ) -> Grid<f32> {
-    mitigate_with_stats(dq, q, eb, cfg).expect("mitigation failed").0
+    // Bit-identical to the engine front door: `engine::execute` runs
+    // this exact substrate (global pool, fresh arena).
+    run_pipeline(PoolHandle::Global, ArenaHandle::Fresh, dq, q, eb, cfg)
+        .expect("mitigation failed")
+        .0
 }
 
 /// Like [`mitigate`] but returns per-step stats, and supports
 /// [`Backend::Pjrt`] (which can fail if artifacts are missing).
+#[deprecated(
+    note = "build a `mitigation::engine::MitigationRequest` with `.with_stats(true)` and call \
+            `engine::execute`; see docs/SERVING.md for the migration table"
+)]
 pub fn mitigate_with_stats(
     dq: &Grid<f32>,
     q: &Grid<QIndex>,
     eb: ResolvedBound,
     cfg: &MitigationConfig,
 ) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
-    mitigate_with_stats_on(PoolHandle::Global, ArenaHandle::Fresh, dq, q, eb, cfg)
+    run_pipeline(PoolHandle::Global, ArenaHandle::Fresh, dq, q, eb, cfg)
 }
 
 /// [`mitigate_with_stats`] with every parallel region of steps A–E
 /// confined to `pool` and every full-grid buffer acquired through
-/// `arena` — the substrate behind
-/// [`crate::mitigation::service::MitigationService::with_pool`]. The
-/// PJRT backend hands steps A/E to the device runtime, which `pool`
-/// does not govern (and whose step-A outputs are device buffers the
-/// arena never sees); steps B–D still honor both.
+/// `arena`.
+#[deprecated(
+    note = "use `mitigation::engine::execute_on(pool, arena, &request)` — one entry point \
+            instead of the `*_on` variant combinatorics"
+)]
+pub fn mitigate_with_stats_on(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    cfg: &MitigationConfig,
+) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
+    run_pipeline(pool, arena, dq, q, eb, cfg)
+}
+
+/// The pipeline substrate: steps A–E with every parallel region
+/// confined to `pool` and every full-grid buffer acquired through
+/// `arena` — what the engine front door
+/// ([`crate::mitigation::engine::execute_on`]) and the admission
+/// queue's job runner execute. The PJRT backend hands steps A/E to the
+/// device runtime, which `pool` does not govern (and whose step-A
+/// outputs are device buffers the arena never sees); steps B–D still
+/// honor both.
 ///
 /// Buffer lifecycle with a pooled arena: the seven intermediate
 /// full-grid buffers (B₁ mask, boundary signs, Dist₁, I₁, propagated
@@ -116,7 +153,7 @@ pub fn mitigate_with_stats(
 /// [`MitigationService::recycle`](crate::mitigation::service::MitigationService::recycle)).
 /// A warm same-shaped call therefore allocates zero full-grid buffers,
 /// which the arena test suite proves through the miss counter.
-pub fn mitigate_with_stats_on(
+pub(crate) fn run_pipeline(
     pool: PoolHandle<'_>,
     arena: ArenaHandle<'_>,
     dq: &Grid<f32>,
@@ -244,6 +281,10 @@ pub fn mitigate_with_stats_on(
 
 #[cfg(test)]
 mod tests {
+    // The deprecated free functions are exercised deliberately: their
+    // bit-identical-wrapper contract is part of what these tests pin.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::data::synthetic::{generate, DatasetKind};
     use crate::metrics::{max_abs_error, ssim};

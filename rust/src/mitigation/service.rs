@@ -1,71 +1,47 @@
-//! The mitigation serving layer: jobs, the service façade, and its
-//! configuration.
+//! The legacy mitigation serving façade: jobs, the single-queue
+//! service, and its configuration.
 //!
-//! [`MitigationService`] is the front door the ROADMAP's
-//! production scenario talks to: many independent fields arriving
-//! concurrently (one per user request, ensemble member, or timestep).
-//! Jobs stream in through the bounded admission queue
-//! ([`crate::mitigation::admission`]) via [`MitigationService::submit`]
-//! / [`MitigationService::try_submit`], execute on a persistent
-//! [`pool`](crate::util::pool) — the process-global one by default, or
-//! the pool given to [`MitigationService::with_pool`] — and resolve
-//! per-job [`JobTicket`]s. The legacy slice-in/vec-out
-//! [`MitigationService::mitigate_batch`] survives as a thin wrapper
-//! over the same queue (with an owning
-//! [`mitigate_batch_owned`](MitigationService::mitigate_batch_owned)
-//! sibling that skips even the pointer clones).
+//! [`MitigationService`] predates the typed engine front door and
+//! survives as a thin, bit-identical wrapper over a **single-shard**
+//! [`Engine`](crate::mitigation::engine::Engine): its constructors are
+//! `#[deprecated]`, and new code should build an
+//! [`EngineBuilder`](crate::mitigation::engine::EngineBuilder) and
+//! submit [`MitigationRequest`](crate::mitigation::engine::MitigationRequest)s
+//! instead (`docs/SERVING.md` has the migration table). Everything the
+//! service did — bounded admission with backpressure, priorities,
+//! tickets, deadlines, pool confinement, the per-service arena — is
+//! the engine's single-shard special case, so wrapped behavior is
+//! identical by construction.
 //!
-//! The data plane is zero-copy: [`Job`] payloads are `Arc`-backed
-//! [`SharedGrid`]s, so submission and queueing move pointers, and every
-//! full-grid scratch buffer plus the output of each job cycles through
-//! the service's per-service [`Arena`] — a warm same-shaped job
-//! allocates no full-grid buffers at all (see
-//! [`MitigationService::arena_stats`] and the [`Job`] ownership
-//! contract).
-//!
-//! Pool confinement: a service built [`with_pool`] runs **everything**
-//! on that pool — the cross-job fan-out *and* each job's internal steps
-//! A–E, via the [`PoolHandle`](crate::util::pool::PoolHandle) plumbing
-//! through the pipeline. The global pool is never touched, which the
-//! confinement test suite asserts.
-//!
-//! Guarantees:
-//!
-//! * **Exactness** — each job's output is bit-identical to a standalone
-//!   [`mitigate_with_stats`](crate::mitigation::pipeline::mitigate_with_stats)
-//!   call with the same inputs (the pipeline is schedule-independent),
-//!   so batching and queueing are pure throughput knobs.
-//! * **Isolation** — a failing job (error *or* panic, e.g. a shape
-//!   mismatch) resolves only its own ticket with an `Err` and cannot
-//!   poison sibling jobs.
-//! * **Determinism** — outputs depend only on job inputs, never on
-//!   queue order, concurrency, priorities, or pool sizing.
-//!
-//! [`with_pool`]: MitigationService::with_pool
+//! [`Job`] remains the payload type both APIs share: a decompressed
+//! field, its quantization indices, the resolved bound, and the
+//! pipeline configuration, with `Arc`-backed zero-copy grids (see the
+//! ownership contract below).
 //!
 //! # Examples
 //!
 //! ```
 //! use qai::data::synthetic::{generate, DatasetKind};
-//! use qai::mitigation::admission::SubmitOptions;
-//! use qai::mitigation::{Job, MitigationService};
+//! use qai::mitigation::engine::{Engine, MitigationRequest};
 //! use qai::quant::{quantize_grid, ErrorBound};
 //!
 //! let orig = generate(DatasetKind::ClimateLike, &[16, 16], 7);
 //! let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
 //! let (q, dq) = quantize_grid(&orig, eb);
 //!
-//! let service = MitigationService::new();
-//! let ticket = service.submit(Job::new(dq, q, eb), SubmitOptions::bulk()).unwrap();
-//! let (grid, stats) = ticket.wait().result.unwrap();
-//! assert_eq!(grid.len(), 16 * 16);
-//! assert!(stats.total() >= 0.0);
+//! let engine = Engine::builder().build();
+//! let response = engine
+//!     .run(MitigationRequest::new(dq, q, eb).with_stats(true))
+//!     .unwrap();
+//! assert_eq!(response.output.len(), 16 * 16);
+//! assert!(response.stats.unwrap().total() >= 0.0);
 //! ```
 
 #![deny(missing_docs)]
 
 use crate::data::grid::{Grid, SharedGrid};
-use crate::mitigation::admission::{Admission, JobTicket, ServiceStats, SubmitError, SubmitOptions};
+use crate::mitigation::admission::{JobTicket, ServiceStats, SubmitError, SubmitOptions};
+use crate::mitigation::engine::{Engine, MitigationRequest};
 use crate::mitigation::pipeline::{MitigationConfig, PipelineStats};
 use crate::quant::{QIndex, ResolvedBound};
 use crate::util::arena::{Arena, ArenaStats};
@@ -78,17 +54,19 @@ use std::sync::Arc;
 /// # Sharing & ownership contract
 ///
 /// The grids are held as [`SharedGrid`]s — immutable, `Arc`-backed
-/// payloads. Cloning a `Job` (and everything the service does with one:
-/// [`MitigationService::submit`], the admission queue, the
+/// payloads. Cloning a `Job` (and everything the serving layer does
+/// with one: engine submission, the admission queue, the
 /// [`mitigate_batch`](MitigationService::mitigate_batch) compat
 /// wrapper) is a pointer bump; grid data is **never copied** on the
 /// submission path, which [`SharedGrid::ptr_eq`] makes observable. A
 /// caller may keep clones of the inputs while the job is queued or
 /// running, and may mutate its copy only through the copy-on-write
 /// escape hatch ([`SharedGrid::make_mut`]), which cannot affect a job
-/// already submitted. Outputs are freshly-owned [`Grid`]s: the service
-/// allocates them (from its arena), the caller owns them, and
-/// [`MitigationService::recycle`] optionally hands their buffers back.
+/// already submitted. Outputs are freshly-owned [`Grid`]s: the serving
+/// layer allocates them (from its arena), the caller owns them, and
+/// [`MitigationService::recycle`] /
+/// [`Engine::recycle`](crate::mitigation::engine::Engine::recycle)
+/// optionally hand their buffers back.
 #[derive(Clone)]
 pub struct Job {
     /// Decompressed data `d'` (shared, immutable).
@@ -129,7 +107,9 @@ pub type JobResult = anyhow::Result<(Grid<f32>, PipelineStats)>;
 /// Default bound on the number of queued (not yet running) jobs.
 pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 
-/// Construction-time knobs of a [`MitigationService`].
+/// Construction-time knobs of a [`MitigationService`] (and the
+/// per-shard template inside
+/// [`EngineBuilder::shard_config`](crate::mitigation::engine::EngineBuilder::shard_config)).
 #[derive(Clone)]
 pub struct ServiceConfig {
     /// Pool that carries the cross-job fan-out **and** every job's
@@ -143,74 +123,102 @@ pub struct ServiceConfig {
     /// [`MitigationService::resume`]. Used by maintenance drains and
     /// the deterministic ordering tests.
     pub start_paused: bool,
+    /// Scratch-buffer arena to lease full-grid buffers from; `None`
+    /// creates a fresh arena per service. Pass a shared [`Arena`] to
+    /// recycle buffers across services/shards (multi-tenant
+    /// deployments with many same-shaped fields).
+    pub arena: Option<Arena>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { pool: None, capacity: DEFAULT_QUEUE_CAPACITY, start_paused: false }
+        ServiceConfig {
+            pool: None,
+            capacity: DEFAULT_QUEUE_CAPACITY,
+            start_paused: false,
+            arena: None,
+        }
     }
 }
 
 /// A mitigation server: a bounded streaming admission queue over a
-/// persistent thread pool (the process-wide
-/// [`pool::global`](crate::util::pool::global) by default, or an
-/// explicitly sized pool for isolation).
+/// persistent thread pool — now a thin wrapper over a single-shard
+/// [`Engine`](crate::mitigation::engine::Engine). Deprecated for new
+/// code; see the [module docs](self).
 pub struct MitigationService {
-    admission: Admission,
+    engine: Engine,
 }
 
 impl Default for MitigationService {
     fn default() -> Self {
-        MitigationService::new()
+        MitigationService::from_config(ServiceConfig::default())
     }
 }
 
 impl MitigationService {
+    /// The non-deprecated substrate shared by every constructor: a
+    /// single-shard engine with the given per-shard config.
+    fn from_config(cfg: ServiceConfig) -> Self {
+        MitigationService { engine: Engine::single(cfg) }
+    }
+
     /// Service over the process-wide global pool with default settings.
+    #[deprecated(
+        note = "use `mitigation::engine::Engine::builder().build()` and submit \
+                `MitigationRequest`s; see docs/SERVING.md for the migration table"
+    )]
     pub fn new() -> Self {
-        MitigationService::with_config(ServiceConfig::default())
+        MitigationService::from_config(ServiceConfig::default())
     }
 
     /// Service confined to an explicit pool: the cross-job fan-out and
     /// each job's internal steps A–E all run on `pool`, never the
     /// global one.
+    #[deprecated(
+        note = "use `mitigation::engine::Engine::builder().pool(pool).build()`; see \
+                docs/SERVING.md for the migration table"
+    )]
     pub fn with_pool(pool: Arc<ThreadPool>) -> Self {
-        MitigationService::with_config(ServiceConfig { pool: Some(pool), ..Default::default() })
+        MitigationService::from_config(ServiceConfig { pool: Some(pool), ..Default::default() })
     }
 
     /// Service with explicit [`ServiceConfig`] knobs.
+    #[deprecated(
+        note = "use `mitigation::engine::Engine::builder().shard_config(cfg).build()`; see \
+                docs/SERVING.md for the migration table"
+    )]
     pub fn with_config(cfg: ServiceConfig) -> Self {
-        MitigationService { admission: Admission::new(cfg.pool, cfg.capacity, cfg.start_paused) }
+        MitigationService::from_config(cfg)
     }
 
     /// Non-blocking admission: enqueue `job` or fail immediately with
     /// [`SubmitError::QueueFull`] (carrying the job back) when the
     /// queue is at capacity.
     pub fn try_submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
-        self.admission.try_submit(job, opts)
+        self.engine.admission(0).try_submit(job, opts)
     }
 
     /// Blocking admission: wait for queue space, bounded by
     /// `opts.timeout` if set ([`SubmitError::Timeout`] on expiry).
     pub fn submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
-        self.admission.submit(job, opts)
+        self.engine.admission(0).submit(job, opts)
     }
 
     /// Stop draining the queue. Submissions are still accepted until
     /// the queue fills; jobs already running finish normally.
     pub fn pause(&self) {
-        self.admission.pause();
+        self.engine.pause();
     }
 
     /// Resume draining after [`MitigationService::pause`] (or a
     /// [`ServiceConfig::start_paused`] construction).
     pub fn resume(&self) {
-        self.admission.resume();
+        self.engine.resume();
     }
 
     /// Snapshot of the admission counters and gauges.
     pub fn stats(&self) -> ServiceStats {
-        self.admission.stats()
+        self.engine.shard_stats(0)
     }
 
     /// A handle to this service's scratch-buffer arena (every job's
@@ -219,12 +227,12 @@ impl MitigationService {
     /// dashboard observes the live counters — including after the
     /// service itself is dropped.
     pub fn arena(&self) -> Arena {
-        self.admission.arena().clone()
+        self.engine.shard_arena(0)
     }
 
     /// Snapshot of the arena's reuse counters and gauges.
     pub fn arena_stats(&self) -> ArenaStats {
-        self.admission.arena().stats()
+        self.engine.shard_arena(0).stats()
     }
 
     /// Hand a finished output grid's buffer back to the service arena,
@@ -232,23 +240,23 @@ impl MitigationService {
     /// Entirely optional — outputs are plain owned [`Grid`]s and may
     /// simply be dropped.
     pub fn recycle(&self, grid: Grid<f32>) {
-        self.admission.arena().adopt(grid.data);
+        self.engine.recycle(grid);
     }
 
     /// Queue and arena counters rendered as one scrapeable
-    /// `key=value …` text line (the `qai serve --metrics` format). See
-    /// [`render_metrics`].
+    /// `key=value …` text line (the single-service metrics format; the
+    /// engine's multi-scope format is
+    /// [`Engine::metrics_text`](crate::mitigation::engine::Engine::metrics_text)).
+    /// See [`render_metrics`].
     pub fn metrics_text(&self) -> String {
         render_metrics(&self.stats(), &self.arena_stats())
     }
 
-    /// Compatibility wrapper over the queue: run every job and return
-    /// slot `i` of the output for `jobs[i]`, exactly like the original
-    /// slice-in/vec-out batch API. Per-job failures (including panics
-    /// out of the pipeline) are captured in their own slot, and outputs
-    /// are bit-identical to per-field
-    /// [`mitigate_with_stats`](crate::mitigation::pipeline::mitigate_with_stats)
-    /// calls.
+    /// Compatibility wrapper over the engine batch path: run every job
+    /// and return slot `i` of the output for `jobs[i]`, exactly like
+    /// the original slice-in/vec-out batch API. Per-job failures
+    /// (including panics out of the pipeline) are captured in their own
+    /// slot, and outputs are bit-identical to per-field direct calls.
     ///
     /// Cloning a [`Job`] into the queue is an `Arc` pointer bump — grid
     /// data is shared with the caller's slice, never copied (see the
@@ -257,8 +265,12 @@ impl MitigationService {
     /// blocking for space when the batch exceeds the queue capacity —
     /// so do not call it on a paused service with a batch larger than
     /// the capacity.
+    #[deprecated(
+        note = "build `MitigationRequest`s and call \
+                `mitigation::engine::Engine::run_batch`; see docs/SERVING.md"
+    )]
     pub fn mitigate_batch(&self, jobs: &[Job]) -> Vec<JobResult> {
-        self.mitigate_batch_owned(jobs.to_vec())
+        self.batch_owned(jobs.to_vec())
     }
 
     /// Owning form of [`mitigate_batch`](MitigationService::mitigate_batch):
@@ -266,27 +278,32 @@ impl MitigationService {
     /// no per-job clone at all, not even of the `Arc` pointers.
     /// Identical semantics otherwise (bulk class, per-slot error
     /// labeling, bit-identical outputs).
+    #[deprecated(
+        note = "build `MitigationRequest`s and call \
+                `mitigation::engine::Engine::run_batch`; see docs/SERVING.md"
+    )]
     pub fn mitigate_batch_owned(&self, jobs: Vec<Job>) -> Vec<JobResult> {
-        if jobs.is_empty() {
-            return Vec::new();
-        }
-        let tickets: Vec<JobTicket> = jobs
-            .into_iter()
-            .map(|job| {
-                // Infallible while `&self` is alive: shutdown only
-                // happens in drop, and no timeout is set.
-                self.submit(job, SubmitOptions::bulk())
-                    .unwrap_or_else(|e| panic!("batch admission failed: {e}"))
-            })
-            .collect();
-        tickets
+        self.batch_owned(jobs)
+    }
+
+    /// Shared non-deprecated body of the two batch wrappers.
+    fn batch_owned(&self, jobs: Vec<Job>) -> Vec<JobResult> {
+        let requests: Vec<MitigationRequest> =
+            jobs.into_iter().map(|job| MitigationRequest::from_job(job).with_stats(true)).collect();
+        self.engine
+            .run_batch(requests)
             .into_iter()
             .enumerate()
-            .map(|(i, ticket)| {
+            .map(|(i, result)| {
                 // Re-label errors with the batch slot (the queue's own
                 // messages are slot-agnostic), matching the original
                 // slice-in/vec-out API.
-                ticket.wait().result.map_err(|e| anyhow::anyhow!("job {i}: {e:#}"))
+                result
+                    .map(|resp| {
+                        let stats = resp.stats.expect("batch requests opt into stats");
+                        (resp.output, stats)
+                    })
+                    .map_err(|e| anyhow::anyhow!("job {i}: {e:#}"))
             })
             .collect()
     }
@@ -329,8 +346,33 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
     )
 }
 
+/// [`render_metrics`] with leading label tokens (`shard=0`,
+/// `tenant=acme`, …) prepended to the line — the per-scope format of
+/// [`Engine::metrics_text`](crate::mitigation::engine::Engine::metrics_text).
+/// Labels must be token-safe (no spaces, no `=` in values).
+pub fn render_metrics_labeled(
+    labels: &[(&str, &str)],
+    stats: &ServiceStats,
+    arena: &ArenaStats,
+) -> String {
+    let mut line = String::new();
+    for (key, value) in labels {
+        line.push_str(key);
+        line.push('=');
+        line.push_str(value);
+        line.push(' ');
+    }
+    line.push_str(&render_metrics(stats, arena));
+    line
+}
+
 #[cfg(test)]
 mod tests {
+    // The deprecated constructors/batch wrappers are exercised
+    // deliberately: this suite pins their bit-identical-wrapper
+    // contract over the engine.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::data::synthetic::{generate, DatasetKind};
     use crate::mitigation::pipeline::mitigate_with_stats;
@@ -390,5 +432,14 @@ mod tests {
         assert_eq!(st.bulk_done, 2);
         assert_eq!(st.failed, 0);
         assert_eq!(st.queue_depth, 0);
+    }
+
+    #[test]
+    fn labeled_metrics_prepend_tokens() {
+        let stats = ServiceStats::default();
+        let arena = ArenaStats::default();
+        let line = render_metrics_labeled(&[("shard", "3"), ("tenant", "acme")], &stats, &arena);
+        assert!(line.starts_with("shard=3 tenant=acme submitted=0 "), "line={line}");
+        assert_eq!(line.matches('\n').count(), 0);
     }
 }

@@ -12,14 +12,18 @@
 //!
 //! Design points:
 //!
-//! * **Exact-length classes** — a buffer is only reused for a request of
-//!   the same element type and the same length, so every consumer can
-//!   (and must) fully re-initialize it: [`Arena::take_filled`] /
-//!   [`Arena::take_copy`] do this for them, and [`Arena::take_stale`]
-//!   callers provably overwrite every element themselves. Outputs are
-//!   therefore bit-identical to the fresh-allocation path by
-//!   construction, which the arena test suite sweeps across datasets ×
-//!   dims × threads.
+//! * **Rounded size classes** — a requested length is rounded up to the
+//!   next power of two ([`size_class`]), so near-shapes (a `24³` and a
+//!   `25×24×24` field, say) share free-list classes instead of opening
+//!   one class per exact length. A miss allocates the full class
+//!   capacity up front, and a recycled buffer is trimmed/extended to
+//!   the requested length within that capacity — never reallocating on
+//!   the warm path. Every consumer can (and must) fully re-initialize
+//!   a leased buffer: [`Arena::take_filled`] / [`Arena::take_copy`] do
+//!   this for them, and [`Arena::take_stale`] callers provably
+//!   overwrite every element themselves. Outputs are therefore
+//!   bit-identical to the fresh-allocation path by construction, which
+//!   the arena test suite sweeps across datasets × dims × threads.
 //! * **Explicit lifecycle** — [`take_filled`](Arena::take_filled) /
 //!   [`take_copy`](Arena::take_copy) lease a buffer out,
 //!   [`give`](Arena::give) returns it, [`detach`](Arena::detach)
@@ -34,8 +38,8 @@
 //!   warm same-shaped job performs **zero** new full-grid allocations
 //!   (miss counter unchanged) and that bytes-outstanding returns to
 //!   zero once all lessees are done.
-//! * **Bounded retention** — each `(type, length)` class keeps at most
-//!   [`MAX_FREE_PER_CLASS`] buffers, the total parked across *all*
+//! * **Bounded retention** — each `(type, size class)` bucket keeps at
+//!   most [`MAX_FREE_PER_CLASS`] buffers, the total parked across *all*
 //!   classes is capped at [`MAX_POOLED_BYTES`], and emptied classes
 //!   are removed from the map; surplus `give`s fall through to the
 //!   allocator (counted in [`ArenaStats::dropped`]), so a service that
@@ -76,15 +80,35 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Default maximum buffers retained per `(element type, length)`
-/// class; surplus returns are dropped to the allocator. Eight covers
+/// Default maximum buffers retained per `(element type, size class)`
+/// bucket; surplus returns are dropped to the allocator. Eight covers
 /// every full-grid buffer one pipeline run cycles through a single
 /// class.
 pub const MAX_FREE_PER_CLASS: usize = 8;
 
+/// Round a requested length up to its free-list size class — the next
+/// power of two — so near-shapes share classes (a ROADMAP follow-up:
+/// without rounding, every distinct grid shape opened its own class
+/// and near-identical workloads could not reuse each other's buffers).
+///
+/// Zero-length requests bypass the arena entirely and never reach a
+/// class.
+pub fn size_class(len: usize) -> usize {
+    len.next_power_of_two()
+}
+
+/// Largest size class a buffer of `capacity` elements can fully back:
+/// the greatest power of two `<= capacity`. Buffers are parked under
+/// this class so a future lease of any length in the class fits within
+/// the buffer's capacity without reallocating.
+fn park_class(capacity: usize) -> usize {
+    debug_assert!(capacity > 0);
+    1usize << (usize::BITS - 1 - capacity.leading_zeros())
+}
+
 /// Default cap on total bytes parked across *all* free lists (1 GiB).
 /// The per-class cap alone would not bound a workload of many distinct
-/// shapes — each new `(type, length)` pair opens a fresh class — so
+/// shapes — each new `(type, size class)` pair opens a fresh class — so
 /// returns and adoptions that would push the pooled total past this
 /// cap are dropped to the allocator instead (counted in
 /// [`ArenaStats::dropped`]). Enforced exactly: the gauge is only
@@ -128,7 +152,9 @@ impl ArenaStats {
     }
 }
 
-/// One free-list class: recycled buffers of a single `(type, length)`.
+/// One free-list class: recycled buffers of a single
+/// `(type, size class)` — lengths within the class vary, capacities
+/// are at least the class.
 type FreeList = Vec<Box<dyn Any + Send>>;
 
 struct ArenaInner {
@@ -178,7 +204,7 @@ impl Arena {
     }
 
     /// An arena with explicit retention limits: at most `per_class_cap`
-    /// free buffers per `(type, length)` class and at most
+    /// free buffers per `(type, size class)` bucket and at most
     /// `max_pooled_bytes` parked in total. Use to bound a deployment
     /// that serves many distinct grid shapes.
     pub fn with_limits(per_class_cap: usize, max_pooled_bytes: u64) -> Self {
@@ -199,34 +225,48 @@ impl Arena {
         }
     }
 
-    /// Pop a recycled buffer of exactly `len` elements of `T`, or `None`
-    /// on a class miss. Contents are whatever the previous user left.
+    /// Pop a recycled buffer from size class `class`, or `None` on a
+    /// class miss. Contents and length are whatever the previous user
+    /// left (capacity is at least `class` by the parking invariant);
+    /// the `take_*` front ends trim or extend to the requested length.
     /// Emptied classes are removed so a stream of one-off shapes cannot
     /// grow the map without bound. The `bytes_pooled` gauge is updated
     /// while the class lock is held (here and in [`Arena::park`]), so
     /// it can never transiently underflow.
-    fn pop<T: Send + 'static>(&self, len: usize) -> Option<Vec<T>> {
-        let key = (TypeId::of::<T>(), len);
+    fn pop<T: Send + 'static>(&self, class: usize) -> Option<Vec<T>> {
+        let key = (TypeId::of::<T>(), class);
         let mut classes = self.inner.classes.lock().unwrap();
         let list = classes.get_mut(&key)?;
         let boxed = list.pop()?;
         if list.is_empty() {
             classes.remove(&key);
         }
-        self.inner.bytes_pooled.fetch_sub(bytes_of::<T>(len), Ordering::Relaxed);
+        self.inner.bytes_pooled.fetch_sub(bytes_of::<T>(class), Ordering::Relaxed);
         drop(classes);
         let vec = *boxed.downcast::<Vec<T>>().expect("arena class type confusion");
-        debug_assert_eq!(vec.len(), len);
+        debug_assert!(vec.capacity() >= class);
         Some(vec)
     }
 
     /// Park `vec` in its class free list unless a retention limit says
-    /// drop it. Shared by [`Arena::give`] and [`Arena::adopt`], which
-    /// differ only in how the lease accounting treats the buffer.
-    fn park<T: Send + 'static>(&self, vec: Vec<T>) {
-        let len = vec.len();
-        let bytes = bytes_of::<T>(len);
-        let key = (TypeId::of::<T>(), len);
+    /// drop it. The class is derived from the buffer's *capacity*
+    /// ([`park_class`]), so arena-allocated buffers (capacity = their
+    /// size class) round-trip into the class they were leased from.
+    /// Foreign buffers whose capacity falls short of their own
+    /// length's class (e.g. an exactly-sized `vec![..]` handed to
+    /// [`Arena::adopt`]) are grown to it first — a one-time
+    /// reallocation at park time, so a later same-length lease hits
+    /// instead of permanently missing its rounded class. Shared by
+    /// [`Arena::give`] and [`Arena::adopt`], which differ only in how
+    /// the lease accounting treats the buffer.
+    fn park<T: Send + 'static>(&self, mut vec: Vec<T>) {
+        let want = size_class(vec.len());
+        if vec.capacity() < want {
+            vec.reserve_exact(want - vec.len());
+        }
+        let class = park_class(vec.capacity());
+        let bytes = bytes_of::<T>(class);
+        let key = (TypeId::of::<T>(), class);
         let mut classes = self.inner.classes.lock().unwrap();
         // Gauge reads/writes happen under the lock, so this check is
         // exact, not racy.
@@ -246,11 +286,13 @@ impl Arena {
     }
 
     /// Account one lease of `len` elements of `T` and pop a recycled
-    /// buffer for it: `Some` is a hit, `None` a miss (the caller
-    /// allocates). The single home of the hit/miss/outstanding
-    /// bookkeeping, so the `take_*` front ends cannot drift apart.
+    /// buffer from the rounded [`size_class`] for it: `Some` is a hit,
+    /// `None` a miss (the caller allocates the full class capacity).
+    /// The single home of the hit/miss/outstanding bookkeeping, so the
+    /// `take_*` front ends cannot drift apart. The outstanding gauge
+    /// tracks *requested* lengths, not class capacities.
     fn lease<T: Send + 'static>(&self, len: usize) -> Option<Vec<T>> {
-        let popped = self.pop::<T>(len);
+        let popped = self.pop::<T>(size_class(len));
         let counter = if popped.is_some() { &self.inner.hits } else { &self.inner.misses };
         counter.fetch_add(1, Ordering::Relaxed);
         self.inner.bytes_outstanding.fetch_add(bytes_of::<T>(len), Ordering::Relaxed);
@@ -266,10 +308,16 @@ impl Arena {
         }
         match self.lease::<T>(len) {
             Some(mut vec) => {
-                vec.fill(fill);
+                // Within the class capacity: never reallocates.
+                vec.clear();
+                vec.resize(len, fill);
                 vec
             }
-            None => vec![fill; len],
+            None => {
+                let mut vec = Vec::with_capacity(size_class(len));
+                vec.resize(len, fill);
+                vec
+            }
         }
     }
 
@@ -281,27 +329,42 @@ impl Arena {
         }
         match self.lease::<T>(src.len()) {
             Some(mut vec) => {
-                vec.copy_from_slice(src);
+                vec.clear();
+                vec.extend_from_slice(src);
                 vec
             }
-            None => src.to_vec(),
+            None => {
+                let mut vec = Vec::with_capacity(size_class(src.len()));
+                vec.extend_from_slice(src);
+                vec
+            }
         }
     }
 
     /// Lease a buffer of `len` elements **without initializing it**:
     /// recycled buffers keep their stale (but memory-safe — every
-    /// element is an initialized `T`) previous contents; fresh
-    /// allocations are `T::default()`-filled. For consumers that
-    /// provably overwrite every element before reading (the decoders'
-    /// reconstruction passes), where [`Arena::take_filled`]'s fill
-    /// would be a wasted full-buffer memset on the warm path.
+    /// element is an initialized `T`) previous contents up to the
+    /// recycled length (elements past it, when the recycled buffer was
+    /// shorter, are `T::default()`-filled); fresh allocations are
+    /// `T::default()`-filled. For consumers that provably overwrite
+    /// every element before reading (the decoders' reconstruction
+    /// passes), where [`Arena::take_filled`]'s fill would be a wasted
+    /// full-buffer memset on the warm path.
     pub fn take_stale<T: Copy + Default + Send + 'static>(&self, len: usize) -> Vec<T> {
         if len == 0 {
             return Vec::new();
         }
         match self.lease::<T>(len) {
-            Some(vec) => vec,
-            None => vec![T::default(); len],
+            Some(mut vec) => {
+                // Trim or default-extend within the class capacity.
+                vec.resize(len, T::default());
+                vec
+            }
+            None => {
+                let mut vec = Vec::with_capacity(size_class(len));
+                vec.resize(len, T::default());
+                vec
+            }
         }
     }
 
@@ -424,13 +487,15 @@ mod tests {
         let arena = Arena::new();
         let a: Vec<i64> = arena.take_filled(100, 7);
         assert!(a.iter().all(|&v| v == 7));
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.capacity(), 128, "a miss allocates the full size class");
         let st = arena.stats();
         assert_eq!((st.hits, st.misses), (0, 1));
-        assert_eq!(st.bytes_outstanding, 800);
+        assert_eq!(st.bytes_outstanding, 800, "outstanding tracks requested lengths");
         arena.give(a);
         let st = arena.stats();
         assert_eq!(st.bytes_outstanding, 0);
-        assert_eq!(st.bytes_pooled, 800);
+        assert_eq!(st.bytes_pooled, 1024, "pooled tracks the rounded class (128 x 8B)");
         let b: Vec<i64> = arena.take_filled(100, -3);
         assert!(b.iter().all(|&v| v == -3), "recycled buffer must be re-initialized");
         let st = arena.stats();
@@ -440,18 +505,35 @@ mod tests {
     }
 
     #[test]
-    fn classes_are_type_and_length_exact() {
+    fn size_classes_round_to_the_next_power_of_two() {
+        assert_eq!(size_class(1), 1);
+        assert_eq!(size_class(8), 8);
+        assert_eq!(size_class(9), 16);
+        assert_eq!(size_class(100), 128);
+        assert_eq!(size_class(13824), 16384); // a 24^3 grid
+        assert_eq!(size_class(14400), 16384); // a 25x24x24 near-shape
+    }
+
+    #[test]
+    fn classes_are_type_exact_and_length_rounded() {
         let arena = Arena::new();
         let a: Vec<f32> = arena.take_filled(64, 0.0);
         arena.give(a);
-        // Same length, different type: miss.
+        // Same class, different type: miss.
         let b: Vec<u32> = arena.take_filled(64, 0);
-        // Same type, different length: miss.
+        // Same type, next class up (65 -> 128): miss.
         let c: Vec<f32> = arena.take_filled(65, 0.0);
         assert_eq!(arena.stats().hits, 0);
         assert_eq!(arena.stats().misses, 3);
+        // Near length in the same class (60 -> 64): hit on the parked
+        // 64-element buffer.
+        let d: Vec<f32> = arena.take_filled(60, 1.0);
+        assert_eq!(d.len(), 60);
+        assert!(d.iter().all(|&v| v == 1.0));
+        assert_eq!(arena.stats().hits, 1);
         arena.give(b);
         arena.give(c);
+        arena.give(d);
     }
 
     #[test]
@@ -509,6 +591,20 @@ mod tests {
     }
 
     #[test]
+    fn adopting_an_exactly_sized_foreign_buffer_serves_its_own_length() {
+        // A `vec![..; 100]` has capacity 100 < its 128 size class;
+        // park must grow it so a same-length lease hits instead of
+        // permanently missing the rounded class.
+        let arena = Arena::new();
+        arena.adopt(vec![7i64; 100]);
+        assert_eq!(arena.stats().bytes_pooled, 1024, "parked at the full 128 class");
+        let v: Vec<i64> = arena.take_filled(100, 1);
+        assert_eq!(arena.stats().hits, 1, "adopted foreign buffer must serve its own shape");
+        assert!(v.iter().all(|&x| x == 1));
+        arena.give(v);
+    }
+
+    #[test]
     fn class_capacity_is_bounded() {
         let arena = Arena::new();
         for _ in 0..(MAX_FREE_PER_CLASS + 3) {
@@ -521,13 +617,14 @@ mod tests {
 
     #[test]
     fn total_pooled_bytes_are_soft_capped_across_classes() {
-        // 100-byte cap: distinct lengths open distinct classes, so the
-        // per-class cap alone would retain all of these.
+        // 100-byte cap: distinct classes, so the per-class cap alone
+        // would retain all of these (power-of-two lengths keep the
+        // park class equal to the adopted capacity).
         let arena = Arena::with_limits(8, 100);
-        arena.adopt(vec![0u8; 60]); // pooled: 60
-        arena.adopt(vec![0u8; 30]); // pooled: 90
-        arena.adopt(vec![0u8; 20]); // 90 + 20 > 100 → dropped
-        arena.adopt(vec![0u8; 10]); // pooled: 100
+        arena.adopt(vec![0u8; 64]); // pooled: 64
+        arena.adopt(vec![0u8; 32]); // pooled: 96
+        arena.adopt(vec![0u8; 16]); // 96 + 16 > 100 → dropped
+        arena.adopt(vec![0u8; 4]); // pooled: 100
         let st = arena.stats();
         assert_eq!(st.bytes_pooled, 100);
         assert_eq!(st.dropped, 1);

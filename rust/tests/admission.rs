@@ -10,6 +10,12 @@
 //! with one lane the scheduler executes jobs inline, strictly in
 //! dequeue order.
 
+// The deprecated service constructors and `mitigate_with_stats` are
+// exercised deliberately: this suite pins the legacy admission paths,
+// now thin wrappers over the engine (see rust/tests/engine.rs for the
+// typed front door).
+#![allow(deprecated)]
+
 use qai::data::grid::Grid;
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::mitigation::{
@@ -43,6 +49,7 @@ fn paused_service(lanes: usize, capacity: usize) -> MitigationService {
         pool: Some(Arc::new(ThreadPool::new(lanes))),
         capacity,
         start_paused: true,
+        ..Default::default()
     })
 }
 
@@ -183,6 +190,7 @@ fn deadline_accounting_hit_and_miss() {
         pool: Some(Arc::new(ThreadPool::new(2))),
         capacity: 8,
         start_paused: false,
+        ..Default::default()
     });
 
     let generous = SubmitOptions::bulk().with_deadline(Duration::from_secs(3600));

@@ -16,9 +16,14 @@
 //!    pointer identity and handle counts; and the lease accounting
 //!    drains to zero (no leaks) once jobs are done.
 
+// The deprecated service constructors and `mitigate_with_stats` are
+// the legacy references this suite compares the arena path against.
+#![allow(deprecated)]
+
 use qai::data::grid::Grid;
 use qai::data::synthetic::{generate, DatasetKind};
-use qai::mitigation::pipeline::{mitigate_with_stats, mitigate_with_stats_on};
+use qai::mitigation::engine::{self, MitigationRequest};
+use qai::mitigation::pipeline::mitigate_with_stats;
 use qai::mitigation::{Job, MitigationConfig, MitigationService, ServiceConfig, SubmitOptions};
 use qai::quant::{quantize_grid, ErrorBound, ResolvedBound};
 use qai::util::arena::{Arena, ArenaHandle};
@@ -44,21 +49,23 @@ fn arena_path_is_bit_exact_across_datasets_dims_threads() {
         for threads in [1usize, 4] {
             let cfg = MitigationConfig { threads, ..Default::default() };
             let (fresh, fresh_stats) = mitigate_with_stats(&dq, &q, eb, &cfg).unwrap();
+            let request = MitigationRequest::new(dq.clone(), q.clone(), eb)
+                .config(cfg)
+                .with_stats(true);
             let arena = Arena::new();
             // Cold pass (populates the free lists), then a warm pass
-            // that runs entirely on recycled buffers.
+            // that runs entirely on recycled buffers — through the
+            // engine's confined execution front door.
             for pass in 0..2 {
-                let (out, stats) = mitigate_with_stats_on(
+                let resp = engine::execute_on(
                     PoolHandle::Global,
                     ArenaHandle::Pooled(&arena),
-                    &dq,
-                    &q,
-                    eb,
-                    &cfg,
+                    &request,
                 )
                 .unwrap();
+                let stats = resp.stats.expect("stats requested");
                 assert_eq!(
-                    out.data, fresh.data,
+                    resp.output.data, fresh.data,
                     "kind={kind:?} dims={dims:?} threads={threads} pass={pass}"
                 );
                 assert_eq!(stats.n_boundary1, fresh_stats.n_boundary1);
@@ -67,6 +74,47 @@ fn arena_path_is_bit_exact_across_datasets_dims_threads() {
             assert!(arena.stats().hits > 0, "warm pass must reuse buffers");
         }
     }
+}
+
+#[test]
+fn near_shapes_share_rounded_size_classes() {
+    // A 24^3 field and a 25x24x24 near-shape round to the same
+    // power-of-two classes (16384 full-grid, 32 per-line), so a warm
+    // near-shaped job allocates zero new full-grid buffers — the point
+    // of size-class rounding. Outputs stay bit-identical to the fresh
+    // path for both shapes.
+    let (dq_a, q_a, eb_a) = field(DatasetKind::MirandaLike, &[24, 24, 24], 5);
+    let (dq_b, q_b, eb_b) = field(DatasetKind::MirandaLike, &[25, 24, 24], 6);
+    let cfg = MitigationConfig::default();
+    let (fresh_a, _) = mitigate_with_stats(&dq_a, &q_a, eb_a, &cfg).unwrap();
+    let (fresh_b, _) = mitigate_with_stats(&dq_b, &q_b, eb_b, &cfg).unwrap();
+
+    let arena = Arena::new();
+    let run = |dq: &Grid<f32>, q: &Grid<i64>, eb: ResolvedBound| {
+        let request = MitigationRequest::new(dq.clone(), q.clone(), eb).config(cfg);
+        let resp =
+            engine::execute_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &request).unwrap();
+        resp.output
+    };
+
+    // Cold pass on shape A populates the rounded classes; recycle the
+    // output so the B job's output buffer is covered too.
+    let out_a = run(&dq_a, &q_a, eb_a);
+    assert_eq!(out_a.data, fresh_a.data);
+    arena.adopt(out_a.data);
+    let cold = arena.stats();
+    assert!(cold.misses > 0, "cold pass must have populated the arena");
+
+    // Near-shape B: every take lands in a class A already filled.
+    let out_b = run(&dq_b, &q_b, eb_b);
+    assert_eq!(out_b.data, fresh_b.data, "rounded-class reuse must stay bit-exact");
+    let warm = arena.stats();
+    assert_eq!(
+        warm.misses, cold.misses,
+        "a near-shaped job must allocate zero new full-grid buffers \
+         (rounded classes must absorb the shape delta)"
+    );
+    assert!(warm.hits > cold.hits, "the near-shaped job must draw from the free lists");
 }
 
 #[test]

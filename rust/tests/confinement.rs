@@ -9,7 +9,13 @@
 //! stray call site. Do not add tests to this binary that touch the
 //! global pool.
 
+// Legacy wrappers (`mitigate`, the service constructors) are exercised
+// deliberately alongside the engine path: confinement must hold on
+// both.
+#![allow(deprecated)]
+
 use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::engine::{Engine, MitigationRequest};
 use qai::mitigation::{
     mitigate, Job, MitigationConfig, MitigationService, ServiceConfig, SubmitOptions,
 };
@@ -39,6 +45,7 @@ fn private_pool_job_runs_internal_steps_only_on_that_pool() {
         pool: Some(private.clone()),
         capacity: 4,
         start_paused: false,
+        ..Default::default()
     });
     let job = Job::with_config(dq, q, eb, MitigationConfig { threads: 4, ..Default::default() });
     let report = service.submit(job, SubmitOptions::interactive()).unwrap().wait();
@@ -69,4 +76,28 @@ fn private_pool_job_runs_internal_steps_only_on_that_pool() {
     let results = service.mitigate_batch(std::slice::from_ref(&job2));
     assert!(results[0].is_ok());
     assert!(!pool::global_is_initialized(), "mitigate_batch must stay confined as well");
+}
+
+#[test]
+fn sharded_engine_with_explicit_pool_stays_confined() {
+    let orig = generate(DatasetKind::CombustionLike, &[24, 24, 24], 5);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+
+    let private = Arc::new(ThreadPool::new(3));
+    let regions_before = private.regions_opened();
+    let engine = Engine::builder().shards(2).pool(private.clone()).shared_arena(true).build();
+    let request = MitigationRequest::new(dq, q, eb)
+        .config(MitigationConfig { threads: 3, ..Default::default() })
+        .tenant("confined");
+    let response = engine.run(request).expect("confined engine job must succeed");
+    assert!(response.output.len() == 24 * 24 * 24);
+    assert!(
+        private.regions_opened() > regions_before,
+        "threads = 3 steps must open parallel regions on the engine's pool"
+    );
+    assert!(
+        !pool::global_is_initialized(),
+        "no step of a pool-confined engine job may fall back to the global pool"
+    );
 }

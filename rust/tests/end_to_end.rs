@@ -1,6 +1,10 @@
 //! End-to-end integration: compressor → decompress → mitigate → metrics,
 //! across codecs and datasets — the full user-facing flow of the repo.
 
+// The deprecated `mitigate` wrapper is exercised deliberately: the
+// end-to-end flow must hold through the legacy entry point too.
+#![allow(deprecated)]
+
 use qai::compressors::{cusz::CuszLike, cuszp::CuszpLike, szp::SzpLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::filters::{gaussian_filter, uniform_filter, wiener_filter};

@@ -2,6 +2,12 @@
 //! per-field calls, per-job error isolation, determinism of concurrent
 //! batches on the shared pool, and explicit-pool operation.
 
+// The deprecated constructors/batch wrappers are exercised
+// deliberately: this suite pins the legacy batch path, now a thin
+// wrapper over `Engine::run_batch` (see rust/tests/engine.rs for the
+// typed front door).
+#![allow(deprecated)]
+
 use qai::data::grid::Grid;
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::mitigation::{mitigate_with_stats, Job, MitigationConfig, MitigationService};

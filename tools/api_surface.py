@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Public-API surface snapshot check.
+
+Guards against accidental public-surface growth: every `pub` item of the
+`qai` crate is extracted into a sorted, deterministic item list and
+diffed against the checked-in snapshot (tools/api_surface.txt). CI runs
+`check`; a deliberate surface change regenerates the snapshot with
+`update`, which makes the growth reviewable as an ordinary diff.
+
+The extractor is a line-level scan of `rust/src/**/*.rs` (the design
+also works by diffing `cargo doc` item lists, but a source scan needs no
+toolchain, so the check runs in every environment — including offline
+ones). It records items declared `pub` — functions, types, traits,
+consts, statics, modules, macros, and re-exports — attributed to the
+module derived from the file path. Restricted visibility (`pub(crate)`
+and friends), `#[cfg(test)]` modules, and doc examples are excluded.
+Impl-block methods are attributed to their file's module; that is
+coarser than a full path but stable, and a new public method still shows
+up as a new line.
+
+Usage:
+  python3 tools/api_surface.py check    # exit 1 + diff on drift
+  python3 tools/api_surface.py update   # rewrite tools/api_surface.txt
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "rust" / "src"
+SNAPSHOT = REPO / "tools" / "api_surface.txt"
+
+# `pub` followed by an item keyword (not `pub(crate)` etc.) and a name.
+ITEM_RE = re.compile(
+    r"^\s*pub\s+"
+    r"(?:async\s+|unsafe\s+|extern\s+\"[^\"]*\"\s+)*"
+    r"(?P<kind>fn|struct|enum|trait|type|const|static|mod|macro_rules!|use)\s+"
+    r"(?P<rest>.+)$"
+)
+NAME_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+
+def module_of(path: Path) -> str:
+    rel = path.relative_to(SRC).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] in ("mod", "lib"):
+        parts = parts[:-1]
+    if parts and parts[-1] == "main":
+        return "bin::qai"
+    return "::".join(["qai"] + parts)
+
+
+def use_targets(rest: str) -> list:
+    """Item names exported by a `pub use` line (handles `{a, b as c}`)."""
+    rest = rest.rstrip(";").strip()
+    brace = rest.find("{")
+    names = []
+    if brace >= 0:
+        inner = rest[brace + 1 : rest.rfind("}")]
+        leaves = [leaf.strip() for leaf in inner.split(",") if leaf.strip()]
+    else:
+        leaves = [rest]
+    for leaf in leaves:
+        if " as " in leaf:
+            leaf = leaf.split(" as ")[-1].strip()
+        else:
+            leaf = leaf.split("::")[-1].strip()
+        if leaf == "*":
+            names.append("*")
+        else:
+            m = NAME_RE.match(leaf)
+            if m:
+                names.append(m.group(0))
+    return names
+
+
+def scan_file(path: Path) -> set:
+    items = set()
+    module = module_of(path)
+    in_test_mod = False
+    test_depth = 0
+    depth = 0
+    pending_cfg_test = False
+    for raw in path.read_text(encoding="utf-8").splitlines():
+        line = raw.split("//")[0]
+        stripped = line.strip()
+        opens = line.count("{")
+        closes = line.count("}")
+        if "#[cfg(test)]" in line:
+            pending_cfg_test = True
+        elif pending_cfg_test and stripped:
+            if re.search(r"\bmod\s+\w+", line):
+                in_test_mod = True
+                test_depth = depth
+                pending_cfg_test = False
+            elif not stripped.startswith("#["):
+                # The cfg(test) gated a non-module item (fn, use, ...):
+                # it must not swallow a later, unrelated `mod`.
+                pending_cfg_test = False
+        depth += opens - closes
+        if in_test_mod:
+            if depth <= test_depth:
+                in_test_mod = False
+            continue
+        m = ITEM_RE.match(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        rest = m.group("rest")
+        if kind == "use":
+            for name in use_targets(rest):
+                items.add(f"{module}::{name} [reexport]")
+            continue
+        name_match = NAME_RE.match(rest)
+        if not name_match:
+            continue
+        items.add(f"{module}::{name_match.group(0)} [{kind}]")
+    return items
+
+
+def collect() -> list:
+    items = set()
+    for path in sorted(SRC.rglob("*.rs")):
+        items |= scan_file(path)
+    return sorted(items)
+
+
+def main() -> int:
+    mode = sys.argv[1] if len(sys.argv) > 1 else "check"
+    current = collect()
+    if mode == "update":
+        SNAPSHOT.write_text("\n".join(current) + "\n", encoding="utf-8")
+        print(f"wrote {len(current)} public items to {SNAPSHOT.relative_to(REPO)}")
+        return 0
+    if mode != "check":
+        print(__doc__)
+        return 2
+    if not SNAPSHOT.exists():
+        print("missing tools/api_surface.txt — run: python3 tools/api_surface.py update")
+        return 1
+    recorded = [l for l in SNAPSHOT.read_text(encoding="utf-8").splitlines() if l.strip()]
+    added = sorted(set(current) - set(recorded))
+    removed = sorted(set(recorded) - set(current))
+    if not added and not removed:
+        print(f"public API surface unchanged ({len(current)} items)")
+        return 0
+    print("public API surface drifted from tools/api_surface.txt:")
+    for line in added:
+        print(f"  + {line}")
+    for line in removed:
+        print(f"  - {line}")
+    print(
+        "\nif this growth is deliberate, regenerate the snapshot with:\n"
+        "  python3 tools/api_surface.py update\n"
+        "and commit the diff for review."
+    )
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
