@@ -16,7 +16,41 @@ use qai::data::synthetic::{generate, DatasetKind};
 use qai::mitigation::engine::{self, MitigationRequest};
 use qai::mitigation::pipeline::MitigationConfig;
 use qai::quant::ErrorBound;
+use qai::util::pool::ThreadPool;
 use qai::util::timer::thread_cpu_time;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Minimal fork-join `for_range` (fresh scoped threads per call,
+/// self-scheduled over `grain`-sized batches) — the dispatch baseline
+/// the work-stealing pool is compared against in the addendum table.
+fn forkjoin_for_range<F>(n: usize, threads: usize, grain: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let grain = grain.max(1);
+    if threads <= 1 || n <= grain {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.div_ceil(grain)) {
+            let next = &next;
+            let fr = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + grain).min(n) {
+                    fr(i);
+                }
+            });
+        }
+    });
+}
 
 fn cpu_time<F: FnMut()>(mut f: F) -> f64 {
     // run on a fresh thread so CLOCK_THREAD_CPUTIME_ID scopes exactly
@@ -121,5 +155,58 @@ fn main() {
         }
     }
     table.print("Fig. 8: shared-memory efficiency (ε = 1e-3; 1-core host → CPU-time inflation)");
+
+    // ROADMAP follow-up: the ThreadPool-aware column — CPU-time
+    // inflation of the *dispatch substrate itself* on a fixed synthetic
+    // kernel, persistent work-stealing pool vs fork-join (fresh scoped
+    // threads per region). The kernel is identical on both sides, so
+    // the inflation delta is pure scheduler overhead — what separates
+    // the measured Fig. 8 efficiency curve from the ideal line once
+    // per-region spawn costs are gone.
+    let mut dispatch = Table::new(&[
+        "threads",
+        "pool cpu(ms)",
+        "pool inflation",
+        "fork-join cpu(ms)",
+        "fork-join inflation",
+    ]);
+    let pool = ThreadPool::new(*threads_sweep.iter().max().unwrap());
+    let kernel_n = 1usize << 17;
+    let kernel = |i: usize| {
+        std::hint::black_box((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 7);
+    };
+    let reps = if quick { 8 } else { 24 };
+    let mut pool_base = 0.0_f64;
+    let mut fj_base = 0.0_f64;
+    for &t in threads_sweep {
+        let pool_cpu = cpu_time(|| {
+            for _ in 0..reps {
+                pool.for_range(kernel_n, t, 1024, kernel);
+            }
+        });
+        let fj_cpu = cpu_time(|| {
+            for _ in 0..reps {
+                forkjoin_for_range(kernel_n, t, 1024, kernel);
+            }
+        });
+        if t == 1 {
+            pool_base = pool_cpu;
+            fj_base = fj_cpu;
+        }
+        dispatch.row(&[
+            format!("{t}"),
+            format!("{:.2}", pool_cpu * 1e3),
+            format!("{:.3}", pool_cpu / pool_base.max(1e-12)),
+            format!("{:.2}", fj_cpu * 1e3),
+            format!("{:.3}", fj_cpu / fj_base.max(1e-12)),
+        ]);
+    }
+    dispatch.print("Fig. 8 addendum: dispatch-substrate CPU inflation (work-stealing pool vs fork-join)");
+    let c = pool.counters();
+    println!(
+        "pool scheduler counters: local_hits={} injector_pops={} steals={} help_runs={}",
+        c.local_hits, c.injector_pops, c.steals, c.help_runs
+    );
+
     println!("\nfig8_openmp_efficiency: OK");
 }

@@ -161,6 +161,33 @@ fn main() {
         black_box(sink.load(Ordering::Relaxed));
     }
 
+    // Work-stealing observability: regions opened from *inside* a
+    // worker publish their tickets on that worker's local deque, so
+    // idle workers must steal to participate — the deep-nesting shape
+    // the per-worker LIFO deques exist for. The counter deltas prove
+    // the scheduler actually behaves that way under load.
+    {
+        let c0 = bench_pool.counters();
+        let sink = AtomicU64::new(0);
+        let r = bench_fn("nested regions (64 outer x 4096 inner)", warm.max(2), samp.max(5), || {
+            bench_pool.for_range(64, pool_threads, 1, |o| {
+                bench_pool.for_range(4096, pool_threads, 64, |i| {
+                    sink.fetch_add((o + i) as u64, Ordering::Relaxed);
+                });
+            });
+        });
+        let c1 = bench_pool.counters();
+        println!(
+            "   -> {:.1} us/outer-region; scheduler deltas: +{} local_hits, +{} injector_pops, +{} steals, +{} help_runs",
+            r.mean * 1e6 / 64.0,
+            c1.local_hits - c0.local_hits,
+            c1.injector_pops - c0.injector_pops,
+            c1.steals - c0.steals,
+            c1.help_runs - c0.help_runs,
+        );
+        black_box(sink.load(Ordering::Relaxed));
+    }
+
     // Small-grid mitigation latency: per-step dispatch overhead
     // dominates here, which is exactly what the persistent pool removes
     // (acceptance: improved <= 64^3 latency vs the seed fork-join).

@@ -114,10 +114,16 @@ pub fn run_distributed(
     let (fabric, endpoints) = Fabric::new(n_ranks);
 
     let t_wall = std::time::Instant::now();
-    // Ranks block on each other's sends/recvs, so they need dedicated
-    // concurrent threads (`pool::scope_blocking`, the runtime's escape
-    // hatch for co-blocking task sets); the compute *inside* each rank
-    // (`threads_per_rank`) runs on the shared persistent pool.
+    // Ranks block on each other's sends/recvs, so each needs a thread
+    // it shares with no other rank for its whole lifetime.
+    // `pool::scope_blocking` provides that cooperatively: it pins ranks
+    // to currently-parked global-pool workers (zero OS-thread spawns
+    // when pool capacity suffices — the warm steady state of repeated
+    // distributed runs), spawns scoped threads only for the overflow,
+    // and runs rank 0 on this thread, which then helps the pool while
+    // the pinned ranks drain. The compute *inside* each rank
+    // (`threads_per_rank`) runs on the shared persistent pool as
+    // ordinary stealable regions.
     let tasks: Vec<_> = endpoints
         .into_iter()
         .map(|mut ep| {

@@ -43,15 +43,22 @@
 //! * [`bench_support`] — the offline criterion-like bench harness used by
 //!   the per-figure/table benches;
 //! * [`util`] — offline substrates, including [`util::pool`], the
-//!   persistent work-claiming thread-pool runtime all shared-memory
-//!   parallelism runs on (`threads == 1` stays a zero-overhead inline
-//!   path; warm parallel regions spawn no OS threads), with
-//!   [`util::pool::PoolHandle`] selecting which pool a region opens on;
-//!   and [`util::arena`], the size-classed scratch-buffer arena the
-//!   zero-copy data plane recycles every full-grid buffer through
-//!   (warm same-shaped jobs allocate nothing, counter-proven), with
-//!   [`util::arena::ArenaHandle`] selecting it per call and
-//!   [`data::grid::SharedGrid`] making job payloads `Arc`-shared.
+//!   persistent **work-stealing** thread-pool runtime all
+//!   shared-memory parallelism runs on: per-worker LIFO deques with
+//!   randomized stealing, a FIFO injector for external submissions,
+//!   and cooperative blocking (every blocked thread — region openers,
+//!   `scope_blocking` callers, the admission scheduler — runs queued
+//!   tickets while it waits, counter-proven via
+//!   [`util::pool::ThreadPool::counters`]); `threads == 1` stays a
+//!   zero-overhead inline path, warm parallel regions spawn no OS
+//!   threads, and [`util::pool::PoolHandle`] selects which pool a
+//!   region opens on. [`util::arena`] is the size-classed
+//!   scratch-buffer arena the zero-copy data plane recycles every
+//!   full-grid buffer through (warm same-shaped jobs allocate nothing,
+//!   counter-proven), with [`util::arena::ArenaHandle`] selecting it
+//!   per call, [`util::arena::ArenaLease`] keeping the accounting
+//!   exact across panics, and [`data::grid::SharedGrid`] making job
+//!   payloads `Arc`-shared.
 //!
 //! ## Guides
 //!

@@ -459,6 +459,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut missed = 0usize;
     let mut max_wait = Duration::ZERO;
     for (i, ticket) in tickets {
+        // The trace id follows the job across shard, queue, and lane —
+        // it is what the metrics lines' `last_trace=` token refers to.
+        let trace = ticket.trace_id();
         match ticket.wait() {
             Ok(resp) => {
                 max_wait = max_wait.max(resp.queue_wait);
@@ -468,7 +471,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             Err(e) => {
                 failures += 1;
-                eprintln!("job {i} failed: {e:#}");
+                eprintln!("job {i} (trace {trace}) failed: {e:#}");
             }
         }
     }

@@ -36,13 +36,19 @@
 //! A single scheduler thread (spawned lazily on first submission,
 //! counted by [`crate::util::pool::os_thread_spawns`]) drains the
 //! queue: each dequeued job is handed to the service's
-//! [`ThreadPool`](crate::util::pool::ThreadPool) as a detached task.
-//! Up to `lanes` jobs are admitted in flight — `workers` (= lanes − 1)
-//! execute concurrently and one more sits staged so a freed worker
-//! starts immediately; the scheduler itself never executes jobs
-//! (except on a single-lane pool, inline in admission order), keeping
-//! admission of later interactive jobs responsive. Size the pool one
-//! lane larger if you need exactly `n` jobs truly concurrent. A
+//! [`ThreadPool`](crate::util::pool::ThreadPool) as a detached task,
+//! routed through the pool's worker-local deques. Up to `lanes` jobs
+//! are admitted in flight — `workers` (= lanes − 1) execute
+//! concurrently and one more sits staged so a freed worker starts
+//! immediately; while every lane is busy with jobs still queued, the
+//! scheduler **helps the pool** run queued region tickets — bounded
+//! steps of in-flight jobs, never whole detached jobs — instead of
+//! idling (cooperative blocking — see
+//! [`ThreadPool::try_help_one`](crate::util::pool::ThreadPool::try_help_one)),
+//! and otherwise never executes jobs (except on a single-lane pool,
+//! inline in admission order), keeping admission of later interactive
+//! jobs responsive whenever a lane is free. Size the pool one lane
+//! larger if you need exactly `n` jobs truly concurrent. A
 //! job's *internal* steps A–E run on the **same pool**
 //! through the [`PoolHandle`](crate::util::pool::PoolHandle) plumbing —
 //! a service built with
@@ -197,6 +203,18 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Source of the monotonically-assigned request trace ids. Starts at 1
+/// so `0` can serve as "no trace yet" in stats snapshots.
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate the next trace id. Called once per
+/// [`MitigationRequest`](crate::mitigation::engine::MitigationRequest)
+/// (and once per legacy `submit`/`try_submit`, which predate the typed
+/// request), so a job can be followed across shard, queue, and lane.
+pub(crate) fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::SeqCst)
+}
+
 /// Completion record of one admitted job.
 #[derive(Debug)]
 pub struct JobReport {
@@ -209,6 +227,11 @@ pub struct JobReport {
     /// always carry smaller numbers than the bulk jobs they overtook.
     /// `u64::MAX` for jobs cancelled before ever being scheduled.
     pub seq: u64,
+    /// Process-wide monotonic trace id assigned at submission, threaded
+    /// ticket → report → response so one job can be followed across
+    /// shard, queue, and lane (the engine's `last_trace=` metrics
+    /// token and `qai serve` failure lines print it).
+    pub trace_id: u64,
     /// Class the job was submitted with.
     pub priority: Priority,
     /// Submission → start of pipeline execution.
@@ -333,6 +356,11 @@ pub struct ServiceStats {
     pub total_queue_wait_s: f64,
     /// Total seconds finished jobs spent executing.
     pub total_exec_s: f64,
+    /// Trace id of the most recently finished (completed or failed)
+    /// job, `0` before any job finishes. Trace ids are process-wide
+    /// monotonic, so this is an ordering probe, not a counter — it is
+    /// excluded from the determinism contract above.
+    pub last_trace_id: u64,
 }
 
 /// An opaque token attached to a submission by the engine layer. It is
@@ -348,6 +376,8 @@ pub(crate) type AdmissionLease = Box<dyn std::any::Any + Send>;
 /// One queued submission.
 struct Pending {
     job: Job,
+    /// Trace id (see [`JobReport::trace_id`]).
+    trace: u64,
     priority: Priority,
     deadline: Option<Duration>,
     /// Absolute deadline instant (enqueue time + deadline), the EDF
@@ -500,11 +530,13 @@ impl Admission {
         job: Job,
         opts: SubmitOptions,
         lease: Option<AdmissionLease>,
+        trace: u64,
     ) -> JobTicket {
         let (ticket, state) = JobTicket::new();
         let enqueued = Instant::now();
         let pending = Pending {
             job,
+            trace,
             priority: opts.priority,
             deadline: opts.deadline,
             // checked_add: an absurd deadline (e.g. Duration::MAX) must
@@ -537,17 +569,18 @@ impl Admission {
         job: Job,
         opts: SubmitOptions,
     ) -> Result<JobTicket, SubmitError> {
-        self.try_submit_leased(job, opts, None)
+        self.try_submit_leased(job, opts, None, next_trace_id())
     }
 
-    /// [`Admission::try_submit`] with an engine-layer quota lease. On
-    /// rejection the lease never enters the queue and is dropped here,
-    /// releasing the quota slot immediately.
+    /// [`Admission::try_submit`] with an engine-layer quota lease and
+    /// request trace id. On rejection the lease never enters the queue
+    /// and is dropped here, releasing the quota slot immediately.
     pub(crate) fn try_submit_leased(
         &self,
         job: Job,
         opts: SubmitOptions,
         lease: Option<AdmissionLease>,
+        trace: u64,
     ) -> Result<JobTicket, SubmitError> {
         let ticket = {
             let mut q = self.shared.queue.lock().unwrap();
@@ -559,7 +592,7 @@ impl Admission {
                 self.shared.stats.lock().unwrap().rejected_full += 1;
                 return Err(SubmitError::QueueFull(job));
             }
-            self.enqueue(&mut q, job, opts, lease)
+            self.enqueue(&mut q, job, opts, lease, trace)
         };
         self.shared.work.notify_all();
         self.ensure_scheduler();
@@ -567,16 +600,17 @@ impl Admission {
     }
 
     pub(crate) fn submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
-        self.submit_leased(job, opts, None)
+        self.submit_leased(job, opts, None, next_trace_id())
     }
 
-    /// [`Admission::submit`] with an engine-layer quota lease (see
-    /// [`Admission::try_submit_leased`]).
+    /// [`Admission::submit`] with an engine-layer quota lease and
+    /// request trace id (see [`Admission::try_submit_leased`]).
     pub(crate) fn submit_leased(
         &self,
         job: Job,
         opts: SubmitOptions,
         lease: Option<AdmissionLease>,
+        trace: u64,
     ) -> Result<JobTicket, SubmitError> {
         let give_up = opts.timeout.map(|t| Instant::now() + t);
         let ticket = {
@@ -601,7 +635,7 @@ impl Admission {
                     }
                 }
             }
-            self.enqueue(&mut q, job, opts, lease)
+            self.enqueue(&mut q, job, opts, lease, trace)
         };
         self.shared.work.notify_all();
         self.ensure_scheduler();
@@ -656,42 +690,81 @@ impl Drop for Admission {
     }
 }
 
+/// What the scheduler decided to do after inspecting the queue.
+enum SchedulerStep {
+    /// A concurrency slot was claimed for this job (boxed: `Pending`
+    /// dwarfs the other variants).
+    Dispatch(Box<Pending>),
+    /// Jobs are queued but every lane is busy: lend the scheduler
+    /// thread to the pool instead of idling (cooperative blocking).
+    Help,
+    /// Shutdown observed.
+    Exit,
+}
+
 /// Drain loop: pop the highest-priority job whenever a concurrency slot
-/// is free and hand it to the pool as a detached task. On shutdown,
-/// cancel everything still queued and wait for in-flight jobs so no
-/// ticket is ever left unresolved.
+/// is free and hand it to the pool as a detached task (routed through
+/// the pool's worker-local deques). While every lane is busy with more
+/// jobs still queued, the scheduler *helps* the pool run queued tickets
+/// — finishing in-flight jobs faster is the only way a lane frees — and
+/// returns to dispatching the moment one does. On shutdown, cancel
+/// everything still queued and wait for in-flight jobs so no ticket is
+/// ever left unresolved.
 fn scheduler_loop(shared: Arc<Shared>) {
     loop {
-        let popped = {
+        let step = {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if q.shutdown {
-                    break None;
+                    break SchedulerStep::Exit;
                 }
                 if !q.paused && q.depth() > 0 {
-                    // Resolved lazily: an explicit-pool service must
-                    // never touch the global pool, and a global-pool
-                    // service only once a job actually exists.
+                    // Pool resolved lazily: an explicit-pool service
+                    // must never touch the global pool, and a
+                    // global-pool service only once a job actually
+                    // exists.
                     //
                     // Admit up to `lanes` jobs: `workers` can execute
                     // at once, and one more sits staged in the pool
                     // queue so a freed worker starts its next job
-                    // without a scheduler round-trip. The scheduler
-                    // itself never executes (except on a single-lane
-                    // pool) — executing here would stall admission of
-                    // later, possibly interactive, jobs.
+                    // without a scheduler round-trip. While a lane is
+                    // free the scheduler never executes jobs itself
+                    // (except on a single-lane pool) — that keeps
+                    // admission of later, possibly interactive, jobs
+                    // responsive.
                     if q.running < shared.thread_pool().lanes() {
                         q.running += 1;
-                        break q.pop();
+                        break SchedulerStep::Dispatch(Box::new(q.pop().expect("depth > 0")));
                     }
+                    break SchedulerStep::Help;
                 }
                 q = shared.work.wait(q).unwrap();
             }
         };
-        let Some(pending) = popped else { break };
-        shared.space.notify_all();
-        let seq = shared.next_seq.fetch_add(1, Ordering::SeqCst);
-        dispatch_job(&shared, pending, seq);
+        match step {
+            SchedulerStep::Exit => break,
+            SchedulerStep::Dispatch(pending) => {
+                shared.space.notify_all();
+                let seq = shared.next_seq.fetch_add(1, Ordering::SeqCst);
+                dispatch_job(&shared, *pending, seq);
+            }
+            SchedulerStep::Help => {
+                // All lanes busy, jobs still queued: run one queued
+                // region ticket (a bounded step of an in-flight job —
+                // never a whole detached job, which would stall
+                // dispatch past the next lane becoming free). When
+                // nothing is helpable, park briefly on the work
+                // condvar — a finishing job notifies it, so the
+                // timeout only bounds how late newly published region
+                // tickets are noticed.
+                if !shared.thread_pool().try_help_one() {
+                    let q = shared.queue.lock().unwrap();
+                    if !q.shutdown && q.running >= shared.thread_pool().lanes() {
+                        drop(shared.work.wait_timeout(q, Duration::from_millis(5)).unwrap());
+                    }
+                }
+            }
+        }
     }
 
     cancel_queued(&shared);
@@ -701,10 +774,10 @@ fn scheduler_loop(shared: Arc<Shared>) {
     }
 }
 
-/// Run `pending` as a detached pool task, or inline on a single-lane
-/// pool (where a detached task would never be picked up; inline
-/// execution there serializes jobs in admission order, which the
-/// deterministic-ordering tests rely on).
+/// Run `pending` as a detached pool task (routed onto a worker-local
+/// deque), or inline on a single-lane pool — inline execution there
+/// serializes jobs in admission order, which the
+/// deterministic-ordering tests rely on.
 fn dispatch_job(shared: &Arc<Shared>, pending: Pending, seq: u64) {
     let task_shared = shared.clone();
     let task = move || run_job(task_shared, pending, seq);
@@ -775,6 +848,7 @@ fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
         }
         st.total_queue_wait_s += queue_wait.as_secs_f64();
         st.total_exec_s += exec.as_secs_f64();
+        st.last_trace_id = pending.trace;
     }
     // Release the engine-layer quota slot *before* resolving the
     // ticket, so a client that waited on it can resubmit immediately
@@ -785,6 +859,7 @@ fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
         JobReport {
             result,
             seq,
+            trace_id: pending.trace,
             priority: pending.priority,
             queue_wait,
             exec,
@@ -820,6 +895,7 @@ fn cancel_queued(shared: &Shared) {
             JobReport {
                 result: Err(anyhow::anyhow!("mitigation service shut down before the job ran")),
                 seq: u64::MAX,
+                trace_id: p.trace,
                 priority: p.priority,
                 queue_wait,
                 exec: Duration::ZERO,

@@ -88,6 +88,10 @@ pub struct MitigationRequest {
     pub(crate) timeout: Option<Duration>,
     pub(crate) tenant: Option<String>,
     pub(crate) collect_stats: bool,
+    /// Process-wide monotonic trace id, assigned at construction and
+    /// threaded ticket → report → response (cloning a request — e.g. a
+    /// retry of the same logical work — keeps the id).
+    pub(crate) trace_id: u64,
 }
 
 impl MitigationRequest {
@@ -113,6 +117,7 @@ impl MitigationRequest {
             timeout: None,
             tenant: None,
             collect_stats: false,
+            trace_id: crate::mitigation::admission::next_trace_id(),
         }
     }
 
@@ -180,6 +185,16 @@ impl MitigationRequest {
         self.tenant.as_deref()
     }
 
+    /// The request's process-wide monotonic trace id (assigned at
+    /// construction). Follows the job across shard, queue, and lane:
+    /// it reappears on the [`ResponseTicket`], the
+    /// [`MitigationResponse`], the admission-layer
+    /// [`JobReport`](crate::mitigation::admission::JobReport), and the
+    /// `last_trace=` token of the metrics lines.
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
     /// Recover the payload, dropping the scheduling metadata.
     pub fn into_job(self) -> Job {
         self.job
@@ -197,6 +212,7 @@ impl MitigationRequest {
 impl std::fmt::Debug for MitigationRequest {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("MitigationRequest")
+            .field("trace_id", &self.trace_id)
             .field("dims", &self.job.dq.shape.user_dims())
             .field("priority", &self.priority)
             .field("deadline", &self.deadline)
@@ -222,6 +238,8 @@ pub struct MitigationResponse {
     pub tenant: Option<String>,
     /// The shard's dequeue sequence number (`None` off-queue).
     pub seq: Option<u64>,
+    /// The request's trace id (see [`MitigationRequest::trace_id`]).
+    pub trace_id: u64,
     /// Scheduling class the request ran as.
     pub priority: Priority,
     /// Submission → start of pipeline execution (zero off-queue).
@@ -242,6 +260,7 @@ pub struct ResponseTicket {
     shard: usize,
     tenant: Option<String>,
     collect_stats: bool,
+    trace_id: u64,
 }
 
 impl ResponseTicket {
@@ -255,6 +274,13 @@ impl ResponseTicket {
         self.tenant.as_deref()
     }
 
+    /// The request's trace id (see [`MitigationRequest::trace_id`]) —
+    /// readable before the job completes, so a caller can log the id
+    /// it is about to wait on.
+    pub fn trace_id(&self) -> u64 {
+        self.trace_id
+    }
+
     /// True once the response is ready (a subsequent `wait` returns
     /// immediately).
     pub fn is_complete(&self) -> bool {
@@ -263,17 +289,17 @@ impl ResponseTicket {
 
     /// Block until the job finishes and convert its report.
     pub fn wait(self) -> anyhow::Result<MitigationResponse> {
-        let ResponseTicket { inner, shard, tenant, collect_stats } = self;
+        let ResponseTicket { inner, shard, tenant, collect_stats, trace_id: _ } = self;
         into_response(inner.wait(), Some(shard), tenant, collect_stats)
     }
 
     /// Non-blocking poll: the response if the job finished, the ticket
     /// back otherwise.
     pub fn try_wait(self) -> Result<anyhow::Result<MitigationResponse>, ResponseTicket> {
-        let ResponseTicket { inner, shard, tenant, collect_stats } = self;
+        let ResponseTicket { inner, shard, tenant, collect_stats, trace_id } = self;
         match inner.try_wait() {
             Ok(report) => Ok(into_response(report, Some(shard), tenant, collect_stats)),
-            Err(inner) => Err(ResponseTicket { inner, shard, tenant, collect_stats }),
+            Err(inner) => Err(ResponseTicket { inner, shard, tenant, collect_stats, trace_id }),
         }
     }
 
@@ -283,10 +309,10 @@ impl ResponseTicket {
         self,
         timeout: Duration,
     ) -> Result<anyhow::Result<MitigationResponse>, ResponseTicket> {
-        let ResponseTicket { inner, shard, tenant, collect_stats } = self;
+        let ResponseTicket { inner, shard, tenant, collect_stats, trace_id } = self;
         match inner.wait_timeout(timeout) {
             Ok(report) => Ok(into_response(report, Some(shard), tenant, collect_stats)),
-            Err(inner) => Err(ResponseTicket { inner, shard, tenant, collect_stats }),
+            Err(inner) => Err(ResponseTicket { inner, shard, tenant, collect_stats, trace_id }),
         }
     }
 }
@@ -294,6 +320,7 @@ impl ResponseTicket {
 impl std::fmt::Debug for ResponseTicket {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ResponseTicket")
+            .field("trace_id", &self.trace_id)
             .field("shard", &self.shard)
             .field("tenant", &self.tenant)
             .field("complete", &self.is_complete())
@@ -307,6 +334,7 @@ fn into_response(
     tenant: Option<String>,
     collect_stats: bool,
 ) -> anyhow::Result<MitigationResponse> {
+    let trace_id = report.trace_id;
     let (output, stats) = report.result?;
     Ok(MitigationResponse {
         output,
@@ -314,6 +342,7 @@ fn into_response(
         shard,
         tenant,
         seq: Some(report.seq),
+        trace_id,
         priority: report.priority,
         queue_wait: report.queue_wait,
         exec: report.exec,
@@ -348,6 +377,7 @@ pub fn execute_on(
         shard: None,
         tenant: request.tenant.clone(),
         seq: None,
+        trace_id: request.trace_id,
         priority: request.priority,
         queue_wait: Duration::ZERO,
         exec,
@@ -405,6 +435,9 @@ impl EngineStats {
             agg.running += s.running;
             agg.total_queue_wait_s += s.total_queue_wait_s;
             agg.total_exec_s += s.total_exec_s;
+            // Trace ids are process-wide monotonic: the engine-wide
+            // "most recent" is the max over shards.
+            agg.last_trace_id = agg.last_trace_id.max(s.last_trace_id);
         }
         agg
     }
@@ -747,7 +780,7 @@ impl Engine {
         blocking: bool,
     ) -> Result<ResponseTicket, SubmitError> {
         let opts = request.submit_options();
-        let MitigationRequest { job, tenant, collect_stats, .. } = request;
+        let MitigationRequest { job, tenant, collect_stats, trace_id, .. } = request;
         let lease = match tenant.as_deref() {
             Some(t) => match self.admit_tenant(t) {
                 Ok(lease) => Some(lease),
@@ -759,12 +792,12 @@ impl Engine {
         // On rejection the admission layer drops the lease before
         // returning, so the quota slot frees with the error.
         let admitted = if blocking {
-            self.shards[shard].submit_leased(job, opts, lease)
+            self.shards[shard].submit_leased(job, opts, lease, trace_id)
         } else {
-            self.shards[shard].try_submit_leased(job, opts, lease)
+            self.shards[shard].try_submit_leased(job, opts, lease, trace_id)
         };
         match admitted {
-            Ok(inner) => Ok(ResponseTicket { inner, shard, tenant, collect_stats }),
+            Ok(inner) => Ok(ResponseTicket { inner, shard, tenant, collect_stats, trace_id }),
             Err(e) => {
                 // The queue pushed back (full/timeout/shutdown): undo
                 // the tenant's `submitted` bump so the counter reports

@@ -216,10 +216,14 @@ pub(crate) fn run_pipeline(
     let edt2 = sw.time(|| edt_on(pool, arena, &b2, false, threads));
     stats.t_edt2 = std::mem::take(&mut sw).secs();
 
-    // Step E: interpolate and compensate, into a leased output buffer
-    // seeded with the decompressed data.
+    // Step E: interpolate and compensate, into an RAII-leased output
+    // buffer seeded with the decompressed data. The lease (not a raw
+    // take/give pair) is what keeps the arena's outstanding-bytes
+    // accounting exact if the compensation kernel panics: the buffer
+    // returns to its size class during unwind, before the service's
+    // per-job panic catch ever sees the payload.
     let eta_eps = cfg.eta * eb.abs;
-    let mut out = arena.take_copy(&dq.data);
+    let mut out = arena.lease_copy(&dq.data);
     let mut sw = Stopwatch::new();
     let compensated = match cfg.backend {
         Backend::Native => {
@@ -268,14 +272,9 @@ pub(crate) fn run_pipeline(
     }
 
     match compensated {
-        Ok(()) => {
-            arena.detach(&out);
-            Ok((Grid { shape: dq.shape, data: out }, stats))
-        }
-        Err(e) => {
-            arena.give(out);
-            Err(e)
-        }
+        Ok(()) => Ok((Grid { shape: dq.shape, data: out.detach() }, stats)),
+        // The lease gives the buffer back when it drops with the error.
+        Err(e) => Err(e),
     }
 }
 

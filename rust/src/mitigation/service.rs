@@ -319,7 +319,7 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
          deadlines_missed={} max_queue_depth={} queue_depth={} running={} \
          total_queue_wait_s={:.6} total_exec_s={:.6} arena_hits={} arena_misses={} \
          arena_returns={} arena_detached={} arena_adopted={} arena_dropped={} \
-         arena_bytes_outstanding={} arena_bytes_pooled={}",
+         arena_bytes_outstanding={} arena_bytes_pooled={} last_trace={}",
         stats.submitted,
         stats.rejected_full,
         stats.submit_timeouts,
@@ -343,6 +343,7 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
         arena.dropped,
         arena.bytes_outstanding,
         arena.bytes_pooled,
+        stats.last_trace_id,
     )
 }
 
@@ -440,6 +441,7 @@ mod tests {
         let arena = ArenaStats::default();
         let line = render_metrics_labeled(&[("shard", "3"), ("tenant", "acme")], &stats, &arena);
         assert!(line.starts_with("shard=3 tenant=acme submitted=0 "), "line={line}");
+        assert!(line.ends_with("last_trace=0"), "line={line}");
         assert_eq!(line.matches('\n').count(), 0);
     }
 }

@@ -53,11 +53,17 @@
 //! what every standalone entry point (`mitigate`, `edt`, `decompress`)
 //! defaults to.
 //!
-//! Accounting caveat: a panic between a `take` and its `give` frees the
-//! buffer to the allocator as usual but leaves `bytes_outstanding`
-//! non-zero — the gauge tracks *accounted* leases, not RAII ownership.
-//! The service catches per-job panics, so its leak test only covers the
-//! normal completion path.
+//! Accounting caveat: a panic between a raw `take_*` and its `give`
+//! frees the buffer to the allocator as usual but leaves
+//! `bytes_outstanding` non-zero — the raw gauge tracks *accounted*
+//! leases, not RAII ownership. [`ArenaLease`] closes that hole: a
+//! lease returns its buffer to the arena on drop (including unwinds),
+//! keeping hit/miss/bytes-outstanding accounting exact on panic paths,
+//! with [`ArenaLease::detach`] as the explicit escape hatch for buffers
+//! that outlive the lease (pipeline outputs). The pipeline's step-E
+//! output buffer holds a lease; the remaining `take_*`/`give` call
+//! sites are panic-tolerant only through the service's per-job panic
+//! catch.
 //!
 //! # Examples
 //!
@@ -404,6 +410,25 @@ impl Arena {
         self.park(vec);
     }
 
+    /// RAII form of [`Arena::take_filled`]: the buffer returns to its
+    /// size class when the lease drops — on every path, including
+    /// unwinds — so the accounting stays exact even if the consumer
+    /// panics.
+    pub fn lease_filled<T: Copy + Send + 'static>(&self, len: usize, fill: T) -> ArenaLease<T> {
+        ArenaLease { buf: Some(self.take_filled(len, fill)), arena: Some(self.clone()) }
+    }
+
+    /// RAII form of [`Arena::take_copy`] (see [`Arena::lease_filled`]).
+    pub fn lease_copy<T: Copy + Send + 'static>(&self, src: &[T]) -> ArenaLease<T> {
+        ArenaLease { buf: Some(self.take_copy(src)), arena: Some(self.clone()) }
+    }
+
+    /// RAII form of [`Arena::take_stale`] (see [`Arena::lease_filled`]).
+    /// Callers must overwrite every element before reading.
+    pub fn lease_stale<T: Copy + Default + Send + 'static>(&self, len: usize) -> ArenaLease<T> {
+        ArenaLease { buf: Some(self.take_stale(len)), arena: Some(self.clone()) }
+    }
+
     /// Snapshot the counters and gauges.
     pub fn stats(&self) -> ArenaStats {
         ArenaStats {
@@ -475,6 +500,126 @@ impl ArenaHandle<'_> {
         if let ArenaHandle::Pooled(a) = self {
             a.detach(escaped);
         }
+    }
+
+    /// [`Arena::lease_filled`] through the handle; a `Fresh` lease is a
+    /// plain allocation that simply drops.
+    pub fn lease_filled<T: Copy + Send + 'static>(self, len: usize, fill: T) -> ArenaLease<T> {
+        match self {
+            ArenaHandle::Fresh => ArenaLease { buf: Some(vec![fill; len]), arena: None },
+            ArenaHandle::Pooled(a) => a.lease_filled(len, fill),
+        }
+    }
+
+    /// [`Arena::lease_copy`] through the handle (see
+    /// [`ArenaHandle::lease_filled`]).
+    pub fn lease_copy<T: Copy + Send + 'static>(self, src: &[T]) -> ArenaLease<T> {
+        match self {
+            ArenaHandle::Fresh => ArenaLease { buf: Some(src.to_vec()), arena: None },
+            ArenaHandle::Pooled(a) => a.lease_copy(src),
+        }
+    }
+
+    /// [`Arena::lease_stale`] through the handle (see
+    /// [`ArenaHandle::lease_filled`]). Callers must overwrite every
+    /// element before reading.
+    pub fn lease_stale<T: Copy + Default + Send + 'static>(self, len: usize) -> ArenaLease<T> {
+        match self {
+            ArenaHandle::Fresh => ArenaLease { buf: Some(vec![T::default(); len]), arena: None },
+            ArenaHandle::Pooled(a) => a.lease_stale(len),
+        }
+    }
+}
+
+/// An RAII lease of one arena buffer: derefs to the underlying slice,
+/// **returns the buffer to its size class on drop** — on every exit
+/// path, including panics, which keeps the arena's
+/// hit/miss/bytes-outstanding accounting exact where the raw
+/// `take_*`/`give` pairs would strand a lease on unwind — and escapes
+/// via [`ArenaLease::detach`] when the buffer must outlive the lease
+/// (e.g. a pipeline output embedded in a returned grid).
+///
+/// The lease deliberately exposes only slice access (no `Vec` growth or
+/// shrink): the give-back accounting is keyed on the leased length, so
+/// resizing under a lease would corrupt the gauges.
+///
+/// # Examples
+///
+/// ```
+/// use qai::util::arena::Arena;
+///
+/// let arena = Arena::new();
+/// {
+///     let mut lease = arena.lease_filled(64, 0.0f32);
+///     lease[0] = 1.5;
+/// } // drop: buffer parked back in its class
+/// assert_eq!(arena.stats().bytes_outstanding, 0);
+/// assert_eq!(arena.stats().returns, 1);
+/// let kept = arena.lease_filled(64, 0.0f32).detach(); // hit + escape
+/// assert_eq!(kept.len(), 64);
+/// assert_eq!(arena.stats().hits, 1);
+/// assert_eq!(arena.stats().bytes_outstanding, 0);
+/// ```
+pub struct ArenaLease<T: Copy + Send + 'static> {
+    /// `None` only after `detach` (and transiently during drop).
+    buf: Option<Vec<T>>,
+    /// `None` for `Fresh` leases: a plain allocation, no accounting.
+    arena: Option<Arena>,
+}
+
+impl<T: Copy + Send + 'static> ArenaLease<T> {
+    /// Number of leased elements.
+    pub fn len(&self) -> usize {
+        self.buf.as_ref().map_or(0, |b| b.len())
+    }
+
+    /// True if the lease holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Keep the buffer: record the escape with the arena (clearing it
+    /// from the outstanding gauge) and hand the `Vec` to the caller.
+    /// The arena equivalent of [`Arena::detach`], as a move.
+    pub fn detach(mut self) -> Vec<T> {
+        let buf = self.buf.take().expect("lease already detached");
+        if let Some(arena) = &self.arena {
+            arena.detach(&buf);
+        }
+        buf
+    }
+}
+
+impl<T: Copy + Send + 'static> std::ops::Deref for ArenaLease<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        self.buf.as_deref().unwrap_or(&[])
+    }
+}
+
+impl<T: Copy + Send + 'static> std::ops::DerefMut for ArenaLease<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        self.buf.as_deref_mut().unwrap_or(&mut [])
+    }
+}
+
+impl<T: Copy + Send + 'static> Drop for ArenaLease<T> {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            if let Some(arena) = &self.arena {
+                arena.give(buf);
+            }
+        }
+    }
+}
+
+impl<T: Copy + Send + std::fmt::Debug + 'static> std::fmt::Debug for ArenaLease<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ArenaLease")
+            .field("len", &self.len())
+            .field("pooled", &self.arena.is_some())
+            .finish()
     }
 }
 
@@ -680,6 +825,62 @@ mod tests {
         let v: Vec<i64> = arena.take_filled(256, 1);
         assert_eq!(arena.stats().hits, 1);
         arena.give(v);
+    }
+
+    #[test]
+    fn lease_returns_on_drop_and_detach_escapes() {
+        let arena = Arena::new();
+        {
+            let mut lease = arena.lease_filled(100, 1.0f32);
+            assert_eq!(lease.len(), 100);
+            lease[10] = 2.0;
+            assert_eq!(lease[10], 2.0);
+            assert_eq!(arena.stats().bytes_outstanding, 400);
+        } // drop gives back
+        let st = arena.stats();
+        assert_eq!((st.returns, st.bytes_outstanding), (1, 0));
+        assert_eq!(st.bytes_pooled, 512, "parked at the rounded 128-element class");
+
+        let kept = arena.lease_copy(&[3.0f32; 100]).detach();
+        assert_eq!(kept, vec![3.0; 100]);
+        let st = arena.stats();
+        assert_eq!(st.hits, 1, "lease must reuse the dropped lease's buffer");
+        assert_eq!(st.detached, 1);
+        assert_eq!(st.bytes_outstanding, 0);
+    }
+
+    #[test]
+    fn lease_keeps_accounting_exact_across_panics() {
+        // The ROADMAP follow-up the lease exists for: a consumer panic
+        // must not strand the outstanding gauge (raw take/give pairs
+        // do).
+        let arena = Arena::new();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut lease = arena.lease_stale::<i64>(32);
+            lease[0] = 7;
+            panic!("consumer exploded mid-lease");
+        }));
+        assert!(result.is_err());
+        let st = arena.stats();
+        assert_eq!(st.bytes_outstanding, 0, "unwound lease must clear the gauge");
+        assert_eq!(st.returns, 1, "unwound lease must park its buffer");
+        // And the parked buffer is reusable.
+        let v = arena.lease_stale::<i64>(32);
+        assert_eq!(arena.stats().hits, 1);
+        drop(v);
+    }
+
+    #[test]
+    fn fresh_lease_is_plain_allocation() {
+        let h = ArenaHandle::Fresh;
+        let mut lease = h.lease_filled(8, 4u32);
+        lease[3] = 9;
+        assert_eq!(&lease[..], &[4, 4, 4, 9, 4, 4, 4, 4]);
+        let owned = h.lease_copy(&[1u8, 2, 3]).detach();
+        assert_eq!(owned, vec![1, 2, 3]);
+        drop(lease); // no arena: nothing to account
+        let stale: Vec<u16> = h.lease_stale(4).detach();
+        assert_eq!(stale, vec![0; 4]);
     }
 
     #[test]

@@ -1,29 +1,50 @@
-//! Persistent shared-memory thread-pool runtime.
+//! Persistent shared-memory thread-pool runtime with a **work-stealing
+//! scheduler** and **cooperative blocking**.
 //!
 //! The original parallel substrate (the retired `util::par` fork-join
 //! module) spawned fresh OS threads via `std::thread::scope` on *every*
-//! call, so one `mitigate()` run paid fork-join startup five-plus times
-//! (steps A–E) and each SZp/SZ3 block decompression paid it again. This
-//! module replaces that with a **persistent pool**: workers are spawned once
-//! (lazily, for the [`global`] pool) and then parked on a condition
-//! variable; each parallel region is published as a heap-allocated
-//! ticket that woken workers *and the calling thread* drain
-//! cooperatively through an atomic work cursor (self-scheduling — the
-//! pool-level analog of OpenMP `schedule(dynamic)` work stealing).
+//! call. Its first replacement was a persistent pool draining one
+//! global `Mutex<VecDeque>` — which fixed the spawn cost but left every
+//! sub-task of every parallel region contending on a single lock, and
+//! left blocked threads (region openers waiting for stragglers,
+//! `scope_blocking` callers, the admission scheduler) burning a thread
+//! while contributing nothing. This module is the second generation:
+//!
+//! * **Per-worker deques** — each worker owns a private LIFO deque:
+//!   it pushes and pops work at the *bottom* (newest first, cache-warm
+//!   for deep nesting), while idle workers **steal** from the *top*
+//!   (oldest first) in a randomized victim order seeded
+//!   deterministically per worker. The global **injector** queue
+//!   survives only as the FIFO entry point for external submissions
+//!   (threads that are not workers of this pool).
+//! * **Every blocked thread is a worker** — a region opener waiting for
+//!   stragglers, a [`scope_blocking`] caller waiting for its rank set,
+//!   the admission scheduler waiting for a free lane, and any thread
+//!   parked in [`ThreadPool::help_until`] all run queued tickets while
+//!   they wait. This removes the tasks-outnumber-workers deadlock class
+//!   by construction: whoever is waiting for queued work can execute
+//!   it.
+//! * **Counters, not vibes** — [`ThreadPool::counters`] exposes
+//!   `local_hits` / `injector_pops` / `steals` / `help_runs` so tests
+//!   (and the microbench) can prove that stealing and helping actually
+//!   happen, the same trick as [`os_thread_spawns`].
+//!
+//! Each parallel region is still published as a heap-allocated ticket
+//! that participants drain cooperatively through an atomic work cursor
+//! (self-scheduling — the pool-level analog of OpenMP
+//! `schedule(dynamic)`).
 //!
 //! Guarantees relied on throughout the crate:
 //!
 //! * **Drop-in semantics** — [`chunks_mut`] / [`for_range`] /
 //!   [`for_batches`] take the same `(…, threads, …)` arguments and use
-//!   the same work decomposition as the old fork-join free functions, so
-//!   outputs are bit-identical to both the fork-join implementation and
-//!   the sequential path (every call site writes disjoint data, making
+//!   the same work decomposition as the old fork-join free functions
+//!   (identical `(start, len)` chunks), so outputs are bit-identical to
+//!   both the fork-join implementation and the sequential path whatever
+//!   the execution order (every call site writes disjoint data, making
 //!   results schedule-independent). One deliberate divergence: actual
 //!   concurrency is capped at the pool's lane count — `threads` beyond
-//!   that changes only the work decomposition, not the OS-thread count
-//!   (the fork-join code really spawned `threads` threads). Outputs are
-//!   unaffected; for true oversubscription experiments size an explicit
-//!   [`ThreadPool::new`] or set `QAI_POOL_THREADS`.
+//!   that changes only the work decomposition, not the OS-thread count.
 //! * **`threads == 1` is free** — the sequential path runs inline with
 //!   zero synchronization, preserving profiling baselines and the
 //!   default `MitigationConfig` behavior exactly.
@@ -31,15 +52,17 @@
 //!   regions spawn no OS threads ([`os_thread_spawns`] exposes the
 //!   counter so tests can assert this).
 //! * **Nesting is safe** — a worker executing a task may itself open a
-//!   parallel region (the batched [`crate::mitigation::service`] does
-//!   exactly this). The opener always participates in its own region,
+//!   parallel region. The opener always participates in its own region
+//!   and *helps* with other queued work while waiting for stragglers,
 //!   so progress never depends on other workers being free.
 //!
 //! Mutually-blocking task sets (the coordinator's simulated-MPI ranks,
-//! which block in `recv` on each other) must *not* share pool lanes —
-//! that can deadlock when tasks outnumber workers. [`scope_blocking`]
-//! is the explicit escape hatch: dedicated scoped threads, counted by
-//! the same spawn counter.
+//! which block in `recv` on each other) still must not *share* pool
+//! lanes — but they may *reserve* them: [`scope_blocking`] pins each
+//! task to a currently-parked global-pool worker when capacity
+//! suffices, and spawns dedicated scoped threads only for the overflow,
+//! while the calling thread runs one task itself and then helps the
+//! pool.
 //!
 //! # Choosing a pool: [`PoolHandle`]
 //!
@@ -68,19 +91,26 @@
 //! });
 //! assert_eq!(data[10], 10);
 //! assert!(pool.regions_opened() >= 1);
+//! // Every executed ticket is counted once by claim source (help_runs
+//! // is an overlapping attribution on top — see [`PoolCounters`]).
+//! let c = pool.counters();
+//! assert!(c.local_hits + c.injector_pops + c.steals <= 1);
 //! ```
 
 #![deny(missing_docs)]
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 /// Global count of OS threads ever spawned by this module and the
-/// serving layer built on it (pool workers, [`scope_blocking`] threads,
-/// and the admission scheduler of [`crate::mitigation::service`]).
-/// Tests use it to assert that warm parallel regions spawn nothing.
+/// serving layer built on it (pool workers, [`scope_blocking`] overflow
+/// threads, and the admission scheduler of
+/// [`crate::mitigation::service`]). Tests use it to assert that warm
+/// parallel regions spawn nothing.
 static OS_THREAD_SPAWNS: AtomicUsize = AtomicUsize::new(0);
 
 /// Record one OS-thread spawn in [`os_thread_spawns`]. For runtime
@@ -95,11 +125,30 @@ pub fn os_thread_spawns() -> usize {
     OS_THREAD_SPAWNS.load(Ordering::SeqCst)
 }
 
+/// How long a parked worker or helper sleeps before re-scanning for
+/// work. Wakeups are notification-driven; the timeout is a safety net
+/// that bounds the cost of any lost wakeup to one period.
+const PARK_TIMEOUT: Duration = Duration::from_millis(20);
+
+/// How long a region opener parks on the region's own condvar between
+/// help attempts while stragglers are still inside the body.
+const REGION_WAIT_TIMEOUT: Duration = Duration::from_millis(1);
+
+thread_local! {
+    /// `(pool id, worker index)` when the current thread is a pool
+    /// worker — how region dispatch decides between the worker-local
+    /// deque and the injector.
+    static CURRENT_WORKER: Cell<Option<(u64, usize)>> = const { Cell::new(None) };
+}
+
+/// Unique ids so a worker of pool A is "external" to pool B.
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
 /// One published parallel region. Workers and the caller claim batches
 /// of the index space `0..n` through `cursor`; the caller blocks until
 /// every participant has left the body, then closes the region so late
-/// tickets (still queued behind other regions) become no-ops without
-/// ever touching the by-then-dead closure pointer.
+/// tickets (still queued behind other work) become no-ops without ever
+/// touching the by-then-dead closure pointer.
 struct Region {
     /// Type-erased `&F` living on the caller's stack; valid until the
     /// region is closed.
@@ -186,42 +235,378 @@ impl Region {
 }
 
 /// One queued unit of pool work: a ticket of a parallel region, or a
-/// detached one-shot task (the admission scheduler's job bodies). Tasks
-/// are fire-and-forget: they run exactly once on some worker, so they
-/// are only correct on pools that *have* workers — callers must fall
-/// back to inline execution on a single-lane pool (see
-/// [`ThreadPool::submit_task`]).
+/// detached one-shot task (the admission scheduler's job bodies,
+/// [`ThreadPool::spawn`]). Tasks run exactly once, on a worker or on
+/// any thread that helps while blocked; a panic inside a detached task
+/// is swallowed (region-body panics, by contrast, propagate to the
+/// region opener).
 enum Ticket {
     Region(Arc<Region>),
     Task(Box<dyn FnOnce() + Send>),
 }
 
-/// Shared worker state: a FIFO of tickets plus shutdown flag.
-struct Injector {
-    queue: Mutex<VecDeque<Ticket>>,
-    ready: Condvar,
-    shutdown: AtomicBool,
+/// What a claim is allowed to take (see [`PoolShared::next_ticket`]).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Claim {
+    /// Anything: regions and whole detached tasks. Workers and the
+    /// explicit lending loop ([`ThreadPool::help_until`]) use this.
+    Any,
+    /// Region tickets only — bounded slices of already-running
+    /// parallel work. Waits that must stay responsive to their own
+    /// wake condition (the region-close wait, the admission
+    /// scheduler's lane wait, [`scope_blocking`]'s completion wait)
+    /// use this so they cannot vanish into a whole foreign job.
+    RegionsOnly,
 }
 
-fn worker_loop(injector: Arc<Injector>) {
-    loop {
-        let ticket = {
-            let mut q = injector.queue.lock().unwrap();
-            loop {
-                if injector.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Some(t) = q.pop_front() {
-                    break t;
-                }
-                q = injector.ready.wait(q).unwrap();
-            }
-        };
-        match ticket {
-            Ticket::Region(region) => region.run_ticket(),
-            Ticket::Task(task) => task(),
+/// A blocking task pinned to one reserved worker by [`scope_blocking`]:
+/// a type-erased pointer into the caller's stack plus its trampoline.
+/// The caller blocks until every pinned task has signalled completion,
+/// which keeps the referent alive for the worker.
+struct PinnedTask {
+    ctx: *mut (),
+    run: unsafe fn(*mut ()),
+}
+
+// SAFETY: the referent outlives the task by the scope_blocking
+// completion protocol (the caller waits on `remaining` before
+// returning).
+unsafe impl Send for PinnedTask {}
+
+/// Per-worker shared state: the local LIFO deque (owner pushes/pops at
+/// the back, thieves steal from the front) and the reservation slot for
+/// one pinned blocking task.
+struct WorkerShared {
+    deque: Mutex<VecDeque<Ticket>>,
+    pinned: Mutex<Option<PinnedTask>>,
+}
+
+/// The injector: FIFO entry queue for external submissions, plus the
+/// park bookkeeping. `parked[i]` is set/cleared only while holding this
+/// mutex, so anyone holding it observes exactly which workers are
+/// quiescent inside the condvar wait — the property worker reservation
+/// ([`scope_blocking`]) relies on.
+struct InjectorInner {
+    queue: VecDeque<Ticket>,
+    parked: Vec<bool>,
+}
+
+/// State shared by the pool handle, its workers, and any
+/// [`PoolHelper`]s (which may outlive the pool handle itself).
+struct PoolShared {
+    id: u64,
+    injector: Mutex<InjectorInner>,
+    /// Wakes parked workers and helpers: ticket pushed anywhere, pinned
+    /// task placed, pinned task finished, shutdown.
+    ready: Condvar,
+    shutdown: AtomicBool,
+    workers: Vec<WorkerShared>,
+    /// Round-robin cursor for routing detached tasks onto worker
+    /// deques.
+    next_task_worker: AtomicUsize,
+    /// Threads parked on `ready` that can only claim region tickets
+    /// ([`scope_blocking`]'s completion wait). While any exist, a
+    /// single-ticket task publication must wake the whole herd — a
+    /// `notify_one` could land on a waiter that cannot run the task,
+    /// delaying it by a full park timeout while workers sleep.
+    regions_only_waiters: AtomicUsize,
+    // Scheduler counters (see [`PoolCounters`]).
+    local_hits: AtomicU64,
+    injector_pops: AtomicU64,
+    steals: AtomicU64,
+    help_runs: AtomicU64,
+}
+
+/// Cheap xorshift64* step for randomized steal order. Deterministic per
+/// seed; each worker derives its seed from its index.
+fn xorshift(state: &mut u64) -> u64 {
+    let mut x = *state;
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    *state = x;
+    x
+}
+
+fn steal_seed(tag: u64) -> u64 {
+    // SplitMix-style spread; never zero (xorshift's fixed point).
+    (tag.wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1
+}
+
+impl PoolShared {
+    /// The worker index of the current thread *on this pool*, or `None`
+    /// for external threads (including workers of other pools).
+    fn current_worker(&self) -> Option<usize> {
+        CURRENT_WORKER.with(|c| match c.get() {
+            Some((pool, w)) if pool == self.id => Some(w),
+            _ => None,
+        })
+    }
+
+    /// Synchronize with parked threads, then wake them all. Taking and
+    /// releasing the injector mutex guarantees that any thread that
+    /// checked for work before our publication is already inside the
+    /// condvar wait (and so receives the notification) — the standard
+    /// no-lost-wakeup handshake.
+    fn notify_all_sync(&self) {
+        drop(self.injector.lock().unwrap());
+        self.ready.notify_all();
+    }
+
+    /// The single-ticket form of [`PoolShared::notify_all_sync`]: one
+    /// woken thread suffices for one published ticket (any parked
+    /// worker can reach it through the steal sweep), and waking the
+    /// whole herd for every dispatched job is O(workers²) mutex churn.
+    /// Two cases still need the herd: a registered regions-only waiter
+    /// could swallow the single wakeup without being able to claim a
+    /// task, and a woken helper whose done-flag just flipped exits
+    /// without claiming — the first is detected and handled here, the
+    /// second is rare and bounded by the park timeout.
+    fn notify_one_sync(&self) {
+        drop(self.injector.lock().unwrap());
+        if self.regions_only_waiters.load(Ordering::SeqCst) > 0 {
+            self.ready.notify_all();
+        } else {
+            self.ready.notify_one();
         }
     }
+
+    /// Publish a ticket on the injector (external submissions).
+    fn push_injector(&self, ticket: Ticket) {
+        self.injector.lock().unwrap().queue.push_back(ticket);
+        self.ready.notify_all();
+    }
+
+    /// Publish a detached task: round-robin onto a worker deque (the
+    /// owner runs it LIFO, anyone else can steal it FIFO), or the
+    /// injector on a worker-less pool (where only helpers can run it).
+    fn push_task(&self, ticket: Ticket) {
+        if self.workers.is_empty() {
+            self.push_injector(ticket);
+        } else {
+            let w = self.next_task_worker.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+            self.workers[w].deque.lock().unwrap().push_back(ticket);
+            self.notify_one_sync();
+        }
+    }
+
+    /// Claim the next runnable ticket for the current thread: own deque
+    /// bottom (workers only), then injector front, then steal from a
+    /// randomized victim order. Updates the matching counter.
+    ///
+    /// With `Claim::RegionsOnly`, detached one-shot tasks are left in
+    /// place and only region tickets (bounded slices of already-running
+    /// parallel work) are claimed — the policy for waiters that must
+    /// stay responsive to their own wake condition (the region-close
+    /// wait, the admission scheduler's lane wait), which must not
+    /// disappear into a whole foreign job.
+    fn next_ticket(&self, me: Option<usize>, rng: &mut u64, claim: Claim) -> Option<Ticket> {
+        let allowed = |t: Option<&Ticket>| match t {
+            None => false,
+            Some(Ticket::Region(_)) => true,
+            Some(Ticket::Task(_)) => claim == Claim::Any,
+        };
+        if let Some(w) = me {
+            let mut dq = self.workers[w].deque.lock().unwrap();
+            if allowed(dq.back()) {
+                let t = dq.pop_back();
+                drop(dq);
+                self.local_hits.fetch_add(1, Ordering::Relaxed);
+                return t;
+            }
+        }
+        {
+            let mut inner = self.injector.lock().unwrap();
+            if allowed(inner.queue.front()) {
+                let t = inner.queue.pop_front();
+                drop(inner);
+                self.injector_pops.fetch_add(1, Ordering::Relaxed);
+                return t;
+            }
+        }
+        let n = self.workers.len();
+        if n == 0 {
+            return None;
+        }
+        let start = (xorshift(rng) % n as u64) as usize;
+        for k in 0..n {
+            let victim = (start + k) % n;
+            if Some(victim) == me {
+                continue;
+            }
+            let mut dq = self.workers[victim].deque.lock().unwrap();
+            if allowed(dq.front()) {
+                let t = dq.pop_front();
+                drop(dq);
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return t;
+            }
+        }
+        None
+    }
+
+    /// Execute one claimed ticket. Detached-task panics are swallowed
+    /// here (the admission layer catches its own job panics; ad-hoc
+    /// [`ThreadPool::spawn`] tasks must not unwind into an unrelated
+    /// helper's stack or kill a worker).
+    fn run_ticket(&self, ticket: Ticket) {
+        match ticket {
+            Ticket::Region(region) => region.run_ticket(),
+            Ticket::Task(task) => {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+            }
+        }
+    }
+
+    /// Whether any deque or pinned slot holds work (park re-check).
+    fn has_visible_work(&self, me: Option<usize>) -> bool {
+        if let Some(w) = me {
+            if self.workers[w].pinned.lock().unwrap().is_some() {
+                return true;
+            }
+        }
+        self.workers.iter().any(|w| !w.deque.lock().unwrap().is_empty())
+    }
+
+    /// Claim one currently-parked worker for a pinned blocking task.
+    /// Holding the injector mutex, `parked[i] == true` proves worker
+    /// `i` is quiescent inside the condvar wait, so the pinned slot is
+    /// guaranteed to be the next thing it runs — a dedicated thread for
+    /// the blocking task, with no circular-wait risk (a parked worker
+    /// is, by definition, waiting on nothing).
+    fn try_pin(&self, task: PinnedTask) -> bool {
+        let inner = self.injector.lock().unwrap();
+        if self.shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        for i in 0..inner.parked.len() {
+            if !inner.parked[i] {
+                continue;
+            }
+            let mut slot = self.workers[i].pinned.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(task);
+                drop(slot);
+                drop(inner);
+                self.ready.notify_all();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Claim and run one ticket under `claim` as a **help step**;
+    /// returns whether one ran (always `false` after shutdown — a
+    /// stale ticket is never started). The single body behind every
+    /// help path — `help_while`, `help_one`, the region-close wait,
+    /// and [`scope_blocking`]'s completion wait — so the shutdown
+    /// check, claim policy, and counter accounting live in exactly
+    /// one audited place. Note the `help_runs` increment *overlaps*
+    /// the source counter `next_ticket` already bumped for the claim.
+    fn try_help_step(&self, rng: &mut u64, claim: Claim) -> bool {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return false;
+        }
+        match self.next_ticket(self.current_worker(), rng, claim) {
+            Some(t) => {
+                self.help_runs.fetch_add(1, Ordering::Relaxed);
+                self.run_ticket(t);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run queued tickets until `done()` holds. Used by every blocked
+    /// thread — this is what makes waiters workers. Returns early if
+    /// the pool shuts down (without ever starting a stale ticket).
+    fn help_while(&self, seed: u64, done: impl Fn() -> bool) {
+        let mut rng = steal_seed(seed);
+        loop {
+            if done() || self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if self.try_help_step(&mut rng, Claim::Any) {
+                continue;
+            }
+            let inner = self.injector.lock().unwrap();
+            if done() || self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            if inner.queue.is_empty() && !self.has_visible_work(self.current_worker()) {
+                drop(self.ready.wait_timeout(inner, PARK_TIMEOUT).unwrap());
+            }
+        }
+    }
+
+    /// One regions-only help step (see [`ThreadPool::try_help_one`]):
+    /// the shared body behind both the pool handle's and the
+    /// [`PoolHelper`]'s `try_help_one`.
+    fn help_one(&self, seed: u64) -> bool {
+        let mut rng = steal_seed(seed);
+        self.try_help_step(&mut rng, Claim::RegionsOnly)
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, me: usize) {
+    CURRENT_WORKER.with(|c| c.set(Some((shared.id, me))));
+    let mut rng = steal_seed(me as u64);
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // A pinned blocking task always runs first: the reservation
+        // protocol promised its owner a dedicated thread.
+        let pinned = shared.workers[me].pinned.lock().unwrap().take();
+        if let Some(p) = pinned {
+            // SAFETY: the reserving scope_blocking caller keeps `ctx`
+            // alive until the trampoline signals completion.
+            unsafe { (p.run)(p.ctx) };
+            continue;
+        }
+        if let Some(t) = shared.next_ticket(Some(me), &mut rng, Claim::Any) {
+            shared.run_ticket(t);
+            continue;
+        }
+        // Park: re-check everything under the injector mutex so a
+        // concurrent publisher either sees us pre-wait (we spot the
+        // work) or post-wait (we get the notification).
+        let mut inner = shared.injector.lock().unwrap();
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if !inner.queue.is_empty() || shared.has_visible_work(Some(me)) {
+            continue;
+        }
+        inner.parked[me] = true;
+        let (mut inner, _) = shared.ready.wait_timeout(inner, PARK_TIMEOUT).unwrap();
+        inner.parked[me] = false;
+    }
+}
+
+/// Point-in-time snapshot of a pool's scheduler counters — monotonic
+/// totals since the pool was built. They prove behavior the exactness
+/// tests cannot see: `steals > 0` means the deques really shed load,
+/// `help_runs > 0` means blocked threads really executed queued work.
+///
+/// Accounting: every executed ticket is counted **exactly once** by
+/// claim source (`local_hits` + `injector_pops` + `steals` is the
+/// total executed), and `help_runs` is an **overlapping** attribution
+/// — a ticket claimed by a blocked thread increments both its source
+/// counter and `help_runs` — so do not add it into a ticket total.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolCounters {
+    /// Tickets a worker popped from its own deque (LIFO locality hits).
+    pub local_hits: u64,
+    /// Tickets taken from the global injector queue.
+    pub injector_pops: u64,
+    /// Tickets stolen from another worker's deque.
+    pub steals: u64,
+    /// Tickets executed by a *blocked* thread (a region opener waiting
+    /// for stragglers, a [`scope_blocking`] caller, the admission
+    /// scheduler, or an explicit [`ThreadPool::help_until`] loop).
+    /// Overlaps the three source counters above.
+    pub help_runs: u64,
 }
 
 /// A persistent worker pool sized for `lanes`-way parallelism (the
@@ -229,7 +614,7 @@ fn worker_loop(injector: Arc<Injector>) {
 /// workers are spawned). [`ThreadPool::new`] exists for explicit sizing
 /// — e.g. the Fig. 8 thread sweep — while most code uses [`global`].
 pub struct ThreadPool {
-    injector: Arc<Injector>,
+    shared: Arc<PoolShared>,
     lanes: usize,
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Parallel regions ever opened on this pool (see
@@ -242,22 +627,39 @@ impl ThreadPool {
     /// `lanes - 1` persistent workers immediately.
     pub fn new(lanes: usize) -> Self {
         let lanes = lanes.max(1);
-        let injector = Arc::new(Injector {
-            queue: Mutex::new(VecDeque::new()),
+        let n_workers = lanes - 1;
+        let shared = Arc::new(PoolShared {
+            id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+            injector: Mutex::new(InjectorInner {
+                queue: VecDeque::new(),
+                parked: vec![false; n_workers],
+            }),
             ready: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            workers: (0..n_workers)
+                .map(|_| WorkerShared {
+                    deque: Mutex::new(VecDeque::new()),
+                    pinned: Mutex::new(None),
+                })
+                .collect(),
+            next_task_worker: AtomicUsize::new(0),
+            regions_only_waiters: AtomicUsize::new(0),
+            local_hits: AtomicU64::new(0),
+            injector_pops: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            help_runs: AtomicU64::new(0),
         });
-        let handles = (0..lanes - 1)
+        let handles = (0..n_workers)
             .map(|w| {
                 OS_THREAD_SPAWNS.fetch_add(1, Ordering::SeqCst);
-                let inj = injector.clone();
+                let sh = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("qai-pool-{w}"))
-                    .spawn(move || worker_loop(inj))
+                    .spawn(move || worker_loop(sh, w))
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { injector, lanes, handles, regions: AtomicUsize::new(0) }
+        ThreadPool { shared, lanes, handles, regions: AtomicUsize::new(0) }
     }
 
     /// Maximum useful parallelism of this pool (workers + caller).
@@ -278,23 +680,64 @@ impl ThreadPool {
         self.regions.load(Ordering::SeqCst)
     }
 
-    /// Enqueue a detached one-shot task for some worker to run.
-    ///
-    /// Unlike regions, nobody participates on the caller's thread and
-    /// nobody waits: on a pool with zero workers the task would never
-    /// run, so callers (the admission scheduler) must check
-    /// [`ThreadPool::workers`] and execute inline when it is zero.
+    /// Snapshot of the scheduler counters.
+    pub fn counters(&self) -> PoolCounters {
+        PoolCounters {
+            local_hits: self.shared.local_hits.load(Ordering::Relaxed),
+            injector_pops: self.shared.injector_pops.load(Ordering::Relaxed),
+            steals: self.shared.steals.load(Ordering::Relaxed),
+            help_runs: self.shared.help_runs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// A [`PoolHelper`] — a handle on the pool's scheduler state that
+    /// can lend this (or any) thread to the pool and that remains valid
+    /// after the pool is dropped (its methods then return immediately).
+    pub fn helper(&self) -> PoolHelper {
+        PoolHelper { shared: self.shared.clone() }
+    }
+
+    /// Enqueue a detached one-shot task. It runs exactly once — on a
+    /// worker, or on any thread helping while blocked. On a pool with
+    /// zero workers the task waits until somebody helps (the admission
+    /// scheduler therefore still runs its jobs inline on single-lane
+    /// pools). A panicking task is swallowed, not propagated.
+    pub fn spawn(&self, task: impl FnOnce() + Send + 'static) {
+        self.submit_task(Box::new(task));
+    }
+
+    /// Run queued tickets until `done` is true (or the pool shuts
+    /// down — shutdown never starts another ticket). This is the
+    /// cooperative-blocking entry point for code that waits on
+    /// something the pool itself will eventually produce: instead of
+    /// burning a thread, lend it.
+    pub fn help_until(&self, done: &AtomicBool) {
+        self.shared.help_while(self.shared.id, || done.load(Ordering::SeqCst));
+    }
+
+    /// Claim and run a single queued **region** ticket — a bounded
+    /// slice of already-running parallel work — if one is available
+    /// right now; returns whether one ran. Counted as a help run.
+    /// Deliberately never claims a whole detached task: this is for
+    /// waiters that must stay responsive to their own wake condition
+    /// (the admission scheduler's lane wait) and cannot afford to
+    /// disappear into a foreign job. To lend a thread fully, use
+    /// [`ThreadPool::help_until`].
+    pub fn try_help_one(&self) -> bool {
+        self.shared.help_one(self.shared.next_task_worker.load(Ordering::Relaxed) as u64)
+    }
+
+    /// Enqueue a detached one-shot task (boxed form; see
+    /// [`ThreadPool::spawn`]).
     pub(crate) fn submit_task(&self, task: Box<dyn FnOnce() + Send>) {
-        debug_assert!(self.workers() > 0, "detached task on a worker-less pool never runs");
-        let mut q = self.injector.queue.lock().unwrap();
-        q.push_back(Ticket::Task(task));
-        drop(q);
-        self.injector.ready.notify_one();
+        self.shared.push_task(Ticket::Task(task));
     }
 
     /// Publish a region over `0..n` with the given `grain`, offer up to
-    /// `extra` tickets to the workers, participate, and block until the
-    /// region quiesces. Re-raises the first panic from the body.
+    /// `extra` tickets (on the opener's own deque when the opener is a
+    /// worker of this pool, on the injector otherwise), participate,
+    /// and help with other queued work until the region quiesces.
+    /// Re-raises the first panic from the body.
     fn dispatch<F>(&self, n: usize, grain: usize, extra: usize, body: &F)
     where
         F: Fn(usize, usize) + Sync,
@@ -315,27 +758,72 @@ impl ThreadPool {
         });
         let extra = extra.min(self.lanes.saturating_sub(1));
         if extra > 0 {
-            let mut q = self.injector.queue.lock().unwrap();
-            for _ in 0..extra {
-                q.push_back(Ticket::Region(region.clone()));
+            match self.shared.current_worker() {
+                Some(me) => {
+                    // Worker-local publication: newest work at the
+                    // bottom of our own deque (LIFO locality for deep
+                    // nesting); idle workers steal from the top.
+                    let mut dq = self.shared.workers[me].deque.lock().unwrap();
+                    for _ in 0..extra {
+                        dq.push_back(Ticket::Region(region.clone()));
+                    }
+                    drop(dq);
+                    self.shared.notify_all_sync();
+                }
+                None => {
+                    let mut inner = self.shared.injector.lock().unwrap();
+                    for _ in 0..extra {
+                        inner.queue.push_back(Ticket::Region(region.clone()));
+                    }
+                    drop(inner);
+                    self.shared.ready.notify_all();
+                }
             }
-            drop(q);
-            self.injector.ready.notify_all();
         }
 
-        // The caller is always a participant: even with every worker
+        // The opener is always a participant: even with every worker
         // busy (or zero workers), the region completes.
         region.drain();
-
-        let mut st = region.state.lock().unwrap();
-        while st.in_flight > 0 {
-            st = region.done.wait(st).unwrap();
-        }
-        st.closed = true;
-        drop(st);
+        self.wait_region_close(&region);
 
         if let Some(payload) = region.panic_payload.lock().unwrap().take() {
             std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Wait for every straggler to leave the region body, **helping**
+    /// with other queued region tickets meanwhile (never whole detached
+    /// tasks: the opener must return promptly when its region closes,
+    /// and must not inflate an unrelated job's measured latency by
+    /// running it mid-wait), then close the region. Helping stops at
+    /// shutdown (no stale ticket is ever started), but the close still
+    /// waits for stragglers — they are live threads that will finish
+    /// their batches.
+    fn wait_region_close(&self, region: &Region) {
+        let mut rng = steal_seed(self.shared.id ^ 0x5bd1_e995);
+        // Escalating backoff: re-scan for helpable tickets quickly at
+        // first, but once a scan comes up empty fall back to the long
+        // park period — the straggler's exit notifies `done` directly,
+        // so a slow region never polls at 1 kHz just to discover,
+        // repeatedly, that there is nothing to help with.
+        let mut idle_wait = REGION_WAIT_TIMEOUT;
+        loop {
+            {
+                let mut st = region.state.lock().unwrap();
+                if st.in_flight == 0 {
+                    st.closed = true;
+                    return;
+                }
+            }
+            if self.shared.try_help_step(&mut rng, Claim::RegionsOnly) {
+                idle_wait = REGION_WAIT_TIMEOUT;
+                continue;
+            }
+            let st = region.state.lock().unwrap();
+            if st.in_flight > 0 {
+                drop(region.done.wait_timeout(st, idle_wait).unwrap());
+                idle_wait = PARK_TIMEOUT;
+            }
         }
     }
 
@@ -410,14 +898,55 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.injector.shutdown.store(true, Ordering::SeqCst);
-        // Take the queue lock so no worker is between the shutdown
-        // check and the wait when we notify.
-        drop(self.injector.queue.lock().unwrap());
-        self.injector.ready.notify_all();
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Synchronize with parked threads so none is between its
+        // shutdown check and the wait when we notify; then wake
+        // everyone. Workers exit before starting any further ticket;
+        // external helpers ([`PoolHelper`]) observe the flag and return
+        // without running anything stale.
+        self.shared.notify_all_sync();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+    }
+}
+
+/// A handle on a pool's scheduler that lends the calling thread to the
+/// pool. Unlike `&ThreadPool`, a helper may outlive the pool: once the
+/// pool is dropped, every method returns immediately without running a
+/// stale ticket (the shutdown-drain contract the scheduler tests pin).
+#[derive(Clone)]
+pub struct PoolHelper {
+    shared: Arc<PoolShared>,
+}
+
+impl PoolHelper {
+    /// Run queued tickets until `done` is true or the pool shuts down
+    /// (see [`ThreadPool::help_until`]).
+    pub fn help_until(&self, done: &AtomicBool) {
+        self.shared.help_while(self.shared.id ^ 0x1234_5678, || done.load(Ordering::SeqCst));
+    }
+
+    /// Enqueue a detached one-shot task (see [`ThreadPool::spawn`]).
+    /// No-op after the pool has shut down.
+    pub fn spawn(&self, task: impl FnOnce() + Send + 'static) {
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        self.shared.push_task(Ticket::Task(Box::new(task)));
+    }
+
+    /// Claim and run a single queued region ticket if one is available
+    /// (see [`ThreadPool::try_help_one`]; never a whole detached
+    /// task). Always `false` after shutdown.
+    pub fn try_help_one(&self) -> bool {
+        self.shared.help_one(self.shared.help_runs.load(Ordering::Relaxed))
+    }
+}
+
+impl std::fmt::Debug for PoolHelper {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolHelper").field("pool_id", &self.shared.id).finish()
     }
 }
 
@@ -619,30 +1148,182 @@ impl<'a, T> UnsafeSlice<'a, T> {
     }
 }
 
-/// Run a set of **mutually-blocking** tasks to completion, one
-/// dedicated scoped thread each (single tasks run inline). This exists
-/// for the coordinator's simulated-MPI ranks, which block in `recv` on
-/// one another: multiplexing such tasks onto a bounded worker set can
-/// deadlock, so they must not share pool lanes. Spawns are counted by
-/// [`os_thread_spawns`].
+/// Per-task shared cell of one [`scope_blocking`] run, referenced by
+/// pinned workers through a type-erased pointer. `remaining` and
+/// `shared` are raw because the trampoline erases lifetimes; the caller
+/// keeps both alive until every pinned task has decremented
+/// `remaining`.
+struct PinCtx<T, F> {
+    task: Mutex<Option<F>>,
+    out: Mutex<Option<std::thread::Result<T>>>,
+    remaining: *const AtomicUsize,
+    shared: *const PoolShared,
+}
+
+// SAFETY: all interior access is mutex-guarded; the raw pointers are
+// only dereferenced while the scope_blocking caller (which owns the
+// referents) is still blocked in its completion wait.
+unsafe impl<T: Send, F: Send> Send for PinCtx<T, F> {}
+unsafe impl<T: Send, F: Send> Sync for PinCtx<T, F> {}
+
+/// Trampoline a reserved worker runs for one pinned blocking task.
+unsafe fn run_pinned<T, F: FnOnce() -> T>(ctx: *mut ()) {
+    let c = &*(ctx as *const PinCtx<T, F>);
+    // Copy the raw pointers out first: the decrement below is the
+    // caller's license to free the ctx, so `c` must not be touched
+    // after it. The pool shared state outlives everything (the global
+    // pool is never dropped), and the caller cannot free `remaining`
+    // until it has observed the decremented value.
+    let remaining = c.remaining;
+    let shared = c.shared;
+    let f = c.task.lock().unwrap().take().expect("pinned task already taken");
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    *c.out.lock().unwrap() = Some(result);
+    // Order matters: decrement after the result is stored, notify after
+    // the decrement, so the caller's wake-up check observes completion.
+    (*remaining).fetch_sub(1, Ordering::SeqCst);
+    (*shared).notify_all_sync();
+}
+
+/// Run a set of **mutually-blocking** tasks to completion, each on a
+/// thread it does not share with any other task (single tasks run
+/// inline). This exists for the coordinator's simulated-MPI ranks,
+/// which block in `recv` on one another: multiplexing such tasks onto
+/// shared lanes can deadlock, so each needs a dedicated thread for its
+/// whole lifetime.
+///
+/// Cooperative version: instead of spawning one scoped OS thread per
+/// task, the runtime **reserves currently-parked global-pool workers**
+/// (a parked worker is waiting on nothing, so dedicating it is
+/// deadlock-free) and pins one task to each; only the overflow beyond
+/// the reserved capacity gets scoped threads (counted by
+/// [`os_thread_spawns`]). The calling thread runs the first task
+/// itself, then **helps the pool** with queued region tickets (the
+/// ranks' own internal parallel regions, typically — never a whole
+/// foreign detached job, which would delay the return long after the
+/// last rank finished) while the pinned ranks drain. The first
+/// panicking task's payload is re-raised after all tasks complete.
+///
+/// Trade-off: a pinned worker is unavailable for stealing while its
+/// task runs, so a rank set that saturates the pool also consumes the
+/// workers that would otherwise execute the ranks' *internal* parallel
+/// regions — with `tasks ≈ lanes` and intra-task `threads > 1`, those
+/// regions degrade toward each opener running its own chunks (every
+/// opener always participates, so nothing stalls). The coordinator's
+/// paper configuration (`threads_per_rank = 1`) is unaffected; size
+/// the global pool above the rank count if you need both.
 pub fn scope_blocking<'env, T, F>(tasks: Vec<F>) -> Vec<T>
 where
     T: Send + 'env,
     F: FnOnce() -> T + Send + 'env,
 {
-    if tasks.len() <= 1 {
+    let n = tasks.len();
+    if n <= 1 {
         return tasks.into_iter().map(|t| t()).collect();
     }
+    let pool = global();
+    let shared: &PoolShared = &pool.shared;
+    let pinned_left = AtomicUsize::new(0);
+    let ctxs: Vec<PinCtx<T, F>> = tasks
+        .into_iter()
+        .map(|f| PinCtx {
+            task: Mutex::new(Some(f)),
+            out: Mutex::new(None),
+            remaining: &pinned_left as *const AtomicUsize,
+            shared: shared as *const PoolShared,
+        })
+        .collect();
+
+    // Reserve a parked worker for each task beyond the caller's own;
+    // tasks that cannot be pinned fall back to scoped threads.
+    let mut scoped: Vec<usize> = Vec::new();
+    for (i, ctx) in ctxs.iter().enumerate().skip(1) {
+        // Count before pinning: the pinned task may finish (and
+        // decrement) before fetch_add would otherwise run.
+        pinned_left.fetch_add(1, Ordering::SeqCst);
+        let task = PinnedTask {
+            ctx: ctx as *const PinCtx<T, F> as *mut (),
+            run: run_pinned::<T, F>,
+        };
+        if !shared.try_pin(task) {
+            pinned_left.fetch_sub(1, Ordering::SeqCst);
+            scoped.push(i);
+        }
+    }
+
     std::thread::scope(|s| {
-        let handles: Vec<_> = tasks
-            .into_iter()
-            .map(|t| {
+        let handles: Vec<_> = scoped
+            .iter()
+            .map(|&i| {
                 OS_THREAD_SPAWNS.fetch_add(1, Ordering::SeqCst);
-                s.spawn(t)
+                let ctx = &ctxs[i];
+                s.spawn(move || {
+                    let f = ctx.task.lock().unwrap().take().expect("scoped task already taken");
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                    *ctx.out.lock().unwrap() = Some(result);
+                })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("blocking task panicked")).collect()
-    })
+
+        // The caller is a rank too: run the first task inline.
+        {
+            let f = ctxs[0].task.lock().unwrap().take().expect("caller task already taken");
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            *ctxs[0].out.lock().unwrap() = Some(result);
+        }
+
+        // Every blocked thread is a worker: help the pool while the
+        // pinned ranks finish — with region tickets only, so the last
+        // rank completing never finds this caller buried in a whole
+        // foreign job (the measured distributed wall-clock would
+        // inflate by that job's duration otherwise). Registering as a
+        // regions-only waiter makes single-task publications wake the
+        // whole herd while we park (a lone `notify_one` aimed at a
+        // worker could land here instead and be swallowed). This wait
+        // must not return early (the pinned trampolines dereference
+        // `ctxs`), so it outlasts even a shutdown — which cannot
+        // happen on the never-dropped global pool, but the loop is
+        // written to survive it anyway.
+        let mut rng = steal_seed(shared.id ^ 0x7343_11c3);
+        shared.regions_only_waiters.fetch_add(1, Ordering::SeqCst);
+        // Same escalating backoff as the region-close wait: pinned
+        // completions notify `ready` directly, so long park periods
+        // cost no completion latency.
+        let mut idle_wait = REGION_WAIT_TIMEOUT;
+        while pinned_left.load(Ordering::SeqCst) > 0 {
+            if shared.try_help_step(&mut rng, Claim::RegionsOnly) {
+                idle_wait = REGION_WAIT_TIMEOUT;
+                continue;
+            }
+            let inner = shared.injector.lock().unwrap();
+            if pinned_left.load(Ordering::SeqCst) > 0 {
+                drop(shared.ready.wait_timeout(inner, idle_wait).unwrap());
+                idle_wait = PARK_TIMEOUT;
+            }
+        }
+        shared.regions_only_waiters.fetch_sub(1, Ordering::SeqCst);
+
+        for h in handles {
+            let _ = h.join();
+        }
+    });
+
+    let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+    let mut outs = Vec::with_capacity(n);
+    for c in ctxs {
+        match c.out.into_inner().unwrap().expect("blocking task never produced a result") {
+            Ok(v) => outs.push(v),
+            Err(p) => {
+                if first_panic.is_none() {
+                    first_panic = Some(p);
+                }
+            }
+        }
+    }
+    if let Some(p) = first_panic {
+        std::panic::resume_unwind(p);
+    }
+    outs
 }
 
 /// The spawn counter is process-global, so unit tests anywhere in the
@@ -837,6 +1518,22 @@ mod tests {
     }
 
     #[test]
+    fn scope_blocking_propagates_task_panics() {
+        let _g = test_guard();
+        let result = std::panic::catch_unwind(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("rank exploded")),
+                Box::new(|| 3),
+            ];
+            scope_blocking(tasks)
+        });
+        let payload = result.expect_err("rank panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("rank exploded"), "msg={msg}");
+    }
+
+    #[test]
     fn explicit_pool_drop_joins_workers() {
         let _g = test_guard();
         let before = os_thread_spawns();
@@ -851,11 +1548,11 @@ mod tests {
     fn scope_blocking_rank_set_larger_than_pool_size() {
         let _g = test_guard();
         // Regression (coordinator path): mutually-blocking rank sets
-        // must get one dedicated thread each, never pool lanes — with
-        // more ranks than any pool has lanes, multiplexing onto a
-        // bounded worker set would deadlock. The barrier forces every
-        // rank to be alive at the same instant, so this hangs (and the
-        // harness times out) if ranks ever share threads.
+        // must each get a thread they share with no other rank — pinned
+        // pool workers or scoped threads, never multiplexed lanes. The
+        // barrier forces every rank to be alive at the same instant, so
+        // this hangs (and the harness times out) if ranks ever share
+        // threads.
         let pool = ThreadPool::new(2); // deliberately smaller than the rank set
         assert!(pool.lanes() < 12);
         let barrier = Arc::new(std::sync::Barrier::new(12));
@@ -877,9 +1574,9 @@ mod tests {
         let _g = test_guard();
         let pool = ThreadPool::new(2);
         let (tx, rx) = std::sync::mpsc::channel();
-        pool.submit_task(Box::new(move || {
+        pool.spawn(move || {
             tx.send(42u32).unwrap();
-        }));
+        });
         let got = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
         assert_eq!(got, 42);
     }
@@ -915,5 +1612,74 @@ mod tests {
             assert_eq!(*x, i as u32);
         }
         assert!(parallelism() >= 1);
+    }
+
+    #[test]
+    fn counters_account_for_executed_tickets() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(4);
+        let c0 = pool.counters();
+        // External dispatch publishes on the injector; a sustained
+        // region guarantees workers actually pop tickets.
+        let spin = AtomicUsize::new(0);
+        pool.for_range(4096, 4, 1, |_| {
+            spin.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(spin.load(Ordering::Relaxed), 4096);
+        let c1 = pool.counters();
+        // 3 extra tickets were published; each is claimed at most once,
+        // and each claim is counted exactly once by source (help_runs
+        // is a documented overlapping attribution, not a fourth
+        // source).
+        let executed = (c1.local_hits - c0.local_hits)
+            + (c1.injector_pops - c0.injector_pops)
+            + (c1.steals - c0.steals);
+        assert!(executed <= 3, "executed={executed}");
+        assert!(c1.help_runs - c0.help_runs <= executed, "help_runs must overlap, not add");
+    }
+
+    #[test]
+    fn help_until_returns_when_flag_set() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicBool::new(false));
+        let helper = pool.helper();
+        let d = done.clone();
+        let h = std::thread::spawn(move || helper.help_until(&d));
+        std::thread::sleep(Duration::from_millis(20));
+        done.store(true, Ordering::SeqCst);
+        h.join().expect("helper must return once the flag is set");
+    }
+
+    #[test]
+    fn helper_survives_pool_drop_without_running_stale_tickets() {
+        let _g = test_guard();
+        // A zero-worker pool with a queued detached task: after the
+        // pool drops, a helper must return immediately and must NOT run
+        // the stale ticket.
+        let pool = ThreadPool::new(1);
+        let helper = pool.helper();
+        let ran = Arc::new(AtomicBool::new(false));
+        let r = ran.clone();
+        pool.spawn(move || r.store(true, Ordering::SeqCst));
+        drop(pool);
+        let never = AtomicBool::new(false);
+        helper.help_until(&never); // must return despite the unset flag
+        assert!(!ran.load(Ordering::SeqCst), "stale ticket ran after pool shutdown");
+        assert!(!helper.try_help_one());
+    }
+
+    #[test]
+    fn parked_helper_exits_when_pool_drops() {
+        let _g = test_guard();
+        let pool = ThreadPool::new(1);
+        let helper = pool.helper();
+        let h = std::thread::spawn(move || {
+            let never = AtomicBool::new(false);
+            helper.help_until(&never);
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        drop(pool);
+        h.join().expect("parked helper must exit when the pool shuts down");
     }
 }

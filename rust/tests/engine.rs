@@ -338,6 +338,41 @@ fn engine_metrics_carry_shard_and_tenant_labels() {
 }
 
 #[test]
+fn trace_ids_follow_a_job_from_request_to_response_and_metrics() {
+    let engine = Engine::builder().shards(2).build();
+    let first = tiny_request();
+    let second = tiny_request();
+    assert!(first.trace_id() > 0);
+    assert!(
+        second.trace_id() > first.trace_id(),
+        "trace ids must be monotonically assigned ({} then {})",
+        first.trace_id(),
+        second.trace_id()
+    );
+
+    let expected = first.trace_id();
+    let ticket = engine.submit(first).unwrap();
+    assert_eq!(ticket.trace_id(), expected, "ticket must carry the request's trace id");
+    let shard = ticket.shard();
+    let response = ticket.wait().unwrap();
+    assert_eq!(response.trace_id, expected, "response must carry the request's trace id");
+
+    // The id is observable in the shard stats and the metrics lines,
+    // so a job can be followed across shard, queue, and lane.
+    assert_eq!(engine.shard_stats(shard).last_trace_id, expected);
+    assert_eq!(engine.stats().aggregate().last_trace_id, expected);
+    let text = engine.metrics_text();
+    assert!(
+        text.lines().any(|l| l.contains(&format!("last_trace={expected}"))),
+        "metrics must print the trace id: {text}"
+    );
+
+    // The synchronous queue-free path reports the id too.
+    let direct = qai::mitigation::engine::execute(&second).unwrap();
+    assert_eq!(direct.trace_id, second.trace_id());
+}
+
+#[test]
 fn submit_timeout_and_queue_full_round_trip_through_the_engine() {
     let engine = Engine::builder().shards(1).capacity(1).start_paused(true).build();
     let held = engine.try_submit(tiny_request()).unwrap();
