@@ -1,0 +1,182 @@
+//! Open-loop load harness for the serving engine's SLO layer.
+//!
+//! Unlike the closed-loop `qai serve` subcommand (which retries
+//! rejected submissions and therefore self-throttles), this harness
+//! offers jobs on a **fixed arrival schedule** regardless of how the
+//! engine keeps up — the methodology that actually reveals tail
+//! latency and shed behavior under overload. The schedule is
+//! deliberately infeasible (offered rate ≈ 1.5× the calibrated service
+//! capacity), so all three admission-control outcomes occur: queue
+//! backpressure, token-bucket quota rejections, and
+//! deadline-infeasibility sheds.
+//!
+//! Results go to stdout and to `BENCH_serve.json` (throughput, p50/p99
+//! total latency, queue-wait p99, shed breakdown) for the CI smoke
+//! check. Latency quantiles come from the same log-bucketed
+//! [`LatencyHistogram`] the engine's metrics surface uses, so a
+//! reported p99 is the bucket upper edge — a conservative bound.
+
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::engine::{self, Engine, MitigationRequest, ResponseTicket};
+use qai::mitigation::{Job, SubmitError};
+use qai::quant::{quantize_grid, ErrorBound};
+use qai::util::hist::LatencyHistogram;
+use std::time::{Duration, Instant};
+
+const DIMS: &[usize] = &[32, 32];
+const TENANTS: usize = 4;
+
+fn make_job(seed: u64) -> Job {
+    let orig = generate(DatasetKind::ClimateLike, DIMS, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    Job::new(dq, q, eb)
+}
+
+/// Median-of-several direct executions: the service-time estimate the
+/// arrival schedule and deadlines are derived from.
+fn calibrate(job: &Job) -> f64 {
+    let mut samples: Vec<f64> = (0..5)
+        .map(|_| {
+            let t0 = Instant::now();
+            engine::execute(&MitigationRequest::from_job(job.clone())).unwrap();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2].max(1e-6)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let offered_jobs: usize = if quick { 80 } else { 400 };
+    let lanes = 2usize;
+
+    // A small rotating working set: cloning a Job is an Arc bump, so
+    // the harness measures the serving layer, not ingest.
+    let inputs: Vec<Job> = (0..8).map(make_job).collect();
+    let est_s = calibrate(&inputs[0]);
+
+    // Offered rate ≈ 1.5× the engine's calibrated capacity; deadlines
+    // at 20× the service time, so early jobs meet them easily and the
+    // growing backlog pushes later ones into shedding territory.
+    let interval = Duration::from_secs_f64(est_s / (1.5 * lanes as f64));
+    let deadline = Duration::from_secs_f64(20.0 * est_s);
+
+    let engine = Engine::builder()
+        .shards(2)
+        .capacity(64)
+        .lanes_per_shard(lanes)
+        .shed(true)
+        .adaptive_lanes(true)
+        .default_quota_rate(3.0 / est_s)
+        .default_quota_burst(32)
+        .build();
+
+    let mut tickets: Vec<ResponseTicket> = Vec::with_capacity(offered_jobs);
+    let mut shed_queue = 0usize;
+    let mut shed_quota = 0usize;
+    let mut shed_infeasible = 0usize;
+    let t0 = Instant::now();
+    for i in 0..offered_jobs {
+        // Fixed schedule: job i is due at t0 + i·interval, no matter
+        // what happened to earlier jobs.
+        let due = t0 + interval * i as u32;
+        loop {
+            let now = Instant::now();
+            match due.checked_duration_since(now) {
+                Some(wait) if wait > Duration::from_micros(200) => std::thread::sleep(wait),
+                Some(_) => std::hint::spin_loop(),
+                None => break,
+            }
+        }
+        let request = MitigationRequest::from_job(inputs[i % inputs.len()].clone())
+            .tenant(format!("t{}", i % TENANTS))
+            .deadline(deadline);
+        match engine.try_submit(request) {
+            Ok(ticket) => tickets.push(ticket),
+            Err(SubmitError::QueueFull(_)) => shed_queue += 1,
+            Err(SubmitError::QuotaExceeded(_)) => shed_quota += 1,
+            Err(SubmitError::DeadlineInfeasible(_)) => shed_infeasible += 1,
+            Err(e) => panic!("unexpected submit failure: {e}"),
+        }
+    }
+
+    let mut total_hist = LatencyHistogram::new();
+    let mut wait_hist = LatencyHistogram::new();
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut deadline_misses = 0usize;
+    for ticket in tickets {
+        match ticket.wait() {
+            Ok(resp) => {
+                completed += 1;
+                total_hist.record(resp.queue_wait + resp.exec);
+                wait_hist.record(resp.queue_wait);
+                if resp.deadline_missed {
+                    deadline_misses += 1;
+                }
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let shed = shed_queue + shed_quota + shed_infeasible;
+    let shed_rate = shed as f64 / offered_jobs as f64;
+    let throughput = completed as f64 / wall_s.max(1e-12);
+    let agg = engine.stats().aggregate();
+
+    println!("serve_load: open-loop, {offered_jobs} jobs offered over {wall_s:.3}s");
+    println!(
+        "  calibrated service time {:.3} ms, interval {:.3} ms, deadline {:.1} ms",
+        est_s * 1e3,
+        interval.as_secs_f64() * 1e3,
+        deadline.as_secs_f64() * 1e3
+    );
+    println!(
+        "  completed {completed} ({throughput:.1} jobs/s), failed {failed}, \
+         shed {shed} ({:.1}% — queue {shed_queue}, quota {shed_quota}, \
+         infeasible {shed_infeasible})",
+        shed_rate * 100.0
+    );
+    println!(
+        "  latency p50 {:.3} ms, p99 {:.3} ms (queue-wait p99 {:.3} ms); \
+         deadline misses {deadline_misses} (engine counted {})",
+        total_hist.quantile_ms(0.50),
+        total_hist.quantile_ms(0.99),
+        wait_hist.quantile_ms(0.99),
+        agg.deadlines_missed
+    );
+    println!(
+        "  scheduler: wakeups {}, lanes grown {}, shrunk {}, shard sheds {}",
+        agg.sched_wakeups, agg.lanes_grown, agg.lanes_shrunk, agg.shed_infeasible
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_load\",\n  \"generator\": \"cargo bench --bench serve_load{}\",\n  \
+         \"mode\": \"open-loop\",\n  \"offered_jobs\": {},\n  \"completed\": {},\n  \
+         \"failed\": {},\n  \"wall_s\": {:.6},\n  \"throughput_jobs_per_s\": {:.3},\n  \
+         \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"wait_p99_ms\": {:.3},\n  \
+         \"shed\": {},\n  \"shed_rate\": {:.6},\n  \"shed_queue_full\": {},\n  \
+         \"shed_quota\": {},\n  \"shed_infeasible\": {},\n  \"deadline_misses\": {}\n}}\n",
+        if quick { " -- --quick" } else { "" },
+        offered_jobs,
+        completed,
+        failed,
+        wall_s,
+        throughput,
+        total_hist.quantile_ms(0.50),
+        total_hist.quantile_ms(0.99),
+        wait_hist.quantile_ms(0.99),
+        shed,
+        shed_rate,
+        shed_queue,
+        shed_quota,
+        shed_infeasible,
+        deadline_misses,
+    );
+    std::fs::write("BENCH_serve.json", &json).expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
+    println!("serve_load: OK");
+}

@@ -88,20 +88,28 @@ SUBCOMMANDS
                the shared persistent thread pool; --threads is the
                per-job pipeline parallelism)
   serve       --jobs N [--shards S] [--capacity C] [--tenants T]
-              [--quota Q] [--interactive-every K] [--deadline-ms D]
-              [--lanes L] [--metrics] [--dataset ...] [--dims AxBxC]
-              [--rel 1e-2] [--eta 0.9] [--threads N] [--seed N]
+              [--quota Q] [--quota-rate R] [--quota-burst B] [--shed]
+              [--adaptive-lanes] [--interactive-every K]
+              [--deadline-ms D] [--lanes L] [--metrics] [--dataset ...]
+              [--dims AxBxC] [--rel 1e-2] [--eta 0.9] [--threads N]
+              [--seed N]
               (stream N fields through the sharded engine: --shards
                admission-queue shards behind the tenant router,
                --tenants > 0 tags jobs round-robin with tenant ids
                t0..t{T-1}, --quota > 0 caps each tenant's in-flight
-               jobs, every K-th job is interactive-class, --capacity
-               bounds each shard's queue and exercises backpressure,
-               --deadline-ms tags jobs with a completion budget
-               (dispatched EDF within a class), --lanes > 0 gives each
-               shard a private L-lane pool, --metrics appends the
-               scrapeable per-shard/per-tenant key=value stats lines;
-               see docs/SERVING.md)
+               jobs, --quota-rate > 0 switches tenants to token-bucket
+               admission at R tokens/s (burst B, default 1; --quota
+               then only seeds the burst), --shed rejects
+               deadline-infeasible submissions at admission,
+               --adaptive-lanes lets shard schedulers grow/shrink their
+               dispatch-lane cap with load, every K-th job is
+               interactive-class, --capacity bounds each shard's queue
+               and exercises backpressure, --deadline-ms tags jobs with
+               a completion budget (dispatched EDF within a class),
+               --lanes > 0 gives each shard a private L-lane pool,
+               --metrics appends the scrapeable per-shard/per-tenant
+               key=value stats and latency-histogram lines; see
+               docs/SERVING.md)
   distributed [--dataset ...] [--dims AxBxC] [--rel 1e-2] [--ranks N]
               [--strategy embarrassing|exact|approximate] [--seed N]
   info        (PJRT platform + artifacts present)
@@ -372,6 +380,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let capacity: usize = args.get_parse("capacity", 16)?;
     let tenants_n: usize = args.get_parse("tenants", 0)?;
     let quota: u64 = args.get_parse("quota", 0)?;
+    let quota_rate: f64 = args.get_parse("quota-rate", 0.0)?;
+    let quota_burst: u64 = args.get_parse("quota-burst", 0)?;
+    let shed = args.get_bool("shed")?;
+    let adaptive = args.get_bool("adaptive-lanes")?;
     let interactive_every: usize = args.get_parse("interactive-every", 4)?;
     let deadline_ms: u64 = args.get_parse("deadline-ms", 0)?;
     let lanes: usize = args.get_parse("lanes", 0)?;
@@ -389,6 +401,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if quota > 0 {
         builder = builder.default_quota(quota);
+    }
+    if quota_rate > 0.0 {
+        builder = builder.default_quota_rate(quota_rate);
+        if quota_burst > 0 {
+            builder = builder.default_quota_burst(quota_burst);
+        }
+    }
+    if shed {
+        builder = builder.shed(true);
+    }
+    if adaptive {
+        builder = builder.adaptive_lanes(true);
     }
     let engine = builder.build();
 
@@ -421,20 +445,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // Stream the jobs in: try_submit first; on backpressure fall back
     // to a blocking submit, and on a quota rejection back off briefly
-    // and retry (counting both).
+    // and retry (counting both). A deadline-infeasible shed is final:
+    // the admission layer has proven the deadline unmeetable, so
+    // retrying the same request is pointless — drop the job.
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(jobs_n);
     let mut backpressure_hits = 0usize;
     let mut quota_hits = 0usize;
+    let mut shed_jobs = 0usize;
     for i in 0..jobs_n {
         let mut request = request_for(inputs[i].clone(), i);
         let ticket = loop {
             match engine.try_submit(request) {
-                Ok(t) => break t,
+                Ok(t) => break Some(t),
+                Err(SubmitError::DeadlineInfeasible(_)) => {
+                    shed_jobs += 1;
+                    break None;
+                }
                 Err(SubmitError::QueueFull(job)) => {
                     backpressure_hits += 1;
                     match engine.submit(request_for(job, i)) {
-                        Ok(t) => break t,
+                        Ok(t) => break Some(t),
+                        Err(SubmitError::DeadlineInfeasible(_)) => {
+                            shed_jobs += 1;
+                            break None;
+                        }
                         Err(SubmitError::QuotaExceeded(job)) => {
                             quota_hits += 1;
                             request = request_for(job, i);
@@ -451,7 +486,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 Err(e) => anyhow::bail!("submission failed: {e}"),
             }
         };
-        tickets.push((i, ticket));
+        if let Some(ticket) = ticket {
+            tickets.push((i, ticket));
+        }
     }
     drop(inputs);
 
@@ -509,13 +546,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             st.deadlines_set, st.deadlines_missed
         );
     }
+    if shed {
+        println!(
+            "shed: {shed_jobs} infeasible-deadline submissions rejected at admission \
+             ({} counted across shards)",
+            st.shed_infeasible
+        );
+    }
+    let done = st.completed.max(1) as f64;
     println!(
         "throughput: {:.1} fields/s, {:.1} MB/s aggregate ({:.3}s wall); mean queue wait {:.1} ms, mean exec {:.1} ms",
-        jobs_n as f64 / wall.max(1e-12),
+        st.completed as f64 / wall.max(1e-12),
         (n_elems * 4) as f64 / 1e6 / wall.max(1e-12),
         wall,
-        st.total_queue_wait_s * 1e3 / jobs_n as f64,
-        st.total_exec_s * 1e3 / jobs_n as f64
+        st.total_queue_wait_s * 1e3 / done,
+        st.total_exec_s * 1e3 / done
     );
     let ast = engine.arena_stats();
     println!(

@@ -32,6 +32,15 @@
 //! * **Deadline accounting** — a submission may carry a completion
 //!   budget; jobs that overrun are flagged in their report and counted
 //!   in the [`ServiceStats`] snapshot.
+//! * **SLO layer** — optional deadline-infeasibility shedding at
+//!   admission ([`SubmitError::DeadlineInfeasible`]), driven by an EWMA
+//!   service-time estimate per `(tenant, shape)` key: a request whose
+//!   deadline provably cannot be met is rejected before it consumes a
+//!   lane, which is cheaper than mitigating and missing. Completion
+//!   latencies feed per-class and per-tenant log-bucketed histograms
+//!   ([`LatencySnapshot`], queue-wait vs service-time split), and an
+//!   adaptive mode scales the shard's lane cap: sustained deadline
+//!   misses grow it into parked pool capacity, idleness shrinks it.
 //!
 //! A single scheduler thread (spawned lazily on first submission,
 //! counted by [`crate::util::pool::os_thread_spawns`]) drains the
@@ -90,9 +99,10 @@
 use crate::mitigation::pipeline::run_pipeline;
 use crate::mitigation::service::{Job, JobResult};
 use crate::util::arena::{Arena, ArenaHandle};
+use crate::util::hist::LatencyPair;
 use crate::util::pool::{self, PoolHandle, ThreadPool};
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -159,11 +169,22 @@ pub enum SubmitError {
     Timeout(Job),
     /// The service is shutting down and accepts nothing.
     Shutdown(Job),
-    /// The request's tenant is at its concurrent-admission quota
+    /// The request's tenant has no admission token available — it is at
+    /// its concurrent-admission cap, or its token bucket is empty
     /// (engine-level admission control; see
-    /// [`EngineBuilder::quota`](crate::mitigation::engine::EngineBuilder::quota)).
-    /// Resolves as soon as one of the tenant's in-flight jobs finishes.
+    /// [`EngineBuilder::quota`](crate::mitigation::engine::EngineBuilder::quota)
+    /// and
+    /// [`EngineBuilder::quota_rate`](crate::mitigation::engine::EngineBuilder::quota_rate)).
+    /// Resolves as soon as one of the tenant's in-flight jobs finishes
+    /// (cap mode) or the bucket refills (rate mode).
     QuotaExceeded(Job),
+    /// Shed at admission: the service's EWMA service-time estimate for
+    /// this (tenant, shape) proves the request's deadline cannot be
+    /// met even if admitted now. Only produced when shedding is
+    /// enabled (see
+    /// [`EngineBuilder::shed`](crate::mitigation::engine::EngineBuilder::shed));
+    /// the job never enters the queue and never executes.
+    DeadlineInfeasible(Job),
 }
 
 impl SubmitError {
@@ -173,7 +194,8 @@ impl SubmitError {
             SubmitError::QueueFull(job)
             | SubmitError::Timeout(job)
             | SubmitError::Shutdown(job)
-            | SubmitError::QuotaExceeded(job) => job,
+            | SubmitError::QuotaExceeded(job)
+            | SubmitError::DeadlineInfeasible(job) => job,
         }
     }
 }
@@ -186,6 +208,7 @@ impl std::fmt::Debug for SubmitError {
             SubmitError::Timeout(_) => "Timeout(..)",
             SubmitError::Shutdown(_) => "Shutdown(..)",
             SubmitError::QuotaExceeded(_) => "QuotaExceeded(..)",
+            SubmitError::DeadlineInfeasible(_) => "DeadlineInfeasible(..)",
         })
     }
 }
@@ -197,6 +220,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::Timeout(_) => "timed out waiting for admission-queue space",
             SubmitError::Shutdown(_) => "mitigation service is shutting down",
             SubmitError::QuotaExceeded(_) => "per-tenant admission quota exceeded",
+            SubmitError::DeadlineInfeasible(_) => {
+                "deadline infeasible: projected completion exceeds the request deadline"
+            }
         })
     }
 }
@@ -258,29 +284,84 @@ pub struct JobTicket {
 struct TicketState {
     slot: Mutex<Option<JobReport>>,
     done: Condvar,
+    /// Trace id of the job this ticket tracks, kept outside the mutex
+    /// so a poisoned-lock recovery can still identify the job.
+    trace: u64,
+    /// Class the job was submitted with (same reason as `trace`).
+    priority: Priority,
+}
+
+impl TicketState {
+    /// Report synthesized when the ticket mutex is found poisoned with
+    /// no stored report: the fulfilling thread panicked between taking
+    /// the lock and storing it. Shaped like a failed job — carrying
+    /// the `trace_id` — so callers shed or retry instead of dying on
+    /// an opaque propagated poison panic.
+    fn poisoned_report(&self) -> JobReport {
+        JobReport {
+            result: Err(anyhow::anyhow!(
+                "job ticket poisoned: a thread panicked while resolving trace {}",
+                self.trace
+            )),
+            seq: u64::MAX,
+            trace_id: self.trace,
+            priority: self.priority,
+            queue_wait: Duration::ZERO,
+            exec: Duration::ZERO,
+            deadline: None,
+            deadline_missed: false,
+        }
+    }
 }
 
 impl JobTicket {
-    fn new() -> (JobTicket, Arc<TicketState>) {
-        let state = Arc::new(TicketState { slot: Mutex::new(None), done: Condvar::new() });
+    fn new(trace: u64, priority: Priority) -> (JobTicket, Arc<TicketState>) {
+        let state = Arc::new(TicketState {
+            slot: Mutex::new(None),
+            done: Condvar::new(),
+            trace,
+            priority,
+        });
         (JobTicket { state: state.clone() }, state)
     }
 
-    /// Block until the job's report is available.
+    /// Block until the job's report is available. A poisoned ticket
+    /// (a thread panicked mid-fulfill) resolves immediately: the
+    /// stored report if one made it in, otherwise a synthesized
+    /// failed report carrying the trace id.
     pub fn wait(self) -> JobReport {
-        let mut slot = self.state.slot.lock().unwrap();
+        let mut slot = match self.state.slot.lock() {
+            Ok(guard) => guard,
+            Err(poison) => {
+                let mut guard = poison.into_inner();
+                return guard.take().unwrap_or_else(|| self.state.poisoned_report());
+            }
+        };
         loop {
             if let Some(report) = slot.take() {
                 return report;
             }
-            slot = self.state.done.wait(slot).unwrap();
+            slot = match self.state.done.wait(slot) {
+                Ok(guard) => guard,
+                Err(poison) => {
+                    let mut guard = poison.into_inner();
+                    return guard.take().unwrap_or_else(|| self.state.poisoned_report());
+                }
+            };
         }
     }
 
     /// Non-blocking poll: the report if the job finished, the ticket
-    /// back otherwise.
+    /// back otherwise. A poisoned ticket counts as finished (see
+    /// [`JobTicket::wait`]).
     pub fn try_wait(self) -> Result<JobReport, JobTicket> {
-        let taken = self.state.slot.lock().unwrap().take();
+        let taken = match self.state.slot.lock() {
+            Ok(mut guard) => guard.take(),
+            Err(poison) => {
+                let mut guard = poison.into_inner();
+                return Ok(guard.take().unwrap_or_else(|| self.state.poisoned_report()));
+            }
+        };
         match taken {
             Some(report) => Ok(report),
             None => Err(self),
@@ -290,25 +371,47 @@ impl JobTicket {
     /// [`JobTicket::wait`] bounded by `timeout`; the ticket comes back
     /// if the job is still running.
     pub fn wait_timeout(self, timeout: Duration) -> Result<JobReport, JobTicket> {
-        let give_up = Instant::now() + timeout;
-        let mut slot = self.state.slot.lock().unwrap();
+        // checked_add: a timeout too large to represent as an Instant
+        // just waits indefinitely, like `wait` — not a panic.
+        let give_up = Instant::now().checked_add(timeout);
+        let mut slot = match self.state.slot.lock() {
+            Ok(guard) => guard,
+            Err(poison) => {
+                let mut guard = poison.into_inner();
+                return Ok(guard.take().unwrap_or_else(|| self.state.poisoned_report()));
+            }
+        };
         loop {
             if let Some(report) = slot.take() {
                 return Ok(report);
             }
-            let now = Instant::now();
-            if now >= give_up {
-                drop(slot);
-                return Err(self);
-            }
-            slot = self.state.done.wait_timeout(slot, give_up - now).unwrap().0;
+            // checked_duration_since: a wakeup landing exactly at (or
+            // past) the deadline takes the timeout path cleanly —
+            // never an underflow panic or a zero-duration busy loop.
+            let remaining = match give_up {
+                Some(give_up) => match give_up.checked_duration_since(Instant::now()) {
+                    Some(r) if r > Duration::ZERO => r,
+                    _ => {
+                        drop(slot);
+                        return Err(self);
+                    }
+                },
+                None => Duration::MAX,
+            };
+            slot = match self.state.done.wait_timeout(slot, remaining) {
+                Ok((guard, _timed_out)) => guard,
+                Err(poison) => {
+                    let mut guard = poison.into_inner().0;
+                    return Ok(guard.take().unwrap_or_else(|| self.state.poisoned_report()));
+                }
+            };
         }
     }
 
     /// True once the report is ready (a subsequent `wait` returns
-    /// immediately).
+    /// immediately). A poisoned ticket is complete by that definition.
     pub fn is_complete(&self) -> bool {
-        self.state.slot.lock().unwrap().is_some()
+        self.state.slot.lock().map(|guard| guard.is_some()).unwrap_or(true)
     }
 }
 
@@ -356,6 +459,26 @@ pub struct ServiceStats {
     pub total_queue_wait_s: f64,
     /// Total seconds finished jobs spent executing.
     pub total_exec_s: f64,
+    /// Submissions shed at admission because the EWMA service-time
+    /// estimate proved their deadline infeasible. Always `0` unless
+    /// shedding is enabled; the estimate is measured wall time, so
+    /// this counter is excluded from the determinism contract above.
+    pub shed_infeasible: u64,
+    /// Times the scheduler thread returned from one of its condvar
+    /// waits. An idle service accumulates none — the regression test
+    /// for the former 5 ms polling loop pins that. Timing-dependent,
+    /// excluded from the determinism contract.
+    pub sched_wakeups: u64,
+    /// Adaptive lane-cap grow events (adaptive mode only;
+    /// timing-dependent, excluded from the determinism contract).
+    pub lanes_grown: u64,
+    /// Adaptive lane-cap shrink events (adaptive mode only;
+    /// timing-dependent, excluded from the determinism contract).
+    pub lanes_shrunk: u64,
+    /// Current dynamic lane cap (gauge). `0` until the scheduler
+    /// thread first runs, and always `0` with adaptive scaling off —
+    /// the cap is then statically the pool's lane count.
+    pub lane_cap: usize,
     /// Trace id of the most recently finished (completed or failed)
     /// job, `0` before any job finishes. Trace ids are process-wide
     /// monotonic, so this is an ordering probe, not a counter — it is
@@ -389,6 +512,9 @@ struct Pending {
     /// Engine-layer quota token; explicitly dropped just before the
     /// job's ticket is fulfilled (or the job is cancelled).
     lease: Option<AdmissionLease>,
+    /// Engine-layer tenant, the first half of the service-time
+    /// estimator key and the per-tenant latency histogram key.
+    tenant: Option<String>,
 }
 
 struct QueueInner {
@@ -438,9 +564,43 @@ impl QueueInner {
     }
 }
 
+/// Service-time estimator key: engine tenant (if any) + grid dims.
+type EstKey = (Option<String>, Vec<usize>);
+
+/// EWMA smoothing factor for the per-(tenant, shape) service-time
+/// estimate behind deadline shedding.
+const EST_ALPHA: f64 = 0.3;
+/// Bound on distinct estimator keys. At the cap, unseen keys are not
+/// tracked — their requests are simply never shed.
+const MAX_EST_KEYS: usize = 4096;
+/// Bound on per-tenant latency histogram entries per shard.
+const MAX_LATENCY_TENANTS: usize = 1024;
+
+/// Per-class and per-tenant latency histograms, recorded at job
+/// completion. Behind its own mutex, locked alone (never while
+/// holding `queue` or `stats`).
+#[derive(Default)]
+struct LatencyTable {
+    interactive: LatencyPair,
+    bulk: LatencyPair,
+    tenants: HashMap<String, LatencyPair>,
+}
+
+/// Point-in-time copy of a service's per-class latency histograms (see
+/// [`LatencyPair`] for the queue-wait / service-time split each half
+/// carries).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencySnapshot {
+    /// Interactive-class queue-wait / service-time histograms.
+    pub interactive: LatencyPair,
+    /// Bulk-class queue-wait / service-time histograms.
+    pub bulk: LatencyPair,
+}
+
 /// State shared between the service handle, the scheduler thread, and
-/// in-flight job tasks. Lock order: `queue` before `stats`, never the
-/// reverse.
+/// in-flight job tasks. Lock order: `queue` before `stats`, and
+/// `queue` before `est`, never the reverse; `lat` is always locked
+/// alone.
 struct Shared {
     queue: Mutex<QueueInner>,
     /// Wakes the scheduler: job arrival, unpause, slot freed, shutdown.
@@ -459,6 +619,29 @@ struct Shared {
     /// temporaries and output buffer cycle through it, so warm
     /// same-shaped jobs allocate nothing.
     arena: Arena,
+    /// Deadline-infeasibility shedding enabled
+    /// ([`crate::mitigation::service::ServiceConfig::shed`]).
+    shed: bool,
+    /// Adaptive lane scaling enabled
+    /// ([`crate::mitigation::service::ServiceConfig::adaptive_lanes`]).
+    adaptive: bool,
+    /// EWMA of pipeline execution seconds per (tenant, shape) — the
+    /// service-time model behind deadline shedding. May be locked
+    /// while holding `queue` (the admission-time check); never take
+    /// `queue` while holding it.
+    est: Mutex<HashMap<EstKey, f64>>,
+    /// Completion-time latency histograms.
+    lat: Mutex<LatencyTable>,
+    /// Times the scheduler thread returned from a condvar wait — an
+    /// event counter proving it sleeps instead of polling.
+    sched_wakeups: AtomicU64,
+    /// Adaptive lane-cap growth events.
+    lanes_grown: AtomicU64,
+    /// Adaptive lane-cap shrink events.
+    lanes_shrunk: AtomicU64,
+    /// Current dynamic lane cap; `0` until the scheduler first runs,
+    /// and kept `0` when adaptive scaling is off.
+    lane_cap: AtomicUsize,
 }
 
 impl Shared {
@@ -483,6 +666,8 @@ impl Admission {
         capacity: usize,
         start_paused: bool,
         arena: Arena,
+        shed: bool,
+        adaptive: bool,
     ) -> Self {
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueInner {
@@ -499,6 +684,14 @@ impl Admission {
             next_seq: AtomicU64::new(0),
             pool,
             arena,
+            shed,
+            adaptive,
+            est: Mutex::new(HashMap::new()),
+            lat: Mutex::new(LatencyTable::default()),
+            sched_wakeups: AtomicU64::new(0),
+            lanes_grown: AtomicU64::new(0),
+            lanes_shrunk: AtomicU64::new(0),
+            lane_cap: AtomicUsize::new(0),
         });
         Admission { shared, scheduler: Mutex::new(None) }
     }
@@ -531,8 +724,9 @@ impl Admission {
         opts: SubmitOptions,
         lease: Option<AdmissionLease>,
         trace: u64,
+        tenant: Option<String>,
     ) -> JobTicket {
-        let (ticket, state) = JobTicket::new();
+        let (ticket, state) = JobTicket::new(trace, opts.priority);
         let enqueued = Instant::now();
         let pending = Pending {
             job,
@@ -547,6 +741,7 @@ impl Admission {
             enqueued,
             ticket: state,
             lease,
+            tenant,
         };
         match opts.priority {
             Priority::Interactive => q.interactive.push_back(pending),
@@ -569,18 +764,53 @@ impl Admission {
         job: Job,
         opts: SubmitOptions,
     ) -> Result<JobTicket, SubmitError> {
-        self.try_submit_leased(job, opts, None, next_trace_id())
+        self.try_submit_leased(job, opts, None, next_trace_id(), None)
     }
 
-    /// [`Admission::try_submit`] with an engine-layer quota lease and
-    /// request trace id. On rejection the lease never enters the queue
-    /// and is dropped here, releasing the quota slot immediately.
+    /// Deadline-infeasibility check (shed mode only): using the EWMA
+    /// service-time estimate for this (tenant, shape) key, project the
+    /// job's completion as `est * (1 + depth / lanes)` — its own
+    /// execution plus its share of the work already queued ahead —
+    /// and shed when even that optimistic projection overruns the
+    /// deadline. With no estimate yet (cold key) the job is admitted:
+    /// infeasibility must be proven, never guessed. Called with the
+    /// queue lock held (lock order `queue` → `est`).
+    fn infeasible(
+        &self,
+        q: &QueueInner,
+        job: &Job,
+        tenant: &Option<String>,
+        deadline: Option<Duration>,
+    ) -> bool {
+        if !self.shared.shed {
+            return false;
+        }
+        let Some(deadline) = deadline else { return false };
+        let est_s = {
+            let est = self.shared.est.lock().unwrap();
+            match est.get(&(tenant.clone(), job.dq.shape.dims.clone())) {
+                Some(&s) => s,
+                None => return false,
+            }
+        };
+        // Resolving the pool here cannot force early global-pool
+        // creation: an estimate exists, so a job has already run.
+        let lanes = self.shared.thread_pool().lanes().max(1) as f64;
+        let projected = est_s * (1.0 + q.depth() as f64 / lanes);
+        projected > deadline.as_secs_f64()
+    }
+
+    /// [`Admission::try_submit`] with an engine-layer quota lease,
+    /// request trace id, and tenant. On rejection the lease never
+    /// enters the queue and is dropped here, releasing the quota slot
+    /// immediately.
     pub(crate) fn try_submit_leased(
         &self,
         job: Job,
         opts: SubmitOptions,
         lease: Option<AdmissionLease>,
         trace: u64,
+        tenant: Option<String>,
     ) -> Result<JobTicket, SubmitError> {
         let ticket = {
             let mut q = self.shared.queue.lock().unwrap();
@@ -592,7 +822,12 @@ impl Admission {
                 self.shared.stats.lock().unwrap().rejected_full += 1;
                 return Err(SubmitError::QueueFull(job));
             }
-            self.enqueue(&mut q, job, opts, lease, trace)
+            if self.infeasible(&q, &job, &tenant, opts.deadline) {
+                drop(q);
+                self.shared.stats.lock().unwrap().shed_infeasible += 1;
+                return Err(SubmitError::DeadlineInfeasible(job));
+            }
+            self.enqueue(&mut q, job, opts, lease, trace, tenant)
         };
         self.shared.work.notify_all();
         self.ensure_scheduler();
@@ -600,19 +835,22 @@ impl Admission {
     }
 
     pub(crate) fn submit(&self, job: Job, opts: SubmitOptions) -> Result<JobTicket, SubmitError> {
-        self.submit_leased(job, opts, None, next_trace_id())
+        self.submit_leased(job, opts, None, next_trace_id(), None)
     }
 
-    /// [`Admission::submit`] with an engine-layer quota lease and
-    /// request trace id (see [`Admission::try_submit_leased`]).
+    /// [`Admission::submit`] with an engine-layer quota lease, request
+    /// trace id, and tenant (see [`Admission::try_submit_leased`]).
     pub(crate) fn submit_leased(
         &self,
         job: Job,
         opts: SubmitOptions,
         lease: Option<AdmissionLease>,
         trace: u64,
+        tenant: Option<String>,
     ) -> Result<JobTicket, SubmitError> {
-        let give_up = opts.timeout.map(|t| Instant::now() + t);
+        // checked_add: an unrepresentable give-up instant means the
+        // bound can never be hit — wait indefinitely, like no timeout.
+        let give_up = opts.timeout.and_then(|t| Instant::now().checked_add(t));
         let ticket = {
             let mut q = self.shared.queue.lock().unwrap();
             loop {
@@ -625,17 +863,28 @@ impl Admission {
                 match give_up {
                     None => q = self.shared.space.wait(q).unwrap(),
                     Some(deadline) => {
-                        let now = Instant::now();
-                        if now >= deadline {
-                            drop(q);
-                            self.shared.stats.lock().unwrap().submit_timeouts += 1;
-                            return Err(SubmitError::Timeout(job));
-                        }
-                        q = self.shared.space.wait_timeout(q, deadline - now).unwrap().0;
+                        // checked_duration_since: a wakeup landing at
+                        // or past the give-up instant takes the
+                        // timeout path cleanly — never an underflow
+                        // panic or a zero-duration busy loop.
+                        let remaining = match deadline.checked_duration_since(Instant::now()) {
+                            Some(r) if r > Duration::ZERO => r,
+                            _ => {
+                                drop(q);
+                                self.shared.stats.lock().unwrap().submit_timeouts += 1;
+                                return Err(SubmitError::Timeout(job));
+                            }
+                        };
+                        q = self.shared.space.wait_timeout(q, remaining).unwrap().0;
                     }
                 }
             }
-            self.enqueue(&mut q, job, opts, lease, trace)
+            if self.infeasible(&q, &job, &tenant, opts.deadline) {
+                drop(q);
+                self.shared.stats.lock().unwrap().shed_infeasible += 1;
+                return Err(SubmitError::DeadlineInfeasible(job));
+            }
+            self.enqueue(&mut q, job, opts, lease, trace, tenant)
         };
         self.shared.work.notify_all();
         self.ensure_scheduler();
@@ -661,7 +910,23 @@ impl Admission {
         let mut snapshot = *self.shared.stats.lock().unwrap();
         snapshot.queue_depth = queue_depth;
         snapshot.running = running;
+        snapshot.sched_wakeups = self.shared.sched_wakeups.load(Ordering::SeqCst);
+        snapshot.lanes_grown = self.shared.lanes_grown.load(Ordering::SeqCst);
+        snapshot.lanes_shrunk = self.shared.lanes_shrunk.load(Ordering::SeqCst);
+        snapshot.lane_cap = self.shared.lane_cap.load(Ordering::SeqCst);
         snapshot
+    }
+
+    /// Snapshot of the per-class latency histograms.
+    pub(crate) fn latency(&self) -> LatencySnapshot {
+        let lat = self.shared.lat.lock().unwrap();
+        LatencySnapshot { interactive: lat.interactive, bulk: lat.bulk }
+    }
+
+    /// Latency histogram pair for one tenant, if any of its jobs have
+    /// completed on this service.
+    pub(crate) fn tenant_latency(&self, tenant: &str) -> Option<LatencyPair> {
+        self.shared.lat.lock().unwrap().tenants.get(tenant).copied()
     }
 }
 
@@ -711,7 +976,35 @@ enum SchedulerStep {
 /// everything still queued and wait for in-flight jobs so no ticket is
 /// ever left unresolved.
 fn scheduler_loop(shared: Arc<Shared>) {
+    // Adaptive lane scaling state. Resolving the pool here is safe:
+    // the scheduler only exists once a job has been submitted. The cap
+    // starts at the full lane count and moves one lane at a time — an
+    // idle shard shrinks it, a shard observing fresh deadline misses
+    // with parked pool capacity grows it back.
+    let full_lanes = shared.thread_pool().lanes();
+    if shared.adaptive {
+        shared.lane_cap.store(full_lanes, Ordering::SeqCst);
+    }
+    let effective_cap = |shared: &Shared| {
+        if shared.adaptive {
+            shared.lane_cap.load(Ordering::SeqCst).clamp(1, full_lanes)
+        } else {
+            full_lanes
+        }
+    };
+    let mut last_missed = 0u64;
     loop {
+        if shared.adaptive {
+            let missed = shared.stats.lock().unwrap().deadlines_missed;
+            if missed > last_missed {
+                last_missed = missed;
+                let cap = shared.lane_cap.load(Ordering::SeqCst);
+                if cap < full_lanes && shared.thread_pool().parked_workers() > 0 {
+                    shared.lane_cap.store(cap + 1, Ordering::SeqCst);
+                    shared.lanes_grown.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
         let step = {
             let mut q = shared.queue.lock().unwrap();
             loop {
@@ -724,21 +1017,31 @@ fn scheduler_loop(shared: Arc<Shared>) {
                     // global-pool service only once a job actually
                     // exists.
                     //
-                    // Admit up to `lanes` jobs: `workers` can execute
-                    // at once, and one more sits staged in the pool
-                    // queue so a freed worker starts its next job
-                    // without a scheduler round-trip. While a lane is
-                    // free the scheduler never executes jobs itself
-                    // (except on a single-lane pool) — that keeps
-                    // admission of later, possibly interactive, jobs
-                    // responsive.
-                    if q.running < shared.thread_pool().lanes() {
+                    // Admit up to `lanes` jobs (the adaptive cap, or
+                    // all of them): `workers` can execute at once,
+                    // and one more sits staged in the pool queue so a
+                    // freed worker starts its next job without a
+                    // scheduler round-trip. While a lane is free the
+                    // scheduler never executes jobs itself (except on
+                    // a single-lane pool) — that keeps admission of
+                    // later, possibly interactive, jobs responsive.
+                    if q.running < effective_cap(&shared) {
                         q.running += 1;
                         break SchedulerStep::Dispatch(Box::new(q.pop().expect("depth > 0")));
                     }
                     break SchedulerStep::Help;
                 }
+                // Fully idle: shrink the adaptive cap one lane before
+                // sleeping — a quiet shard gives capacity back.
+                if shared.adaptive && q.running == 0 && q.depth() == 0 {
+                    let cap = shared.lane_cap.load(Ordering::SeqCst);
+                    if cap > 1 {
+                        shared.lane_cap.store(cap - 1, Ordering::SeqCst);
+                        shared.lanes_shrunk.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
                 q = shared.work.wait(q).unwrap();
+                shared.sched_wakeups.fetch_add(1, Ordering::SeqCst);
             }
         };
         match step {
@@ -753,14 +1056,15 @@ fn scheduler_loop(shared: Arc<Shared>) {
                 // region ticket (a bounded step of an in-flight job —
                 // never a whole detached job, which would stall
                 // dispatch past the next lane becoming free). When
-                // nothing is helpable, park briefly on the work
-                // condvar — a finishing job notifies it, so the
-                // timeout only bounds how late newly published region
-                // tickets are noticed.
+                // nothing is helpable, block on the work condvar —
+                // every lane release (`run_job`), submission, resume,
+                // and shutdown notifies it, so the scheduler wakes on
+                // real events instead of the old 5 ms polling loop.
                 if !shared.thread_pool().try_help_one() {
                     let q = shared.queue.lock().unwrap();
-                    if !q.shutdown && q.running >= shared.thread_pool().lanes() {
-                        drop(shared.work.wait_timeout(q, Duration::from_millis(5)).unwrap());
+                    if !q.shutdown && q.running >= effective_cap(&shared) {
+                        drop(shared.work.wait(q).unwrap());
+                        shared.sched_wakeups.fetch_add(1, Ordering::SeqCst);
                     }
                 }
             }
@@ -850,6 +1154,41 @@ fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
         st.total_exec_s += exec.as_secs_f64();
         st.last_trace_id = pending.trace;
     }
+    // Feed the SLO layer: the per-(tenant, shape) EWMA service-time
+    // estimate behind deadline shedding, then the per-class and
+    // per-tenant latency histograms. Separate locks, taken one at a
+    // time, never while holding `queue` or `stats`.
+    {
+        let mut est = shared.est.lock().unwrap();
+        let key = (pending.tenant.clone(), pending.job.dq.shape.dims.clone());
+        match est.get_mut(&key) {
+            Some(e) => *e = EST_ALPHA * exec.as_secs_f64() + (1.0 - EST_ALPHA) * *e,
+            None if est.len() < MAX_EST_KEYS => {
+                est.insert(key, exec.as_secs_f64());
+            }
+            None => {}
+        }
+    }
+    {
+        let mut lat = shared.lat.lock().unwrap();
+        let pair = match pending.priority {
+            Priority::Interactive => &mut lat.interactive,
+            Priority::Bulk => &mut lat.bulk,
+        };
+        pair.wait.record(queue_wait);
+        pair.exec.record(exec);
+        if let Some(tenant) = &pending.tenant {
+            if let Some(pair) = lat.tenants.get_mut(tenant) {
+                pair.wait.record(queue_wait);
+                pair.exec.record(exec);
+            } else if lat.tenants.len() < MAX_LATENCY_TENANTS {
+                let mut pair = LatencyPair::default();
+                pair.wait.record(queue_wait);
+                pair.exec.record(exec);
+                lat.tenants.insert(tenant.clone(), pair);
+            }
+        }
+    }
     // Release the engine-layer quota slot *before* resolving the
     // ticket, so a client that waited on it can resubmit immediately
     // without a spurious QuotaExceeded.
@@ -908,7 +1247,88 @@ fn cancel_queued(shared: &Shared) {
 }
 
 fn fulfill(ticket: &Arc<TicketState>, report: JobReport) {
-    let mut slot = ticket.slot.lock().unwrap();
+    // A caller-side panic while holding the slot lock must not take
+    // the worker down with it — store the report anyway.
+    let mut slot = ticket.slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
     *slot = Some(report);
     ticket.done.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Poison the ticket's slot mutex by panicking a thread while it
+    /// holds the lock.
+    fn poison_slot(state: &Arc<TicketState>) {
+        let state = state.clone();
+        let result = std::thread::spawn(move || {
+            let _guard = state.slot.lock().unwrap();
+            panic!("poison the ticket slot");
+        })
+        .join();
+        assert!(result.is_err(), "the poisoning thread must have panicked");
+    }
+
+    #[test]
+    fn poisoned_ticket_wait_yields_failed_report_with_trace() {
+        let (ticket, state) = JobTicket::new(42, Priority::Interactive);
+        poison_slot(&state);
+        assert!(ticket.is_complete(), "poison counts as complete");
+        let report = ticket.wait();
+        assert_eq!(report.trace_id, 42);
+        assert_eq!(report.seq, u64::MAX);
+        assert_eq!(report.priority, Priority::Interactive);
+        let err = report.result.expect_err("poison maps to a failed report");
+        assert!(err.to_string().contains("42"), "error names the trace: {err}");
+    }
+
+    #[test]
+    fn poisoned_ticket_try_wait_and_wait_timeout_resolve() {
+        let (ticket, state) = JobTicket::new(7, Priority::Bulk);
+        poison_slot(&state);
+        let report = ticket.try_wait().expect("poison resolves instead of handing back");
+        assert!(report.result.is_err());
+        assert_eq!(report.trace_id, 7);
+
+        let (ticket, state) = JobTicket::new(8, Priority::Bulk);
+        poison_slot(&state);
+        let report = ticket.wait_timeout(Duration::from_secs(5)).expect("resolves immediately");
+        assert!(report.result.is_err());
+        assert_eq!(report.trace_id, 8);
+    }
+
+    #[test]
+    fn poisoned_ticket_prefers_the_stored_report() {
+        let (ticket, state) = JobTicket::new(11, Priority::Bulk);
+        fulfill(
+            &state,
+            JobReport {
+                result: Err(anyhow::anyhow!("real failure")),
+                seq: 3,
+                trace_id: 11,
+                priority: Priority::Bulk,
+                queue_wait: Duration::ZERO,
+                exec: Duration::ZERO,
+                deadline: None,
+                deadline_missed: false,
+            },
+        );
+        poison_slot(&state);
+        let report = ticket.wait();
+        assert_eq!(report.seq, 3, "stored report wins over the synthesized one");
+        assert_eq!(report.result.unwrap_err().to_string(), "real failure");
+    }
+
+    #[test]
+    fn wait_timeout_zero_hands_the_ticket_back_immediately() {
+        // Regression: the old arithmetic recomputed `now` after the
+        // deadline check, so a zero remainder turned into a busy loop
+        // (and an exactly-elapsed one could underflow).
+        let (ticket, _state) = JobTicket::new(1, Priority::Bulk);
+        let started = Instant::now();
+        let ticket = ticket.wait_timeout(Duration::ZERO).expect_err("no report yet");
+        assert!(started.elapsed() < Duration::from_secs(2));
+        assert!(!ticket.is_complete());
+    }
 }

@@ -60,12 +60,16 @@
 
 use crate::data::grid::{Grid, SharedGrid};
 use crate::mitigation::admission::{
-    Admission, AdmissionLease, JobReport, Priority, ServiceStats, SubmitError, SubmitOptions,
+    Admission, AdmissionLease, JobReport, LatencySnapshot, Priority, ServiceStats, SubmitError,
+    SubmitOptions,
 };
 use crate::mitigation::pipeline::{run_pipeline, MitigationConfig, PipelineStats};
-use crate::mitigation::service::{render_metrics_labeled, Job, ServiceConfig};
+use crate::mitigation::service::{
+    render_latency_labeled, render_metrics_labeled, Job, ServiceConfig,
+};
 use crate::quant::{QIndex, ResolvedBound};
 use crate::util::arena::{Arena, ArenaHandle, ArenaStats};
+use crate::util::hist::LatencyPair;
 use crate::util::pool::{PoolHandle, ThreadPool};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -387,12 +391,20 @@ pub fn execute_on(
 }
 
 /// Point-in-time snapshot of one tenant's engine-level accounting.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TenantStats {
     /// Tenant id.
     pub tenant: String,
-    /// Configured max in-flight admissions (`None` = unlimited).
+    /// In cap mode (`rate == 0`): configured max in-flight admissions
+    /// (`None` = unlimited). In token-bucket mode (`rate > 0`): the
+    /// bucket size (burst tolerance).
     pub quota: Option<u64>,
+    /// Token refill rate in admissions/second; `0.0` means the legacy
+    /// concurrency-cap mode.
+    pub rate: f64,
+    /// Current token balance (gauge; refilled lazily at snapshot
+    /// time). Always `0.0` in cap mode.
+    pub tokens: f64,
     /// Requests admitted for this tenant.
     pub submitted: u64,
     /// Requests rejected with [`SubmitError::QuotaExceeded`].
@@ -435,6 +447,11 @@ impl EngineStats {
             agg.running += s.running;
             agg.total_queue_wait_s += s.total_queue_wait_s;
             agg.total_exec_s += s.total_exec_s;
+            agg.shed_infeasible += s.shed_infeasible;
+            agg.sched_wakeups += s.sched_wakeups;
+            agg.lanes_grown += s.lanes_grown;
+            agg.lanes_shrunk += s.lanes_shrunk;
+            agg.lane_cap += s.lane_cap;
             // Trace ids are process-wide monotonic: the engine-wide
             // "most recent" is the max over shards.
             agg.last_trace_id = agg.last_trace_id.max(s.last_trace_id);
@@ -460,10 +477,22 @@ impl EngineStats {
 /// distinct tenants simultaneously in flight).
 pub const MAX_TRACKED_TENANTS: usize = 4096;
 
-/// Per-tenant engine-level accounting.
+/// Per-tenant engine-level accounting: either a legacy concurrency
+/// cap (`rate == 0`, admission gated on in-flight count) or a weighted
+/// token bucket (`rate > 0`, admission consumes one token; the bucket
+/// refills lazily from elapsed time — no refill thread exists).
 struct TenantEntry {
+    /// Cap mode: max in-flight (`None` = unlimited). Bucket mode: the
+    /// bucket size (burst tolerance), always `Some`.
     quota: Option<u64>,
-    /// True for tenants pre-configured via [`EngineBuilder::quota`]
+    /// Token refill rate in admissions/second; `0.0` selects cap mode.
+    rate: f64,
+    /// Current token balance (bucket mode; starts full).
+    tokens: f64,
+    /// Instant of the last lazy refill (bucket mode).
+    last_refill: Instant,
+    /// True for tenants pre-configured via [`EngineBuilder::quota`] /
+    /// [`EngineBuilder::quota_rate`] / [`EngineBuilder::quota_weight`]
     /// (never evicted from the tracking table).
     configured: bool,
     /// Shared with the [`QuotaLease`]s attached to this tenant's
@@ -471,6 +500,50 @@ struct TenantEntry {
     in_flight: Arc<AtomicU64>,
     submitted: u64,
     rejected_quota: u64,
+}
+
+impl TenantEntry {
+    /// A cap-mode entry (the legacy in-flight quota).
+    fn cap(quota: Option<u64>, configured: bool) -> Self {
+        TenantEntry {
+            quota,
+            rate: 0.0,
+            tokens: 0.0,
+            last_refill: Instant::now(),
+            configured,
+            in_flight: Arc::new(AtomicU64::new(0)),
+            submitted: 0,
+            rejected_quota: 0,
+        }
+    }
+
+    /// A token-bucket entry; the bucket starts full (burst-tolerant
+    /// from the first request).
+    fn bucket(rate: f64, burst: u64, configured: bool) -> Self {
+        let burst = burst.max(1);
+        TenantEntry {
+            quota: Some(burst),
+            rate: rate.max(0.0),
+            tokens: burst as f64,
+            last_refill: Instant::now(),
+            configured,
+            in_flight: Arc::new(AtomicU64::new(0)),
+            submitted: 0,
+            rejected_quota: 0,
+        }
+    }
+
+    /// Lazy elapsed-time refill (bucket mode; a no-op in cap mode).
+    /// Called on every admission attempt and on stats snapshots, so
+    /// the bucket never needs its own timer thread.
+    fn refill(&mut self, now: Instant) {
+        if self.rate > 0.0 {
+            let elapsed = now.saturating_duration_since(self.last_refill).as_secs_f64();
+            let burst = self.quota.unwrap_or(1).max(1) as f64;
+            self.tokens = (self.tokens + elapsed * self.rate).min(burst);
+            self.last_refill = now;
+        }
+    }
 }
 
 /// Dropped by the admission layer exactly when the job leaves the
@@ -539,7 +612,11 @@ pub struct EngineBuilder {
     lanes_per_shard: Option<usize>,
     shared_arena: bool,
     quotas: Vec<(String, u64)>,
+    quota_rates: Vec<(String, f64, u64)>,
+    quota_weights: Vec<(String, f64)>,
     default_quota: Option<u64>,
+    default_rate: f64,
+    default_burst: Option<u64>,
 }
 
 impl EngineBuilder {
@@ -616,6 +693,69 @@ impl EngineBuilder {
         self
     }
 
+    /// Give `tenant` a token-bucket quota: admissions consume one
+    /// token each, the bucket holds at most `burst` tokens (so a
+    /// quiet tenant can absorb a burst of that size), and it refills
+    /// at `rate` tokens/second — computed lazily from elapsed time at
+    /// each admission attempt, so no refill thread exists. An empty
+    /// bucket rejects with [`SubmitError::QuotaExceeded`], exactly
+    /// like the cap mode. Overrides any [`EngineBuilder::quota`]
+    /// entry for the same tenant.
+    pub fn quota_rate(mut self, tenant: impl Into<String>, rate: f64, burst: u64) -> Self {
+        self.quota_rates.push((tenant.into(), rate, burst));
+        self
+    }
+
+    /// Weighted fair share: give `tenant` a token bucket refilling at
+    /// `weight` × the [`EngineBuilder::default_quota_rate`] (so a
+    /// weight-2 tenant sustains twice the default admission rate),
+    /// with the default burst. A no-op unless a default rate is set;
+    /// explicit [`EngineBuilder::quota`] / [`EngineBuilder::quota_rate`]
+    /// entries for the same tenant win.
+    pub fn quota_weight(mut self, tenant: impl Into<String>, weight: f64) -> Self {
+        self.quota_weights.push((tenant.into(), weight));
+        self
+    }
+
+    /// Token-bucket refill rate (tokens/second) applied to tenants
+    /// without an explicit entry. Setting this switches dynamically
+    /// seen tenants from cap mode to token-bucket mode (bucket size:
+    /// [`EngineBuilder::default_quota_burst`], else
+    /// [`EngineBuilder::default_quota`], else 1).
+    pub fn default_quota_rate(mut self, rate: f64) -> Self {
+        self.default_rate = rate.max(0.0);
+        self
+    }
+
+    /// Bucket size used with [`EngineBuilder::default_quota_rate`] for
+    /// tenants without an explicit entry.
+    pub fn default_quota_burst(mut self, burst: u64) -> Self {
+        self.default_burst = Some(burst.max(1));
+        self
+    }
+
+    /// Enable deadline-infeasibility shedding on every shard: a
+    /// deadline-carrying request whose projected completion (EWMA
+    /// service time per (tenant, shape), scaled by queue depth over
+    /// lanes) provably overruns its deadline is rejected at admission
+    /// with [`SubmitError::DeadlineInfeasible`] instead of executing
+    /// and missing. Requests with no history are always admitted.
+    pub fn shed(mut self, shed: bool) -> Self {
+        self.template.shed = shed;
+        self
+    }
+
+    /// Enable adaptive lane scaling on every shard: a shard observing
+    /// fresh deadline misses grows its dynamic lane cap into parked
+    /// pool capacity, an idle shard shrinks it (observable via the
+    /// `lanes_grown` / `lanes_shrunk` / `lane_cap` counters in
+    /// [`ServiceStats`]). Off by default — the cap is then statically
+    /// the pool's lane count.
+    pub fn adaptive_lanes(mut self, adaptive: bool) -> Self {
+        self.template.adaptive_lanes = adaptive;
+        self
+    }
+
     /// Build the engine: spawn-ready shards (schedulers start lazily on
     /// first submission), the router, and the pre-populated quota
     /// table.
@@ -640,26 +780,33 @@ impl EngineBuilder {
                     self.template.capacity,
                     self.template.start_paused,
                     arena,
+                    self.template.shed,
+                    self.template.adaptive_lanes,
                 )
             })
             .collect();
         let mut tenants = BTreeMap::new();
         for (tenant, max) in self.quotas {
-            tenants.insert(
-                tenant,
-                TenantEntry {
-                    quota: Some(max),
-                    configured: true,
-                    in_flight: Arc::new(AtomicU64::new(0)),
-                    submitted: 0,
-                    rejected_quota: 0,
-                },
-            );
+            tenants.insert(tenant, TenantEntry::cap(Some(max), true));
+        }
+        // Explicit token buckets override cap entries for the same
+        // tenant; weights only fill gaps (and need a default rate).
+        for (tenant, rate, burst) in self.quota_rates {
+            tenants.insert(tenant, TenantEntry::bucket(rate, burst, true));
+        }
+        if self.default_rate > 0.0 {
+            let burst = self.default_burst.or(self.default_quota).unwrap_or(1);
+            for (tenant, weight) in self.quota_weights {
+                let rate = self.default_rate * weight.max(0.0);
+                tenants.entry(tenant).or_insert_with(|| TenantEntry::bucket(rate, burst, true));
+            }
         }
         Engine {
             shards,
             tenants: Mutex::new(tenants),
             default_quota: self.default_quota,
+            default_rate: self.default_rate,
+            default_burst: self.default_burst,
             shared_arena,
         }
     }
@@ -673,6 +820,11 @@ pub struct Engine {
     shards: Vec<Admission>,
     tenants: Mutex<BTreeMap<String, TenantEntry>>,
     default_quota: Option<u64>,
+    /// Default token-bucket refill rate for dynamically seen tenants
+    /// (`0.0` = cap mode).
+    default_rate: f64,
+    /// Default bucket size accompanying `default_rate`.
+    default_burst: Option<u64>,
     /// `Some` when all shards share one arena (for aggregate stats
     /// that must not double-count).
     shared_arena: Option<Arena>,
@@ -756,14 +908,25 @@ impl Engine {
             }
         }
         let default_quota = self.default_quota;
-        let entry = table.entry(tenant.to_string()).or_insert_with(|| TenantEntry {
-            quota: default_quota,
-            configured: false,
-            in_flight: Arc::new(AtomicU64::new(0)),
-            submitted: 0,
-            rejected_quota: 0,
+        let default_rate = self.default_rate;
+        let default_burst = self.default_burst;
+        let entry = table.entry(tenant.to_string()).or_insert_with(|| {
+            if default_rate > 0.0 {
+                let burst = default_burst.or(default_quota).unwrap_or(1);
+                TenantEntry::bucket(default_rate, burst, false)
+            } else {
+                TenantEntry::cap(default_quota, false)
+            }
         });
-        if let Some(max) = entry.quota {
+        if entry.rate > 0.0 {
+            // Token-bucket mode: lazy refill, then consume one token.
+            entry.refill(Instant::now());
+            if entry.tokens < 1.0 {
+                entry.rejected_quota += 1;
+                return Err(());
+            }
+            entry.tokens -= 1.0;
+        } else if let Some(max) = entry.quota {
             if entry.in_flight.load(Ordering::SeqCst) >= max {
                 entry.rejected_quota += 1;
                 return Err(());
@@ -792,9 +955,9 @@ impl Engine {
         // On rejection the admission layer drops the lease before
         // returning, so the quota slot frees with the error.
         let admitted = if blocking {
-            self.shards[shard].submit_leased(job, opts, lease, trace_id)
+            self.shards[shard].submit_leased(job, opts, lease, trace_id, tenant.clone())
         } else {
-            self.shards[shard].try_submit_leased(job, opts, lease, trace_id)
+            self.shards[shard].try_submit_leased(job, opts, lease, trace_id, tenant.clone())
         };
         match admitted {
             Ok(inner) => Ok(ResponseTicket { inner, shard, tenant, collect_stats, trace_id }),
@@ -892,13 +1055,20 @@ impl Engine {
     /// that has attempted a submission; `None` for ids the engine has
     /// never seen.
     pub fn tenant_stats(&self, tenant: &str) -> Option<TenantStats> {
-        let table = self.tenants.lock().unwrap();
-        table.get(tenant).map(|e| TenantStats {
-            tenant: tenant.to_string(),
-            quota: e.quota,
-            submitted: e.submitted,
-            rejected_quota: e.rejected_quota,
-            in_flight: e.in_flight.load(Ordering::SeqCst),
+        let mut table = self.tenants.lock().unwrap();
+        table.get_mut(tenant).map(|e| {
+            // Refill-on-read so the token gauge is live, not stale
+            // since the last admission attempt.
+            e.refill(Instant::now());
+            TenantStats {
+                tenant: tenant.to_string(),
+                quota: e.quota,
+                rate: e.rate,
+                tokens: e.tokens,
+                submitted: e.submitted,
+                rejected_quota: e.rejected_quota,
+                in_flight: e.in_flight.load(Ordering::SeqCst),
+            }
         })
     }
 
@@ -907,19 +1077,38 @@ impl Engine {
     pub fn stats(&self) -> EngineStats {
         let shards = self.shards.iter().map(|s| s.stats()).collect();
         let tenants = {
-            let table = self.tenants.lock().unwrap();
+            let mut table = self.tenants.lock().unwrap();
+            let now = Instant::now();
             table
-                .iter()
-                .map(|(tenant, e)| TenantStats {
-                    tenant: tenant.clone(),
-                    quota: e.quota,
-                    submitted: e.submitted,
-                    rejected_quota: e.rejected_quota,
-                    in_flight: e.in_flight.load(Ordering::SeqCst),
+                .iter_mut()
+                .map(|(tenant, e)| {
+                    e.refill(now);
+                    TenantStats {
+                        tenant: tenant.clone(),
+                        quota: e.quota,
+                        rate: e.rate,
+                        tokens: e.tokens,
+                        submitted: e.submitted,
+                        rejected_quota: e.rejected_quota,
+                        in_flight: e.in_flight.load(Ordering::SeqCst),
+                    }
                 })
                 .collect()
         };
         EngineStats { shards, tenants }
+    }
+
+    /// Per-class latency histogram snapshot of one shard (queue-wait /
+    /// service-time split; see [`LatencySnapshot`]).
+    pub fn shard_latency(&self, shard: usize) -> LatencySnapshot {
+        self.shards[shard].latency()
+    }
+
+    /// Queue-wait / service-time histograms for one tenant, recorded
+    /// on its consistent-hash shard. `None` before any of the tenant's
+    /// jobs has completed.
+    pub fn tenant_latency(&self, tenant: &str) -> Option<LatencyPair> {
+        self.shards[self.shard_for_tenant(tenant)].tenant_latency(tenant)
     }
 
     /// A handle to one shard's scratch-buffer arena (with a shared
@@ -962,9 +1151,12 @@ impl Engine {
 
     /// Engine counters rendered as scrapeable `key=value` text, one
     /// line per scope: an aggregate `scope=engine` line, one
-    /// `shard=<i>` line per shard, and one `tenant=<id>` line per
-    /// tenant. Every line is independently parseable `key=value`
-    /// tokens (the `qai serve --metrics` format).
+    /// `shard=<i>` line per shard, one `scope=latency` line per shard
+    /// and priority class with completions (p50/p99/mean, queue-wait
+    /// vs service-time split), and one `tenant=<id>` line per tenant
+    /// (quota/bucket state plus the tenant's latency quantiles once
+    /// jobs have completed). Every line is independently parseable
+    /// `key=value` tokens (the `qai serve --metrics` format).
     pub fn metrics_text(&self) -> String {
         let stats = self.stats();
         let agg = stats.aggregate();
@@ -989,16 +1181,41 @@ impl Engine {
                 &shard.arena().stats(),
             ));
         }
+        for (i, shard) in self.shards.iter().enumerate() {
+            let lat = shard.latency();
+            let idx = i.to_string();
+            for (class, pair) in [("interactive", &lat.interactive), ("bulk", &lat.bulk)] {
+                if pair.wait.count() == 0 {
+                    continue;
+                }
+                out.push('\n');
+                out.push_str(&render_latency_labeled(
+                    &[("scope", "latency"), ("shard", idx.as_str()), ("class", class)],
+                    pair,
+                ));
+            }
+        }
         for t in &stats.tenants {
             out.push('\n');
             out.push_str(&format!(
-                "tenant={} quota={} submitted={} rejected_quota={} in_flight={}",
+                "tenant={} quota={} rate={:.3} tokens={:.3} submitted={} rejected_quota={} in_flight={}",
                 metrics_safe(&t.tenant),
                 t.quota.map_or_else(|| "unlimited".to_string(), |q| q.to_string()),
+                t.rate,
+                t.tokens,
                 t.submitted,
                 t.rejected_quota,
                 t.in_flight,
             ));
+            if let Some(pair) = self.tenant_latency(&t.tenant) {
+                out.push_str(&format!(
+                    " wait_p50_ms={:.3} wait_p99_ms={:.3} exec_p50_ms={:.3} exec_p99_ms={:.3}",
+                    pair.wait.quantile_ms(0.50),
+                    pair.wait.quantile_ms(0.99),
+                    pair.exec.quantile_ms(0.50),
+                    pair.exec.quantile_ms(0.99),
+                ));
+            }
         }
         out
     }

@@ -32,7 +32,9 @@ pub mod pipeline;
 pub mod service;
 pub mod sign;
 
-pub use admission::{JobReport, JobTicket, Priority, ServiceStats, SubmitError, SubmitOptions};
+pub use admission::{
+    JobReport, JobTicket, LatencySnapshot, Priority, ServiceStats, SubmitError, SubmitOptions,
+};
 pub use engine::{
     Engine, EngineBuilder, EngineStats, MitigationRequest, MitigationResponse, ResponseTicket,
     TenantStats,
@@ -41,6 +43,6 @@ pub use engine::{
 pub use pipeline::{mitigate, mitigate_with_stats, mitigate_with_stats_on};
 pub use pipeline::{Backend, MitigationConfig, PipelineStats};
 pub use service::{
-    render_metrics, render_metrics_labeled, Job, JobResult, MitigationService, ServiceConfig,
-    DEFAULT_QUEUE_CAPACITY,
+    render_latency_labeled, render_metrics, render_metrics_labeled, Job, JobResult,
+    MitigationService, ServiceConfig, DEFAULT_QUEUE_CAPACITY,
 };

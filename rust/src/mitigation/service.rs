@@ -45,6 +45,7 @@ use crate::mitigation::engine::{Engine, MitigationRequest};
 use crate::mitigation::pipeline::{MitigationConfig, PipelineStats};
 use crate::quant::{QIndex, ResolvedBound};
 use crate::util::arena::{Arena, ArenaStats};
+use crate::util::hist::LatencyPair;
 use crate::util::pool::ThreadPool;
 use std::sync::Arc;
 
@@ -128,6 +129,20 @@ pub struct ServiceConfig {
     /// recycle buffers across services/shards (multi-tenant
     /// deployments with many same-shaped fields).
     pub arena: Option<Arena>,
+    /// Shed deadline-infeasible work at admission: when a submission
+    /// carries a deadline and the per-(tenant, shape) service-time
+    /// estimator proves the deadline unmeetable given the current queue
+    /// depth, reject it with
+    /// [`SubmitError::DeadlineInfeasible`] instead of enqueueing a job
+    /// that is doomed to miss. Off by default — sheds never happen
+    /// unless an operator opts in (`qai serve --shed`).
+    pub shed: bool,
+    /// Adaptive lane scaling: let the admission scheduler grow its
+    /// dispatch-lane cap (up to the pool width) when deadlines are
+    /// being missed and parked workers are available, and shrink it
+    /// while the shard idles. Off by default: the scheduler uses the
+    /// full pool width statically, exactly as before.
+    pub adaptive_lanes: bool,
 }
 
 impl Default for ServiceConfig {
@@ -137,6 +152,8 @@ impl Default for ServiceConfig {
             capacity: DEFAULT_QUEUE_CAPACITY,
             start_paused: false,
             arena: None,
+            shed: false,
+            adaptive_lanes: false,
         }
     }
 }
@@ -319,7 +336,8 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
          deadlines_missed={} max_queue_depth={} queue_depth={} running={} \
          total_queue_wait_s={:.6} total_exec_s={:.6} arena_hits={} arena_misses={} \
          arena_returns={} arena_detached={} arena_adopted={} arena_dropped={} \
-         arena_bytes_outstanding={} arena_bytes_pooled={} last_trace={}",
+         arena_bytes_outstanding={} arena_bytes_pooled={} shed_infeasible={} \
+         sched_wakeups={} lanes_grown={} lanes_shrunk={} lane_cap={} last_trace={}",
         stats.submitted,
         stats.rejected_full,
         stats.submit_timeouts,
@@ -343,6 +361,11 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
         arena.dropped,
         arena.bytes_outstanding,
         arena.bytes_pooled,
+        stats.shed_infeasible,
+        stats.sched_wakeups,
+        stats.lanes_grown,
+        stats.lanes_shrunk,
+        stats.lane_cap,
         stats.last_trace_id,
     )
 }
@@ -364,6 +387,35 @@ pub fn render_metrics_labeled(
         line.push(' ');
     }
     line.push_str(&render_metrics(stats, arena));
+    line
+}
+
+/// Render a queue-wait / service-time histogram pair as one scrapeable
+/// `key=value` line with leading label tokens — the `scope=latency`
+/// format of
+/// [`Engine::metrics_text`](crate::mitigation::engine::Engine::metrics_text).
+/// Milliseconds throughout; quantiles are bucket upper edges (see
+/// [`crate::util::hist`]), so reported p99s are conservative upper
+/// bounds. Labels must be token-safe (no spaces, no `=` in values).
+pub fn render_latency_labeled(labels: &[(&str, &str)], pair: &LatencyPair) -> String {
+    let mut line = String::new();
+    for (key, value) in labels {
+        line.push_str(key);
+        line.push('=');
+        line.push_str(value);
+        line.push(' ');
+    }
+    line.push_str(&format!(
+        "count={} wait_p50_ms={:.3} wait_p99_ms={:.3} wait_mean_ms={:.3} \
+         exec_p50_ms={:.3} exec_p99_ms={:.3} exec_mean_ms={:.3}",
+        pair.wait.count(),
+        pair.wait.quantile_ms(0.50),
+        pair.wait.quantile_ms(0.99),
+        pair.wait.mean_ms(),
+        pair.exec.quantile_ms(0.50),
+        pair.exec.quantile_ms(0.99),
+        pair.exec.mean_ms(),
+    ));
     line
 }
 
@@ -443,5 +495,21 @@ mod tests {
         assert!(line.starts_with("shard=3 tenant=acme submitted=0 "), "line={line}");
         assert!(line.ends_with("last_trace=0"), "line={line}");
         assert_eq!(line.matches('\n').count(), 0);
+    }
+
+    #[test]
+    fn latency_line_reports_wait_and_exec_split() {
+        let mut pair = LatencyPair::default();
+        pair.wait.record(std::time::Duration::from_micros(100));
+        pair.exec.record(std::time::Duration::from_millis(4));
+        let line = render_latency_labeled(&[("scope", "latency"), ("class", "interactive")], &pair);
+        assert!(line.starts_with("scope=latency class=interactive count=1 "), "line={line}");
+        assert!(line.contains(" wait_p50_ms="), "line={line}");
+        assert!(line.contains(" exec_p99_ms="), "line={line}");
+        // Every token is key=value with a non-empty value.
+        for token in line.split_whitespace() {
+            let (k, v) = token.split_once('=').expect("key=value token");
+            assert!(!k.is_empty() && !v.is_empty(), "token={token}");
+        }
     }
 }

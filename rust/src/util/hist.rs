@@ -1,0 +1,190 @@
+//! Log-bucketed latency histograms for the serving SLO layer.
+//!
+//! The admission scheduler records every completed job's queue wait and
+//! service time into a [`LatencyHistogram`] — a fixed-size array of
+//! power-of-two microsecond buckets. The fixed layout keeps recording
+//! O(1) and allocation-free (the hot path runs under the admission
+//! stats discipline, so a `Vec` resize there would be a latency spike
+//! of its own), while still spanning sub-microsecond to multi-day
+//! latencies. Quantiles are extracted by walking the cumulative counts
+//! and reporting the *upper edge* of the bucket holding the target
+//! rank, so a reported p99 is always an upper bound on the true p99 —
+//! the conservative direction for an SLO readout.
+//!
+//! Bucket layout: bucket 0 holds sub-microsecond samples (`< 1 µs`);
+//! bucket `i >= 1` holds `[2^(i-1), 2^i)` µs. With [`BUCKETS`] = 40 the
+//! last regular bucket ends at `2^39` µs (~6.4 days); anything larger
+//! clamps into it.
+
+use std::time::Duration;
+
+/// Number of power-of-two buckets. Bucket 0 is `< 1 µs`; bucket `i`
+/// (for `i >= 1`) covers `[2^(i-1), 2^i)` µs.
+pub const BUCKETS: usize = 40;
+
+/// A fixed-layout log2 histogram over microsecond latencies.
+///
+/// `Copy` on purpose: snapshots are taken by value under a lock and
+/// examined outside it, exactly like `ServiceStats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: [u64; BUCKETS],
+    count: u64,
+    total_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS], count: 0, total_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a latency of `us` microseconds.
+    pub fn bucket_index(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            // floor(log2(us)) + 1, clamped into the last bucket.
+            let idx = 64 - us.leading_zeros() as usize;
+            idx.min(BUCKETS - 1)
+        }
+    }
+
+    /// Inclusive upper edge (in µs) reported for bucket `idx`.
+    pub fn bucket_upper_us(idx: usize) -> u64 {
+        // Bucket 0 is "< 1 µs"; report 1 µs as its upper edge.
+        1u64 << idx.min(63)
+    }
+
+    pub fn record(&mut self, latency: Duration) {
+        let us = latency.as_micros().min(u64::MAX as u128) as u64;
+        self.counts[Self::bucket_index(us)] += 1;
+        self.count += 1;
+        self.total_us = self.total_us.saturating_add(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn counts(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Mean latency in milliseconds (0.0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_us as f64 / self.count as f64 / 1000.0
+        }
+    }
+
+    /// Quantile `q` in `[0, 1]` as milliseconds, reported as the upper
+    /// edge of the bucket containing the `ceil(q * count)`-th sample
+    /// (1-based). Returns 0.0 when the histogram is empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_upper_us(idx) as f64 / 1000.0;
+            }
+        }
+        Self::bucket_upper_us(BUCKETS - 1) as f64 / 1000.0
+    }
+
+    /// Fold another histogram into this one (used to aggregate shards).
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total_us = self.total_us.saturating_add(other.total_us);
+    }
+}
+
+/// A queue-wait / service-time histogram pair — the split every latency
+/// readout in the metrics surface reports.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyPair {
+    /// Time from enqueue to dispatch.
+    pub wait: LatencyHistogram,
+    /// Time from dispatch to completion (pipeline execution).
+    pub exec: LatencyHistogram,
+}
+
+impl LatencyPair {
+    pub fn merge(&mut self, other: &Self) {
+        self.wait.merge(&other.wait);
+        self.exec.merge(&other.exec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(LatencyHistogram::bucket_index(0), 0);
+        assert_eq!(LatencyHistogram::bucket_index(1), 1);
+        assert_eq!(LatencyHistogram::bucket_index(2), 2);
+        assert_eq!(LatencyHistogram::bucket_index(3), 2);
+        assert_eq!(LatencyHistogram::bucket_index(4), 3);
+        assert_eq!(LatencyHistogram::bucket_index(7), 3);
+        assert_eq!(LatencyHistogram::bucket_index(8), 4);
+        assert_eq!(LatencyHistogram::bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_walk_cumulative_counts() {
+        let mut h = LatencyHistogram::new();
+        // 99 samples at 1 ms (bucket upper edge 1.024 ms) and one at
+        // ~1 s: p50 sits in the 1 ms bucket, p99 still does (the 99th
+        // of 100 ranked samples), p100 reaches the outlier.
+        for _ in 0..99 {
+            h.record(Duration::from_millis(1));
+        }
+        h.record(Duration::from_secs(1));
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ms(0.50);
+        let p99 = h.quantile_ms(0.99);
+        let p100 = h.quantile_ms(1.0);
+        assert!(p50 >= 1.0 && p50 < 2.1, "p50={p50}");
+        assert!(p99 >= 1.0 && p99 < 2.1, "p99={p99}");
+        assert!(p100 >= 1000.0, "p100={p100}");
+        assert!(h.mean_ms() > 1.0 && h.mean_ms() < 20.0);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(3));
+        b.record(Duration::from_micros(300));
+        b.record(Duration::from_micros(300));
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.counts()[LatencyHistogram::bucket_index(3)], 1);
+        assert_eq!(a.counts()[LatencyHistogram::bucket_index(300)], 2);
+    }
+}

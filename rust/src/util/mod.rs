@@ -10,6 +10,7 @@
 //! inside `hotpath_microbench` as the dispatch-overhead baseline.
 
 pub mod arena;
+pub mod hist;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -672,6 +672,17 @@ impl ThreadPool {
         self.handles.len()
     }
 
+    /// Number of workers currently parked inside the condvar wait —
+    /// the same quiescence proof [`scope_blocking`]'s pinning uses
+    /// (`parked[i]` flips only under the injector mutex).
+    /// This is spare capacity an adaptive admission shard may grow
+    /// its lane cap into; the instantaneous value is advisory — a
+    /// worker can unpark the moment the lock is released.
+    pub fn parked_workers(&self) -> usize {
+        let inner = self.shared.injector.lock().unwrap();
+        inner.parked.iter().filter(|&&p| p).count()
+    }
+
     /// How many parallel regions have been opened on this pool so far.
     /// Sequential fast paths (`threads == 1`, or work too small to
     /// split) do not open a region. Confinement tests use this to prove

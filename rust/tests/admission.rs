@@ -313,6 +313,44 @@ fn shutdown_cancels_queued_jobs_and_resolves_tickets() {
 }
 
 #[test]
+fn scheduler_sleeps_without_polling_when_idle() {
+    // Regression: the idle lane-wait used to spin on a 5 ms
+    // `wait_timeout` whose result was discarded — an idle shard woke
+    // its scheduler ~200 times/s forever. The wait is now an untimed
+    // condvar park, so an idle queue must produce zero wakeups.
+    let service = MitigationService::with_config(ServiceConfig {
+        pool: Some(Arc::new(ThreadPool::new(2))),
+        capacity: 4,
+        start_paused: false,
+        ..Default::default()
+    });
+    let report = service.submit(zero_duration_job(), SubmitOptions::bulk()).unwrap().wait();
+    assert!(report.result.is_ok());
+    // Let the scheduler finish its post-job bookkeeping and park.
+    std::thread::sleep(Duration::from_millis(50));
+    let before = service.stats().sched_wakeups;
+    std::thread::sleep(Duration::from_millis(150));
+    let after = service.stats().sched_wakeups;
+    assert_eq!(before, after, "idle scheduler must park on the condvar, not poll");
+}
+
+#[test]
+fn zero_timeout_blocking_submit_fails_cleanly_when_full() {
+    // Regression: the blocking-submit wait loop computed
+    // `give_up - now` after re-reading `now`, which panics when the
+    // deadline has just passed; it now uses `checked_duration_since`
+    // and reports a clean timeout. A zero timeout is the tightest
+    // trigger for that race.
+    let service = paused_service(1, 1);
+    let held = service.try_submit(zero_duration_job(), SubmitOptions::bulk()).unwrap();
+    let opts = SubmitOptions::bulk().with_timeout(Duration::ZERO);
+    let err = service.submit(zero_duration_job(), opts).unwrap_err();
+    assert!(matches!(err, SubmitError::Timeout(_)), "got {err:?}");
+    assert_eq!(service.stats().submit_timeouts, 1);
+    drop(held);
+}
+
+#[test]
 fn try_wait_and_wait_timeout_roundtrip() {
     let service = paused_service(1, 4);
     let ticket = service.try_submit(make_job(&[16, 16], 4, 1), SubmitOptions::bulk()).unwrap();

@@ -82,6 +82,7 @@ def scan_file(path: Path) -> set:
     test_depth = 0
     depth = 0
     pending_cfg_test = False
+    pending_use = None  # accumulates a rustfmt-wrapped `pub use {...};`
     for raw in path.read_text(encoding="utf-8").splitlines():
         line = raw.split("//")[0]
         stripped = line.strip()
@@ -103,12 +104,22 @@ def scan_file(path: Path) -> set:
             if depth <= test_depth:
                 in_test_mod = False
             continue
+        if pending_use is not None:
+            pending_use += " " + stripped
+            if ";" in stripped:
+                for name in use_targets(pending_use):
+                    items.add(f"{module}::{name} [reexport]")
+                pending_use = None
+            continue
         m = ITEM_RE.match(line)
         if not m:
             continue
         kind = m.group("kind")
         rest = m.group("rest")
         if kind == "use":
+            if ";" not in rest:
+                pending_use = rest
+                continue
             for name in use_targets(rest):
                 items.add(f"{module}::{name} [reexport]")
             continue
