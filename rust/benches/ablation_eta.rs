@@ -12,7 +12,10 @@ use qai::quant::ErrorBound;
 use qai::SharedGrid;
 
 fn main() {
-    let etas = [0.0, 0.5, 0.7, 0.8, 0.9, 1.0];
+    // The same grid the engine's quality-target search sweeps — keeping
+    // the ablation and the online search on one list means this table
+    // documents exactly the candidates a served request can pick from.
+    let etas = qai::mitigation::quality::ETA_CANDIDATES;
     let cases = [
         (DatasetKind::MirandaLike, [64usize, 64, 64], 1e-2),
         (DatasetKind::CombustionLike, [64, 64, 64], 1e-2),

@@ -28,7 +28,9 @@ fn hard_clamped_climate(dims: &[usize], seed: u64) -> Grid<f32> {
 }
 
 fn main() {
-    let radii: [Option<f64>; 4] = [None, Some(32.0), Some(12.0), Some(5.0)];
+    // The same grid the engine's quality-target search sweeps (index 0
+    // must stay `None`: the "no taper" row is the baseline below).
+    let radii = qai::mitigation::quality::TAPER_CANDIDATES;
     let cases: Vec<(&str, Grid<f32>)> = vec![
         ("CESM-hard-clamped", hard_clamped_climate(&[256, 256], 3)),
         ("Miranda (banded)", generate(DatasetKind::MirandaLike, &[64, 64, 64], 3)),

@@ -11,7 +11,7 @@
 use qai::bench_support::harness::bench_fn;
 use qai::compressors::{cusz::CuszLike, cuszp::CuszpLike, szp::SzpLike, Compressor};
 use qai::data::synthetic::{generate, DatasetKind};
-use qai::metrics::ssim;
+use qai::metrics::{ssim, ssim_fast, ssim_fast_on};
 use qai::mitigation::boundary::boundary_and_sign;
 use qai::mitigation::edt::edt;
 use qai::mitigation::engine::{self, Engine, MitigationRequest};
@@ -119,6 +119,30 @@ fn main() {
     println!("   -> {:.1} MB/s", r.mbs(bytes));
     let dec = CuszLike.decompress(&stream).unwrap();
     let r = bench_fn("SSIM (w=7, s=2)", warm, samp, || ssim(&orig, &dec.grid, 7, 2));
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+
+    // Fused pooled SSIM vs the reference kernel: same boxed-window
+    // score (bit-identical — the exactness matrix in tests/quality.rs
+    // pins it), fewer full-grid buffers, and parallel axis passes.
+    // Serial first (pure kernel delta), then on a 4-lane pool with a
+    // warm arena (the serving-path configuration).
+    let r = bench_fn("SSIM fused (w=7, s=2, serial)", warm, samp, || {
+        ssim_fast(&orig, &dec.grid, 7, 2)
+    });
+    println!("   -> {:.1} MB/s", r.mbs(bytes));
+    let ssim_pool = pool::ThreadPool::new(4);
+    let ssim_arena = Arena::new();
+    let r = bench_fn("SSIM fused (w=7, s=2, pool x4 + arena)", warm, samp, || {
+        ssim_fast_on(
+            PoolHandle::Explicit(&ssim_pool),
+            ArenaHandle::Pooled(&ssim_arena),
+            &orig,
+            &dec.grid,
+            7,
+            2,
+            4,
+        )
+    });
     println!("   -> {:.1} MB/s", r.mbs(bytes));
 
     // Pool runtime vs the seed's fork-join primitives: identical work

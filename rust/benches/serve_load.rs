@@ -12,9 +12,14 @@
 //!
 //! Results go to stdout and to `BENCH_serve.json` (throughput, p50/p99
 //! total latency, queue-wait p99, shed breakdown) for the CI smoke
-//! check. Latency quantiles come from the same log-bucketed
-//! [`LatencyHistogram`] the engine's metrics surface uses, so a
-//! reported p99 is the bucket upper edge — a conservative bound.
+//! check. The file holds a JSON **array** of per-run records and every
+//! run appends to it, so successive runs (and successive PRs, when the
+//! file is kept around) form a throughput/latency trajectory rather
+//! than a single overwritten sample; legacy single-object files are
+//! wrapped into the array form on first append. Latency quantiles come
+//! from the same log-bucketed [`LatencyHistogram`] the engine's
+//! metrics surface uses, so a reported p99 is the bucket upper edge —
+//! a conservative bound.
 
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::mitigation::engine::{self, Engine, MitigationRequest, ResponseTicket};
@@ -153,13 +158,13 @@ fn main() {
         agg.sched_wakeups, agg.lanes_grown, agg.lanes_shrunk, agg.shed_infeasible
     );
 
-    let json = format!(
+    let record = format!(
         "{{\n  \"bench\": \"serve_load\",\n  \"generator\": \"cargo bench --bench serve_load{}\",\n  \
          \"mode\": \"open-loop\",\n  \"offered_jobs\": {},\n  \"completed\": {},\n  \
          \"failed\": {},\n  \"wall_s\": {:.6},\n  \"throughput_jobs_per_s\": {:.3},\n  \
          \"p50_ms\": {:.3},\n  \"p99_ms\": {:.3},\n  \"wait_p99_ms\": {:.3},\n  \
          \"shed\": {},\n  \"shed_rate\": {:.6},\n  \"shed_queue_full\": {},\n  \
-         \"shed_quota\": {},\n  \"shed_infeasible\": {},\n  \"deadline_misses\": {}\n}}\n",
+         \"shed_quota\": {},\n  \"shed_infeasible\": {},\n  \"deadline_misses\": {}\n}}",
         if quick { " -- --quick" } else { "" },
         offered_jobs,
         completed,
@@ -176,7 +181,28 @@ fn main() {
         shed_infeasible,
         deadline_misses,
     );
-    std::fs::write("BENCH_serve.json", &json).expect("write BENCH_serve.json");
-    println!("\nwrote BENCH_serve.json");
+    // Append this run's record to the trajectory array (no serde in
+    // the dependency tree, so this is plain string surgery on the
+    // array brackets). Three shapes to handle: a fresh/empty file, an
+    // existing array from a previous run, and a legacy single-object
+    // file written before the format became an array.
+    let path = "BENCH_serve.json";
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim();
+    let json = if trimmed.is_empty() {
+        format!("[\n{record}\n]\n")
+    } else if let Some(body) =
+        trimmed.strip_prefix('[').and_then(|s| s.strip_suffix(']')).map(str::trim)
+    {
+        if body.is_empty() {
+            format!("[\n{record}\n]\n")
+        } else {
+            format!("[\n{body},\n{record}\n]\n")
+        }
+    } else {
+        format!("[\n{trimmed},\n{record}\n]\n")
+    };
+    std::fs::write(path, &json).expect("write BENCH_serve.json");
+    println!("\nappended run record to BENCH_serve.json");
     println!("serve_load: OK");
 }

@@ -24,7 +24,7 @@ use qai::data::io;
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{bit_rate, max_rel_error, psnr, ssim};
 use qai::mitigation::engine::{self, Engine, MitigationRequest};
-use qai::mitigation::{Backend, Job, MitigationConfig, SubmitError};
+use qai::mitigation::{Backend, Job, MitigationConfig, QualityTarget, SubmitError};
 use qai::quant::ErrorBound;
 use qai::util::pool;
 use qai::SharedGrid;
@@ -90,7 +90,8 @@ SUBCOMMANDS
   serve       --jobs N [--shards S] [--capacity C] [--tenants T]
               [--quota Q] [--quota-rate R] [--quota-burst B] [--shed]
               [--adaptive-lanes] [--interactive-every K]
-              [--deadline-ms D] [--lanes L] [--metrics] [--dataset ...]
+              [--deadline-ms D] [--lanes L] [--metrics]
+              [--quality-target psnr:N|ssim:V] [--dataset ...]
               [--dims AxBxC] [--rel 1e-2] [--eta 0.9] [--threads N]
               [--seed N]
               (stream N fields through the sharded engine: --shards
@@ -108,8 +109,12 @@ SUBCOMMANDS
                a completion budget (dispatched EDF within a class),
                --lanes > 0 gives each shard a private L-lane pool,
                --metrics appends the scrapeable per-shard/per-tenant
-               key=value stats and latency-histogram lines; see
-               docs/SERVING.md)
+               key=value stats and latency-histogram lines,
+               --quality-target psnr:60 (dB) or ssim:0.98 attaches the
+               original field to every request and lets the engine
+               auto-tune mitigation parameters per (tenant, shape) to
+               meet the floor — one bounded search per key, then
+               cache hits; see docs/SERVING.md)
   distributed [--dataset ...] [--dims AxBxC] [--rel 1e-2] [--ranks N]
               [--strategy embarrassing|exact|approximate] [--seed N]
   info        (PJRT platform + artifacts present)
@@ -388,6 +393,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let deadline_ms: u64 = args.get_parse("deadline-ms", 0)?;
     let lanes: usize = args.get_parse("lanes", 0)?;
     let metrics = args.get_bool("metrics")?;
+    let quality_target = args.get("quality-target").map(|s| parse_quality_target(&s)).transpose()?;
     let cfg = MitigationConfig {
         eta: args.get_parse("eta", 0.9)?,
         threads: args.get_parse("threads", 1)?,
@@ -423,7 +429,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let orig = generate(kind, &dims, seed + i as u64);
         let eb = bound.resolve(&orig.data);
         let (q, dq) = qai::quant::quantize_grid(&orig, eb);
-        inputs.push(Job::with_config(dq, q, eb, cfg));
+        let mut job = Job::with_config(dq, q, eb, cfg);
+        if quality_target.is_some() {
+            // Quality-targeted serving scores (and tunes) against the
+            // original field; the Arc-backed grid makes this a pointer
+            // bump per request, not a copy.
+            job.reference = Some(orig.into());
+            job.target = quality_target;
+        }
+        inputs.push(job);
     }
     let n_elems: usize = inputs.iter().map(|j| j.dq.len()).sum();
 
@@ -495,6 +509,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut failures = 0usize;
     let mut missed = 0usize;
     let mut max_wait = Duration::ZERO;
+    let mut quality_sum = 0.0f64;
+    let mut quality_min = f64::INFINITY;
+    let mut quality_n = 0usize;
     for (i, ticket) in tickets {
         // The trace id follows the job across shard, queue, and lane —
         // it is what the metrics lines' `last_trace=` token refers to.
@@ -504,6 +521,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 max_wait = max_wait.max(resp.queue_wait);
                 if resp.deadline_missed {
                     missed += 1;
+                }
+                if let Some(q) = resp.quality {
+                    quality_sum += q;
+                    quality_min = quality_min.min(q);
+                    quality_n += 1;
                 }
             }
             Err(e) => {
@@ -562,6 +584,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         st.total_queue_wait_s * 1e3 / done,
         st.total_exec_s * 1e3 / done
     );
+    if let Some(target) = quality_target {
+        println!(
+            "quality: target {target:?}, min {quality_min:.4}, mean {:.4} over {quality_n} scored jobs; \
+             searches {} / cache hits {} (evicted {})",
+            quality_sum / quality_n.max(1) as f64,
+            st.quality_misses,
+            st.quality_hits,
+            st.quality_evicted
+        );
+    }
     let ast = engine.arena_stats();
     println!(
         "arena: {:.0}% buffer reuse ({} hits / {} misses), {} B pooled",
@@ -575,6 +607,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     anyhow::ensure!(failures == 0, "{failures} job(s) failed");
     Ok(())
+}
+
+/// Parse a `--quality-target` spec: `psnr:<dB>` or `ssim:<value>`.
+fn parse_quality_target(spec: &str) -> Result<QualityTarget> {
+    let (metric, value) = spec.split_once(':').ok_or_else(|| {
+        anyhow::anyhow!("--quality-target expects metric:value, e.g. psnr:60 or ssim:0.98")
+    })?;
+    let value: f64 = value.parse()?;
+    match metric {
+        "psnr" => Ok(QualityTarget::Psnr(value)),
+        "ssim" => Ok(QualityTarget::Ssim(value)),
+        other => anyhow::bail!("unknown quality metric {other:?} (psnr|ssim)"),
+    }
 }
 
 fn cmd_distributed(args: &Args) -> Result<()> {

@@ -19,10 +19,14 @@ pub fn max_rel_error(original: &[f32], other: &[f32]) -> f64 {
     max_abs_error(original, other) / range
 }
 
-/// Mean squared error in f64.
+/// Mean squared error in f64. Empty inputs are defined as 0.0 (two
+/// empty fields are identical), so `psnr` on empty inputs is `+∞`
+/// rather than a panic.
 pub fn mse(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
-    assert!(!a.is_empty());
+    if a.is_empty() {
+        return 0.0;
+    }
     a.iter().zip(b).map(|(&x, &y)| ((x as f64) - (y as f64)).powi(2)).sum::<f64>() / a.len() as f64
 }
 
@@ -71,5 +75,16 @@ mod tests {
     #[test]
     fn mse_basic() {
         assert_eq!(mse(&[0.0, 0.0], &[3.0, 4.0]), 12.5);
+    }
+
+    #[test]
+    fn mse_empty_is_zero() {
+        // Regression: this used to assert (panic) on empty input.
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn max_abs_empty_is_zero() {
+        assert_eq!(max_abs_error(&[], &[]), 0.0);
     }
 }

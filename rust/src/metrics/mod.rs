@@ -5,7 +5,12 @@
 pub mod errors;
 pub mod psnr;
 pub mod ssim;
+pub mod ssim_fast;
 
-pub use errors::{bit_rate, max_abs_error, max_rel_error};
+pub use errors::{bit_rate, max_abs_error, max_rel_error, mse};
 pub use psnr::psnr;
 pub use ssim::ssim;
+pub use ssim_fast::{
+    ssim_fast, ssim_fast_on, ssim_fast_threads, ssim_gaussian, ssim_gaussian_on,
+    ssim_gaussian_threads,
+};

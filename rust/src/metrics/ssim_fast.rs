@@ -1,0 +1,440 @@
+//! Fused, pooled SSIM kernels.
+//!
+//! [`ssim`](super::ssim::ssim) computes its five window moments with
+//! five separate sequential box-sum passes. The kernels here fuse all
+//! five moments into **one traversal per axis** — each line is gathered
+//! once into thread-local scratch and the sums for x, y, x², y², xy are
+//! produced together — and run the line loop on the shared worker pool
+//! ([`util::pool`](crate::util::pool)), with every full-grid
+//! intermediate held in [`ArenaLease`](crate::util::arena::ArenaLease)
+//! scratch so warm repeated evaluations allocate nothing. That makes
+//! the metric cheap enough to evaluate inline on every serving response
+//! (the `quality=` field in
+//! [`MitigationResponse`](crate::mitigation::MitigationResponse)).
+//!
+//! Two window shapes are exposed:
+//!
+//! * [`ssim_fast`] — the **uniform (box) window**, a drop-in for the
+//!   reference [`ssim`](super::ssim::ssim): same normalization, same
+//!   anchor grid, and the per-line rolling sums replay the reference's
+//!   arithmetic operation-for-operation, so the result is bit-identical
+//!   for every window/stride/thread-count combination (the
+//!   `rust/tests/quality.rs` matrix pins `|Δ| ≤ 1e-9`).
+//! * [`ssim_gaussian`] — the 11-tap **gaussian window** (σ = 1.5, the
+//!   convention of Wang et al. and the gausplat/mssim exemplar),
+//!   evaluated densely at every valid window position. Used as the
+//!   default quality score for [`QualityTarget::Ssim`](crate::mitigation::QualityTarget).
+//!
+//! Determinism: within an axis pass every line is computed with
+//! identical arithmetic regardless of which worker runs it, axis passes
+//! are sequential, and the final anchor reduction writes per-anchor
+//! scores into an indexed buffer summed serially — so the result is
+//! bitwise independent of thread count and of work-stealing order.
+
+use crate::data::grid::Grid;
+use crate::util::arena::ArenaHandle;
+use crate::util::pool::{self, PoolHandle, UnsafeSlice};
+
+use super::ssim::{C1, C2};
+
+/// Window extent of the gaussian SSIM kernel (taps per axis).
+pub const GAUSSIAN_WINDOW: usize = 11;
+/// Standard deviation of the gaussian SSIM window.
+pub const GAUSSIAN_SIGMA: f64 = 1.5;
+
+/// Pooled uniform-window SSIM, bit-identical to the reference
+/// [`ssim`](super::ssim::ssim) (same window/stride semantics). Runs on
+/// the global pool with full parallelism and fresh scratch.
+pub fn ssim_fast(original: &Grid<f32>, other: &Grid<f32>, window: usize, stride: usize) -> f64 {
+    ssim_fast_on(
+        PoolHandle::Global,
+        ArenaHandle::Fresh,
+        original,
+        other,
+        window,
+        stride,
+        pool::parallelism(),
+    )
+}
+
+/// [`ssim_fast`] with an explicit worker count (`threads <= 1` runs
+/// inline and never touches the global pool).
+pub fn ssim_fast_threads(
+    original: &Grid<f32>,
+    other: &Grid<f32>,
+    window: usize,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    ssim_fast_on(PoolHandle::Global, ArenaHandle::Fresh, original, other, window, stride, threads)
+}
+
+/// [`ssim_fast`] with its parallel regions confined to `pool` and its
+/// full-grid scratch leased from `arena`.
+#[allow(clippy::too_many_arguments)]
+pub fn ssim_fast_on(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    original: &Grid<f32>,
+    other: &Grid<f32>,
+    window: usize,
+    stride: usize,
+    threads: usize,
+) -> f64 {
+    fused_ssim(pool, arena, original, other, window, stride, false, threads)
+}
+
+/// Pooled gaussian-window SSIM: 11 taps per active axis, σ = 1.5,
+/// evaluated densely (stride 1). Runs on the global pool with full
+/// parallelism and fresh scratch.
+pub fn ssim_gaussian(original: &Grid<f32>, other: &Grid<f32>) -> f64 {
+    ssim_gaussian_on(PoolHandle::Global, ArenaHandle::Fresh, original, other, pool::parallelism())
+}
+
+/// [`ssim_gaussian`] with an explicit worker count (`threads <= 1` runs
+/// inline and never touches the global pool).
+pub fn ssim_gaussian_threads(original: &Grid<f32>, other: &Grid<f32>, threads: usize) -> f64 {
+    ssim_gaussian_on(PoolHandle::Global, ArenaHandle::Fresh, original, other, threads)
+}
+
+/// [`ssim_gaussian`] with its parallel regions confined to `pool` and
+/// its full-grid scratch leased from `arena`.
+pub fn ssim_gaussian_on(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    original: &Grid<f32>,
+    other: &Grid<f32>,
+    threads: usize,
+) -> f64 {
+    fused_ssim(pool, arena, original, other, GAUSSIAN_WINDOW, 1, true, threads)
+}
+
+/// Unnormalized gaussian taps for a window of `len` samples centered on
+/// `(len - 1) / 2` (half-integer centers for even clamped windows).
+fn gaussian_taps(len: usize, sigma: f64) -> Vec<f64> {
+    let c = (len as f64 - 1.0) / 2.0;
+    (0..len).map(|t| (-(t as f64 - c).powi(2) / (2.0 * sigma * sigma)).exp()).collect()
+}
+
+/// Shared body of both window shapes. `gaussian = false` replays the
+/// reference box-sum arithmetic exactly (rolling per-line sums);
+/// `gaussian = true` applies the weighted taps directly.
+#[allow(clippy::too_many_arguments)]
+fn fused_ssim(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    original: &Grid<f32>,
+    other: &Grid<f32>,
+    window: usize,
+    stride: usize,
+    gaussian: bool,
+    threads: usize,
+) -> f64 {
+    assert_eq!(original.shape, other.shape, "shape mismatch");
+    assert!(window > 0 && stride > 0);
+    let shape = original.shape;
+    let dims = shape.dims;
+
+    // Normalize by the original's value range (QCAT convention,
+    // identical to the reference).
+    let (lo, hi) = original.min_max();
+    let range = (hi - lo) as f64;
+    if range == 0.0 {
+        // Constant original: SSIM degenerates; define 1.0 iff identical.
+        let same = original.data == other.data;
+        return if same { 1.0 } else { 0.0 };
+    }
+    let inv = 1.0 / range;
+    let lof = lo as f64;
+
+    // Per-axis window extent: full `window` on active axes, 1 on unit
+    // axes (the reference's clamping rule).
+    let w = [
+        if dims[0] > 1 { window.min(dims[0]) } else { 1 },
+        if dims[1] > 1 { window.min(dims[1]) } else { 1 },
+        if dims[2] > 1 { window.min(dims[2]) } else { 1 },
+    ];
+    // Per-axis taps and the window normalizer (Σ taps over the box).
+    let kernels: [Vec<f64>; 3] = if gaussian {
+        [
+            gaussian_taps(w[0], GAUSSIAN_SIGMA),
+            gaussian_taps(w[1], GAUSSIAN_SIGMA),
+            gaussian_taps(w[2], GAUSSIAN_SIGMA),
+        ]
+    } else {
+        [vec![1.0; w[0]], vec![1.0; w[1]], vec![1.0; w[2]]]
+    };
+    let norm: f64 = if gaussian {
+        kernels.iter().map(|k| k.iter().sum::<f64>()).product()
+    } else {
+        (w[0] * w[1] * w[2]) as f64
+    };
+
+    let n = original.data.len();
+    let mut sx = arena.lease_stale::<f64>(n);
+    let mut sy = arena.lease_stale::<f64>(n);
+    let mut sxx = arena.lease_stale::<f64>(n);
+    let mut syy = arena.lease_stale::<f64>(n);
+    let mut sxy = arena.lease_stale::<f64>(n);
+    let px = UnsafeSlice::new(&mut sx);
+    let py = UnsafeSlice::new(&mut sy);
+    let pxx = UnsafeSlice::new(&mut sxx);
+    let pyy = UnsafeSlice::new(&mut syy);
+    let pxy = UnsafeSlice::new(&mut sxy);
+
+    // Pointwise init of the five moment fields (elementwise, disjoint).
+    {
+        let xs = &original.data;
+        let ys = &other.data;
+        pool.for_batches(n, threads, 4096, |r| {
+            for i in r {
+                let x = (xs[i] as f64 - lof) * inv;
+                let y = (ys[i] as f64 - lof) * inv;
+                // SAFETY: each index is written by exactly one batch.
+                unsafe {
+                    px.write(i, x);
+                    py.write(i, y);
+                    pxx.write(i, x * x);
+                    pyy.write(i, y * y);
+                    pxy.write(i, x * y);
+                }
+            }
+        });
+    }
+
+    // One fused pass per axis: gather each line of all five fields into
+    // thread-local scratch, windowed-sum, scatter back in place. Lines
+    // along an axis are independent, so only the axis passes themselves
+    // must stay sequential.
+    let strides = shape.strides();
+    for axis in 0..3 {
+        let k = &kernels[axis];
+        let wa = k.len();
+        if wa <= 1 {
+            continue;
+        }
+        let nax = dims[axis];
+        let sax = strides[axis];
+        let (oa, ob) = match axis {
+            0 => (1, 2),
+            1 => (0, 2),
+            _ => (0, 1),
+        };
+        let n_lines = dims[oa] * dims[ob];
+        pool.for_batches(n_lines, threads, 4, |lines| {
+            let mut scratch = vec![0.0f64; 5 * nax];
+            for lid in lines {
+                let a = lid / dims[ob];
+                let b = lid % dims[ob];
+                let base = match axis {
+                    0 => shape.idx(0, a, b),
+                    1 => shape.idx(a, 0, b),
+                    _ => shape.idx(a, b, 0),
+                };
+                // SAFETY (whole line loop): line `lid` owns exactly the
+                // indices `base + t * sax`; index sets of distinct lines
+                // are disjoint and each worker reads only lines it owns,
+                // so no index is touched by two workers in this pass.
+                for t in 0..nax {
+                    let i = base + t * sax;
+                    unsafe {
+                        scratch[t] = px.read(i);
+                        scratch[nax + t] = py.read(i);
+                        scratch[2 * nax + t] = pxx.read(i);
+                        scratch[3 * nax + t] = pyy.read(i);
+                        scratch[4 * nax + t] = pxy.read(i);
+                    }
+                }
+                let bufs = [&px, &py, &pxx, &pyy, &pxy];
+                if gaussian {
+                    for p in 0..=(nax - wa) {
+                        let i = base + p * sax;
+                        for (m, buf) in bufs.iter().enumerate() {
+                            let line = &scratch[m * nax..(m + 1) * nax];
+                            let mut acc = 0.0f64;
+                            for (t, &wt) in k.iter().enumerate() {
+                                acc += wt * line[p + t];
+                            }
+                            unsafe { buf.write(i, acc) };
+                        }
+                    }
+                } else {
+                    // Rolling sums, replaying the reference's
+                    // `sliding_sum_axis` arithmetic exactly.
+                    for (m, buf) in bufs.iter().enumerate() {
+                        let line = &scratch[m * nax..(m + 1) * nax];
+                        let mut acc: f64 = line[..wa].iter().sum();
+                        unsafe { buf.write(base, acc) };
+                        for p in 1..=(nax - wa) {
+                            acc += line[p + wa - 1] - line[p - 1];
+                            unsafe { buf.write(base + p * sax, acc) };
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    // Valid window anchor positions per axis: 0, stride, ..., dim - w.
+    let anchors = |dim: usize, wa: usize| -> Vec<usize> {
+        let mut v = Vec::new();
+        let mut p = 0;
+        while p + wa <= dim {
+            v.push(p);
+            p += stride;
+        }
+        if v.is_empty() {
+            v.push(0); // window clamped to dim already
+        }
+        v
+    };
+    let ai = anchors(dims[0], w[0]);
+    let aj = anchors(dims[1], w[1]);
+    let ak = anchors(dims[2], w[2]);
+    let (nj, nk) = (aj.len(), ak.len());
+    let n_anchors = ai.len() * nj * nk;
+
+    // Per-anchor scores land in an indexed buffer and are summed
+    // serially in anchor order: the total is independent of scheduling
+    // and matches the reference's nested-loop summation order.
+    let mut svals = arena.lease_stale::<f64>(n_anchors);
+    let ps = UnsafeSlice::new(&mut svals);
+    pool.for_batches(n_anchors, threads, 1024, |r| {
+        for t in r {
+            let i = ai[t / (nj * nk)];
+            let rem = t % (nj * nk);
+            let j = aj[rem / nk];
+            let kk = ak[rem % nk];
+            let idx = shape.idx(i, j, kk);
+            // SAFETY: anchor `t` is written by exactly one batch, and
+            // the moment fields are only read during this pass.
+            let s = unsafe {
+                let mx = px.read(idx) / norm;
+                let my = py.read(idx) / norm;
+                let vx = (pxx.read(idx) / norm - mx * mx).max(0.0);
+                let vy = (pyy.read(idx) / norm - my * my).max(0.0);
+                let cxy = pxy.read(idx) / norm - mx * my;
+                ((2.0 * mx * my + C1) * (2.0 * cxy + C2))
+                    / ((mx * mx + my * my + C1) * (vx + vy + C2))
+            };
+            unsafe { ps.write(t, s) };
+        }
+    });
+    let total: f64 = svals.iter().sum();
+    total / n_anchors as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::ssim::ssim;
+    use crate::util::arena::Arena;
+    use crate::util::pool::ThreadPool;
+    use crate::util::rng::Rng;
+
+    fn noisy_pair(n: usize, dims: &[usize], seed: u64) -> (Grid<f32>, Grid<f32>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let b: Vec<f32> = a.iter().map(|v| v + 0.05 * (rng.f32() - 0.5)).collect();
+        (Grid::from_vec(a, dims), Grid::from_vec(b, dims))
+    }
+
+    #[test]
+    fn box_mode_matches_reference_serial() {
+        let (ga, gb) = noisy_pair(9 * 11 * 13, &[9, 11, 13], 21);
+        for (w, s) in [(7, 2), (3, 1), (5, 3), (11, 4)] {
+            let reference = ssim(&ga, &gb, w, s);
+            let fast = ssim_fast_threads(&ga, &gb, w, s, 1);
+            assert_eq!(reference, fast, "w={w} s={s}");
+        }
+    }
+
+    #[test]
+    fn box_mode_matches_reference_pooled() {
+        let _guard = pool::test_guard();
+        let (ga, gb) = noisy_pair(20 * 30, &[20, 30], 22);
+        let reference = ssim(&ga, &gb, 7, 2);
+        let pool = ThreadPool::new(3);
+        let arena = Arena::new();
+        let fast = ssim_fast_on(
+            PoolHandle::Explicit(&pool),
+            ArenaHandle::Pooled(&arena),
+            &ga,
+            &gb,
+            7,
+            2,
+            3,
+        );
+        assert_eq!(reference, fast);
+    }
+
+    #[test]
+    fn gaussian_identical_fields_score_one() {
+        let (ga, _) = noisy_pair(16 * 16, &[16, 16], 23);
+        let s = ssim_gaussian_threads(&ga, &ga, 1);
+        assert!((s - 1.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn gaussian_orders_degradation() {
+        let mut rng = Rng::new(24);
+        let base: Vec<f32> = (0..(24 * 24)).map(|i| ((i % 24) as f32 * 0.3).sin()).collect();
+        let light: Vec<f32> = base.iter().map(|v| v + 0.01 * (rng.f32() - 0.5)).collect();
+        let heavy: Vec<f32> = base.iter().map(|v| v + 0.5 * (rng.f32() - 0.5)).collect();
+        let g = Grid::from_vec(base, &[24, 24]);
+        let gl = Grid::from_vec(light, &[24, 24]);
+        let gh = Grid::from_vec(heavy, &[24, 24]);
+        let sl = ssim_gaussian_threads(&g, &gl, 1);
+        let sh = ssim_gaussian_threads(&g, &gh, 1);
+        assert!(sl > sh, "sl={sl} sh={sh}");
+        assert!(sl > 0.9);
+    }
+
+    #[test]
+    fn gaussian_thread_count_invariant() {
+        let _guard = pool::test_guard();
+        let (ga, gb) = noisy_pair(12 * 14 * 10, &[12, 14, 10], 25);
+        let serial = ssim_gaussian_threads(&ga, &gb, 1);
+        let pool = ThreadPool::new(4);
+        let arena = Arena::new();
+        let pooled = ssim_gaussian_on(
+            PoolHandle::Explicit(&pool),
+            ArenaHandle::Pooled(&arena),
+            &ga,
+            &gb,
+            4,
+        );
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn gaussian_window_clamps_to_small_dims() {
+        let (ga, gb) = noisy_pair(5 * 6, &[5, 6], 26);
+        let s = ssim_gaussian_threads(&ga, &gb, 1);
+        assert!(s.is_finite() && s <= 1.0 + 1e-12, "s={s}");
+    }
+
+    #[test]
+    fn constant_original_defined() {
+        let g = Grid::from_vec(vec![3.0f32; 16], &[4, 4]);
+        assert_eq!(ssim_fast_threads(&g, &g, 7, 2, 1), 1.0);
+        let other = Grid::from_vec(vec![4.0f32; 16], &[4, 4]);
+        assert_eq!(ssim_fast_threads(&g, &other, 7, 2, 1), 0.0);
+        assert_eq!(ssim_gaussian_threads(&g, &g, 1), 1.0);
+    }
+
+    #[test]
+    fn warm_reuse_allocates_nothing() {
+        let _guard = pool::test_guard();
+        let (ga, gb) = noisy_pair(16 * 16, &[16, 16], 27);
+        let arena = Arena::new();
+        let pool = ThreadPool::new(2);
+        let h = PoolHandle::Explicit(&pool);
+        let a = ArenaHandle::Pooled(&arena);
+        let first = ssim_fast_on(h, a, &ga, &gb, 7, 2, 2);
+        let misses_after_first = arena.stats().misses;
+        let second = ssim_fast_on(h, a, &ga, &gb, 7, 2, 2);
+        assert_eq!(first, second);
+        assert_eq!(arena.stats().misses, misses_after_first, "warm run should reuse scratch");
+    }
+}

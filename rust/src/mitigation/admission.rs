@@ -96,7 +96,9 @@
 
 #![deny(missing_docs)]
 
-use crate::mitigation::pipeline::run_pipeline;
+use crate::data::grid::Grid;
+use crate::mitigation::pipeline::{run_pipeline, PipelineStats};
+use crate::mitigation::quality::{self, TunedEntry};
 use crate::mitigation::service::{Job, JobResult};
 use crate::util::arena::{Arena, ArenaHandle};
 use crate::util::hist::LatencyPair;
@@ -268,6 +270,12 @@ pub struct JobReport {
     pub deadline: Option<Duration>,
     /// True iff a deadline was set and `queue_wait + exec` exceeded it.
     pub deadline_missed: bool,
+    /// Output quality against the request's reference field, when one
+    /// was attached: PSNR in dB for
+    /// [`QualityTarget::Psnr`](crate::mitigation::QualityTarget::Psnr)
+    /// requests, fused gaussian SSIM otherwise. `None` when the job
+    /// carried no reference or failed.
+    pub quality: Option<f64>,
 }
 
 /// Completion handle for one admitted job.
@@ -310,6 +318,7 @@ impl TicketState {
             exec: Duration::ZERO,
             deadline: None,
             deadline_missed: false,
+            quality: None,
         }
     }
 }
@@ -479,6 +488,17 @@ pub struct ServiceStats {
     /// thread first runs, and always `0` with adaptive scaling off —
     /// the cap is then statically the pool's lane count.
     pub lane_cap: usize,
+    /// Quality-targeted jobs whose tuned parameters came from the
+    /// learned cache — no search ran, just one closed-form mitigation
+    /// plus one inline metric evaluation.
+    pub quality_hits: u64,
+    /// Quality-targeted jobs that ran the bounded parameter search
+    /// (cache miss, or a cached winner that stopped meeting its
+    /// target) and installed the winner in the cache.
+    pub quality_misses: u64,
+    /// Tuned-parameter cache entries evicted because the per-shard key
+    /// bound ([`MAX_TUNED_KEYS`] internally) was reached.
+    pub quality_evicted: u64,
     /// Trace id of the most recently finished (completed or failed)
     /// job, `0` before any job finishes. Trace ids are process-wide
     /// monotonic, so this is an ordering probe, not a counter — it is
@@ -565,7 +585,8 @@ impl QueueInner {
 }
 
 /// Service-time estimator key: engine tenant (if any) + grid dims.
-type EstKey = (Option<String>, Vec<usize>);
+/// Also the tuned-quality-parameter cache key.
+type EstKey = (Option<String>, [usize; 3]);
 
 /// EWMA smoothing factor for the per-(tenant, shape) service-time
 /// estimate behind deadline shedding.
@@ -575,6 +596,10 @@ const EST_ALPHA: f64 = 0.3;
 const MAX_EST_KEYS: usize = 4096;
 /// Bound on per-tenant latency histogram entries per shard.
 const MAX_LATENCY_TENANTS: usize = 1024;
+/// Bound on tuned-quality-parameter cache keys per shard. At the cap,
+/// installing a new winner evicts an arbitrary existing entry (counted
+/// in [`ServiceStats::quality_evicted`]).
+const MAX_TUNED_KEYS: usize = 4096;
 
 /// Per-class and per-tenant latency histograms, recorded at job
 /// completion. Behind its own mutex, locked alone (never while
@@ -642,6 +667,16 @@ struct Shared {
     /// Current dynamic lane cap; `0` until the scheduler first runs,
     /// and kept `0` when adaptive scaling is off.
     lane_cap: AtomicUsize,
+    /// Learned quality-search winners per (tenant, shape) key (see
+    /// [`crate::mitigation::quality`]). Locked alone, never while
+    /// holding `queue`, `stats`, or `est`.
+    tuned: Mutex<HashMap<EstKey, TunedEntry>>,
+    /// Quality-targeted jobs served from the tuned cache.
+    quality_hits: AtomicU64,
+    /// Quality-targeted jobs that ran the bounded search.
+    quality_misses: AtomicU64,
+    /// Tuned-cache entries evicted at the key bound.
+    quality_evicted: AtomicU64,
 }
 
 impl Shared {
@@ -692,6 +727,10 @@ impl Admission {
             lanes_grown: AtomicU64::new(0),
             lanes_shrunk: AtomicU64::new(0),
             lane_cap: AtomicUsize::new(0),
+            tuned: Mutex::new(HashMap::new()),
+            quality_hits: AtomicU64::new(0),
+            quality_misses: AtomicU64::new(0),
+            quality_evicted: AtomicU64::new(0),
         });
         Admission { shared, scheduler: Mutex::new(None) }
     }
@@ -788,7 +827,7 @@ impl Admission {
         let Some(deadline) = deadline else { return false };
         let est_s = {
             let est = self.shared.est.lock().unwrap();
-            match est.get(&(tenant.clone(), job.dq.shape.dims.clone())) {
+            match est.get(&(tenant.clone(), job.dq.shape.dims)) {
                 Some(&s) => s,
                 None => return false,
             }
@@ -914,6 +953,9 @@ impl Admission {
         snapshot.lanes_grown = self.shared.lanes_grown.load(Ordering::SeqCst);
         snapshot.lanes_shrunk = self.shared.lanes_shrunk.load(Ordering::SeqCst);
         snapshot.lane_cap = self.shared.lane_cap.load(Ordering::SeqCst);
+        snapshot.quality_hits = self.shared.quality_hits.load(Ordering::SeqCst);
+        snapshot.quality_misses = self.shared.quality_misses.load(Ordering::SeqCst);
+        snapshot.quality_evicted = self.shared.quality_evicted.load(Ordering::SeqCst);
         snapshot
     }
 
@@ -1098,11 +1140,11 @@ fn dispatch_job(shared: &Arc<Shared>, pending: Pending, seq: u64) {
 fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
     let start = Instant::now();
     let queue_wait = start.duration_since(pending.enqueued);
-    let handle = PoolHandle::Explicit(shared.thread_pool());
 
     // Error text stays slot-agnostic: the seq lives in the JobReport,
     // and the batch wrapper re-labels errors with its own slot index.
     let job = &pending.job;
+    let mut quality_score: Option<f64> = None;
     let result: JobResult = if job.dq.shape != job.q.shape {
         Err(anyhow::anyhow!(
             "data shape {:?} != index shape {:?}",
@@ -1113,16 +1155,13 @@ fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
         // A panic below (defensive: the pipeline asserts on internal
         // invariants) must not take down the worker or sibling jobs.
         match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_pipeline(
-                handle,
-                ArenaHandle::Pooled(&shared.arena),
-                &job.dq,
-                &job.q,
-                job.eb,
-                &job.cfg,
-            )
+            execute_with_quality(&shared, job, pending.tenant.as_ref())
         })) {
-            Ok(result) => result,
+            Ok(Ok((out, stats, quality))) => {
+                quality_score = quality;
+                Ok((out, stats))
+            }
+            Ok(Err(e)) => Err(e),
             Err(payload) => {
                 let msg = payload
                     .downcast_ref::<String>()
@@ -1160,7 +1199,7 @@ fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
     // time, never while holding `queue` or `stats`.
     {
         let mut est = shared.est.lock().unwrap();
-        let key = (pending.tenant.clone(), pending.job.dq.shape.dims.clone());
+        let key = (pending.tenant.clone(), pending.job.dq.shape.dims);
         match est.get_mut(&key) {
             Some(e) => *e = EST_ALPHA * exec.as_secs_f64() + (1.0 - EST_ALPHA) * *e,
             None if est.len() < MAX_EST_KEYS => {
@@ -1204,6 +1243,7 @@ fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
             exec,
             deadline: pending.deadline,
             deadline_missed,
+            quality: quality_score,
         },
     );
     {
@@ -1211,6 +1251,64 @@ fn run_job(shared: Arc<Shared>, mut pending: Pending, seq: u64) {
         q.running -= 1;
     }
     shared.work.notify_all();
+}
+
+/// Run one job's mitigation, quality-aware. Target-less jobs run the
+/// pipeline with the request's own config (scoring the output inline
+/// when a reference rode along); quality-targeted jobs first consult
+/// the tuned-parameter cache for their (tenant, shape) key — a hit
+/// replays the learned winner and re-scores it, a miss (or a cached
+/// winner that stopped meeting the target — dataset drift) runs the
+/// bounded search from [`crate::mitigation::quality`] and installs the
+/// winner. Concurrent first requests for one cold key may each run the
+/// search; the cache converges to a single winner either way.
+fn execute_with_quality(
+    shared: &Shared,
+    job: &Job,
+    tenant: Option<&String>,
+) -> anyhow::Result<(Grid<f32>, PipelineStats, Option<f64>)> {
+    let handle = PoolHandle::Explicit(shared.thread_pool());
+    let arena = ArenaHandle::Pooled(&shared.arena);
+    let Some(target) = job.target else {
+        let (out, stats) = run_pipeline(handle, arena, &job.dq, &job.q, job.eb, &job.cfg)?;
+        let quality = job
+            .reference
+            .as_ref()
+            .map(|r| quality::evaluate(handle, arena, r, &out, None, job.cfg.threads));
+        return Ok((out, stats, quality));
+    };
+    let Some(reference) = job.reference.as_ref() else {
+        anyhow::bail!("quality target {target:?} requires a reference field on the request");
+    };
+    let key: EstKey = (tenant.cloned(), job.dq.shape.dims);
+    let cached = shared.tuned.lock().unwrap().get(&key).copied();
+    if let Some(entry) = cached {
+        shared.quality_hits.fetch_add(1, Ordering::SeqCst);
+        let (out, stats) = quality::apply_params(handle, arena, job, entry.params)?;
+        let quality = quality::evaluate(handle, arena, reference, &out, Some(target), job.cfg.threads);
+        // Serve the closed-form result unless the cached winner met the
+        // target when installed but no longer does (dataset drift) —
+        // then fall through to a fresh search, counted as a miss, so
+        // the cache self-heals.
+        if target.met_by(quality) || !target.met_by(entry.quality) {
+            return Ok((out, stats, Some(quality)));
+        }
+    }
+    shared.quality_misses.fetch_add(1, Ordering::SeqCst);
+    let outcome = quality::search(handle, arena, job, reference, target)?;
+    {
+        let mut tuned = shared.tuned.lock().unwrap();
+        if !tuned.contains_key(&key) && tuned.len() >= MAX_TUNED_KEYS {
+            // Evict an arbitrary entry to stay bounded; which one is
+            // immaterial — a re-searched key just reinstalls itself.
+            if let Some(evict) = tuned.keys().next().cloned() {
+                tuned.remove(&evict);
+                shared.quality_evicted.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        tuned.insert(key, TunedEntry { params: outcome.params, quality: outcome.quality });
+    }
+    Ok((outcome.output, outcome.stats, Some(outcome.quality)))
 }
 
 /// Resolve every still-queued ticket with a shutdown error.
@@ -1240,6 +1338,7 @@ fn cancel_queued(shared: &Shared) {
                 exec: Duration::ZERO,
                 deadline: p.deadline,
                 deadline_missed: p.deadline.is_some_and(|d| queue_wait > d),
+                quality: None,
             },
         );
     }
@@ -1312,6 +1411,7 @@ mod tests {
                 exec: Duration::ZERO,
                 deadline: None,
                 deadline_missed: false,
+                quality: None,
             },
         );
         poison_slot(&state);

@@ -64,6 +64,7 @@ use crate::mitigation::admission::{
     SubmitOptions,
 };
 use crate::mitigation::pipeline::{run_pipeline, MitigationConfig, PipelineStats};
+use crate::mitigation::quality::{self, QualityTarget};
 use crate::mitigation::service::{
     render_latency_labeled, render_metrics_labeled, Job, ServiceConfig,
 };
@@ -179,6 +180,29 @@ impl MitigationRequest {
         self
     }
 
+    /// Attach the original (pre-compression) field. The serving layer
+    /// scores the output against it with the fused metric kernels and
+    /// reports the score in [`MitigationResponse::quality`]; required
+    /// by [`MitigationRequest::quality_target`]. Accepts an owned
+    /// [`Grid`] or a pre-shared [`SharedGrid`] (a pointer bump).
+    pub fn reference(mut self, reference: impl Into<SharedGrid<f32>>) -> Self {
+        self.job.reference = Some(reference.into());
+        self
+    }
+
+    /// Ask the engine to *meet* a quality floor instead of trusting the
+    /// request's fixed config: on the first job for this
+    /// (tenant, shape) the shard runs a bounded online search over
+    /// (η, taper, filter) candidates and caches the winner, so
+    /// steady-state traffic pays one closed-form mitigation plus one
+    /// inline metric evaluation (see [`crate::mitigation::quality`]).
+    /// Requires [`MitigationRequest::reference`]; without it the job
+    /// fails with an error naming the missing field.
+    pub fn quality_target(mut self, target: QualityTarget) -> Self {
+        self.job.target = Some(target);
+        self
+    }
+
     /// The payload + pipeline config this request carries.
     pub fn job(&self) -> &Job {
         &self.job
@@ -254,6 +278,11 @@ pub struct MitigationResponse {
     pub deadline: Option<Duration>,
     /// True iff a deadline was set and `queue_wait + exec` exceeded it.
     pub deadline_missed: bool,
+    /// Output quality against the request's reference field
+    /// ([`MitigationRequest::reference`]): PSNR in dB for
+    /// [`QualityTarget::Psnr`] requests, fused gaussian SSIM otherwise.
+    /// `None` when the request carried no reference.
+    pub quality: Option<f64>,
 }
 
 /// Completion handle for one admitted request. Resolves exactly once;
@@ -352,6 +381,7 @@ fn into_response(
         exec: report.exec,
         deadline: report.deadline,
         deadline_missed: report.deadline_missed,
+        quality: report.quality,
     })
 }
 
@@ -373,7 +403,27 @@ pub fn execute_on(
 ) -> anyhow::Result<MitigationResponse> {
     let job = &request.job;
     let start = Instant::now();
-    let (output, stats) = run_pipeline(pool, arena, &job.dq, &job.q, job.eb, &job.cfg)?;
+    // Queue-free path: quality targets run the bounded search inline on
+    // every call — there is no shard, hence no tuned-parameter cache.
+    let (output, stats, quality) = match job.target {
+        Some(target) => {
+            let Some(reference) = job.reference.as_ref() else {
+                anyhow::bail!(
+                    "quality target {target:?} requires a reference field on the request"
+                );
+            };
+            let outcome = quality::search(pool, arena, job, reference, target)?;
+            (outcome.output, outcome.stats, Some(outcome.quality))
+        }
+        None => {
+            let (output, stats) = run_pipeline(pool, arena, &job.dq, &job.q, job.eb, &job.cfg)?;
+            let quality = job
+                .reference
+                .as_ref()
+                .map(|r| quality::evaluate(pool, arena, r, &output, None, job.cfg.threads));
+            (output, stats, quality)
+        }
+    };
     let exec = start.elapsed();
     Ok(MitigationResponse {
         output,
@@ -387,6 +437,7 @@ pub fn execute_on(
         exec,
         deadline: request.deadline,
         deadline_missed: request.deadline.is_some_and(|d| exec > d),
+        quality,
     })
 }
 
@@ -452,6 +503,9 @@ impl EngineStats {
             agg.lanes_grown += s.lanes_grown;
             agg.lanes_shrunk += s.lanes_shrunk;
             agg.lane_cap += s.lane_cap;
+            agg.quality_hits += s.quality_hits;
+            agg.quality_misses += s.quality_misses;
+            agg.quality_evicted += s.quality_evicted;
             // Trace ids are process-wide monotonic: the engine-wide
             // "most recent" is the max over shards.
             agg.last_trace_id = agg.last_trace_id.max(s.last_trace_id);

@@ -29,6 +29,7 @@ pub mod edt;
 pub mod engine;
 pub mod interpolate;
 pub mod pipeline;
+pub mod quality;
 pub mod service;
 pub mod sign;
 
@@ -42,6 +43,7 @@ pub use engine::{
 #[allow(deprecated)]
 pub use pipeline::{mitigate, mitigate_with_stats, mitigate_with_stats_on};
 pub use pipeline::{Backend, MitigationConfig, PipelineStats};
+pub use quality::{QualityTarget, TunedParams};
 pub use service::{
     render_latency_labeled, render_metrics, render_metrics_labeled, Job, JobResult,
     MitigationService, ServiceConfig, DEFAULT_QUEUE_CAPACITY,

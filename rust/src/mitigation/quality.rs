@@ -1,0 +1,287 @@
+//! Quality-aware serving: per-request quality targets and the bounded
+//! online parameter search behind them.
+//!
+//! A request that carries a [`QualityTarget`] (and a reference field,
+//! see [`MitigationRequest::quality_target`](super::MitigationRequest::quality_target))
+//! asks the engine to *pick* mitigation parameters instead of trusting
+//! the request's fixed [`MitigationConfig`]: the admission worker runs
+//! a small bounded search over (η, taper, filter) candidates — the same
+//! grids the `ablation_eta`/`ablation_taper` benches sweep — evaluates
+//! each candidate's output against the reference with the fused metric
+//! kernels ([`psnr`] / [`ssim_gaussian_on`]), and stops at the first
+//! candidate meeting the target (falling back to the best seen). The
+//! winner is installed in a bounded per-shard cache keyed by
+//! (tenant, dataset shape), so steady-state traffic pays one
+//! closed-form mitigation plus one inline metric evaluation — no
+//! search. Cache behavior is observable through the
+//! `quality_hits`/`quality_misses`/`quality_evicted` counters in
+//! [`ServiceStats`](super::ServiceStats).
+
+use crate::data::grid::Grid;
+use crate::filters::wiener::quantization_noise_power;
+use crate::filters::{gaussian_filter_on, uniform_filter_sized_on, wiener_filter_sized_on};
+use crate::metrics::psnr::psnr;
+use crate::metrics::ssim_fast::ssim_gaussian_on;
+use crate::util::arena::ArenaHandle;
+use crate::util::pool::PoolHandle;
+
+use super::pipeline::{run_pipeline, MitigationConfig, PipelineStats};
+use super::service::Job;
+
+/// A per-request quality floor: the engine searches mitigation
+/// parameters until the output scores at least this well against the
+/// request's reference field.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QualityTarget {
+    /// Range-based peak signal-to-noise ratio in dB (paper Eq. 4),
+    /// measured by [`metrics::psnr`](crate::metrics::psnr).
+    Psnr(f64),
+    /// Gaussian-window SSIM in `[0, 1]`, measured by
+    /// [`metrics::ssim_gaussian`](crate::metrics::ssim_gaussian).
+    Ssim(f64),
+}
+
+impl QualityTarget {
+    /// The numeric floor requested.
+    pub fn threshold(&self) -> f64 {
+        match *self {
+            QualityTarget::Psnr(db) => db,
+            QualityTarget::Ssim(v) => v,
+        }
+    }
+
+    /// Whether a measured `value` satisfies the target.
+    pub fn met_by(&self, value: f64) -> bool {
+        value >= self.threshold()
+    }
+}
+
+/// η values the bounded search sweeps — the same grid the
+/// `ablation_eta` bench reports.
+pub const ETA_CANDIDATES: [f64; 6] = [0.0, 0.5, 0.7, 0.8, 0.9, 1.0];
+
+/// Taper radii the bounded search sweeps — the same grid the
+/// `ablation_taper` bench reports.
+pub const TAPER_CANDIDATES: [Option<f64>; 4] = [None, Some(32.0), Some(12.0), Some(5.0)];
+
+/// One point in the search space: the paper's quantization-aware
+/// mitigation with explicit knobs, or a classical filter baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TunedParams {
+    /// Quantization-aware interpolation (steps A–E).
+    Qai {
+        /// Interpolation weight η.
+        eta: f64,
+        /// Optional boundary taper radius.
+        taper_radius: Option<f64>,
+    },
+    /// Separable gaussian smoothing with the given σ.
+    Gaussian {
+        /// Filter standard deviation.
+        sigma: f64,
+    },
+    /// 3-tap uniform (mean) smoothing.
+    Uniform,
+    /// 3-tap Wiener filter with quantization noise power `ε²/3`.
+    Wiener,
+}
+
+/// A learned winner installed in the tuned-parameter cache, together
+/// with the quality it achieved when it won.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TunedEntry {
+    /// The winning parameters.
+    pub params: TunedParams,
+    /// Quality measured when the search installed this entry.
+    pub quality: f64,
+}
+
+/// The result of one bounded search.
+pub(crate) struct SearchOutcome {
+    /// Winning parameters (first candidate meeting the target, else the
+    /// best seen).
+    pub params: TunedParams,
+    /// The winning candidate's output field.
+    pub output: Grid<f32>,
+    /// Pipeline stats of the winning run (zeros for filter baselines).
+    pub stats: PipelineStats,
+    /// Quality of `output` under the target's metric.
+    pub quality: f64,
+    /// How many candidates were evaluated before stopping.
+    pub evaluated: usize,
+}
+
+/// The deterministic candidate order: the request's own (η, taper)
+/// first (a well-configured request early-exits after one evaluation),
+/// then the η grid strongest-first at the request's taper, then the
+/// taper grid at the default η, then the filter baselines. Duplicates
+/// are dropped, so the search is bounded by ~13 evaluations.
+pub(crate) fn candidates(base: &MitigationConfig) -> Vec<TunedParams> {
+    let mut v: Vec<TunedParams> = Vec::new();
+    let mut push = |p: TunedParams, v: &mut Vec<TunedParams>| {
+        if !v.contains(&p) {
+            v.push(p);
+        }
+    };
+    push(TunedParams::Qai { eta: base.eta, taper_radius: base.taper_radius }, &mut v);
+    for &eta in ETA_CANDIDATES.iter().rev() {
+        push(TunedParams::Qai { eta, taper_radius: base.taper_radius }, &mut v);
+    }
+    for &taper_radius in TAPER_CANDIDATES.iter() {
+        push(TunedParams::Qai { eta: 0.9, taper_radius }, &mut v);
+    }
+    push(TunedParams::Gaussian { sigma: 1.0 }, &mut v);
+    push(TunedParams::Uniform, &mut v);
+    push(TunedParams::Wiener, &mut v);
+    v
+}
+
+/// Execute one candidate on `job`'s payload. QAI candidates run the
+/// full pipeline with the candidate's knobs (threads/backend from the
+/// request); filter baselines smooth the decompressed field directly
+/// and report zeroed pipeline stats.
+pub(crate) fn apply_params(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    job: &Job,
+    params: TunedParams,
+) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
+    match params {
+        TunedParams::Qai { eta, taper_radius } => {
+            let cfg = MitigationConfig { eta, taper_radius, ..job.cfg };
+            run_pipeline(pool, arena, &job.dq, &job.q, job.eb, &cfg)
+        }
+        TunedParams::Gaussian { sigma } => {
+            Ok((gaussian_filter_on(pool, &job.dq, sigma, job.cfg.threads), PipelineStats::default()))
+        }
+        TunedParams::Uniform => {
+            Ok((uniform_filter_sized_on(pool, &job.dq, 3, job.cfg.threads), PipelineStats::default()))
+        }
+        TunedParams::Wiener => {
+            let noise = quantization_noise_power(job.eb.abs);
+            Ok((
+                wiener_filter_sized_on(pool, &job.dq, 3, noise, job.cfg.threads),
+                PipelineStats::default(),
+            ))
+        }
+    }
+}
+
+/// Score `out` against `reference` under the target's metric: PSNR for
+/// [`QualityTarget::Psnr`], fused gaussian SSIM otherwise (also the
+/// default score for target-less requests that carry a reference).
+pub(crate) fn evaluate(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    reference: &Grid<f32>,
+    out: &Grid<f32>,
+    target: Option<QualityTarget>,
+    threads: usize,
+) -> f64 {
+    match target {
+        Some(QualityTarget::Psnr(_)) => psnr(&reference.data, &out.data),
+        _ => ssim_gaussian_on(pool, arena, reference, out, threads),
+    }
+}
+
+/// Run the bounded search: evaluate candidates in [`candidates`] order,
+/// return at the first one meeting `target`, else the best seen.
+pub(crate) fn search(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    job: &Job,
+    reference: &Grid<f32>,
+    target: QualityTarget,
+) -> anyhow::Result<SearchOutcome> {
+    let mut best: Option<SearchOutcome> = None;
+    let mut evaluated = 0usize;
+    for params in candidates(&job.cfg) {
+        let (output, stats) = apply_params(pool, arena, job, params)?;
+        evaluated += 1;
+        let quality = evaluate(pool, arena, reference, &output, Some(target), job.cfg.threads);
+        let outcome = SearchOutcome { params, output, stats, quality, evaluated };
+        if target.met_by(quality) {
+            return Ok(outcome);
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => quality > b.quality,
+        };
+        if better {
+            best = Some(outcome);
+        }
+    }
+    let mut b = best.expect("candidate list is never empty");
+    b.evaluated = evaluated;
+    Ok(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::quant::{quantize_grid, ErrorBound};
+
+    fn make_job(dims: &[usize]) -> (Grid<f32>, Job) {
+        let orig = generate(DatasetKind::ClimateLike, dims, 7);
+        let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+        let (q, dq) = quantize_grid(&orig, eb);
+        let job = Job::new(dq, q, eb);
+        (orig, job)
+    }
+
+    #[test]
+    fn candidate_order_starts_with_request_config() {
+        let cfg = MitigationConfig { eta: 0.7, taper_radius: Some(12.0), ..Default::default() };
+        let c = candidates(&cfg);
+        assert_eq!(c[0], TunedParams::Qai { eta: 0.7, taper_radius: Some(12.0) });
+        assert!(c.len() <= 14, "search space must stay small, got {}", c.len());
+        // Deduped: the base config appears exactly once.
+        assert_eq!(c.iter().filter(|&&p| p == c[0]).count(), 1);
+    }
+
+    #[test]
+    fn met_by_respects_threshold() {
+        assert!(QualityTarget::Psnr(60.0).met_by(60.0));
+        assert!(QualityTarget::Psnr(60.0).met_by(f64::INFINITY));
+        assert!(!QualityTarget::Psnr(60.0).met_by(59.9));
+        assert!(QualityTarget::Ssim(0.9).met_by(0.95));
+        assert!(!QualityTarget::Ssim(0.9).met_by(0.85));
+    }
+
+    #[test]
+    fn search_meets_reachable_psnr_target() {
+        let (orig, job) = make_job(&[40, 40]);
+        // Measure what the default config achieves, then ask for
+        // slightly less: the first candidate must already satisfy it.
+        let (out, _) = apply_params(PoolHandle::Global, ArenaHandle::Fresh, &job, candidates(&job.cfg)[0])
+            .unwrap();
+        let reachable = psnr(&orig.data, &out.data);
+        let target = QualityTarget::Psnr(reachable - 1.0);
+        let got = search(PoolHandle::Global, ArenaHandle::Fresh, &job, &orig, target).unwrap();
+        assert!(target.met_by(got.quality), "quality={} target={:?}", got.quality, target);
+        assert_eq!(got.evaluated, 1, "first candidate should early-exit");
+    }
+
+    #[test]
+    fn unreachable_target_returns_best_seen() {
+        let (orig, job) = make_job(&[24, 24]);
+        let target = QualityTarget::Psnr(f64::INFINITY);
+        let got = search(PoolHandle::Global, ArenaHandle::Fresh, &job, &orig, target).unwrap();
+        assert!(!target.met_by(got.quality));
+        assert_eq!(got.evaluated, candidates(&job.cfg).len(), "must exhaust the space");
+        assert!(got.quality.is_finite());
+    }
+
+    #[test]
+    fn filter_candidates_execute() {
+        let (orig, job) = make_job(&[16, 16]);
+        for params in [TunedParams::Gaussian { sigma: 1.0 }, TunedParams::Uniform, TunedParams::Wiener]
+        {
+            let (out, stats) =
+                apply_params(PoolHandle::Global, ArenaHandle::Fresh, &job, params).unwrap();
+            assert_eq!(out.shape, orig.shape);
+            assert_eq!(stats.n_boundary1, 0, "filter baselines report zeroed stats");
+        }
+    }
+}

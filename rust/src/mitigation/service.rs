@@ -43,6 +43,7 @@ use crate::data::grid::{Grid, SharedGrid};
 use crate::mitigation::admission::{JobTicket, ServiceStats, SubmitError, SubmitOptions};
 use crate::mitigation::engine::{Engine, MitigationRequest};
 use crate::mitigation::pipeline::{MitigationConfig, PipelineStats};
+use crate::mitigation::quality::QualityTarget;
 use crate::quant::{QIndex, ResolvedBound};
 use crate::util::arena::{Arena, ArenaStats};
 use crate::util::hist::LatencyPair;
@@ -78,6 +79,16 @@ pub struct Job {
     pub eb: ResolvedBound,
     /// Pipeline configuration (η, per-job threads, backend, taper).
     pub cfg: MitigationConfig,
+    /// Optional original (pre-compression) field. When present, the
+    /// serving layer scores the output against it with the fused
+    /// metric kernels and reports the score as `quality` in
+    /// [`JobReport`](crate::mitigation::admission::JobReport) /
+    /// [`MitigationResponse`](crate::mitigation::engine::MitigationResponse).
+    pub reference: Option<SharedGrid<f32>>,
+    /// Optional per-request quality floor; requires `reference`. When
+    /// set, the engine auto-tunes mitigation parameters to meet it
+    /// (see [`QualityTarget`] and the quality module docs).
+    pub target: Option<QualityTarget>,
 }
 
 impl Job {
@@ -98,7 +109,7 @@ impl Job {
         eb: ResolvedBound,
         cfg: MitigationConfig,
     ) -> Self {
-        Job { dq: dq.into(), q: q.into(), eb, cfg }
+        Job { dq: dq.into(), q: q.into(), eb, cfg, reference: None, target: None }
     }
 }
 
@@ -337,7 +348,8 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
          total_queue_wait_s={:.6} total_exec_s={:.6} arena_hits={} arena_misses={} \
          arena_returns={} arena_detached={} arena_adopted={} arena_dropped={} \
          arena_bytes_outstanding={} arena_bytes_pooled={} shed_infeasible={} \
-         sched_wakeups={} lanes_grown={} lanes_shrunk={} lane_cap={} last_trace={}",
+         sched_wakeups={} lanes_grown={} lanes_shrunk={} lane_cap={} \
+         quality_hits={} quality_misses={} quality_evicted={} last_trace={}",
         stats.submitted,
         stats.rejected_full,
         stats.submit_timeouts,
@@ -366,6 +378,9 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
         stats.lanes_grown,
         stats.lanes_shrunk,
         stats.lane_cap,
+        stats.quality_hits,
+        stats.quality_misses,
+        stats.quality_evicted,
         stats.last_trace_id,
     )
 }
