@@ -18,6 +18,7 @@ use qai::mitigation::engine::{self, Engine, MitigationRequest};
 use qai::mitigation::interpolate::compensate;
 use qai::mitigation::pipeline::MitigationConfig;
 use qai::mitigation::sign::propagate_signs;
+use qai::mitigation::tiled::{run_tiled_szp, TiledConfig};
 use qai::quant::{quantize_grid, ErrorBound};
 use qai::util::arena::{Arena, ArenaHandle};
 use qai::util::pool::{self, PoolHandle};
@@ -350,6 +351,97 @@ fn main() {
         st.max_queue_depth,
         st.total_queue_wait_s * 1e3 / st.submitted.max(1) as f64
     );
+
+    // Tiled streaming executor vs the whole-field path on the largest
+    // bench grid, fused with the seeking SZp decoder: the acceptance
+    // numbers are (a) first-tile latency well under the whole-field
+    // wall (the streaming-consumer win), and (b) arena peak scratch
+    // under the published tile budget (the O(tile × lanes) memory
+    // claim, counter-proven rather than asserted in prose).
+    println!("\n== tiled streaming executor ({side}^3 SZp stream, threads = 4) ==");
+    let tside = side / 4;
+    let tiled_cfg = TiledConfig::new(&[tside; 3]);
+    let t_cfg = MitigationConfig { threads: 4, ..Default::default() };
+    let r_whole = bench_fn("whole-field decode+mitigate", warm, samp, || {
+        let dec = SzpLike::default().decompress(&stream_s).unwrap();
+        let req =
+            MitigationRequest::new(dec.grid, dec.quant_indices, dec.bound).config(t_cfg);
+        engine::execute(&req).unwrap()
+    });
+    println!("   -> {:.1} MB/s", r_whole.mbs(bytes));
+    let t_codec = SzpLike::default();
+    let t_arena = Arena::new();
+    let mut first_tile_min = f64::INFINITY;
+    let r_tiled = bench_fn(
+        &format!("tiled decode+mitigate (tile {tside}^3)"),
+        warm,
+        samp,
+        || {
+            let outcome = run_tiled_szp(
+                PoolHandle::Global,
+                ArenaHandle::Pooled(&t_arena),
+                &t_codec,
+                &stream_s,
+                &t_cfg,
+                &tiled_cfg,
+                &|_| {},
+            )
+            .unwrap();
+            first_tile_min = first_tile_min.min(outcome.first_tile.as_secs_f64());
+            outcome
+        },
+    );
+    println!("   -> {:.1} MB/s", r_tiled.mbs(bytes));
+    let t_shape = qai::data::grid::Shape::new(&dims);
+    let t_budget = tiled_cfg.scratch_budget_bytes(&t_shape, 4);
+    let t_peak = t_arena.stats().bytes_peak;
+    let first_frac = first_tile_min / r_whole.mean.max(1e-12);
+    println!(
+        "   -> first tile in {:.2} ms = {:.2}x whole-field ({:.1} ms); target < 0.25x",
+        first_tile_min * 1e3,
+        first_frac,
+        r_whole.mean * 1e3
+    );
+    println!(
+        "   -> peak scratch {} B of {} B budget ({:.1}% used, whole-field working set ~{} B)",
+        t_peak,
+        t_budget,
+        t_peak as f64 / t_budget as f64 * 100.0,
+        n * qai::mitigation::SCRATCH_BYTES_PER_ELEM
+    );
+
+    let record = format!(
+        "{{\n  \"bench\": \"tiled\",\n  \"generator\": \"cargo bench --bench hotpath_microbench{}\",\n  \
+         \"grid\": {side},\n  \"tile\": {tside},\n  \"threads\": 4,\n  \
+         \"whole_field_s\": {:.6},\n  \"tiled_total_s\": {:.6},\n  \
+         \"first_tile_s\": {:.6},\n  \"first_tile_frac\": {:.6},\n  \
+         \"scratch_peak_bytes\": {t_peak},\n  \"scratch_budget_bytes\": {t_budget}\n}}",
+        if quick { " -- --quick" } else { "" },
+        r_whole.mean,
+        r_tiled.mean,
+        first_tile_min,
+        first_frac,
+    );
+    // Same string-surgery append as BENCH_serve.json (no serde in the
+    // tree): fresh/empty file, existing array, or legacy single object.
+    let path = "BENCH_tiled.json";
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim();
+    let json = if trimmed.is_empty() {
+        format!("[\n{record}\n]\n")
+    } else if let Some(body) =
+        trimmed.strip_prefix('[').and_then(|s| s.strip_suffix(']')).map(str::trim)
+    {
+        if body.is_empty() {
+            format!("[\n{record}\n]\n")
+        } else {
+            format!("[\n{body},\n{record}\n]\n")
+        }
+    } else {
+        format!("[\n{trimmed},\n{record}\n]\n")
+    };
+    std::fs::write(path, &json).expect("write BENCH_tiled.json");
+    println!("appended run record to BENCH_tiled.json");
 
     println!("\nhotpath_microbench: OK");
 }

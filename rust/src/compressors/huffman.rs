@@ -132,12 +132,37 @@ pub fn encode(symbols: &[u32]) -> Vec<u8> {
     out
 }
 
-/// Decode a stream produced by [`encode`].
+/// Number of symbols a stream produced by [`encode`] decodes to, read
+/// from the stream header without touching the payload. Lets a caller
+/// lease an exactly-sized output buffer before [`decode_into`].
+pub fn decoded_len(buf: &[u8]) -> Result<usize> {
+    let mut off = 0usize;
+    Ok(bytes::get_u64(buf, &mut off)? as usize)
+}
+
+/// Decode a stream produced by [`encode`] into a freshly-allocated
+/// vector. Allocation-sensitive callers (the SZ3 decoder's warm path)
+/// use [`decoded_len`] + [`decode_into`] with an arena-leased buffer
+/// instead.
 pub fn decode(buf: &[u8]) -> Result<Vec<u32>> {
+    let mut out = vec![0u32; decoded_len(buf)?];
+    decode_into(buf, &mut out)?;
+    Ok(out)
+}
+
+/// Decode a stream produced by [`encode`] into a caller-provided
+/// buffer of exactly [`decoded_len`] elements. Every element of `out`
+/// is overwritten on success; on error its contents are unspecified.
+pub fn decode_into(buf: &[u8], out: &mut [u32]) -> Result<()> {
     let mut off = 0usize;
     let n = bytes::get_u64(buf, &mut off)? as usize;
+    anyhow::ensure!(
+        out.len() == n,
+        "output buffer holds {} elements, stream decodes to {n}",
+        out.len()
+    );
     if n == 0 {
-        return Ok(Vec::new());
+        return Ok(());
     }
     let alpha = bytes::get_u32(buf, &mut off)? as usize;
     anyhow::ensure!(alpha > 0, "empty alphabet for nonempty stream");
@@ -177,8 +202,7 @@ pub fn decode(buf: &[u8]) -> Result<Vec<u32>> {
     let payload_len = bytes::get_u64(buf, &mut off)? as usize;
     anyhow::ensure!(off + payload_len <= buf.len(), "stream truncated in payload");
     let mut r = BitReader::new(&buf[off..off + payload_len]);
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
+    for slot in out.iter_mut() {
         let mut code = 0u64;
         let mut l = 0u32;
         loop {
@@ -190,13 +214,13 @@ pub fn decode(buf: &[u8]) -> Result<Vec<u32>> {
                 let fc = first_code[l as usize];
                 if code >= fc && code - fc < count[l as usize] as u64 {
                     let idx = first_index[l as usize] + (code - fc) as usize;
-                    out.push(symbols_in_order[idx]);
+                    *slot = symbols_in_order[idx];
                     break;
                 }
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -265,6 +289,22 @@ mod tests {
             let enc = encode(&data);
             assert_eq!(decode(&enc).unwrap(), data);
         });
+    }
+
+    #[test]
+    fn decode_into_matches_decode_and_checks_length() {
+        let data: Vec<u32> = (0..500).map(|i| (i * 7 % 23) as u32).collect();
+        let enc = encode(&data);
+        assert_eq!(decoded_len(&enc).unwrap(), 500);
+        let mut out = vec![u32::MAX; 500];
+        decode_into(&enc, &mut out).unwrap();
+        assert_eq!(out, data);
+        let mut short = vec![0u32; 499];
+        assert!(decode_into(&enc, &mut short).is_err(), "length mismatch must error");
+        let mut empty_out: [u32; 0] = [];
+        let empty = encode(&[]);
+        assert_eq!(decoded_len(&empty).unwrap(), 0);
+        decode_into(&empty, &mut empty_out).unwrap();
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use crate::compressors::bitio::{bytes, unzigzag, zigzag};
 use crate::compressors::cusz::{read_header, write_header};
 use crate::compressors::huffman;
-use crate::data::grid::Grid;
+use crate::data::grid::{Grid, Shape};
 use crate::quant::ResolvedBound;
 use crate::util::arena::ArenaHandle;
 use crate::util::pool::{PoolHandle, UnsafeSlice};
@@ -143,14 +143,22 @@ impl Sz3Like {
         self.decompress_on(PoolHandle::Global, ArenaHandle::Fresh, buf)
     }
 
+    /// Shape and resolved bound of an SZ3-like stream without decoding
+    /// the payload (used by the tiled executor to plan tile geometry).
+    pub fn stream_info(buf: &[u8]) -> Result<(Shape, ResolvedBound)> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not an SZ3-like stream");
+        read_header(buf, &mut off)
+    }
+
     /// [`Sz3Like::decompress`] with the within-level parallel decode
-    /// confined to `pool` instead of the global one, and the full-grid
-    /// buffers (reconstruction output and the residual-code scratch)
-    /// acquired from `arena`. The reconstruction escapes inside the
-    /// returned grid and is accounted as detached; hand it back with
-    /// [`crate::util::arena::Arena::adopt`] to keep warm decodes
-    /// allocation-free. (The entropy coder still allocates its symbol
-    /// buffer internally.)
+    /// confined to `pool` instead of the global one, and every full-grid
+    /// buffer (reconstruction output, entropy-coder symbols, and the
+    /// residual-code scratch) acquired from `arena` — a warm decode is
+    /// allocation-free. The reconstruction escapes inside the returned
+    /// grid and is accounted as detached; hand it back with
+    /// [`crate::util::arena::Arena::adopt`] to keep it so.
     pub fn decompress_on(
         &self,
         pool: PoolHandle<'_>,
@@ -167,18 +175,54 @@ impl Sz3Like {
 
         let n_anchors = bytes::get_u64(buf, &mut off)? as usize;
         anyhow::ensure!(n_anchors == n.div_ceil(anchor_stride), "anchor count mismatch");
-        let mut recon = arena.take_filled(n, 0.0f32);
-        // From here on every early error must give the lease back.
-        if let Err(e) =
-            self.decode_into(pool, arena, buf, off, n_anchors, anchor_stride, lv, eb, &mut recon)
-        {
-            arena.give(recon);
-            return Err(e);
-        }
-        arena.detach(&recon);
-        let mut grid = Grid::from_vec(recon, shape.user_dims());
+        // RAII lease: any decode error drops it and the buffer returns
+        // to the arena without a manual give-back on each early exit.
+        let mut recon = arena.lease_filled(n, 0.0f32);
+        self.decode_into(pool, arena, buf, off, n_anchors, anchor_stride, lv, eb, &mut recon)?;
+        let mut grid = Grid::from_vec(recon.detach(), shape.user_dims());
         grid.shape.ndim = shape.ndim;
         Ok(grid)
+    }
+
+    /// Decode only `range` of the flattened reconstruction.
+    ///
+    /// SZ3's multi-level interpolation makes every point depend on a
+    /// cone of coarser-level neighbors that spans the whole array, so —
+    /// unlike [`crate::compressors::szp::SzpLike::decode_range_on`],
+    /// whose blocks are independent — there is no O(range) seek path.
+    /// This entry point is an *honest* fallback for the tiled executor:
+    /// it replays the full field into arena-recycled scratch (zero
+    /// allocations when warm, and the scratch returns to the arena
+    /// before this call completes) and copies out just the requested
+    /// range. Compute stays O(field); only the escaping memory is
+    /// O(range).
+    pub fn decode_range_on(
+        &self,
+        pool: PoolHandle<'_>,
+        arena: ArenaHandle<'_>,
+        buf: &[u8],
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<f32>> {
+        if range.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not an SZ3-like stream");
+        let (shape, eb) = read_header(buf, &mut off)?;
+        let n = shape.len();
+        anyhow::ensure!(range.end <= n, "range {range:?} out of bounds for {n} elements");
+        let lv = levels_for(n);
+        let anchor_stride = 1usize << lv;
+
+        let n_anchors = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(n_anchors == n.div_ceil(anchor_stride), "anchor count mismatch");
+        let mut recon = arena.lease_filled(n, 0.0f32);
+        self.decode_into(pool, arena, buf, off, n_anchors, anchor_stride, lv, eb, &mut recon)?;
+        let mut part: Vec<f32> = arena.take_stale(range.len());
+        part.copy_from_slice(&recon[range]);
+        arena.detach(&part);
+        Ok(part)
     }
 
     /// The fallible body of [`Sz3Like::decompress_on`] after the output
@@ -208,57 +252,59 @@ impl Sz3Like {
         for _ in 0..n_out {
             outliers.push(bytes::get_u64(buf, &mut off)?);
         }
-        let symbols = huffman::decode(&buf[off..]).context("huffman payload")?;
+        // Entropy-decode into a leased symbol buffer — the last
+        // full-size allocation on the warm decode path is gone.
+        let n_sym = huffman::decoded_len(&buf[off..]).context("huffman payload")?;
+        anyhow::ensure!(n_sym <= n, "symbol count exceeds data size");
+        let mut symbols = arena.lease_stale::<u32>(n_sym);
+        huffman::decode_into(&buf[off..], &mut symbols).context("huffman payload")?;
 
-        // Rebuild codes into leased scratch (given back below — it
+        // Rebuild codes into leased scratch (returned on drop — it
         // never escapes this function; stale lease: the zip loop
         // writes every slot before any read).
-        let mut codes: Vec<i64> = arena.take_stale(symbols.len());
-        let replay = (|| -> Result<()> {
-            let mut next_outlier = 0usize;
-            for (slot, &s) in codes.iter_mut().zip(&symbols) {
-                let zz = if s as u64 == ESCAPE {
-                    anyhow::ensure!(next_outlier < outliers.len(), "missing outlier");
-                    let v = outliers[next_outlier];
-                    next_outlier += 1;
-                    v
-                } else {
-                    s as u64
-                };
-                *slot = unzigzag(zz);
-            }
+        let mut codes = arena.lease_stale::<i64>(n_sym);
+        let mut next_outlier = 0usize;
+        for (slot, &s) in codes.iter_mut().zip(symbols.iter()) {
+            let zz = if s as u64 == ESCAPE {
+                anyhow::ensure!(next_outlier < outliers.len(), "missing outlier");
+                let v = outliers[next_outlier];
+                next_outlier += 1;
+                v
+            } else {
+                s as u64
+            };
+            *slot = unzigzag(zz);
+        }
+        drop(symbols);
 
-            // Replay levels; within a level all predictions read only
-            // coarser positions, so the level is embarrassingly parallel.
-            let two_eps = 2.0 * eb.abs;
-            let mut code_base = 0usize;
-            for lvl in (1..=lv).rev() {
-                let s = 1usize << lvl;
-                let h = s >> 1;
-                let count = if n > h { (n - h).div_ceil(s) } else { 0 };
-                anyhow::ensure!(code_base + count <= codes.len(), "codes exhausted at level {lvl}");
-                {
-                    let rs = UnsafeSlice::new(recon);
-                    let codes = &codes;
-                    pool.for_range(count, self.threads, 1024, |t| {
-                        let i = h + t * s;
-                        // SAFETY: this level writes only positions ≡ h (mod s),
-                        // reads only positions ≡ 0 (mod s) — disjoint.
-                        let pred = {
-                            let r = unsafe { rs.slice_mut(0, n) };
-                            predict(r, i, h)
-                        };
-                        let code = codes[code_base + t];
-                        unsafe { rs.write(i, (pred + code as f64 * two_eps) as f32) };
-                    });
-                }
-                code_base += count;
+        // Replay levels; within a level all predictions read only
+        // coarser positions, so the level is embarrassingly parallel.
+        let two_eps = 2.0 * eb.abs;
+        let mut code_base = 0usize;
+        for lvl in (1..=lv).rev() {
+            let s = 1usize << lvl;
+            let h = s >> 1;
+            let count = if n > h { (n - h).div_ceil(s) } else { 0 };
+            anyhow::ensure!(code_base + count <= codes.len(), "codes exhausted at level {lvl}");
+            {
+                let rs = UnsafeSlice::new(recon);
+                let codes: &[i64] = &codes;
+                pool.for_range(count, self.threads, 1024, |t| {
+                    let i = h + t * s;
+                    // SAFETY: this level writes only positions ≡ h (mod s),
+                    // reads only positions ≡ 0 (mod s) — disjoint.
+                    let pred = {
+                        let r = unsafe { rs.slice_mut(0, n) };
+                        predict(r, i, h)
+                    };
+                    let code = codes[code_base + t];
+                    unsafe { rs.write(i, (pred + code as f64 * two_eps) as f32) };
+                });
             }
-            anyhow::ensure!(code_base == codes.len(), "trailing codes in stream");
-            Ok(())
-        })();
-        arena.give(codes);
-        replay
+            code_base += count;
+        }
+        anyhow::ensure!(code_base == codes.len(), "trailing codes in stream");
+        Ok(())
     }
 }
 
@@ -307,6 +353,63 @@ mod tests {
         let a = Sz3Like::default().compress(&g, eb).unwrap().len();
         let b = CuszpLike.compress(&g, eb).unwrap().len();
         assert!(a < b, "sz3={a} cuszp={b}");
+    }
+
+    #[test]
+    fn range_decode_matches_full_decode() {
+        use crate::util::pool::PoolHandle;
+        let g = generate(DatasetKind::TurbulenceLike, &[30, 30, 4], 9);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let c = Sz3Like { threads: 2 };
+        let stream = c.compress(&g, eb).unwrap();
+        let full = c.decompress(&stream).unwrap();
+        let n = g.len();
+        for range in [0..1, 0..n, 100..1100, n - 1..n, 64..64] {
+            let part = c
+                .decode_range_on(PoolHandle::Global, ArenaHandle::Fresh, &stream, range.clone())
+                .unwrap();
+            assert_eq!(&part[..], &full.data[range.clone()], "range {range:?}");
+        }
+        assert!(c
+            .decode_range_on(PoolHandle::Global, ArenaHandle::Fresh, &stream, n..n + 5)
+            .is_err());
+    }
+
+    #[test]
+    fn range_decode_recycles_scratch_through_a_pooled_arena() {
+        use crate::util::arena::Arena;
+        use crate::util::pool::PoolHandle;
+        let g = generate(DatasetKind::MirandaLike, &[16, 16, 8], 5);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let c = Sz3Like::default();
+        let stream = c.compress(&g, eb).unwrap();
+        let arena = Arena::new();
+        let part = c
+            .decode_range_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream, 10..500)
+            .unwrap();
+        assert_eq!(part.len(), 490);
+        let s = arena.stats();
+        assert_eq!(s.detached, 1, "only the escaping range slice detaches");
+        assert_eq!(s.bytes_outstanding, 0, "all replay scratch returned before the call finished");
+        arena.adopt(part);
+        // Warm rerun: every buffer comes off the free lists.
+        let before = arena.stats().misses;
+        let again = c
+            .decode_range_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream, 10..500)
+            .unwrap();
+        assert_eq!(again.len(), 490);
+        assert_eq!(arena.stats().misses, before, "warm range decode allocates nothing");
+    }
+
+    #[test]
+    fn stream_info_reads_header_only() {
+        let g = generate(DatasetKind::TurbulenceLike, &[12, 12], 1);
+        let eb = ErrorBound::absolute(0.01).resolve(&g.data);
+        let stream = Sz3Like::default().compress(&g, eb).unwrap();
+        let (shape, bound) = Sz3Like::stream_info(&stream).unwrap();
+        assert_eq!(shape.user_dims(), &[12, 12]);
+        assert_eq!(bound.abs, eb.abs);
+        assert!(Sz3Like::stream_info(&[0u8; 16]).is_err());
     }
 
     #[test]

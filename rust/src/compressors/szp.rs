@@ -9,7 +9,7 @@
 use crate::compressors::bitio::{bytes, unzigzag, zigzag, BitReader, BitWriter};
 use crate::compressors::cusz::{read_header, write_header};
 use crate::compressors::{Compressor, Decompressed};
-use crate::data::grid::Grid;
+use crate::data::grid::{Grid, Shape};
 use crate::quant::{dequantize_into, quantize, QIndex, ResolvedBound};
 use crate::util::arena::ArenaHandle;
 use crate::util::pool::PoolHandle;
@@ -111,6 +111,102 @@ impl SzpLike {
         let mut qg = Grid::from_vec(q, shape.user_dims());
         qg.shape.ndim = shape.ndim;
         Ok(Decompressed { grid, quant_indices: qg, bound: eb })
+    }
+
+    /// Parse just the stream header: the field's [`Shape`] and resolved
+    /// error bound, without touching the payload. The cheap first step
+    /// of a tiled/streaming decode, which then pulls windows out with
+    /// [`SzpLike::decode_range_on`].
+    pub fn stream_info(buf: &[u8]) -> Result<(Shape, ResolvedBound)> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not an SZp-like stream");
+        read_header(buf, &mut off)
+    }
+
+    /// Decode only the quantization indices covering the flat element
+    /// range `range` — `O(range + BLOCK)` work and scratch, not
+    /// `O(field)`. The per-block offset table is itself randomly
+    /// addressable (entry `b` sits at a fixed position in the stream),
+    /// so this reads exactly the table entries and block payloads the
+    /// range overlaps; nothing outside them is validated or decoded.
+    /// The returned vector holds `range.len()` indices, leased from
+    /// `arena` and detached (adopt it back to keep warm decodes
+    /// allocation-free).
+    pub fn decode_range_on(
+        &self,
+        pool: PoolHandle<'_>,
+        arena: ArenaHandle<'_>,
+        buf: &[u8],
+        range: std::ops::Range<usize>,
+    ) -> Result<Vec<QIndex>> {
+        let mut off = 0usize;
+        let magic = bytes::get_u32(buf, &mut off)?;
+        anyhow::ensure!(magic == MAGIC, "not an SZp-like stream");
+        let (shape, _eb) = read_header(buf, &mut off)?;
+        let n = shape.len();
+        let n_blocks = bytes::get_u64(buf, &mut off)? as usize;
+        anyhow::ensure!(n_blocks == n.div_ceil(BLOCK).max(1), "block count mismatch");
+        anyhow::ensure!(
+            range.start <= range.end && range.end <= n,
+            "range {range:?} out of bounds for {n} elements"
+        );
+        if range.is_empty() {
+            return Ok(Vec::new());
+        }
+        let table_base = off;
+        let payload_base = table_base + (n_blocks + 1) * 8;
+        anyhow::ensure!(payload_base <= buf.len(), "truncated offset table");
+        let b0 = range.start / BLOCK;
+        let b1 = (range.end - 1) / BLOCK; // inclusive
+        // Read only the covering slice of the offset table (entries
+        // b0 ..= b1+1 bound the b0..=b1 payloads).
+        let mut offsets = Vec::with_capacity(b1 - b0 + 2);
+        let mut toff = table_base + b0 * 8;
+        for _ in b0..=(b1 + 1) {
+            offsets.push(bytes::get_u64(buf, &mut toff)? as usize);
+        }
+        let payload = &buf[payload_base..];
+        anyhow::ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "offset table is not monotonically non-decreasing"
+        );
+        anyhow::ensure!(
+            *offsets.last().unwrap() <= payload.len(),
+            "payload shorter than offset table claims"
+        );
+
+        // Stale lease: on success every element of the range is
+        // written; on a decode error the buffer is returned unread.
+        let mut out: Vec<QIndex> = arena.take_stale(range.len());
+        let errors = std::sync::Mutex::new(Vec::new());
+        {
+            let oslice = crate::util::pool::UnsafeSlice::new(&mut out);
+            pool.for_range(b1 - b0 + 1, self.threads, 1, |i| {
+                let b = b0 + i;
+                let start = b * BLOCK;
+                let len = (n - start).min(BLOCK);
+                let blob = &payload[offsets[i]..offsets[i + 1]];
+                match decode_block(blob, len) {
+                    Ok(vals) => {
+                        let lo = range.start.max(start);
+                        let hi = range.end.min(start + len);
+                        for g in lo..hi {
+                            // SAFETY: blocks cover disjoint output ranges.
+                            unsafe { oslice.write(g - range.start, vals[g - start]) };
+                        }
+                    }
+                    Err(e) => errors.lock().unwrap().push(format!("block {b}: {e:#}")),
+                }
+            });
+        }
+        let errs = errors.into_inner().unwrap();
+        if !errs.is_empty() {
+            arena.give(out);
+            anyhow::bail!("decode failures: {}", errs.join("; "));
+        }
+        arena.detach(&out);
+        Ok(out)
     }
 }
 
@@ -236,6 +332,71 @@ mod tests {
         stream[off + 8..off + 16].copy_from_slice(&u64::MAX.to_le_bytes());
         let err = SzpLike::default().decompress(&stream).unwrap_err();
         assert!(err.to_string().contains("offset table"), "err={err:#}");
+    }
+
+    #[test]
+    fn stream_info_reports_shape_and_bound() {
+        let g = generate(DatasetKind::ClimateLike, &[48, 32], 3);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let stream = SzpLike::default().compress(&g, eb).unwrap();
+        let (shape, bound) = SzpLike::stream_info(&stream).unwrap();
+        assert_eq!(shape.user_dims(), &[48, 32]);
+        assert_eq!(bound.abs, eb.abs);
+    }
+
+    #[test]
+    fn range_decode_matches_full_decode() {
+        // 6400 elements = 7 blocks, so ranges cross block seams.
+        let g = generate(DatasetKind::TurbulenceLike, &[40, 40, 4], 11);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let stream = SzpLike::default().compress(&g, eb).unwrap();
+        let full = SzpLike::default().decompress(&stream).unwrap();
+        let codec = SzpLike { threads: 2 };
+        let cases: [std::ops::Range<usize>; 8] =
+            [0..1, 0..6400, 1000..1001, 1023..1025, 2048..4096, 6399..6400, 777..3333, 64..64];
+        for range in cases {
+            let part = codec
+                .decode_range_on(PoolHandle::Global, ArenaHandle::Fresh, &stream, range.clone())
+                .unwrap();
+            assert_eq!(
+                &part[..],
+                &full.quant_indices.data[range.clone()],
+                "range {range:?} mismatch"
+            );
+        }
+    }
+
+    #[test]
+    fn range_decode_rejects_out_of_bounds() {
+        let g = generate(DatasetKind::ClimateLike, &[16, 16], 2);
+        let eb = ErrorBound::relative(1e-2).resolve(&g.data);
+        let stream = SzpLike::default().compress(&g, eb).unwrap();
+        let err = SzpLike::default()
+            .decode_range_on(PoolHandle::Global, ArenaHandle::Fresh, &stream, 100..300)
+            .unwrap_err();
+        assert!(err.to_string().contains("out of bounds"), "err={err:#}");
+    }
+
+    #[test]
+    fn range_decode_through_a_pooled_arena_accounts_leases() {
+        use crate::util::arena::Arena;
+        let g = generate(DatasetKind::CosmologyLike, &[32, 32, 4], 5);
+        let eb = ErrorBound::relative(1e-3).resolve(&g.data);
+        let stream = SzpLike::default().compress(&g, eb).unwrap();
+        let arena = Arena::new();
+        let part = SzpLike::default()
+            .decode_range_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream, 100..612)
+            .unwrap();
+        assert_eq!(part.len(), 512);
+        let st = arena.stats();
+        assert_eq!(st.bytes_outstanding, 0, "range buffer must be detached");
+        assert_eq!(st.detached, 1);
+        arena.adopt(part);
+        let again = SzpLike::default()
+            .decode_range_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &stream, 100..612)
+            .unwrap();
+        assert_eq!(arena.stats().hits, 1, "warm same-length range decode must reuse");
+        drop(again);
     }
 
     #[test]

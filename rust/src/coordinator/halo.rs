@@ -59,15 +59,34 @@ pub fn pad<T: Copy + Default>(block: &Grid<T>, ghosted: [bool; 3]) -> Grid<T> {
 
 /// Extract the interior (inverse of [`pad`]).
 pub fn unpad<T: Copy + Default>(padded: &Grid<T>, ghosted: [bool; 3]) -> Grid<T> {
-    let pd = padded.shape.dims;
-    let mut size = pd;
-    for a in 0..3 {
-        if ghosted[a] {
-            size[a] -= 2;
-        }
-    }
     let lo = [usize::from(ghosted[0]), usize::from(ghosted[1]), usize::from(ghosted[2])];
-    let mut out = padded.extract(lo, size);
+    trim(padded, lo, lo)
+}
+
+/// Strip asymmetric ghost margins: drop `lo_margin[a]` cells from the
+/// low side and `hi_margin[a]` from the high side of each axis. The
+/// generalized form of [`unpad`] (which strips 1-cell symmetric
+/// margins): the tiled executor's shrink-clamped halo windows
+/// (`crate::mitigation::tiled`) have margins of `0..=halo` per side
+/// depending on how the window met the domain edge.
+pub fn trim<T: Copy + Default>(
+    padded: &Grid<T>,
+    lo_margin: [usize; 3],
+    hi_margin: [usize; 3],
+) -> Grid<T> {
+    let pd = padded.shape.dims;
+    let mut size = [0usize; 3];
+    for a in 0..3 {
+        assert!(
+            lo_margin[a] + hi_margin[a] < pd[a],
+            "margins consume the whole axis {a}: {} + {} >= {}",
+            lo_margin[a],
+            hi_margin[a],
+            pd[a]
+        );
+        size[a] = pd[a] - lo_margin[a] - hi_margin[a];
+    }
+    let mut out = padded.extract(lo_margin, size);
     out.shape.ndim = padded.shape.ndim;
     out
 }
@@ -171,6 +190,23 @@ mod tests {
         // corner ghost replicates nearest block corner
         assert_eq!(g.at(0, 0, 0), block.at(0, 0, 0));
         assert_eq!(g.at(3, 3, 3), block.at(1, 1, 1));
+    }
+
+    #[test]
+    fn trim_strips_asymmetric_margins() {
+        let g = Grid::from_vec((0..60).map(|x| x as i64).collect(), &[3, 4, 5]);
+        let t = trim(&g, [1, 0, 2], [0, 1, 1]);
+        assert_eq!(t.shape.dims, [2, 3, 2]);
+        assert_eq!(t.shape.ndim, 3);
+        for i in 0..2 {
+            for j in 0..3 {
+                for k in 0..2 {
+                    assert_eq!(t.at(i, j, k), g.at(i + 1, j, k + 2));
+                }
+            }
+        }
+        // Zero margins are the identity.
+        assert_eq!(trim(&g, [0; 3], [0; 3]).data, g.data);
     }
 
     #[test]

@@ -24,7 +24,7 @@ use qai::data::io;
 use qai::data::synthetic::{generate, DatasetKind};
 use qai::metrics::{bit_rate, max_rel_error, psnr, ssim};
 use qai::mitigation::engine::{self, Engine, MitigationRequest};
-use qai::mitigation::{Backend, Job, MitigationConfig, QualityTarget, SubmitError};
+use qai::mitigation::{Backend, Job, MitigationConfig, QualityTarget, SubmitError, TiledConfig};
 use qai::quant::ErrorBound;
 use qai::util::pool;
 use qai::SharedGrid;
@@ -81,7 +81,9 @@ SUBCOMMANDS
   demo        [--dataset climate|hurricane|cosmology|combustion|turbulence|miranda]
               [--dims AxBxC] [--rel 1e-2] [--codec cusz|cuszp|szp]
               [--eta 0.9] [--threads N] [--backend native|pjrt] [--seed N]
-              [--taper R]
+              [--taper R] [--tile AxBxC] [--halo H]
+              (--tile streams mitigation tile-by-tile with O(tile)
+               scratch; --halo sets the ghost-zone width, default 8)
   batch       --jobs N [--dataset ...] [--dims AxBxC] [--rel 1e-2]
               [--codec cusz|cuszp|szp] [--eta 0.9] [--threads N] [--seed N]
               (N independent fields through the engine's batch path on
@@ -91,7 +93,8 @@ SUBCOMMANDS
               [--quota Q] [--quota-rate R] [--quota-burst B] [--shed]
               [--adaptive-lanes] [--interactive-every K]
               [--deadline-ms D] [--lanes L] [--metrics]
-              [--quality-target psnr:N|ssim:V] [--dataset ...]
+              [--quality-target psnr:N|ssim:V] [--tile AxBxC] [--halo H]
+              [--dataset ...]
               [--dims AxBxC] [--rel 1e-2] [--eta 0.9] [--threads N]
               [--seed N]
               (stream N fields through the sharded engine: --shards
@@ -114,7 +117,10 @@ SUBCOMMANDS
                original field to every request and lets the engine
                auto-tune mitigation parameters per (tenant, shape) to
                meet the floor — one bounded search per key, then
-               cache hits; see docs/SERVING.md)
+               cache hits, --tile AxBxC makes every targetless job run
+               the tiled streaming executor (O(tile) arena scratch,
+               bounded by the arena_bytes_peak metrics token; --halo
+               sets the ghost width, default 8); see docs/SERVING.md)
   distributed [--dataset ...] [--dims AxBxC] [--rel 1e-2] [--ranks N]
               [--strategy embarrassing|exact|approximate] [--seed N]
   info        (PJRT platform + artifacts present)
@@ -237,6 +243,7 @@ fn cmd_demo(args: &Args) -> Result<()> {
         backend: backend_from(args)?,
         taper_radius: args.get("taper").map(|s| s.parse()).transpose()?,
     };
+    let tiled = tile_from(args)?;
     args.finish()?;
 
     let orig = generate(kind, &dims, seed);
@@ -246,9 +253,19 @@ fn cmd_demo(args: &Args) -> Result<()> {
     // Keep a zero-copy handle on the decompressed field for the
     // before/after metrics; the request shares the same allocation.
     let dq: SharedGrid<f32> = dec.grid.into();
-    let request = MitigationRequest::new(dq.clone(), dec.quant_indices, dec.bound)
+    let mut request = MitigationRequest::new(dq.clone(), dec.quant_indices, dec.bound)
         .config(cfg)
         .with_stats(true);
+    if let Some(t) = tiled {
+        request = request.tiled(t);
+        println!(
+            "tiled: tile {:?}, halo {}, scratch budget {} B x {} lane(s)",
+            t.tile.user_dims(),
+            t.halo,
+            t.scratch_budget_bytes(&dq.shape, 1),
+            cfg.threads.max(1)
+        );
+    }
     let resp = engine::execute(&request)?;
     let (fixed, stats) = (resp.output, resp.stats.expect("stats requested"));
 
@@ -394,14 +411,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let lanes: usize = args.get_parse("lanes", 0)?;
     let metrics = args.get_bool("metrics")?;
     let quality_target = args.get("quality-target").map(|s| parse_quality_target(&s)).transpose()?;
+    let tiled = tile_from(args)?;
     let cfg = MitigationConfig {
         eta: args.get_parse("eta", 0.9)?,
         threads: args.get_parse("threads", 1)?,
         ..Default::default()
     };
     args.finish()?;
+    if tiled.is_some() && quality_target.is_some() {
+        eprintln!(
+            "note: --tile is ignored for quality-targeted jobs (the auto-tuner \
+             searches on the whole-field path)"
+        );
+    }
 
     let mut builder = Engine::builder().shards(shards).capacity(capacity);
+    if let Some(t) = tiled {
+        // Engine-wide default: every targetless request streams tiled.
+        builder = builder.tiled(t);
+    }
     if lanes > 0 {
         builder = builder.lanes_per_shard(lanes);
     }
@@ -596,17 +624,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let ast = engine.arena_stats();
     println!(
-        "arena: {:.0}% buffer reuse ({} hits / {} misses), {} B pooled",
+        "arena: {:.0}% buffer reuse ({} hits / {} misses), {} B pooled, {} B peak",
         ast.reuse_fraction() * 100.0,
         ast.hits,
         ast.misses,
-        ast.bytes_pooled
+        ast.bytes_pooled,
+        ast.bytes_peak
     );
+    if let (Some(t), None) = (tiled, quality_target) {
+        let field = qai::data::grid::Shape::new(&dims);
+        let budget = t.scratch_budget_bytes(&field, if lanes > 0 { lanes } else { pool::parallelism() });
+        println!(
+            "tiled: tile {:?}, halo {} — peak scratch {} B of {} B budget",
+            t.tile.user_dims(),
+            t.halo,
+            ast.bytes_peak,
+            budget
+        );
+    }
     if metrics {
         println!("{}", engine.metrics_text());
     }
     anyhow::ensure!(failures == 0, "{failures} job(s) failed");
     Ok(())
+}
+
+/// Parse `--tile AxBxC` (plus optional `--halo H`) into a
+/// [`TiledConfig`] for the streaming tiled executor; `None` when the
+/// flag is absent.
+fn tile_from(args: &Args) -> Result<Option<TiledConfig>> {
+    let Some(spec) = args.get("tile") else {
+        anyhow::ensure!(args.get("halo").is_none(), "--halo requires --tile");
+        return Ok(None);
+    };
+    let dims = parse_dims(&spec)?;
+    let mut tiled = TiledConfig::new(&dims);
+    if let Some(h) = args.get("halo") {
+        tiled = tiled.with_halo(h.parse()?);
+    }
+    Ok(Some(tiled))
 }
 
 /// Parse a `--quality-target` spec: `psnr:<dB>` or `ssim:<value>`.

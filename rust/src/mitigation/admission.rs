@@ -100,6 +100,7 @@ use crate::data::grid::Grid;
 use crate::mitigation::pipeline::{run_pipeline, PipelineStats};
 use crate::mitigation::quality::{self, TunedEntry};
 use crate::mitigation::service::{Job, JobResult};
+use crate::mitigation::tiled::run_tiled;
 use crate::util::arena::{Arena, ArenaHandle};
 use crate::util::hist::LatencyPair;
 use crate::util::pool::{self, PoolHandle, ThreadPool};
@@ -1270,7 +1271,13 @@ fn execute_with_quality(
     let handle = PoolHandle::Explicit(shared.thread_pool());
     let arena = ArenaHandle::Pooled(&shared.arena);
     let Some(target) = job.target else {
-        let (out, stats) = run_pipeline(handle, arena, &job.dq, &job.q, job.eb, &job.cfg)?;
+        // Tiled jobs stream tile-by-tile with O(tile × lanes) arena
+        // scratch; whole-field otherwise. Identical dispatch to the
+        // queue-free `execute_on` path.
+        let (out, stats) = match &job.tiled {
+            Some(t) => run_tiled(handle, arena, &job.dq, &job.q, job.eb, &job.cfg, t)?,
+            None => run_pipeline(handle, arena, &job.dq, &job.q, job.eb, &job.cfg)?,
+        };
         let quality = job
             .reference
             .as_ref()

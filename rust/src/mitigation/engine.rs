@@ -68,6 +68,7 @@ use crate::mitigation::quality::{self, QualityTarget};
 use crate::mitigation::service::{
     render_latency_labeled, render_metrics_labeled, Job, ServiceConfig,
 };
+use crate::mitigation::tiled::{run_tiled, TiledConfig};
 use crate::quant::{QIndex, ResolvedBound};
 use crate::util::arena::{Arena, ArenaHandle, ArenaStats};
 use crate::util::hist::LatencyPair;
@@ -200,6 +201,26 @@ impl MitigationRequest {
     /// fails with an error naming the missing field.
     pub fn quality_target(mut self, target: QualityTarget) -> Self {
         self.job.target = Some(target);
+        self
+    }
+
+    /// Run this request tiled with the given tile shape (1–3 dims, like
+    /// a field shape; fewer dims than the field span the leading axes
+    /// whole) and the default halo: the targetless execution path
+    /// streams tile-by-tile through [`crate::mitigation::tiled`] with
+    /// O(tile × lanes) arena scratch instead of O(field). Shorthand for
+    /// [`MitigationRequest::tiled`] with
+    /// [`TiledConfig::new`](crate::mitigation::tiled::TiledConfig::new).
+    pub fn tile_shape(self, tile_dims: &[usize]) -> Self {
+        self.tiled(TiledConfig::new(tile_dims))
+    }
+
+    /// Run this request through the tiled streaming executor with an
+    /// explicit [`TiledConfig`] (tile shape + halo width). Ignored by
+    /// quality-targeted requests — the auto-tuner's candidate search
+    /// stays on the whole-field path.
+    pub fn tiled(mut self, tiled: TiledConfig) -> Self {
+        self.job.tiled = Some(tiled);
         self
     }
 
@@ -416,7 +437,10 @@ pub fn execute_on(
             (outcome.output, outcome.stats, Some(outcome.quality))
         }
         None => {
-            let (output, stats) = run_pipeline(pool, arena, &job.dq, &job.q, job.eb, &job.cfg)?;
+            let (output, stats) = match &job.tiled {
+                Some(t) => run_tiled(pool, arena, &job.dq, &job.q, job.eb, &job.cfg, t)?,
+                None => run_pipeline(pool, arena, &job.dq, &job.q, job.eb, &job.cfg)?,
+            };
             let quality = job
                 .reference
                 .as_ref()
@@ -671,6 +695,7 @@ pub struct EngineBuilder {
     default_quota: Option<u64>,
     default_rate: f64,
     default_burst: Option<u64>,
+    tiled: Option<TiledConfig>,
 }
 
 impl EngineBuilder {
@@ -810,6 +835,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Default tiling for every submitted request that does not carry
+    /// its own [`MitigationRequest::tiled`] / `tile_shape` setting: the
+    /// engine-wide memory-bounding policy knob (`qai serve --tile`).
+    /// Per-request settings win; quality-targeted requests stay on the
+    /// whole-field path either way.
+    pub fn tiled(mut self, tiled: TiledConfig) -> Self {
+        self.tiled = Some(tiled);
+        self
+    }
+
     /// Build the engine: spawn-ready shards (schedulers start lazily on
     /// first submission), the router, and the pre-populated quota
     /// table.
@@ -862,6 +897,7 @@ impl EngineBuilder {
             default_rate: self.default_rate,
             default_burst: self.default_burst,
             shared_arena,
+            default_tiled: self.tiled,
         }
     }
 }
@@ -882,6 +918,9 @@ pub struct Engine {
     /// `Some` when all shards share one arena (for aggregate stats
     /// that must not double-count).
     shared_arena: Option<Arena>,
+    /// Engine-wide default tiling ([`EngineBuilder::tiled`]); applied
+    /// at submission to requests without their own setting.
+    default_tiled: Option<TiledConfig>,
 }
 
 impl Default for Engine {
@@ -997,7 +1036,11 @@ impl Engine {
         blocking: bool,
     ) -> Result<ResponseTicket, SubmitError> {
         let opts = request.submit_options();
-        let MitigationRequest { job, tenant, collect_stats, trace_id, .. } = request;
+        let MitigationRequest { mut job, tenant, collect_stats, trace_id, .. } = request;
+        // Engine-wide default tiling; a request's own setting wins.
+        if job.tiled.is_none() {
+            job.tiled = self.default_tiled;
+        }
         let lease = match tenant.as_deref() {
             Some(t) => match self.admit_tenant(t) {
                 Ok(lease) => Some(lease),
@@ -1188,6 +1231,10 @@ impl Engine {
             agg.dropped += s.dropped;
             agg.bytes_outstanding += s.bytes_outstanding;
             agg.bytes_pooled += s.bytes_pooled;
+            // Per-shard high-water marks need not coincide in time, so
+            // their sum is an upper bound on the true aggregate peak
+            // (exact when shards share one arena — handled above).
+            agg.bytes_peak += s.bytes_peak;
         }
         agg
     }

@@ -21,7 +21,9 @@
 //! tenant-aware routing and per-tenant quotas. The legacy [`service`]
 //! façade and the `mitigate*` free functions survive as deprecated
 //! bit-identical wrappers; the distributed version lives in
-//! [`crate::coordinator`].
+//! [`crate::coordinator`]. [`tiled`] runs the same pipeline as a
+//! streaming tile decomposition with O(tile × lanes) scratch and
+//! first-tile latency.
 
 pub mod admission;
 pub mod boundary;
@@ -32,6 +34,7 @@ pub mod pipeline;
 pub mod quality;
 pub mod service;
 pub mod sign;
+pub mod tiled;
 
 pub use admission::{
     JobReport, JobTicket, LatencySnapshot, Priority, ServiceStats, SubmitError, SubmitOptions,
@@ -47,4 +50,8 @@ pub use quality::{QualityTarget, TunedParams};
 pub use service::{
     render_latency_labeled, render_metrics, render_metrics_labeled, Job, JobResult,
     MitigationService, ServiceConfig, DEFAULT_QUEUE_CAPACITY,
+};
+pub use tiled::{
+    run_tiled_observed, run_tiled_szp, TileDone, TiledConfig, TiledStreamOutcome, DEFAULT_HALO,
+    SCRATCH_BYTES_PER_ELEM,
 };

@@ -147,9 +147,11 @@ pub fn mitigate_with_stats_on(
 ///
 /// Buffer lifecycle with a pooled arena: the seven intermediate
 /// full-grid buffers (B₁ mask, boundary signs, Dist₁, I₁, propagated
-/// signs, B₂, Dist₂) are leased and given back before returning; the
-/// output buffer is leased, then **detached** — it escapes inside the
-/// returned grid, which the caller owns (and may hand back via
+/// signs, B₂, Dist₂) are held by RAII leases (`ArenaLease` /
+/// `GridLease`) that give them back when they drop — on every exit
+/// path, including unwinds; the output buffer is leased, then
+/// **detached** — it escapes inside the returned grid, which the caller
+/// owns (and may hand back via
 /// [`MitigationService::recycle`](crate::mitigation::service::MitigationService::recycle)).
 /// A warm same-shaped call therefore allocates zero full-grid buffers,
 /// which the arena test suite proves through the miss counter.
@@ -178,14 +180,19 @@ pub(crate) fn run_pipeline(
         Backend::Pjrt => (sw.time(|| crate::runtime::ops::boundary_and_sign_pjrt(q))?, false),
     };
     stats.t_boundary = std::mem::take(&mut sw).secs();
-    stats.n_boundary1 = bres.mask.data.iter().filter(|&&b| b).count();
+
+    // Wrap the step-A grids in RAII leases immediately: every exit path
+    // from here on — the homogeneous early return, step errors, panics —
+    // gives the buffers back when the leases drop. The PJRT variant's
+    // grids are device-allocated and were never leased, so they get the
+    // plain-drop (`Fresh`) wrapper instead of corrupting the gauges.
+    let step_a = if bres_pooled { arena } else { ArenaHandle::Fresh };
+    let mask = step_a.relend_grid(bres.mask);
+    let sign = step_a.relend_grid(bres.sign);
+    stats.n_boundary1 = mask.data.iter().filter(|&&b| b).count();
 
     if stats.n_boundary1 == 0 {
         // Homogeneous index field (paper §IX future work): nothing to do.
-        if bres_pooled {
-            arena.give(bres.mask.data);
-            arena.give(bres.sign.data);
-        }
         let out = arena.take_copy(&dq.data);
         arena.detach(&out);
         return Ok((Grid { shape: dq.shape, data: out }, stats));
@@ -193,21 +200,16 @@ pub(crate) fn run_pipeline(
 
     // Step B: EDT to B₁ with feature transform.
     let mut sw = Stopwatch::new();
-    let edt1 = sw.time(|| edt_on(pool, arena, &bres.mask, true, threads));
+    let edt1 = sw.time(|| edt_on(pool, arena, &mask, true, threads));
     stats.t_edt1 = std::mem::take(&mut sw).secs();
+    let d1 = arena.relend(edt1.dist_sq);
+    let near1 = arena.relend(edt1.nearest.expect("step B runs with the feature transform"));
 
     // Step C: propagate signs, build B₂.
     let mut sw = Stopwatch::new();
-    let (s, b2) = sw.time(|| {
-        propagate_signs_on(
-            pool,
-            arena,
-            &bres.mask,
-            &bres.sign,
-            edt1.nearest.as_ref().unwrap(),
-            threads,
-        )
-    });
+    let (s, b2) = sw.time(|| propagate_signs_on(pool, arena, &mask, &sign, &near1, threads));
+    let s = arena.relend_grid(s);
+    let b2 = arena.relend_grid(b2);
     stats.t_sign = std::mem::take(&mut sw).secs();
     stats.n_boundary2 = b2.data.iter().filter(|&&b| b).count();
 
@@ -215,6 +217,10 @@ pub(crate) fn run_pipeline(
     let mut sw = Stopwatch::new();
     let edt2 = sw.time(|| edt_on(pool, arena, &b2, false, threads));
     stats.t_edt2 = std::mem::take(&mut sw).secs();
+    let d2 = arena.relend(edt2.dist_sq);
+    if let Some(nearest) = edt2.nearest {
+        arena.give(nearest);
+    }
 
     // Step E: interpolate and compensate, into an RAII-leased output
     // buffer seeded with the decompressed data. The lease (not a raw
@@ -231,8 +237,8 @@ pub(crate) fn run_pipeline(
                 crate::mitigation::interpolate::compensate_adaptive_on(
                     pool,
                     &mut out,
-                    &edt1.dist_sq,
-                    &edt2.dist_sq,
+                    &d1,
+                    &d2,
                     &s.data,
                     eta_eps,
                     cfg.taper_radius,
@@ -241,36 +247,16 @@ pub(crate) fn run_pipeline(
             });
             Ok(())
         }
-        Backend::Pjrt => sw.time(|| {
-            crate::runtime::ops::compensate_pjrt(
-                &mut out,
-                &edt1.dist_sq,
-                &edt2.dist_sq,
-                &s.data,
-                eta_eps,
-            )
-        }),
+        Backend::Pjrt => {
+            sw.time(|| crate::runtime::ops::compensate_pjrt(&mut out, &d1, &d2, &s.data, eta_eps))
+        }
     };
     stats.t_compensate = std::mem::take(&mut sw).secs();
 
-    // Every intermediate full-grid buffer goes back to the arena (a
-    // fresh handle just drops them), making the next same-shaped call
-    // allocation-free.
-    if bres_pooled {
-        arena.give(bres.mask.data);
-        arena.give(bres.sign.data);
-    }
-    arena.give(edt1.dist_sq);
-    if let Some(nearest) = edt1.nearest {
-        arena.give(nearest);
-    }
-    arena.give(s.data);
-    arena.give(b2.data);
-    arena.give(edt2.dist_sq);
-    if let Some(nearest) = edt2.nearest {
-        arena.give(nearest);
-    }
-
+    // Every intermediate full-grid buffer (mask, sign, Dist₁, I₁, s,
+    // B₂, Dist₂) is held by an RAII lease and goes back to the arena
+    // when it drops below — a fresh handle just drops them — making the
+    // next same-shaped call allocation-free.
     match compensated {
         Ok(()) => Ok((Grid { shape: dq.shape, data: out.detach() }, stats)),
         // The lease gives the buffer back when it drops with the error.

@@ -44,6 +44,7 @@ use crate::mitigation::admission::{JobTicket, ServiceStats, SubmitError, SubmitO
 use crate::mitigation::engine::{Engine, MitigationRequest};
 use crate::mitigation::pipeline::{MitigationConfig, PipelineStats};
 use crate::mitigation::quality::QualityTarget;
+use crate::mitigation::tiled::TiledConfig;
 use crate::quant::{QIndex, ResolvedBound};
 use crate::util::arena::{Arena, ArenaStats};
 use crate::util::hist::LatencyPair;
@@ -89,6 +90,13 @@ pub struct Job {
     /// set, the engine auto-tunes mitigation parameters to meet it
     /// (see [`QualityTarget`] and the quality module docs).
     pub target: Option<QualityTarget>,
+    /// When set, the targetless execution path runs the tiled streaming
+    /// executor ([`crate::mitigation::tiled`]) instead of the
+    /// whole-field pipeline: O(tile × lanes) scratch, same output for
+    /// any halo wide enough (bit-identical interiors). Quality-targeted
+    /// jobs (`target` set) ignore it — the auto-tuner re-runs the whole
+    /// field per candidate and stays on the dense path.
+    pub tiled: Option<TiledConfig>,
 }
 
 impl Job {
@@ -109,7 +117,7 @@ impl Job {
         eb: ResolvedBound,
         cfg: MitigationConfig,
     ) -> Self {
-        Job { dq: dq.into(), q: q.into(), eb, cfg, reference: None, target: None }
+        Job { dq: dq.into(), q: q.into(), eb, cfg, reference: None, target: None, tiled: None }
     }
 }
 
@@ -347,7 +355,8 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
          deadlines_missed={} max_queue_depth={} queue_depth={} running={} \
          total_queue_wait_s={:.6} total_exec_s={:.6} arena_hits={} arena_misses={} \
          arena_returns={} arena_detached={} arena_adopted={} arena_dropped={} \
-         arena_bytes_outstanding={} arena_bytes_pooled={} shed_infeasible={} \
+         arena_bytes_outstanding={} arena_bytes_pooled={} arena_bytes_peak={} \
+         shed_infeasible={} \
          sched_wakeups={} lanes_grown={} lanes_shrunk={} lane_cap={} \
          quality_hits={} quality_misses={} quality_evicted={} last_trace={}",
         stats.submitted,
@@ -373,6 +382,7 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
         arena.dropped,
         arena.bytes_outstanding,
         arena.bytes_pooled,
+        arena.bytes_peak,
         stats.shed_infeasible,
         stats.sched_wakeups,
         stats.lanes_grown,

@@ -1,0 +1,561 @@
+//! Tiled streaming executor: O(tile) scratch memory and first-tile
+//! latency for the mitigation pipeline (ROADMAP item 2).
+//!
+//! The whole-field pipeline ([`run_pipeline`]) holds ~10 full-grid
+//! intermediates at once, so a job's peak scratch footprint is
+//! O(field) — untenable for fields much larger than memory and for
+//! dense multi-tenant packing. This module decomposes a job into
+//! fixed-size tiles and runs **decode → mitigate → deliver** per tile
+//! on the work-stealing pool:
+//!
+//! * Each tile is expanded by a `halo`-wide ghost zone, **shrink-clamped
+//!   to the domain** (the same clamped-window semantics the rank-level
+//!   [`crate::coordinator::halo`] module implements with `pad` +
+//!   `exchange` — at tile granularity inside one address space the
+//!   "exchange" degenerates to reading the neighbor cells straight out
+//!   of the shared input, so seams need no messages). Clamping instead
+//!   of replicate-padding keeps domain-edge semantics exact: on a
+//!   clamped side the window edge *is* the domain edge, so step A's
+//!   "domain edges are never boundaries" rule applies identically.
+//! * The window runs the unchanged pipeline substrate
+//!   ([`run_pipeline`]) with `threads = 1` — windows are self-contained,
+//!   which is what makes the output **independent of the lane count by
+//!   construction**: parallelism lives across tiles, never inside one.
+//! * Every window buffer (indices, data, and the pipeline's
+//!   intermediates) is an [`crate::util::arena`] lease, so peak scratch
+//!   is bounded by `window_elems × SCRATCH_BYTES_PER_ELEM × lanes` —
+//!   provable from the arena's `bytes_peak` high-water counter, not
+//!   from trusting this comment. The O(field) output buffer is the
+//!   deliverable itself and is deliberately *not* arena-scratch.
+//!
+//! # Exactness
+//!
+//! A window computes bit-identical values for its tile interior
+//! whenever every tile point's nearest `B₁` and `B₂` boundary points
+//! (and the EDT influence cone that selects them) lie inside the
+//! window: window boundary masks equal the global ones everywhere
+//! except possibly the outermost window rim (a rim point may *miss* a
+//! mark whose witness neighbor lies outside the window; it can never
+//! gain one), and Maurer's EDT — squared offsets, scan-order
+//! tie-breaking — is translation invariant. So with a halo wider than
+//! the largest boundary-influence distance the tiled output bit-matches
+//! the whole-field path; `halo ≥ max(dims)` makes every window the
+//! whole field and the match unconditional. Whatever the halo, the
+//! paper's relaxed bound `|out − d| ≤ (1+η)ε` holds per window exactly
+//! as it does whole-field (step E never compensates past `η·ε`), so an
+//! undersized halo degrades *seam agreement*, never correctness.
+//! `rust/tests/tiled.rs` pins the interior-identity and halo matrices.
+//!
+//! # Latency
+//!
+//! [`run_tiled_szp`] fuses decoding into the loop: each tile decodes
+//! only its own window out of the SZp stream
+//! ([`SzpLike::decode_range_on`] seeks the block offset table), so the
+//! first tile is mitigated and delivered (observable through the
+//! [`TileDone`] callback) before the last tile's bytes are decoded —
+//! first-tile latency replaces whole-field latency for streaming
+//! consumers. SZ3's dependency cone spans the whole array, so its
+//! range decoder is an honest full-replay fallback
+//! ([`crate::compressors::sz3::Sz3Like::decode_range_on`]) and gains
+//! memory bounds only, not latency.
+
+#![deny(missing_docs)]
+
+use crate::compressors::szp::SzpLike;
+use crate::data::grid::{Grid, Shape};
+use crate::mitigation::pipeline::{run_pipeline, Backend, MitigationConfig, PipelineStats};
+use crate::quant::{dequantize_into, QIndex, ResolvedBound};
+use crate::util::arena::ArenaHandle;
+use crate::util::pool::{PoolHandle, UnsafeSlice};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Default ghost-zone width (cells per side). Wide enough that the
+/// quantization-boundary influence cone fits the window on the dense
+/// boundary fields pre-quantization actually produces; override with
+/// [`TiledConfig::with_halo`] when a dataset's boundaries are sparse.
+pub const DEFAULT_HALO: usize = 8;
+
+/// Conservative per-element scratch bound (bytes) for one window's
+/// pipeline run, counting every arena lease held concurrently at the
+/// peak (step E): window indices (8) + window data (4) + B₁ mask (1) +
+/// boundary signs (1) + Dist₁ (8) + I₁ (4) + propagated signs (1) +
+/// B₂ (1) + Dist₂ (8) + leased output copy (4).
+pub const SCRATCH_BYTES_PER_ELEM: usize = 40;
+
+/// Tiling knobs: tile shape and ghost-zone width. Carried on a
+/// [`Job`](crate::mitigation::service::Job) (set via
+/// [`MitigationRequest::tile_shape`](crate::mitigation::engine::MitigationRequest::tile_shape))
+/// or installed engine-wide with
+/// [`EngineBuilder::tiled`](crate::mitigation::engine::EngineBuilder::tiled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TiledConfig {
+    /// Tile shape (1–3 user dims, like a field shape). A tile with
+    /// fewer dims than the field spans the field's leading axes whole —
+    /// `[64, 64]` on a 3D field means full-depth 64×64 pencils.
+    pub tile: Shape,
+    /// Ghost-zone width in cells on each side of a tile (shrink-clamped
+    /// at domain edges).
+    pub halo: usize,
+}
+
+impl TiledConfig {
+    /// Tiling with the given tile dims and [`DEFAULT_HALO`].
+    pub fn new(tile_dims: &[usize]) -> Self {
+        TiledConfig { tile: Shape::new(tile_dims), halo: DEFAULT_HALO }
+    }
+
+    /// Replace the ghost-zone width. `halo ≥ max(field dims)` makes
+    /// every window the whole field: bit-identical to the whole-field
+    /// path unconditionally (and no memory savings — a test anchor, not
+    /// a deployment setting).
+    pub fn with_halo(mut self, halo: usize) -> Self {
+        self.halo = halo;
+        self
+    }
+
+    /// The tile shape this config uses against `field`, normalized and
+    /// clamped: trailing tile dims map onto trailing field axes, leading
+    /// field axes a lower-dimensional tile does not name span whole.
+    fn effective_tile(&self, field: &Shape) -> [usize; 3] {
+        let mut t = [1usize; 3];
+        for a in 0..3 {
+            t[a] = if a < 3 - self.tile.ndim { field.dims[a] } else { self.tile.dims[a] };
+            t[a] = t[a].clamp(1, field.dims[a]);
+        }
+        t
+    }
+
+    /// Largest element count any single window (tile + clamped halo)
+    /// can reach on `field` — the per-lane factor of the scratch budget.
+    pub fn window_elems(&self, field: &Shape) -> usize {
+        let t = self.effective_tile(field);
+        (0..3).map(|a| (t[a] + 2 * self.halo).min(field.dims[a])).product()
+    }
+
+    /// The arena-scratch budget (bytes) a tiled run of `field` on
+    /// `lanes` lanes must stay under:
+    /// `window_elems × `[`SCRATCH_BYTES_PER_ELEM`]` × lanes`. Tests
+    /// assert the arena's `bytes_peak` counter against this.
+    pub fn scratch_budget_bytes(&self, field: &Shape, lanes: usize) -> u64 {
+        (self.window_elems(field) * SCRATCH_BYTES_PER_ELEM) as u64 * lanes.max(1) as u64
+    }
+}
+
+/// One tile of a [`plan`]: where the tile sits, and the halo window
+/// around it that its pipeline run actually computes on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TilePlan {
+    /// Tile origin in normalized field coordinates.
+    pub lo: [usize; 3],
+    /// Tile extent (edge tiles may be smaller than the configured
+    /// shape).
+    pub size: [usize; 3],
+    /// Window origin (tile minus halo, clamped at 0).
+    pub window_lo: [usize; 3],
+    /// Window extent (tile plus halos, clamped to the domain).
+    pub window_size: [usize; 3],
+}
+
+/// The tile decomposition a tiled run of `field` executes, in the flat
+/// tile-index order workers claim from. Exposed so tests and benches
+/// can classify tiles (interior vs domain-edge) and reason about
+/// windows without re-deriving the geometry.
+pub fn plan(field: &Shape, tiled: &TiledConfig) -> Vec<TilePlan> {
+    let t = tiled.effective_tile(field);
+    let counts = [0, 1, 2].map(|a| field.dims[a].div_ceil(t[a]));
+    let mut tiles = Vec::with_capacity(counts[0] * counts[1] * counts[2]);
+    for ti in 0..counts[0] {
+        for tj in 0..counts[1] {
+            for tk in 0..counts[2] {
+                let idx = [ti, tj, tk];
+                let mut lo = [0usize; 3];
+                let mut size = [0usize; 3];
+                let mut wlo = [0usize; 3];
+                let mut wsize = [0usize; 3];
+                for a in 0..3 {
+                    lo[a] = idx[a] * t[a];
+                    size[a] = t[a].min(field.dims[a] - lo[a]);
+                    wlo[a] = lo[a].saturating_sub(tiled.halo);
+                    wsize[a] = (lo[a] + size[a] + tiled.halo).min(field.dims[a]) - wlo[a];
+                }
+                tiles.push(TilePlan { lo, size, window_lo: wlo, window_size: wsize });
+            }
+        }
+    }
+    tiles
+}
+
+/// A completed tile, announced the instant its interior lands in the
+/// output buffer — while other tiles may still be decoding. What a
+/// streaming consumer (or the first-tile-latency bench) observes.
+#[derive(Debug, Clone, Copy)]
+pub struct TileDone {
+    /// Flat index into the [`plan`] order.
+    pub index: usize,
+    /// Tile origin in normalized field coordinates.
+    pub lo: [usize; 3],
+    /// Tile extent.
+    pub size: [usize; 3],
+    /// Wall-clock since the tiled run started.
+    pub since_start: Duration,
+}
+
+/// Copy the sub-block `[lo, lo+size)` of `src` into `out` (row-major,
+/// `out.len() == size product`) without allocating — the arena-friendly
+/// sibling of [`Grid::extract`].
+fn extract_into<T: Copy>(src: &Grid<T>, lo: [usize; 3], size: [usize; 3], out: &mut [T]) {
+    debug_assert_eq!(out.len(), size[0] * size[1] * size[2]);
+    let mut w = 0usize;
+    for i in 0..size[0] {
+        for j in 0..size[1] {
+            let s = src.shape.idx(lo[0] + i, lo[1] + j, lo[2]);
+            out[w..w + size[2]].copy_from_slice(&src.data[s..s + size[2]]);
+            w += size[2];
+        }
+    }
+}
+
+/// Write the `[ilo, ilo+size)` sub-block of `win` into the global
+/// output at `glo` through disjoint row writes. SAFETY contract of the
+/// caller: tiles cover disjoint global ranges, so no two workers ever
+/// write the same row segment.
+fn scatter_interior(
+    out: &UnsafeSlice<'_, f32>,
+    out_shape: &Shape,
+    win: &Grid<f32>,
+    ilo: [usize; 3],
+    glo: [usize; 3],
+    size: [usize; 3],
+) {
+    for i in 0..size[0] {
+        for j in 0..size[1] {
+            let src = win.shape.idx(ilo[0] + i, ilo[1] + j, ilo[2]);
+            let dst = out_shape.idx(glo[0] + i, glo[1] + j, glo[2]);
+            // SAFETY: per the function contract, [dst, dst+size[2]) is
+            // touched by exactly one tile worker.
+            let row = unsafe { out.slice_mut(dst, size[2]) };
+            row.copy_from_slice(&win.data[src..src + size[2]]);
+        }
+    }
+}
+
+/// Hand a detached/foreign buffer back to a pooled arena (fresh handles
+/// just drop it) so warm tiled runs stay allocation-free.
+fn recycle(arena: ArenaHandle<'_>, buf: Vec<f32>) {
+    if let ArenaHandle::Pooled(a) = arena {
+        a.adopt(buf);
+    }
+}
+
+/// Merge one window's pipeline stats into the run aggregate. Times sum
+/// CPU seconds across lanes (they can exceed wall-clock, like any
+/// per-core accounting); boundary counts sum over *windows*, so halo
+/// overlap double-counts boundary points near seams — observability,
+/// not an exactness surface.
+fn merge_stats(agg: &Mutex<PipelineStats>, s: &PipelineStats) {
+    let mut a = agg.lock().unwrap();
+    a.t_boundary += s.t_boundary;
+    a.t_edt1 += s.t_edt1;
+    a.t_sign += s.t_sign;
+    a.t_edt2 += s.t_edt2;
+    a.t_compensate += s.t_compensate;
+    a.n_boundary1 += s.n_boundary1;
+    a.n_boundary2 += s.n_boundary2;
+}
+
+/// Run the mitigation pipeline tiled: decompose `dq`/`q` into halo
+/// windows, mitigate each on the pool (`cfg.threads` lanes *across*
+/// tiles, every window sequential inside), scatter tile interiors into
+/// the output. Drop-in for [`run_pipeline`] wherever the inputs are
+/// already decoded — the engine dispatches here when a job carries a
+/// [`TiledConfig`].
+pub(crate) fn run_tiled(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    cfg: &MitigationConfig,
+    tiled: &TiledConfig,
+) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
+    run_tiled_observed(pool, arena, dq, q, eb, cfg, tiled, &|_| {})
+}
+
+/// [`run_tiled`] with a per-tile completion callback — the streaming
+/// observability hook ([`TileDone`]) the first-tile-latency bench and
+/// streaming consumers use. The callback runs on pool workers and must
+/// be cheap.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_observed(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    cfg: &MitigationConfig,
+    tiled: &TiledConfig,
+    on_tile: &(dyn Fn(TileDone) + Sync),
+) -> anyhow::Result<(Grid<f32>, PipelineStats)> {
+    assert_eq!(dq.shape, q.shape, "data/index shape mismatch");
+    anyhow::ensure!(
+        cfg.backend == Backend::Native,
+        "the tiled executor is native-only (PJRT windows would round-trip the device per tile)"
+    );
+    let shape = dq.shape;
+    let tiles = plan(&shape, tiled);
+    let lanes = cfg.threads.max(1);
+    // Sequential inside a window: tile outputs are lane-count-invariant
+    // by construction, so interior exactness never depends on threads.
+    let wcfg = MitigationConfig { threads: 1, ..*cfg };
+    let start = Instant::now();
+
+    // The deliverable is a plain owned allocation, not arena scratch —
+    // the whole point is that only *scratch* stays O(tile × lanes).
+    let mut out_data = vec![0.0f32; shape.len()];
+    let agg = Mutex::new(PipelineStats::default());
+    let errors = Mutex::new(Vec::<String>::new());
+    {
+        let out = UnsafeSlice::new(&mut out_data);
+        let tiles = &tiles;
+        let agg = &agg;
+        let errors = &errors;
+        pool.for_range(tiles.len(), lanes, 1, |t| {
+            let tp = tiles[t];
+            let wn = tp.window_size[0] * tp.window_size[1] * tp.window_size[2];
+            let wshape = Shape { dims: tp.window_size, ndim: shape.ndim };
+            // Leased window copies of the inputs; RAII-returned even if
+            // the pipeline below errors or panics.
+            let mut qbuf: Vec<QIndex> = arena.take_stale(wn);
+            extract_into(q, tp.window_lo, tp.window_size, &mut qbuf);
+            let qwin = arena.relend_grid(Grid { shape: wshape, data: qbuf });
+            let mut dbuf: Vec<f32> = arena.take_stale(wn);
+            extract_into(dq, tp.window_lo, tp.window_size, &mut dbuf);
+            let dwin = arena.relend_grid(Grid { shape: wshape, data: dbuf });
+
+            match run_pipeline(pool, arena, &dwin, &qwin, eb, &wcfg) {
+                Ok((wout, wstats)) => {
+                    let ilo = [0, 1, 2].map(|a| tp.lo[a] - tp.window_lo[a]);
+                    scatter_interior(&out, &shape, &wout, ilo, tp.lo, tp.size);
+                    recycle(arena, wout.data);
+                    merge_stats(agg, &wstats);
+                    on_tile(TileDone {
+                        index: t,
+                        lo: tp.lo,
+                        size: tp.size,
+                        since_start: start.elapsed(),
+                    });
+                }
+                Err(e) => errors.lock().unwrap().push(format!("tile {t}: {e:#}")),
+            }
+        });
+    }
+    let errs = errors.into_inner().unwrap();
+    anyhow::ensure!(errs.is_empty(), "tiled run failed: {}", errs.join("; "));
+    Ok((Grid { shape, data: out_data }, agg.into_inner().unwrap()))
+}
+
+/// Outcome of a fused streaming run ([`run_tiled_szp`]).
+#[derive(Debug)]
+pub struct TiledStreamOutcome {
+    /// The mitigated field.
+    pub output: Grid<f32>,
+    /// Aggregated window stats (see the caveats on
+    /// [`run_tiled_observed`]'s stats merging).
+    pub stats: PipelineStats,
+    /// The bound the stream was encoded with.
+    pub bound: ResolvedBound,
+    /// Number of tiles executed.
+    pub tiles: usize,
+    /// Wall-clock until the *first* tile was delivered.
+    pub first_tile: Duration,
+    /// Wall-clock for the whole run.
+    pub total: Duration,
+}
+
+/// The fused streaming form: decode each tile's window straight out of
+/// an SZp stream ([`SzpLike::decode_range_on`] seeks the block offset
+/// table, so a window decode is O(window)), dequantize, mitigate, and
+/// deliver — the first tile completes before the last tile's bytes are
+/// decoded. `codec.threads` parallelizes *within* one range decode and
+/// should stay 1 here; lane parallelism across tiles comes from
+/// `cfg.threads` exactly as in [`run_tiled`].
+pub fn run_tiled_szp(
+    pool: PoolHandle<'_>,
+    arena: ArenaHandle<'_>,
+    codec: &SzpLike,
+    stream: &[u8],
+    cfg: &MitigationConfig,
+    tiled: &TiledConfig,
+    on_tile: &(dyn Fn(TileDone) + Sync),
+) -> anyhow::Result<TiledStreamOutcome> {
+    anyhow::ensure!(
+        cfg.backend == Backend::Native,
+        "the tiled executor is native-only (PJRT windows would round-trip the device per tile)"
+    );
+    let (shape, eb) = SzpLike::stream_info(stream)?;
+    let tiles = plan(&shape, tiled);
+    let lanes = cfg.threads.max(1);
+    let wcfg = MitigationConfig { threads: 1, ..*cfg };
+    let start = Instant::now();
+
+    let mut out_data = vec![0.0f32; shape.len()];
+    let agg = Mutex::new(PipelineStats::default());
+    let errors = Mutex::new(Vec::<String>::new());
+    let first = Mutex::new(None::<Duration>);
+    {
+        let out = UnsafeSlice::new(&mut out_data);
+        let tiles = &tiles;
+        let agg = &agg;
+        let errors = &errors;
+        let first = &first;
+        pool.for_range(tiles.len(), lanes, 1, |t| {
+            let tp = tiles[t];
+            let wn = tp.window_size[0] * tp.window_size[1] * tp.window_size[2];
+            let wshape = Shape { dims: tp.window_size, ndim: shape.ndim };
+            let run = || -> anyhow::Result<(Grid<f32>, PipelineStats)> {
+                // Decode the window out of the stream: one seeking range
+                // decode per maximal contiguous row run of the window.
+                let mut qbuf: Vec<QIndex> = arena.take_stale(wn);
+                let mut w = 0usize;
+                for i in 0..tp.window_size[0] {
+                    for j in 0..tp.window_size[1] {
+                        let s = shape.idx(tp.window_lo[0] + i, tp.window_lo[1] + j, tp.window_lo[2]);
+                        let len = tp.window_size[2];
+                        let part = codec.decode_range_on(pool, arena, stream, s..s + len)?;
+                        qbuf[w..w + len].copy_from_slice(&part);
+                        w += len;
+                        recycle_q(arena, part);
+                    }
+                }
+                let qwin = arena.relend_grid(Grid { shape: wshape, data: qbuf });
+                let mut dbuf: Vec<f32> = arena.take_stale(wn);
+                dequantize_into(&qwin.data, eb, &mut dbuf);
+                let dwin = arena.relend_grid(Grid { shape: wshape, data: dbuf });
+                run_pipeline(pool, arena, &dwin, &qwin, eb, &wcfg)
+            };
+            match run() {
+                Ok((wout, wstats)) => {
+                    let ilo = [0, 1, 2].map(|a| tp.lo[a] - tp.window_lo[a]);
+                    scatter_interior(&out, &shape, &wout, ilo, tp.lo, tp.size);
+                    recycle(arena, wout.data);
+                    merge_stats(agg, &wstats);
+                    let done = start.elapsed();
+                    {
+                        let mut f = first.lock().unwrap();
+                        if f.map_or(true, |prev| done < prev) {
+                            *f = Some(done);
+                        }
+                    }
+                    on_tile(TileDone { index: t, lo: tp.lo, size: tp.size, since_start: done });
+                }
+                Err(e) => errors.lock().unwrap().push(format!("tile {t}: {e:#}")),
+            }
+        });
+    }
+    let errs = errors.into_inner().unwrap();
+    anyhow::ensure!(errs.is_empty(), "tiled streaming run failed: {}", errs.join("; "));
+    let total = start.elapsed();
+    let n_tiles = tiles.len();
+    Ok(TiledStreamOutcome {
+        output: Grid { shape, data: out_data },
+        stats: agg.into_inner().unwrap(),
+        bound: eb,
+        tiles: n_tiles,
+        first_tile: first.into_inner().unwrap().unwrap_or(total),
+        total,
+    })
+}
+
+/// [`recycle`] for index buffers (the range decoder detaches them).
+fn recycle_q(arena: ArenaHandle<'_>, buf: Vec<QIndex>) {
+    if let ArenaHandle::Pooled(a) = arena {
+        a.adopt(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, DatasetKind};
+    use crate::quant::{quantize_grid, ErrorBound};
+
+    #[test]
+    fn plan_covers_the_field_exactly_once() {
+        let field = Shape::new(&[50, 30, 7]);
+        let tiled = TiledConfig::new(&[16, 16, 4]).with_halo(3);
+        let tiles = plan(&field, &tiled);
+        let mut seen = vec![0u8; field.len()];
+        for tp in &tiles {
+            for i in 0..tp.size[0] {
+                for j in 0..tp.size[1] {
+                    for k in 0..tp.size[2] {
+                        seen[field.idx(tp.lo[0] + i, tp.lo[1] + j, tp.lo[2] + k)] += 1;
+                    }
+                }
+            }
+            for a in 0..3 {
+                assert!(tp.window_lo[a] <= tp.lo[a]);
+                assert!(
+                    tp.window_lo[a] + tp.window_size[a] <= field.dims[a],
+                    "window out of bounds"
+                );
+                assert!(
+                    tp.window_lo[a] + tp.window_size[a] >= tp.lo[a] + tp.size[a],
+                    "window must contain its tile"
+                );
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "tiles must partition the field");
+        assert_eq!(tiles.len(), 4 * 2 * 2);
+    }
+
+    #[test]
+    fn lower_dimensional_tile_spans_leading_axes() {
+        let field = Shape::new(&[12, 40, 40]);
+        let tiled = TiledConfig::new(&[16, 16]).with_halo(2);
+        let tiles = plan(&field, &tiled);
+        // Tile axis 0 defaults to the full extent: 3×3 pencils.
+        assert_eq!(tiles.len(), 9);
+        assert!(tiles.iter().all(|tp| tp.size[0] == 12));
+    }
+
+    #[test]
+    fn window_elems_and_budget_clamp_to_the_field() {
+        let field = Shape::new(&[64, 64]);
+        let tiled = TiledConfig::new(&[32, 32]).with_halo(100);
+        assert_eq!(tiled.window_elems(&field), 64 * 64);
+        assert_eq!(
+            tiled.scratch_budget_bytes(&field, 4),
+            (64 * 64 * SCRATCH_BYTES_PER_ELEM * 4) as u64
+        );
+    }
+
+    #[test]
+    fn whole_field_halo_is_bit_identical_to_run_pipeline() {
+        let orig = generate(DatasetKind::ClimateLike, &[60, 60], 11);
+        let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+        let (q, dq) = quantize_grid(&orig, eb);
+        let cfg = MitigationConfig::default();
+        let whole =
+            run_pipeline(PoolHandle::Global, ArenaHandle::Fresh, &dq, &q, eb, &cfg).unwrap().0;
+        // halo ≥ max(dims) ⇒ every window is the whole field.
+        let tiled = TiledConfig::new(&[16, 16]).with_halo(60);
+        let got = run_tiled(PoolHandle::Global, ArenaHandle::Fresh, &dq, &q, eb, &cfg, &tiled)
+            .unwrap()
+            .0;
+        assert_eq!(got.data, whole.data);
+        assert_eq!(got.shape, whole.shape);
+    }
+
+    #[test]
+    fn pjrt_backend_is_rejected() {
+        let orig = generate(DatasetKind::ClimateLike, &[16, 16], 1);
+        let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+        let (q, dq) = quantize_grid(&orig, eb);
+        let cfg = MitigationConfig { backend: Backend::Pjrt, ..Default::default() };
+        let tiled = TiledConfig::new(&[8, 8]);
+        let err = run_tiled(PoolHandle::Global, ArenaHandle::Fresh, &dq, &q, eb, &cfg, &tiled);
+        assert!(err.is_err());
+    }
+}

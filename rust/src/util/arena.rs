@@ -60,10 +60,11 @@
 //! lease returns its buffer to the arena on drop (including unwinds),
 //! keeping hit/miss/bytes-outstanding accounting exact on panic paths,
 //! with [`ArenaLease::detach`] as the explicit escape hatch for buffers
-//! that outlive the lease (pipeline outputs). The pipeline's step-E
-//! output buffer holds a lease; the remaining `take_*`/`give` call
-//! sites are panic-tolerant only through the service's per-job panic
-//! catch.
+//! that outlive the lease (pipeline outputs). The pipeline holds all of
+//! its intermediates this way: raw vectors as [`ArenaLease`]s, grids as
+//! [`GridLease`]s ([`Arena::relend`] / [`Arena::relend_grid`] wrap a
+//! buffer that a `take_*` already accounted), so a panic anywhere in
+//! steps A–E unwinds with every buffer parked and the gauges exact.
 //!
 //! # Examples
 //!
@@ -81,6 +82,7 @@
 
 #![deny(missing_docs)]
 
+use crate::data::grid::Grid;
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -144,6 +146,13 @@ pub struct ArenaStats {
     pub bytes_outstanding: u64,
     /// Bytes currently parked in the free lists.
     pub bytes_pooled: u64,
+    /// High-water mark of `bytes_outstanding` since the arena was
+    /// built: the largest scratch footprint any moment of the arena's
+    /// life has required. This is what makes memory-budget claims
+    /// scrapeable — the tiled executor's "peak scratch ≤ tile budget ×
+    /// lanes" invariant is asserted against this counter, not against
+    /// a racy sampling of the instantaneous gauge.
+    pub bytes_peak: u64,
 }
 
 impl ArenaStats {
@@ -173,6 +182,7 @@ struct ArenaInner {
     dropped: AtomicU64,
     bytes_outstanding: AtomicU64,
     bytes_pooled: AtomicU64,
+    bytes_peak: AtomicU64,
     /// Retention limits (see [`MAX_FREE_PER_CLASS`] / [`MAX_POOLED_BYTES`]).
     per_class_cap: usize,
     max_pooled_bytes: u64,
@@ -225,6 +235,7 @@ impl Arena {
                 dropped: AtomicU64::new(0),
                 bytes_outstanding: AtomicU64::new(0),
                 bytes_pooled: AtomicU64::new(0),
+                bytes_peak: AtomicU64::new(0),
                 per_class_cap,
                 max_pooled_bytes,
             }),
@@ -301,7 +312,23 @@ impl Arena {
         let popped = self.pop::<T>(size_class(len));
         let counter = if popped.is_some() { &self.inner.hits } else { &self.inner.misses };
         counter.fetch_add(1, Ordering::Relaxed);
-        self.inner.bytes_outstanding.fetch_add(bytes_of::<T>(len), Ordering::Relaxed);
+        let prev = self.inner.bytes_outstanding.fetch_add(bytes_of::<T>(len), Ordering::Relaxed);
+        // CAS-max the high-water mark. This is the only site that grows
+        // the outstanding gauge, so updating the peak here (and only
+        // here) keeps the two exactly consistent.
+        let now = prev + bytes_of::<T>(len);
+        let mut peak = self.inner.bytes_peak.load(Ordering::Relaxed);
+        while now > peak {
+            match self.inner.bytes_peak.compare_exchange_weak(
+                peak,
+                now,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(observed) => peak = observed,
+            }
+        }
         popped
     }
 
@@ -440,7 +467,30 @@ impl Arena {
             dropped: self.inner.dropped.load(Ordering::Relaxed),
             bytes_outstanding: self.inner.bytes_outstanding.load(Ordering::Relaxed),
             bytes_pooled: self.inner.bytes_pooled.load(Ordering::Relaxed),
+            bytes_peak: self.inner.bytes_peak.load(Ordering::Relaxed),
         }
+    }
+
+    /// Wrap an **already-accounted** leased buffer (obtained from a
+    /// `take_*` on this arena) into an RAII [`ArenaLease`], so the rest
+    /// of its life is panic-safe: the buffer is given back on drop and
+    /// escapes via [`ArenaLease::detach`]. No counters move at wrap
+    /// time — the original `take_*` already recorded the lease — which
+    /// is the difference from [`Arena::lease_filled`] and friends.
+    ///
+    /// Calling this with a buffer the arena never leased corrupts the
+    /// outstanding gauge on drop; recycle foreign buffers with
+    /// [`Arena::adopt`] instead.
+    pub fn relend<T: Copy + Send + 'static>(&self, buf: Vec<T>) -> ArenaLease<T> {
+        ArenaLease { buf: Some(buf), arena: Some(self.clone()) }
+    }
+
+    /// [`Arena::relend`] for a buffer embedded in a
+    /// [`Grid`](crate::data::grid::Grid): the grid stays usable through
+    /// the lease (`Deref<Target = Grid<T>>`), and its backing `data`
+    /// vector is given back to the arena when the lease drops.
+    pub fn relend_grid<T: Copy + Send + 'static>(&self, grid: Grid<T>) -> GridLease<T> {
+        GridLease { grid: Some(grid), arena: Some(self.clone()) }
     }
 }
 
@@ -527,6 +577,27 @@ impl ArenaHandle<'_> {
         match self {
             ArenaHandle::Fresh => ArenaLease { buf: Some(vec![T::default(); len]), arena: None },
             ArenaHandle::Pooled(a) => a.lease_stale(len),
+        }
+    }
+
+    /// [`Arena::relend`] through the handle: wrap a buffer this handle
+    /// previously leased (via a `take_*`) into an RAII lease with no
+    /// counter movement. For `Fresh` the lease is a plain owner that
+    /// simply drops. The buffer **must** have come from a `take_*` on
+    /// the same handle — see [`Arena::relend`].
+    pub fn relend<T: Copy + Send + 'static>(self, buf: Vec<T>) -> ArenaLease<T> {
+        match self {
+            ArenaHandle::Fresh => ArenaLease { buf: Some(buf), arena: None },
+            ArenaHandle::Pooled(a) => a.relend(buf),
+        }
+    }
+
+    /// [`Arena::relend_grid`] through the handle (see
+    /// [`ArenaHandle::relend`]).
+    pub fn relend_grid<T: Copy + Send + 'static>(self, grid: Grid<T>) -> GridLease<T> {
+        match self {
+            ArenaHandle::Fresh => GridLease { grid: Some(grid), arena: None },
+            ArenaHandle::Pooled(a) => a.relend_grid(grid),
         }
     }
 }
@@ -618,6 +689,65 @@ impl<T: Copy + Send + std::fmt::Debug + 'static> std::fmt::Debug for ArenaLease<
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ArenaLease")
             .field("len", &self.len())
+            .field("pooled", &self.arena.is_some())
+            .finish()
+    }
+}
+
+/// An RAII lease of a whole [`Grid`] whose backing vector was leased
+/// from an arena: derefs to the grid — so it can be passed anywhere a
+/// `&Grid<T>` is expected for the lease's lifetime — and **gives the
+/// grid's `data` vector back to the arena on drop**, including unwinds.
+/// Produced by [`Arena::relend_grid`] / [`ArenaHandle::relend_grid`];
+/// [`GridLease::detach`] is the escape hatch for grids that outlive the
+/// lease (outputs handed to the caller).
+///
+/// This is what lets the pipeline keep its step A–D intermediates
+/// (boundary mask, sign map, propagated signs, flip mask) as plain
+/// grids flowing between steps while still being panic-safe leases —
+/// the same RAII story [`ArenaLease`] gives raw vectors.
+pub struct GridLease<T: Copy + Send + 'static> {
+    /// `None` only after `detach` (and transiently during drop).
+    grid: Option<Grid<T>>,
+    /// `None` for `Fresh` leases: a plain owner, no accounting.
+    arena: Option<Arena>,
+}
+
+impl<T: Copy + Send + 'static> GridLease<T> {
+    /// Keep the grid: record the escape with the arena (clearing its
+    /// data from the outstanding gauge) and hand the grid to the
+    /// caller.
+    pub fn detach(mut self) -> Grid<T> {
+        let grid = self.grid.take().expect("grid lease already detached");
+        if let Some(arena) = &self.arena {
+            arena.detach(&grid.data);
+        }
+        grid
+    }
+}
+
+impl<T: Copy + Send + 'static> std::ops::Deref for GridLease<T> {
+    type Target = Grid<T>;
+
+    fn deref(&self) -> &Grid<T> {
+        self.grid.as_ref().expect("grid lease already detached")
+    }
+}
+
+impl<T: Copy + Send + 'static> Drop for GridLease<T> {
+    fn drop(&mut self) {
+        if let Some(grid) = self.grid.take() {
+            if let Some(arena) = &self.arena {
+                arena.give(grid.data);
+            }
+        }
+    }
+}
+
+impl<T: Copy + Send + std::fmt::Debug + 'static> std::fmt::Debug for GridLease<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GridLease")
+            .field("len", &self.grid.as_ref().map_or(0, |g| g.len()))
             .field("pooled", &self.arena.is_some())
             .finish()
     }
@@ -881,6 +1011,65 @@ mod tests {
         drop(lease); // no arena: nothing to account
         let stale: Vec<u16> = h.lease_stale(4).detach();
         assert_eq!(stale, vec![0; 4]);
+    }
+
+    #[test]
+    fn bytes_peak_is_a_high_water_mark() {
+        let arena = Arena::new();
+        assert_eq!(arena.stats().bytes_peak, 0);
+        let a: Vec<i64> = arena.take_filled(100, 0); // 800 B outstanding
+        let b: Vec<i64> = arena.take_filled(50, 0); // 1200 B outstanding
+        assert_eq!(arena.stats().bytes_peak, 1200, "peak = sum of concurrent leases");
+        arena.give(a);
+        arena.give(b);
+        let st = arena.stats();
+        assert_eq!(st.bytes_outstanding, 0);
+        assert_eq!(st.bytes_peak, 1200, "gives must not lower the peak");
+        // A smaller lease leaves the peak where it was; a pair that
+        // overlaps higher raises it.
+        let c: Vec<i64> = arena.take_filled(10, 0);
+        assert_eq!(arena.stats().bytes_peak, 1200);
+        let d: Vec<i64> = arena.take_filled(200, 0); // 80 + 1600 = 1680
+        assert_eq!(arena.stats().bytes_peak, 1680);
+        arena.give(c);
+        arena.give(d);
+    }
+
+    #[test]
+    fn relend_moves_no_counters_and_gives_on_drop() {
+        let arena = Arena::new();
+        let raw: Vec<f32> = arena.take_filled(64, 0.0);
+        let before = arena.stats();
+        {
+            let lease = arena.relend(raw);
+            assert_eq!(lease.len(), 64);
+            // Wrapping is accounting-neutral: the take above already
+            // recorded the lease.
+            assert_eq!(arena.stats(), before);
+        } // drop gives back
+        let st = arena.stats();
+        assert_eq!(st.returns, 1);
+        assert_eq!(st.bytes_outstanding, 0);
+    }
+
+    #[test]
+    fn grid_lease_derefs_and_returns_backing_data() {
+        use crate::data::grid::Grid;
+        let arena = Arena::new();
+        let data: Vec<f32> = arena.take_filled(64, 2.0);
+        {
+            let lease = arena.relend_grid(Grid::from_vec(data, &[8, 8]));
+            assert_eq!(lease.shape.user_dims(), &[8, 8]);
+            assert_eq!(lease.data[0], 2.0);
+        } // drop gives the backing vector back
+        let st = arena.stats();
+        assert_eq!((st.returns, st.bytes_outstanding), (1, 0));
+        // detach escapes: outstanding clears without parking.
+        let data: Vec<f32> = arena.take_filled(64, 3.0);
+        let grid = arena.relend_grid(Grid::from_vec(data, &[8, 8])).detach();
+        assert_eq!(grid.data[63], 3.0);
+        let st = arena.stats();
+        assert_eq!((st.detached, st.bytes_outstanding), (1, 0));
     }
 
     #[test]

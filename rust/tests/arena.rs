@@ -329,4 +329,13 @@ fn metrics_line_is_scrapeable_key_value_text() {
     assert!(line.contains("arena_misses="), "line={line}");
     assert!(line.contains("arena_adopted=1"), "line={line}");
     assert!(line.contains("arena_bytes_outstanding=0"), "line={line}");
+    // The high-water mark survives the job: scratch was leased and
+    // returned, so outstanding is 0 but the peak stays visible.
+    let peak: u64 = line
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("arena_bytes_peak="))
+        .expect("arena_bytes_peak token")
+        .parse()
+        .unwrap();
+    assert!(peak > 0, "pipeline scratch must register a high-water mark, line={line}");
 }

@@ -1,0 +1,326 @@
+//! Tiled streaming executor: exactness, lane invariance, halo
+//! geometry, and the arena-counter-proven scratch budget.
+//!
+//! The contracts under test (see `rust/src/mitigation/tiled.rs`):
+//!
+//! * **Lane invariance** — tiled output is bit-identical at every
+//!   thread count (windows run sequentially inside; parallelism lives
+//!   across tiles only).
+//! * **Whole-field anchor** — `halo ≥ max(dims)` makes every window the
+//!   whole field, so the tiled output bit-matches `run_pipeline`
+//!   unconditionally, at any tile shape and thread count.
+//! * **Bounded seam deviation** — at *any* halo, step E never
+//!   compensates a point by more than `η·ε`, so tiled and whole-field
+//!   outputs agree within `2·η·ε` pointwise and both stay inside the
+//!   paper's relaxed bound `(1+η)·ε` against the original.
+//! * **Scratch budget** — a pooled-arena tiled run keeps the arena's
+//!   `bytes_peak` high-water mark under
+//!   `TiledConfig::scratch_budget_bytes(field, lanes)`, and a warm
+//!   rerun is allocation-free.
+//! * **Streaming** — `run_tiled_szp` decodes per-tile windows out of
+//!   the SZp stream, delivers every tile exactly once, and its
+//!   first-tile latency never exceeds the total.
+
+use qai::data::grid::{Grid, Shape};
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::engine::{execute_on, Engine, MitigationRequest};
+use qai::mitigation::tiled::{plan, run_tiled_observed, run_tiled_szp, TiledConfig};
+use qai::mitigation::MitigationConfig;
+use qai::quant::{quantize_grid, ErrorBound, QIndex, ResolvedBound};
+use qai::util::arena::{Arena, ArenaHandle};
+use qai::util::pool::PoolHandle;
+use std::sync::Mutex;
+
+fn prepared(
+    kind: DatasetKind,
+    dims: &[usize],
+    seed: u64,
+) -> (Grid<f32>, Grid<f32>, Grid<QIndex>, ResolvedBound) {
+    let orig = generate(kind, dims, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    (orig, dq, q, eb)
+}
+
+fn whole_field(dq: &Grid<f32>, q: &Grid<QIndex>, eb: ResolvedBound) -> Grid<f32> {
+    // The exact engine substrate the tiled path is measured against.
+    let cfg = MitigationConfig { threads: 1, ..Default::default() };
+    let job = qai::mitigation::Job::with_config(dq.clone(), q.clone(), eb, cfg);
+    execute_on(PoolHandle::Global, ArenaHandle::Fresh, &MitigationRequest::from_job(job))
+        .unwrap()
+        .output
+}
+
+fn tiled_output(
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    tiled: TiledConfig,
+    threads: usize,
+) -> Grid<f32> {
+    let cfg = MitigationConfig { threads, ..Default::default() };
+    let job = qai::mitigation::Job::with_config(dq.clone(), q.clone(), eb, cfg);
+    execute_on(
+        PoolHandle::Global,
+        ArenaHandle::Fresh,
+        &MitigationRequest::from_job(job).tiled(tiled),
+    )
+    .unwrap()
+    .output
+}
+
+/// datasets × dimensionality × tile shapes: at every thread count the
+/// tiled output is bit-identical to threads=1 tiled (lane invariance),
+/// and with a whole-field halo it bit-matches the dense pipeline.
+#[test]
+fn lane_invariance_and_whole_field_anchor() {
+    let cases: &[(DatasetKind, &[usize], &[usize], u64)] = &[
+        (DatasetKind::ClimateLike, &[48, 48], &[16, 16], 11),
+        (DatasetKind::CosmologyLike, &[33, 47], &[16, 12], 12),
+        (DatasetKind::MirandaLike, &[16, 16, 12], &[8, 8, 8], 13),
+        (DatasetKind::TurbulenceLike, &[12, 18, 14], &[5, 7, 6], 14),
+    ];
+    for &(kind, dims, tile, seed) in cases {
+        let (_, dq, q, eb) = prepared(kind, dims, seed);
+        let max_dim = *dims.iter().max().unwrap();
+
+        // Whole-field halo ⇒ unconditional bit-identity.
+        let anchor = TiledConfig::new(tile).with_halo(max_dim);
+        let whole = whole_field(&dq, &q, eb);
+        for threads in [1usize, 2, 4] {
+            let got = tiled_output(&dq, &q, eb, anchor, threads);
+            assert_eq!(
+                got.data, whole.data,
+                "{kind:?} {dims:?} tile={tile:?} threads={threads}: whole-field-halo tiled \
+                 run must bit-match the dense pipeline"
+            );
+        }
+
+        // Default halo: output must not depend on the lane count.
+        let small = TiledConfig::new(tile);
+        let seq = tiled_output(&dq, &q, eb, small, 1);
+        for threads in [2usize, 4] {
+            let par = tiled_output(&dq, &q, eb, small, threads);
+            assert_eq!(
+                par.data, seq.data,
+                "{kind:?} {dims:?} tile={tile:?} threads={threads}: tiled output must be \
+                 lane-count invariant"
+            );
+        }
+    }
+}
+
+/// At *any* halo — including a deliberately undersized one — seam
+/// disagreement with the dense pipeline is bounded by 2·η·ε (each path
+/// compensates each point by at most η·ε), and the tiled output still
+/// honors the paper's relaxed error bound against the original.
+#[test]
+fn undersized_halo_bounds_seam_deviation_and_error() {
+    let cases: &[(DatasetKind, &[usize], &[usize], usize, u64)] = &[
+        (DatasetKind::ClimateLike, &[40, 40], &[16, 16], 2, 21),
+        (DatasetKind::CombustionLike, &[14, 20, 16], &[7, 10, 8], 1, 22),
+        (DatasetKind::MirandaLike, &[18, 14, 12], &[9, 7, 6], 3, 23),
+    ];
+    for &(kind, dims, tile, halo, seed) in cases {
+        let (orig, dq, q, eb) = prepared(kind, dims, seed);
+        let eta = MitigationConfig::default().eta;
+        let whole = whole_field(&dq, &q, eb);
+        let got = tiled_output(&dq, &q, eb, TiledConfig::new(tile).with_halo(halo), 2);
+
+        let seam_cap = 2.0 * eta * eb.abs * (1.0 + 1e-5) + 1e-12;
+        let err_cap = (1.0 + eta) * eb.abs * (1.0 + 1e-5) + 1e-12;
+        for i in 0..got.data.len() {
+            let seam = (got.data[i] as f64 - whole.data[i] as f64).abs();
+            assert!(
+                seam <= seam_cap,
+                "{kind:?} {dims:?} halo={halo}: seam deviation {seam:.3e} exceeds 2ηε={seam_cap:.3e} at {i}"
+            );
+            let err = (got.data[i] as f64 - orig.data[i] as f64).abs();
+            assert!(
+                err <= err_cap,
+                "{kind:?} {dims:?} halo={halo}: |out-orig|={err:.3e} exceeds (1+η)ε={err_cap:.3e} at {i}"
+            );
+        }
+    }
+}
+
+/// Window geometry: interior tiles carry the full halo margin on every
+/// side; domain-edge tiles are shrink-clamped (margin = distance to the
+/// domain edge). This is the tile-level analogue of the coordinator's
+/// clamped halo exchange.
+#[test]
+fn halo_margins_full_inside_clamped_at_domain_edges() {
+    let field = Shape::new(&[50, 30, 20]);
+    let tiled = TiledConfig::new(&[16, 10, 8]).with_halo(4);
+    for tp in plan(&field, &tiled) {
+        for a in 0..3 {
+            let lo_margin = tp.lo[a] - tp.window_lo[a];
+            let hi_margin = (tp.window_lo[a] + tp.window_size[a]) - (tp.lo[a] + tp.size[a]);
+            let want_lo = tiled.halo.min(tp.lo[a]);
+            let want_hi = tiled.halo.min(field.dims[a] - tp.lo[a] - tp.size[a]);
+            assert_eq!(lo_margin, want_lo, "tile {:?} axis {a} low margin", tp.lo);
+            assert_eq!(hi_margin, want_hi, "tile {:?} axis {a} high margin", tp.lo);
+        }
+    }
+}
+
+/// The acceptance invariant: a tiled run on a field ≥ 8× the tile size
+/// keeps the arena's high-water mark under the published budget
+/// `window_elems × SCRATCH_BYTES_PER_ELEM × lanes`, outstanding bytes
+/// return to zero, and a warm rerun allocates nothing new.
+#[test]
+fn pooled_scratch_stays_under_budget_and_warm_runs_are_allocation_free() {
+    let dims = [64usize, 64];
+    let (_, dq, q, eb) = prepared(DatasetKind::ClimateLike, &dims, 31);
+    let lanes = 2usize;
+    let tiled = TiledConfig::new(&[16, 16]); // 16 tiles = 16× tile count
+    let cfg = MitigationConfig { threads: lanes, ..Default::default() };
+    let job = qai::mitigation::Job::with_config(dq.clone(), q.clone(), eb, cfg);
+    let request = MitigationRequest::from_job(job).tiled(tiled);
+
+    let arena = Arena::new();
+    let cold =
+        execute_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &request).unwrap().output;
+    let cold_stats = arena.stats();
+    assert_eq!(cold_stats.bytes_outstanding, 0, "all window scratch must return to the pool");
+    let budget = tiled.scratch_budget_bytes(&dq.shape, lanes);
+    assert!(
+        cold_stats.bytes_peak <= budget,
+        "peak scratch {} B exceeds the tiled budget {} B (window_elems={} lanes={lanes})",
+        cold_stats.bytes_peak,
+        budget,
+        tiled.window_elems(&dq.shape)
+    );
+    assert!(cold_stats.bytes_peak > 0, "a pooled run must register a high-water mark");
+
+    let warm =
+        execute_on(PoolHandle::Global, ArenaHandle::Pooled(&arena), &request).unwrap().output;
+    assert_eq!(warm.data, cold.data, "warm rerun must be bit-identical");
+    let warm_stats = arena.stats();
+    assert_eq!(
+        warm_stats.misses, cold_stats.misses,
+        "warm tiled rerun must be allocation-free (every window buffer recycled)"
+    );
+    assert!(
+        warm_stats.bytes_peak <= budget,
+        "warm peak {} B exceeds budget {} B",
+        warm_stats.bytes_peak,
+        budget
+    );
+}
+
+/// Front-door wiring: an engine built with a default `TiledConfig`
+/// applies it to targetless requests (whole-field halo ⇒ bit-identity
+/// with a plain engine), a per-request `tile_shape` works without the
+/// builder default, and quality-targeted requests keep the dense path.
+#[test]
+fn engine_dispatches_tiled_requests() {
+    let (orig, dq, q, eb) = prepared(DatasetKind::MirandaLike, &[14, 12, 10], 41);
+    let plain = Engine::builder().build();
+    let whole = plain.run(MitigationRequest::new(dq.clone(), q.clone(), eb)).unwrap().output;
+
+    let tiled_engine =
+        Engine::builder().tiled(TiledConfig::new(&[6, 6, 6]).with_halo(14)).build();
+    let via_default =
+        tiled_engine.run(MitigationRequest::new(dq.clone(), q.clone(), eb)).unwrap().output;
+    assert_eq!(via_default.data, whole.data, "builder-default tiling must bit-match");
+
+    let via_request = plain
+        .run(
+            MitigationRequest::new(dq.clone(), q.clone(), eb)
+                .tiled(TiledConfig::new(&[5, 6, 4]).with_halo(14)),
+        )
+        .unwrap()
+        .output;
+    assert_eq!(via_request.data, whole.data, "per-request tiling must bit-match");
+
+    // Quality-targeted jobs ignore tiling (the tuner owns the path) and
+    // still satisfy the target machinery end-to-end.
+    let resp = tiled_engine
+        .run(
+            MitigationRequest::new(dq.clone(), q.clone(), eb)
+                .reference(orig)
+                .quality_target(qai::mitigation::QualityTarget::Psnr(10.0)),
+        )
+        .unwrap();
+    assert!(resp.quality.is_some(), "quality-targeted request must be scored");
+}
+
+/// Streaming fusion: decode-per-tile out of an SZp stream, every tile
+/// delivered exactly once, first-tile latency ≤ total, and with a
+/// whole-field halo the result bit-matches decompress-then-mitigate.
+#[test]
+fn szp_streaming_run_matches_decode_then_mitigate() {
+    use qai::compressors::szp::SzpLike;
+    use qai::compressors::Compressor;
+
+    let orig = generate(DatasetKind::TurbulenceLike, &[24, 20, 8], 51);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let codec = SzpLike::default();
+    let stream = codec.compress(&orig, eb).unwrap();
+
+    let dec = codec.decompress(&stream).unwrap();
+    let whole = whole_field(&dec.grid, &dec.quant_indices, dec.bound);
+
+    let cfg = MitigationConfig { threads: 2, ..Default::default() };
+    let tiled = TiledConfig::new(&[12, 10, 8]).with_halo(24);
+    let arena = Arena::new();
+    let seen = Mutex::new(Vec::<usize>::new());
+    let outcome = run_tiled_szp(
+        PoolHandle::Global,
+        ArenaHandle::Pooled(&arena),
+        &codec,
+        &stream,
+        &cfg,
+        &tiled,
+        &|d| seen.lock().unwrap().push(d.index),
+    )
+    .unwrap();
+
+    assert_eq!(outcome.output.data, whole.data, "streaming run must bit-match");
+    assert_eq!(outcome.bound.abs, dec.bound.abs);
+    let n_tiles = plan(&outcome.output.shape, &tiled).len();
+    assert_eq!(outcome.tiles, n_tiles);
+    let mut seen = seen.into_inner().unwrap();
+    seen.sort_unstable();
+    assert_eq!(seen, (0..n_tiles).collect::<Vec<_>>(), "each tile delivered exactly once");
+    assert!(outcome.first_tile <= outcome.total);
+    assert_eq!(arena.stats().bytes_outstanding, 0);
+}
+
+/// The observer fires once per tile on the in-memory path too, and the
+/// reported tile origins/extents partition the field.
+#[test]
+fn observer_reports_every_tile_once() {
+    let (_, dq, q, eb) = prepared(DatasetKind::CosmologyLike, &[30, 26], 61);
+    let cfg = MitigationConfig { threads: 4, ..Default::default() };
+    let tiled = TiledConfig::new(&[8, 8]).with_halo(3);
+    let events = Mutex::new(Vec::new());
+    let (out, _) = run_tiled_observed(
+        PoolHandle::Global,
+        ArenaHandle::Fresh,
+        &dq,
+        &q,
+        eb,
+        &cfg,
+        &tiled,
+        &|d| events.lock().unwrap().push(d),
+    )
+    .unwrap();
+    assert_eq!(out.shape, dq.shape);
+    let events = events.into_inner().unwrap();
+    let tiles = plan(&dq.shape, &tiled);
+    assert_eq!(events.len(), tiles.len());
+    let mut covered = vec![0u8; dq.shape.len()];
+    for e in &events {
+        assert_eq!((e.lo, e.size), (tiles[e.index].lo, tiles[e.index].size));
+        for i in 0..e.size[0] {
+            for j in 0..e.size[1] {
+                for k in 0..e.size[2] {
+                    covered[dq.shape.idx(e.lo[0] + i, e.lo[1] + j, e.lo[2] + k)] += 1;
+                }
+            }
+        }
+    }
+    assert!(covered.iter().all(|&c| c == 1), "reported tiles must partition the field");
+}
