@@ -1,0 +1,210 @@
+//! Cluster-scale serving harness: the same request set pushed through a
+//! single-process engine and through a 2-process cluster (this process
+//! joins a forked `qai serve --listen` node over localhost TCP, and
+//! rendezvous routing splits the tenants across both).
+//!
+//! The point is not that two processes on one host go faster — framing
+//! grids over a socket costs more than an in-process Arc bump, and the
+//! numbers say so honestly. The point is the **scaling contract**: the
+//! cluster path must produce bit-identical outputs while measurably
+//! moving part of the stream over the wire, and the measured 1- vs
+//! 2-process throughput plus transport byte counters land in
+//! `BENCH_cluster.json` (a JSON array of per-run records, like
+//! `BENCH_serve.json`) so CI can sanity-check the trajectory.
+
+use qai::cluster::node::{request_shutdown, ClusterEngine};
+use qai::cluster::registry::NodeRegistry;
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::mitigation::engine::{Engine, MitigationRequest, TransportStatsSource};
+use qai::quant::{quantize_grid, ErrorBound, QIndex, ResolvedBound};
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Instant;
+
+const DIMS: &[usize] = &[24, 24, 24];
+const TENANTS: usize = 8;
+
+struct ChildGuard(Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _killed = self.0.kill();
+        let _reaped = self.0.wait();
+    }
+}
+
+fn make_input(seed: u64) -> (Grid<f32>, Grid<QIndex>, ResolvedBound) {
+    let orig = generate(DatasetKind::MirandaLike, DIMS, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    (dq, q, eb)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let jobs_n: usize = if quick { 16 } else { 64 };
+
+    let inputs: Vec<(Grid<f32>, Grid<QIndex>, ResolvedBound)> =
+        (0..8).map(|i| make_input(900 + i)).collect();
+
+    // Pick the tenant set so rendezvous routing provably splits it:
+    // half the names route to the local node (101), half to the forked
+    // listener (202).
+    let mut reg = NodeRegistry::new(101);
+    reg.add(202);
+    let mut locals = Vec::new();
+    let mut remotes = Vec::new();
+    for i in 0..256 {
+        let t = format!("t{i}");
+        if reg.route(&t) == Some(101) {
+            locals.push(t);
+        } else {
+            remotes.push(t);
+        }
+    }
+    assert!(
+        locals.len() >= TENANTS / 2 && remotes.len() >= TENANTS / 2,
+        "pathological rendezvous split over 256 candidate tenants"
+    );
+    let tenants: Vec<String> = locals
+        .iter()
+        .take(TENANTS / 2)
+        .cloned()
+        .chain(remotes.iter().take(TENANTS / 2).cloned())
+        .collect();
+    let tenant_of = |i: usize| tenants[i % tenants.len()].clone();
+
+    // ---- 1 process: plain sharded engine. ----------------------------
+    let single = Engine::builder().shards(2).build();
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(jobs_n);
+    for i in 0..jobs_n {
+        let (dq, q, eb) = &inputs[i % inputs.len()];
+        let req = MitigationRequest::new(dq.clone(), q.clone(), *eb).tenant(tenant_of(i));
+        tickets.push(single.submit(req).expect("single-process submit"));
+    }
+    let mut single_outputs = Vec::with_capacity(jobs_n);
+    for ticket in tickets {
+        single_outputs.push(ticket.wait().expect("single-process job").output);
+    }
+    let single_wall = t0.elapsed().as_secs_f64();
+    let single_thr = jobs_n as f64 / single_wall.max(1e-12);
+
+    // ---- 2 processes: forked listener + this process as joiner. ------
+    let child = Command::new(env!("CARGO_BIN_EXE_qai"))
+        .args(["serve", "--listen", "127.0.0.1:0", "--node-id", "202", "--shards", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn listener process");
+    let mut guard = ChildGuard(child);
+    let mut line = String::new();
+    BufReader::new(guard.0.stdout.take().expect("child stdout"))
+        .read_line(&mut line)
+        .expect("read listen line");
+    let addr = line
+        .trim()
+        .split(" listening on ")
+        .nth(1)
+        .unwrap_or_else(|| panic!("unexpected listen line: {line:?}"))
+        .to_string();
+
+    let local_engine = Arc::new(Engine::builder().shards(2).build());
+    let cluster = ClusterEngine::new(101, Arc::clone(&local_engine));
+    let peer = cluster.join(&addr).expect("join listener");
+    assert_eq!(peer, 202);
+
+    let t0 = Instant::now();
+    let mut tickets = Vec::with_capacity(jobs_n);
+    let mut remote_jobs = 0usize;
+    for i in 0..jobs_n {
+        let (dq, q, eb) = &inputs[i % inputs.len()];
+        let req = MitigationRequest::new(dq.clone(), q.clone(), *eb).tenant(tenant_of(i));
+        let ticket = cluster.submit(req).expect("cluster submit");
+        if ticket.is_remote() {
+            remote_jobs += 1;
+        }
+        tickets.push(ticket);
+    }
+    let mut cluster_outputs = Vec::with_capacity(jobs_n);
+    for ticket in tickets {
+        cluster_outputs.push(ticket.wait().expect("cluster job").output);
+    }
+    let cluster_wall = t0.elapsed().as_secs_f64();
+    let cluster_thr = jobs_n as f64 / cluster_wall.max(1e-12);
+    let local_jobs = jobs_n - remote_jobs;
+
+    let counters = cluster.transport_stats().transport_counters();
+    let sent_bytes: u64 = counters.iter().map(|c| c.sent_bytes).sum();
+    let recv_bytes: u64 = counters.iter().map(|c| c.recv_bytes).sum();
+    let sent_msgs: u64 = counters.iter().map(|c| c.sent_msgs).sum();
+
+    request_shutdown(&addr, 101).expect("shutdown listener");
+    let status = guard.0.wait().expect("reap listener");
+
+    // ---- Sanity: the whole point of the contract. --------------------
+    assert!(status.success(), "listener exited with {status:?}");
+    assert!(remote_jobs > 0, "no job crossed the wire — routing is broken");
+    assert!(local_jobs > 0, "no job stayed local — routing is broken");
+    assert!(sent_bytes > 0 && recv_bytes > 0, "transport counters must see the traffic");
+    for (i, (got, want)) in cluster_outputs.iter().zip(&single_outputs).enumerate() {
+        assert_eq!(
+            got.data, want.data,
+            "job {i}: cluster output differs from single-process output"
+        );
+    }
+
+    println!("cluster_scale: {jobs_n} jobs of {DIMS:?}, {TENANTS} tenants");
+    println!("  1 process : {single_thr:.1} jobs/s ({single_wall:.3}s wall)");
+    println!(
+        "  2 process : {cluster_thr:.1} jobs/s ({cluster_wall:.3}s wall), \
+         {local_jobs} local / {remote_jobs} remote"
+    );
+    println!(
+        "  wire      : {sent_bytes} B sent / {recv_bytes} B recv in {sent_msgs} msgs to peer {peer}"
+    );
+    println!("  outputs   : bit-identical across both runs");
+
+    let record = format!(
+        "{{\n  \"bench\": \"cluster_scale\",\n  \"generator\": \"cargo bench --bench cluster_scale{}\",\n  \
+         \"jobs\": {},\n  \"single_process_throughput_jobs_per_s\": {:.3},\n  \
+         \"single_process_wall_s\": {:.6},\n  \"two_process_throughput_jobs_per_s\": {:.3},\n  \
+         \"two_process_wall_s\": {:.6},\n  \"local_jobs\": {},\n  \"remote_jobs\": {},\n  \
+         \"wire_sent_bytes\": {},\n  \"wire_recv_bytes\": {},\n  \"wire_sent_msgs\": {},\n  \
+         \"bit_identical\": true\n}}",
+        if quick { " -- --quick" } else { "" },
+        jobs_n,
+        single_thr,
+        single_wall,
+        cluster_thr,
+        cluster_wall,
+        local_jobs,
+        remote_jobs,
+        sent_bytes,
+        recv_bytes,
+        sent_msgs,
+    );
+    // Append to the trajectory array — same no-serde string surgery as
+    // BENCH_serve.json (fresh file, existing array, or legacy object).
+    let path = "BENCH_cluster.json";
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim();
+    let json = if trimmed.is_empty() {
+        format!("[\n{record}\n]\n")
+    } else if let Some(body) =
+        trimmed.strip_prefix('[').and_then(|s| s.strip_suffix(']')).map(str::trim)
+    {
+        if body.is_empty() {
+            format!("[\n{record}\n]\n")
+        } else {
+            format!("[\n{body},\n{record}\n]\n")
+        }
+    } else {
+        format!("[\n{trimmed},\n{record}\n]\n")
+    };
+    std::fs::write(path, &json).expect("write BENCH_cluster.json");
+    println!("\nappended run record to BENCH_cluster.json");
+    println!("cluster_scale: OK");
+}

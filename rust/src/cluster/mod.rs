@@ -1,0 +1,31 @@
+//! Cluster-scale engine: multi-process shards over a pluggable
+//! transport.
+//!
+//! This subsystem turns N `qai serve` processes into one logical
+//! engine (paper contribution 3, taken past the single process):
+//!
+//! * [`wire`] — length-prefixed framing and a total, typed codec for
+//!   every cross-socket message (handshakes, mitigation
+//!   request/response, rank-mesh traffic). Deadlines serialize as
+//!   remaining budget, never absolute instants.
+//! * [`transport`] — the object-safe [`Transport`](transport::Transport)
+//!   trait the distributed numerics are written against, with the
+//!   in-process loopback (`coordinator::transport::Endpoint`, adapted
+//!   bit-identically) and [`SocketTransport`](transport::SocketTransport)
+//!   (TCP/Unix sockets, per-peer byte/message counters) behind it.
+//! * [`registry`] — rendezvous (HRW) hashed tenant → node routing:
+//!   adding a node moves only ~1/N of tenants.
+//! * [`node`] — [`ClusterServer`](node::ClusterServer) (accept loop,
+//!   `--listen`) and [`ClusterEngine`](node::ClusterEngine) (routing
+//!   front door, `--join`), with `SharedGrid` zero-copy preserved on
+//!   the locally-owned path.
+//! * [`procs`] — forked multi-process rank runs over localhost for the
+//!   fig9/fig11 benches: real wires, measured comm breakdown.
+
+#![deny(missing_docs)]
+
+pub mod node;
+pub mod procs;
+pub mod registry;
+pub mod transport;
+pub mod wire;

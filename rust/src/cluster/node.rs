@@ -1,0 +1,684 @@
+//! Node-level clustering: remote-addressable engine shards.
+//!
+//! A **node** is one `qai serve` process wrapping one
+//! [`Engine`](crate::mitigation::engine::Engine). Nodes form a cluster
+//! two ways:
+//!
+//! * [`ClusterServer`] — `qai serve --listen <addr>` binds an accept
+//!   loop; each accepted connection handshakes (magic + protocol
+//!   version + node id) and then serves framed
+//!   [`Message::Request`](crate::cluster::wire::Message) traffic
+//!   against the local engine.
+//! * [`ClusterEngine`] — `qai serve --join <addr>` wraps the local
+//!   engine and a [`NodeRegistry`]; every submit routes by rendezvous
+//!   hashing. Tenants owned locally take the exact in-process path
+//!   (`SharedGrid` zero-copy — the request struct moves, the grids
+//!   don't); remote tenants serialize over the peer connection.
+//!
+//! Deadlines cross the wire as **remaining budget**: the sender
+//! subtracts time already spent before encoding, and the remote engine
+//! re-anchors the budget at its own enqueue (the engine's `deadline`
+//! has from-enqueue semantics already). A nearly-expired budget is
+//! shed by the remote node's admission EWMA exactly like a local one.
+//!
+//! Failure semantics: a dead peer connection fails all of its in-flight
+//! tickets with [`ClusterError::Disconnected`]; the next submit to that
+//! peer attempts one reconnect-with-backoff (fresh handshake), and if
+//! that fails the peer is dropped from the registry so rendezvous
+//! routing degrades onto the surviving nodes.
+
+#![deny(missing_docs)]
+
+use crate::cluster::registry::NodeRegistry;
+use crate::cluster::transport::{
+    connect_backoff, ClusterAddr, ClusterListener, CounterCell, Duplex, PeerCounters,
+};
+use crate::cluster::wire::{
+    decode_message, encode_message, read_frame, write_frame, Handshake, Message, RejectKind,
+    RemoteOutcome, WireError, PROTOCOL_VERSION,
+};
+use crate::mitigation::admission::SubmitError;
+use crate::mitigation::engine::{
+    Engine, MitigationRequest, MitigationResponse, ResponseTicket, TransportStatsSource,
+};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Typed cluster-path failure.
+#[derive(Debug)]
+pub enum ClusterError {
+    /// The local engine rejected the request at admission.
+    Local(
+        /// The admission error (job returned inside).
+        SubmitError,
+    ),
+    /// A remote node rejected the request.
+    Rejected {
+        /// Typed rejection category.
+        kind: RejectKind,
+        /// Remote error detail.
+        message: String,
+    },
+    /// The connection to `peer` died with the request in flight.
+    Disconnected {
+        /// The lost peer's node id.
+        peer: u64,
+    },
+    /// The peer sent bytes the codec rejected.
+    Wire(
+        /// The codec error.
+        WireError,
+    ),
+    /// A socket operation failed.
+    Io(
+        /// Stringified I/O error.
+        String,
+    ),
+    /// The request was admitted but execution failed.
+    Exec(
+        /// Stringified execution error.
+        String,
+    ),
+    /// The registry is empty (no node can own the tenant).
+    NoRoute,
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Local(e) => write!(f, "local admission: {e}"),
+            ClusterError::Rejected { kind, message } => {
+                write!(f, "remote rejected ({kind:?}): {message}")
+            }
+            ClusterError::Disconnected { peer } => {
+                write!(f, "peer {peer} disconnected with request in flight")
+            }
+            ClusterError::Wire(e) => write!(f, "wire: {e}"),
+            ClusterError::Io(e) => write!(f, "io: {e}"),
+            ClusterError::Exec(e) => write!(f, "execution: {e}"),
+            ClusterError::NoRoute => write!(f, "no node can own this tenant"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+type RemoteResult = Result<MitigationResponse, ClusterError>;
+type Inflight = Arc<Mutex<HashMap<u64, Sender<RemoteResult>>>>;
+
+/// Node-scoped per-peer traffic counters, attachable to an
+/// [`Engine`] so `metrics_text` emits `scope=transport` lines.
+pub struct ClusterTransportStats {
+    node_id: u64,
+    cells: Mutex<Vec<(u64, Arc<CounterCell>)>>,
+}
+
+impl ClusterTransportStats {
+    /// New counter set for node `node_id`.
+    pub fn new(node_id: u64) -> Arc<ClusterTransportStats> {
+        Arc::new(ClusterTransportStats { node_id, cells: Mutex::new(Vec::new()) })
+    }
+
+    /// The cell tracking traffic with `peer` (created on first use).
+    pub fn register(&self, peer: u64) -> Arc<CounterCell> {
+        let mut cells = self.cells.lock().unwrap();
+        if let Some((_, cell)) = cells.iter().find(|(p, _)| *p == peer) {
+            return Arc::clone(cell);
+        }
+        let cell = Arc::new(CounterCell::default());
+        cells.push((peer, Arc::clone(&cell)));
+        cells.sort_by_key(|(p, _)| *p);
+        cell
+    }
+
+    /// Snapshot all peers' counters.
+    pub fn snapshot(&self) -> Vec<PeerCounters> {
+        self.cells.lock().unwrap().iter().map(|(p, c)| c.snapshot(*p)).collect()
+    }
+}
+
+impl TransportStatsSource for ClusterTransportStats {
+    fn transport_node(&self) -> u64 {
+        self.node_id
+    }
+    fn transport_counters(&self) -> Vec<PeerCounters> {
+        self.snapshot()
+    }
+}
+
+/// Client-side state for one connected peer node.
+struct PeerState {
+    id: u64,
+    addr: ClusterAddr,
+    writer: Mutex<Option<Box<dyn Duplex>>>,
+    counters: Arc<CounterCell>,
+    inflight: Inflight,
+    next_req: AtomicU64,
+    alive: Arc<AtomicBool>,
+}
+
+/// Spawn the detached thread that drains one peer connection's
+/// responses into the in-flight table. On stream death it fails every
+/// outstanding ticket (dropped senders → `Disconnected` at receivers).
+fn spawn_client_reader(
+    peer_id: u64,
+    mut reader: Box<dyn Duplex>,
+    cell: Arc<CounterCell>,
+    inflight: Inflight,
+    alive: Arc<AtomicBool>,
+) {
+    std::thread::spawn(move || {
+        loop {
+            let frame = match read_frame(&mut reader) {
+                Ok(f) => f,
+                Err(_) => break,
+            };
+            cell.note_recv(frame.len() as u64 + 4);
+            match decode_message(&frame) {
+                Ok(Message::Response { req_id, outcome }) => {
+                    let sender = inflight.lock().unwrap().remove(&req_id);
+                    if let Some(tx) = sender {
+                        let result = match *outcome {
+                            RemoteOutcome::Ok(resp) => Ok(resp),
+                            RemoteOutcome::Rejected { kind, message } => {
+                                Err(ClusterError::Rejected { kind, message })
+                            }
+                        };
+                        let _delivered = tx.send(result);
+                    }
+                }
+                Ok(_) | Err(_) => break,
+            }
+        }
+        alive.store(false, Ordering::SeqCst);
+        inflight.lock().unwrap().clear();
+        let _unused = peer_id;
+    });
+}
+
+/// Client side of the cluster handshake on a fresh stream: send
+/// `Hello`, expect `Welcome`. Returns the peer's node id and its known
+/// nodes.
+fn client_handshake(
+    stream: &mut Box<dyn Duplex>,
+    node_id: u64,
+) -> Result<(u64, Vec<u64>), ClusterError> {
+    let hello =
+        encode_message(&Message::Hello(Handshake { node_id, version: PROTOCOL_VERSION }));
+    write_frame(stream, &hello).map_err(ClusterError::Wire)?;
+    let frame = read_frame(stream).map_err(ClusterError::Wire)?;
+    match decode_message(&frame).map_err(ClusterError::Wire)? {
+        Message::Welcome { node_id: peer, nodes, .. } => Ok((peer, nodes)),
+        _ => Err(ClusterError::Wire(WireError::BadPayload("expected Welcome"))),
+    }
+}
+
+/// A ticket for a cluster-routed request: either a plain local engine
+/// ticket (zero-copy path) or a receiver for a remote response.
+pub enum ClusterTicket {
+    /// The request was admitted by the local engine.
+    Local(
+        /// The local engine's ticket.
+        ResponseTicket,
+    ),
+    /// The request went to a remote node.
+    Remote {
+        /// The serving peer's node id.
+        peer: u64,
+        /// The request's trace id (preserved across the wire).
+        trace_id: u64,
+        /// Delivers the remote outcome (or `Disconnected`).
+        rx: Receiver<RemoteResult>,
+    },
+}
+
+impl ClusterTicket {
+    /// True when the request was routed to a remote node.
+    pub fn is_remote(&self) -> bool {
+        matches!(self, ClusterTicket::Remote { .. })
+    }
+
+    /// The request's trace id.
+    pub fn trace_id(&self) -> u64 {
+        match self {
+            ClusterTicket::Local(t) => t.trace_id(),
+            ClusterTicket::Remote { trace_id, .. } => *trace_id,
+        }
+    }
+
+    /// Block until the response arrives (local execution or remote
+    /// reply).
+    pub fn wait(self) -> RemoteResult {
+        match self {
+            ClusterTicket::Local(t) => t.wait().map_err(|e| ClusterError::Exec(e.to_string())),
+            ClusterTicket::Remote { peer, rx, .. } => match rx.recv() {
+                Ok(result) => result,
+                Err(_) => Err(ClusterError::Disconnected { peer }),
+            },
+        }
+    }
+}
+
+/// The cluster-routing front door: wraps a local [`Engine`] plus the
+/// peer connections formed by [`ClusterEngine::join`], and routes every
+/// submit by rendezvous hashing over the [`NodeRegistry`].
+pub struct ClusterEngine {
+    node_id: u64,
+    engine: Arc<Engine>,
+    registry: Mutex<NodeRegistry>,
+    peers: Mutex<BTreeMap<u64, Arc<PeerState>>>,
+    stats: Arc<ClusterTransportStats>,
+}
+
+impl ClusterEngine {
+    /// Wrap `engine` as cluster node `node_id`. Attaches a transport
+    /// counter source to the engine so `metrics_text` grows
+    /// `scope=transport` lines.
+    pub fn new(node_id: u64, engine: Arc<Engine>) -> ClusterEngine {
+        let stats = ClusterTransportStats::new(node_id);
+        engine.attach_transport(Arc::clone(&stats) as Arc<dyn TransportStatsSource>);
+        ClusterEngine {
+            node_id,
+            engine: Arc::clone(&engine),
+            registry: Mutex::new(NodeRegistry::new(node_id)),
+            peers: Mutex::new(BTreeMap::new()),
+            stats,
+        }
+    }
+
+    /// This node's id.
+    pub fn node_id(&self) -> u64 {
+        self.node_id
+    }
+
+    /// The wrapped local engine.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// The node ids currently in the routing registry, ascending.
+    pub fn nodes(&self) -> Vec<u64> {
+        self.registry.lock().unwrap().nodes().to_vec()
+    }
+
+    /// The transport counter source (shared with the engine's
+    /// metrics).
+    pub fn transport_stats(&self) -> &Arc<ClusterTransportStats> {
+        &self.stats
+    }
+
+    /// Connect to a listening peer, handshake, and add it to the
+    /// routing registry. Returns the peer's node id.
+    pub fn join(&self, addr: &str) -> Result<u64, ClusterError> {
+        let addr = ClusterAddr::parse(addr);
+        let mut stream =
+            connect_backoff(&addr, 30).map_err(|e| ClusterError::Io(e.to_string()))?;
+        let (peer_id, _nodes) = client_handshake(&mut stream, self.node_id)?;
+        let reader = stream
+            .try_clone_box()
+            .map_err(|e| ClusterError::Io(e.to_string()))?;
+        let counters = self.stats.register(peer_id);
+        let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+        let alive = Arc::new(AtomicBool::new(true));
+        spawn_client_reader(
+            peer_id,
+            reader,
+            Arc::clone(&counters),
+            Arc::clone(&inflight),
+            Arc::clone(&alive),
+        );
+        let state = Arc::new(PeerState {
+            id: peer_id,
+            addr,
+            writer: Mutex::new(Some(stream)),
+            counters,
+            inflight,
+            next_req: AtomicU64::new(1),
+            alive,
+        });
+        self.peers.lock().unwrap().insert(peer_id, state);
+        self.registry.lock().unwrap().add(peer_id);
+        Ok(peer_id)
+    }
+
+    /// The node id that owns `tenant` under the current registry
+    /// (tenant-less requests stay local).
+    pub fn route_node(&self, tenant: Option<&str>) -> u64 {
+        match tenant {
+            None => self.node_id,
+            Some(t) => self
+                .registry
+                .lock()
+                .unwrap()
+                .route(t)
+                .unwrap_or(self.node_id),
+        }
+    }
+
+    /// Drop a peer from routing (dead connection); rendezvous routing
+    /// degrades onto the survivors.
+    fn drop_peer(&self, peer: u64) {
+        self.registry.lock().unwrap().remove(peer);
+        self.peers.lock().unwrap().remove(&peer);
+    }
+
+    /// One reconnect attempt for a dead peer connection: fresh stream,
+    /// fresh handshake, fresh reader thread.
+    fn reconnect(&self, peer: &PeerState) -> Result<Box<dyn Duplex>, ClusterError> {
+        let mut stream =
+            connect_backoff(&peer.addr, 5).map_err(|e| ClusterError::Io(e.to_string()))?;
+        let (got, _nodes) = client_handshake(&mut stream, self.node_id)?;
+        if got != peer.id {
+            return Err(ClusterError::Wire(WireError::BadPayload(
+                "peer answered with a different node id",
+            )));
+        }
+        let reader = stream
+            .try_clone_box()
+            .map_err(|e| ClusterError::Io(e.to_string()))?;
+        peer.alive.store(true, Ordering::SeqCst);
+        spawn_client_reader(
+            peer.id,
+            reader,
+            Arc::clone(&peer.counters),
+            Arc::clone(&peer.inflight),
+            Arc::clone(&peer.alive),
+        );
+        Ok(stream)
+    }
+
+    /// Submit a request through cluster routing. Locally owned tenants
+    /// take the engine's zero-copy path; remote tenants serialize with
+    /// the deadline re-encoded as remaining budget at send time.
+    pub fn submit(&self, mut request: MitigationRequest) -> Result<ClusterTicket, ClusterError> {
+        let mut t0 = Instant::now();
+        loop {
+            let target = self.route_node(request.tenant.as_deref());
+            if target == self.node_id {
+                return self
+                    .engine
+                    .submit(request)
+                    .map(ClusterTicket::Local)
+                    .map_err(ClusterError::Local);
+            }
+            let peer = match self.peers.lock().unwrap().get(&target) {
+                Some(p) => Arc::clone(p),
+                None => {
+                    // Registry knows a node we hold no connection to
+                    // (it died earlier); drop it and re-route.
+                    self.drop_peer(target);
+                    continue;
+                }
+            };
+            match self.submit_remote(&peer, request, t0) {
+                Ok(ticket) => return Ok(ticket),
+                Err((req, _err)) => {
+                    // Connection is gone and reconnect failed: degrade
+                    // routing and retry on the survivors. The recovered
+                    // request's deadline is already reduced to the
+                    // budget remaining at the failed send, so the
+                    // elapsed-time anchor restarts here.
+                    self.drop_peer(target);
+                    request = req;
+                    t0 = Instant::now();
+                }
+            }
+        }
+    }
+
+    /// Send `request` to `peer`; on failure the request is handed back
+    /// for re-routing.
+    fn submit_remote(
+        &self,
+        peer: &Arc<PeerState>,
+        mut request: MitigationRequest,
+        t0: Instant,
+    ) -> Result<ClusterTicket, (MitigationRequest, ClusterError)> {
+        // Deadline crosses the wire as remaining budget at send time.
+        if let Some(d) = request.deadline {
+            request.deadline = Some(d.saturating_sub(t0.elapsed()));
+        }
+        let req_id = peer.next_req.fetch_add(1, Ordering::SeqCst);
+        let trace_id = request.trace_id;
+        let (tx, rx) = channel::<RemoteResult>();
+        peer.inflight.lock().unwrap().insert(req_id, tx);
+        let frame = encode_message(&Message::Request { req_id, request: Box::new(request) });
+        let wire_len = frame.len() as u64 + 4;
+
+        let mut writer = peer.writer.lock().unwrap();
+        let mut attempt_reconnect = writer.is_none() || !peer.alive.load(Ordering::SeqCst);
+        for _ in 0..2 {
+            if attempt_reconnect {
+                match self.reconnect(peer) {
+                    Ok(stream) => *writer = Some(stream),
+                    Err(e) => {
+                        peer.inflight.lock().unwrap().remove(&req_id);
+                        let request = decode_request_back(&frame);
+                        return Err((request, e));
+                    }
+                }
+            }
+            let stream = writer.as_mut().expect("writer present after reconnect");
+            match write_frame(stream, &frame) {
+                Ok(()) => {
+                    peer.counters.note_sent(wire_len);
+                    return Ok(ClusterTicket::Remote { peer: peer.id, trace_id, rx });
+                }
+                Err(_) => {
+                    *writer = None;
+                    attempt_reconnect = true;
+                }
+            }
+        }
+        peer.inflight.lock().unwrap().remove(&req_id);
+        let request = decode_request_back(&frame);
+        Err((request, ClusterError::Disconnected { peer: peer.id }))
+    }
+}
+
+/// Recover the owned request from its already-encoded frame (used only
+/// on the failed-send path, where the original was moved into the
+/// encoder).
+fn decode_request_back(frame: &[u8]) -> MitigationRequest {
+    match decode_message(frame) {
+        Ok(Message::Request { request, .. }) => *request,
+        _ => unreachable!("frame was encoded from a Request"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Server side
+// ---------------------------------------------------------------------
+
+/// The accept-loop half of a cluster node (`qai serve --listen`).
+pub struct ClusterServer {
+    addr: ClusterAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ClusterServer {
+    /// Bind `addr` and start serving `engine` to connecting peers.
+    /// `stats` collects per-peer traffic counters (attach it to the
+    /// engine for `scope=transport` metrics lines).
+    pub fn start(
+        engine: Arc<Engine>,
+        node_id: u64,
+        addr: &str,
+        stats: Arc<ClusterTransportStats>,
+    ) -> Result<ClusterServer, ClusterError> {
+        let listener = ClusterListener::bind(&ClusterAddr::parse(addr))
+            .map_err(|e| ClusterError::Io(e.to_string()))?;
+        let addr = listener.local_addr().map_err(|e| ClusterError::Io(e.to_string()))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| ClusterError::Io(e.to_string()))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let handle = std::thread::spawn(move || {
+            accept_loop(listener, engine, node_id, stats, flag);
+        });
+        Ok(ClusterServer { addr, shutdown, handle: Some(handle) })
+    }
+
+    /// The bound listen address (OS-assigned ports resolved).
+    pub fn addr(&self) -> &ClusterAddr {
+        &self.addr
+    }
+
+    /// Block until a peer requests shutdown, then join the accept
+    /// loop.
+    pub fn wait(&mut self) {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        if let Some(h) = self.handle.take() {
+            let _joined = h.join();
+        }
+    }
+
+    /// Request shutdown locally and join the accept loop.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _joined = h.join();
+        }
+    }
+}
+
+impl Drop for ClusterServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _joined = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: ClusterListener,
+    engine: Arc<Engine>,
+    node_id: u64,
+    stats: Arc<ClusterTransportStats>,
+    shutdown: Arc<AtomicBool>,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok(stream) => {
+                let engine = Arc::clone(&engine);
+                let stats = Arc::clone(&stats);
+                let shutdown = Arc::clone(&shutdown);
+                std::thread::spawn(move || {
+                    serve_connection(stream, engine, node_id, stats, shutdown);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Serve one accepted peer connection: handshake, then framed
+/// request/response traffic until EOF or a `Shutdown` message. A bad
+/// handshake (wrong magic or protocol version) drops the connection
+/// without a `Welcome` — the codec's typed error is the server's log
+/// line, never a panic.
+fn serve_connection(
+    mut stream: Box<dyn Duplex>,
+    engine: Arc<Engine>,
+    node_id: u64,
+    stats: Arc<ClusterTransportStats>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let first = match read_frame(&mut stream) {
+        Ok(f) => f,
+        Err(_) => return,
+    };
+    let peer_id = match decode_message(&first) {
+        Ok(Message::Hello(h)) => h.node_id,
+        _ => return, // bad magic / version / message: refuse silently
+    };
+    let cell = stats.register(peer_id);
+    cell.note_recv(first.len() as u64 + 4);
+    let welcome = encode_message(&Message::Welcome {
+        node_id,
+        version: PROTOCOL_VERSION,
+        nodes: vec![node_id],
+    });
+    if write_frame(&mut stream, &welcome).is_err() {
+        return;
+    }
+    cell.note_sent(welcome.len() as u64 + 4);
+
+    let writer: Arc<Mutex<Box<dyn Duplex>>> = match stream.try_clone_box() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return, // peer dropped; in-flight work is abandoned
+        };
+        cell.note_recv(frame.len() as u64 + 4);
+        match decode_message(&frame) {
+            Ok(Message::Request { req_id, request }) => {
+                let engine = Arc::clone(&engine);
+                let writer = Arc::clone(&writer);
+                let cell = Arc::clone(&cell);
+                // One thread per in-flight remote request: submit
+                // re-anchors the remaining-budget deadline at enqueue,
+                // and the blocking wait runs off the accept path.
+                std::thread::spawn(move || {
+                    let outcome = execute_remote(&engine, *request);
+                    let reply = encode_message(&Message::Response {
+                        req_id,
+                        outcome: Box::new(outcome),
+                    });
+                    let mut w = writer.lock().unwrap();
+                    if write_frame(&mut *w, &reply).is_ok() {
+                        cell.note_sent(reply.len() as u64 + 4);
+                    }
+                });
+            }
+            Ok(Message::Shutdown) => {
+                shutdown.store(true, Ordering::SeqCst);
+                return;
+            }
+            Ok(_) | Err(_) => return,
+        }
+    }
+}
+
+/// Run one remotely received request on the local engine, folding
+/// every failure into a typed [`RemoteOutcome`].
+fn execute_remote(engine: &Engine, request: MitigationRequest) -> RemoteOutcome {
+    match engine.submit(request) {
+        Ok(ticket) => match ticket.wait() {
+            Ok(resp) => RemoteOutcome::Ok(resp),
+            Err(e) => {
+                RemoteOutcome::Rejected { kind: RejectKind::Failed, message: e.to_string() }
+            }
+        },
+        Err(e) => RemoteOutcome::Rejected {
+            kind: RejectKind::from_submit(&e),
+            message: e.to_string(),
+        },
+    }
+}
+
+/// Connect to a listening node and ask it to shut down (used by tests,
+/// benches, and operational tooling).
+pub fn request_shutdown(addr: &str, node_id: u64) -> Result<(), ClusterError> {
+    let mut stream = connect_backoff(&ClusterAddr::parse(addr), 10)
+        .map_err(|e| ClusterError::Io(e.to_string()))?;
+    client_handshake(&mut stream, node_id)?;
+    write_frame(&mut stream, &encode_message(&Message::Shutdown)).map_err(ClusterError::Wire)
+}

@@ -1,0 +1,291 @@
+//! Real multi-process distributed runs over localhost sockets.
+//!
+//! [`run_distributed_procs`] is the process-level twin of
+//! `coordinator::driver::run_distributed`: instead of spawning
+//! in-process ranks over the loopback [`Fabric`], it **forks child
+//! processes** (`qai rank-worker`) and moves every byte over TCP —
+//! the fig9/fig11 benches drive it so the paper's MPI-scaling and
+//! comm-breakdown figures measure a real wire, with fig11's
+//! communication column read from the transport's byte counters
+//! instead of the analytic `CommModel`.
+//!
+//! Control plane: the driver binds a localhost listener, forks one
+//! `qai rank-worker --connect <addr> --rank <r>` per rank, and each
+//! worker (a) binds its own mesh listener, (b) introduces itself with
+//! `RankHello` carrying that mesh address, (c) receives a `RankSetup`
+//! with its data block plus the full rank→address mesh table, (d)
+//! dials every lower rank and accepts every higher rank (all listeners
+//! exist before any setup ships, so the mesh forms without deadlock),
+//! and (e) runs `mitigate_rank` over a [`SocketTransport`], returning
+//! a `RankResult` with its output block and measured traffic.
+
+#![deny(missing_docs)]
+
+use crate::cluster::transport::{
+    connect_backoff, ClusterAddr, ClusterListener, Duplex, SocketTransport, Transport,
+};
+use crate::cluster::wire::{
+    decode_message, encode_message, read_frame, write_frame, Message, RankResult, RankSetup,
+};
+use crate::coordinator::strategy::{mitigate_rank, Strategy};
+use crate::coordinator::topology::Topology;
+use crate::data::grid::{Grid, Shape, SharedGrid};
+use crate::quant::{QIndex, ResolvedBound};
+use anyhow::{anyhow, bail, Context};
+use std::path::Path;
+use std::process::{Command, Stdio};
+use std::time::Instant;
+
+/// Measured results of one multi-process run.
+#[derive(Debug, Clone, Copy)]
+pub struct ProcsReport {
+    /// Number of worker processes.
+    pub ranks: usize,
+    /// Wall-clock seconds from setup-sent to all results received.
+    pub wall_s: f64,
+    /// Worst per-rank seconds spent inside transport send/recv — the
+    /// measured communication share of the critical path.
+    pub comm_s: f64,
+    /// Total mesh wire bytes sent across all ranks.
+    pub bytes: u64,
+    /// Total mesh messages sent across all ranks.
+    pub msgs: u64,
+    /// Size of the dequantized field in MB (for throughput math).
+    pub data_mb: f64,
+}
+
+impl ProcsReport {
+    /// End-to-end throughput in MB/s.
+    pub fn throughput_mbs(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.data_mb / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of wall time the worst rank spent communicating.
+    pub fn comm_fraction(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            (self.comm_s / self.wall_s).min(1.0)
+        } else {
+            0.0
+        }
+    }
+}
+
+fn send_msg(stream: &mut Box<dyn Duplex>, msg: &Message) -> anyhow::Result<()> {
+    write_frame(stream, &encode_message(msg)).map_err(|e| anyhow!("send: {e}"))
+}
+
+fn recv_msg(stream: &mut Box<dyn Duplex>) -> anyhow::Result<Message> {
+    let frame = read_frame(stream).map_err(|e| anyhow!("recv: {e}"))?;
+    decode_message(&frame).map_err(|e| anyhow!("decode: {e}"))
+}
+
+/// Fork `n_ranks` `qai rank-worker` processes over localhost, run the
+/// distributed mitigation, and reassemble the global field. Returns
+/// the output grid plus measured wall/comm/traffic numbers.
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed_procs(
+    qai_bin: &Path,
+    dq: &Grid<f32>,
+    q: &Grid<QIndex>,
+    eb: ResolvedBound,
+    strategy: Strategy,
+    n_ranks: usize,
+    eta: f64,
+    threads_per_rank: usize,
+) -> anyhow::Result<(Grid<f32>, ProcsReport)> {
+    assert!(n_ranks >= 1, "need at least one rank");
+    let topo = Topology::new(n_ranks, dq.shape);
+    let control = ClusterListener::bind(&ClusterAddr::parse("127.0.0.1:0"))
+        .context("bind control listener")?;
+    let control_addr = match control.local_addr().context("resolve control addr")? {
+        ClusterAddr::Tcp(a) => a,
+        ClusterAddr::Unix(_) => unreachable!("control listener is TCP"),
+    };
+
+    let mut children = Vec::with_capacity(n_ranks);
+    for rank in 0..n_ranks {
+        let child = Command::new(qai_bin)
+            .arg("rank-worker")
+            .arg("--connect")
+            .arg(&control_addr)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawn rank-worker {rank}"))?;
+        children.push(child);
+    }
+
+    // Collect one RankHello per rank; remember each rank's control
+    // stream and mesh listener address.
+    let mut streams: Vec<Option<Box<dyn Duplex>>> = (0..n_ranks).map(|_| None).collect();
+    let mut mesh: Vec<String> = vec![String::new(); n_ranks];
+    for _ in 0..n_ranks {
+        let mut stream = control.accept().context("accept rank-worker")?;
+        match recv_msg(&mut stream)? {
+            Message::RankHello { rank, mesh_addr } => {
+                let rank = rank as usize;
+                if rank >= n_ranks || streams[rank].is_some() {
+                    bail!("bad or duplicate rank hello for rank {rank}");
+                }
+                mesh[rank] = mesh_addr;
+                streams[rank] = Some(stream);
+            }
+            other => bail!("expected RankHello, got {other:?}"),
+        }
+    }
+
+    // Ship every rank its block and the full mesh table.
+    for rank in 0..n_ranks {
+        let (lo, size) = topo.block(rank);
+        let setup = RankSetup {
+            rank: rank as u64,
+            n_ranks: n_ranks as u64,
+            strategy,
+            eta,
+            threads: threads_per_rank as u64,
+            eb,
+            shape_dims: [dq.shape.dims[0] as u64, dq.shape.dims[1] as u64, dq.shape.dims[2] as u64],
+            shape_ndim: dq.shape.ndim as u8,
+            dq: dq.extract(lo, size),
+            q: q.extract(lo, size),
+            mesh: mesh.clone(),
+        };
+        let stream = streams[rank].as_mut().expect("stream collected above");
+        send_msg(stream, &Message::RankSetup(Box::new(setup)))
+            .with_context(|| format!("ship setup to rank {rank}"))?;
+    }
+
+    // Collect results; wall clock covers compute + mesh traffic, not
+    // process startup.
+    let t0 = Instant::now();
+    let mut out = Grid::zeros(dq.shape.user_dims());
+    let mut comm_ns_max = 0u64;
+    let mut bytes = 0u64;
+    let mut msgs = 0u64;
+    for rank in 0..n_ranks {
+        let stream = streams[rank].as_mut().expect("stream collected above");
+        match recv_msg(stream).with_context(|| format!("result from rank {rank}"))? {
+            Message::RankResult(res) => {
+                if res.rank as usize != rank {
+                    bail!("rank {rank} stream answered as rank {}", res.rank);
+                }
+                let (lo, _) = topo.block(rank);
+                out.insert(lo, &res.out);
+                comm_ns_max = comm_ns_max.max(res.comm_nanos);
+                bytes += res.sent_bytes;
+                msgs += res.sent_msgs;
+            }
+            other => bail!("expected RankResult, got {other:?}"),
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    for (rank, mut child) in children.into_iter().enumerate() {
+        let status = child.wait().with_context(|| format!("wait rank {rank}"))?;
+        if !status.success() {
+            bail!("rank-worker {rank} exited with {status}");
+        }
+    }
+
+    let report = ProcsReport {
+        ranks: n_ranks,
+        wall_s,
+        comm_s: comm_ns_max as f64 / 1e9,
+        bytes,
+        msgs,
+        data_mb: (dq.shape.len() * std::mem::size_of::<f32>()) as f64 / 1e6,
+    };
+    Ok((out, report))
+}
+
+/// Child-process entry point for `qai rank-worker`: join the control
+/// plane, form the rank mesh, run `mitigate_rank` over sockets, and
+/// report the result. Never called interactively.
+pub fn rank_worker(connect: &str, rank: usize) -> anyhow::Result<()> {
+    // Mesh listener first: the driver only ships setups (and therefore
+    // peers only dial) after every rank has introduced its address.
+    let mesh_listener = ClusterListener::bind(&ClusterAddr::parse("127.0.0.1:0"))
+        .context("bind mesh listener")?;
+    let mesh_addr = match mesh_listener.local_addr().context("resolve mesh addr")? {
+        ClusterAddr::Tcp(a) => a,
+        ClusterAddr::Unix(_) => unreachable!("mesh listener is TCP"),
+    };
+
+    let mut control =
+        connect_backoff(&ClusterAddr::parse(connect), 50).context("dial control plane")?;
+    send_msg(
+        &mut control,
+        &Message::RankHello { rank: rank as u64, mesh_addr },
+    )?;
+
+    let setup = match recv_msg(&mut control)? {
+        Message::RankSetup(s) => s,
+        other => bail!("expected RankSetup, got {other:?}"),
+    };
+    let n_ranks = setup.n_ranks as usize;
+    if setup.rank as usize != rank || setup.mesh.len() != n_ranks {
+        bail!("setup does not match this rank");
+    }
+    let ndim = setup.shape_ndim as usize;
+    if !(1..=3).contains(&ndim) {
+        bail!("setup shape ndim {ndim} out of range");
+    }
+    let user_dims: Vec<usize> =
+        setup.shape_dims[3 - ndim..].iter().map(|&d| d as usize).collect();
+    let topo = Topology::new(n_ranks, Shape::new(&user_dims));
+
+    // Form the full mesh: dial every lower rank, accept every higher
+    // one (identified by its RankHello).
+    let mut peers: Vec<(usize, Box<dyn Duplex>)> = Vec::with_capacity(n_ranks - 1);
+    for (peer, addr) in setup.mesh.iter().enumerate().take(rank) {
+        let mut stream = connect_backoff(&ClusterAddr::parse(addr), 50)
+            .with_context(|| format!("dial mesh peer {peer}"))?;
+        send_msg(
+            &mut stream,
+            &Message::RankHello { rank: rank as u64, mesh_addr: String::new() },
+        )?;
+        peers.push((peer, stream));
+    }
+    for _ in rank + 1..n_ranks {
+        let mut stream = mesh_listener.accept().context("accept mesh peer")?;
+        match recv_msg(&mut stream)? {
+            Message::RankHello { rank: peer, .. } => peers.push((peer as usize, stream)),
+            other => bail!("expected mesh RankHello, got {other:?}"),
+        }
+    }
+    let mut transport =
+        SocketTransport::from_mesh(rank, n_ranks, peers).context("assemble mesh transport")?;
+
+    let dq: SharedGrid<f32> = setup.dq.into();
+    let q: SharedGrid<QIndex> = setup.q.into();
+    let out = mitigate_rank(
+        setup.strategy,
+        &topo,
+        &mut transport,
+        &dq,
+        &q,
+        setup.eb,
+        setup.eta,
+        setup.threads as usize,
+    );
+
+    let counters = transport.counters();
+    let result = RankResult {
+        rank: rank as u64,
+        comm_nanos: transport.comm_nanos(),
+        sent_bytes: counters.iter().map(|c| c.sent_bytes).sum(),
+        sent_msgs: counters.iter().map(|c| c.sent_msgs).sum(),
+        recv_bytes: counters.iter().map(|c| c.recv_bytes).sum(),
+        recv_msgs: counters.iter().map(|c| c.recv_msgs).sum(),
+        out,
+    };
+    send_msg(&mut control, &Message::RankResult(Box::new(result)))?;
+    Ok(())
+}

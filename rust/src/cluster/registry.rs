@@ -1,0 +1,138 @@
+//! Node registry with rendezvous (highest-random-weight) routing.
+//!
+//! Every node scores every tenant as
+//! `fnv1a(node_id_le_bytes ‖ tenant_bytes)` — the same FNV-1a the
+//! engine's shard router uses — and a tenant lives on its
+//! highest-scoring node (ties broken toward the lowest node id).
+//! Because each (node, tenant) score is independent, adding a node to
+//! an N+1-node cluster steals only the tenants the new node now
+//! out-scores: in expectation T/(N+1), and never more than the number
+//! it wins — the movement bound `rust/tests/cluster.rs` asserts
+//! directly.
+
+#![deny(missing_docs)]
+
+use crate::mitigation::engine::fnv1a;
+use std::cmp::Reverse;
+
+/// Sorted, deduplicated set of known node ids with rendezvous routing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeRegistry {
+    nodes: Vec<u64>,
+}
+
+impl NodeRegistry {
+    /// A registry knowing only the local node.
+    pub fn new(local: u64) -> NodeRegistry {
+        NodeRegistry { nodes: vec![local] }
+    }
+
+    /// Add a node; returns `false` if already present.
+    pub fn add(&mut self, node: u64) -> bool {
+        match self.nodes.binary_search(&node) {
+            Ok(_) => false,
+            Err(i) => {
+                self.nodes.insert(i, node);
+                true
+            }
+        }
+    }
+
+    /// Remove a node; returns `false` if it was not present.
+    pub fn remove(&mut self, node: u64) -> bool {
+        match self.nodes.binary_search(&node) {
+            Ok(i) => {
+                self.nodes.remove(i);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// The known node ids, ascending.
+    pub fn nodes(&self) -> &[u64] {
+        &self.nodes
+    }
+
+    /// Number of known nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when no nodes are registered (only possible after
+    /// `remove`-ing the local node).
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The rendezvous score of `node` for `tenant`.
+    pub fn score(node: u64, tenant: &str) -> u64 {
+        let mut key = Vec::with_capacity(8 + tenant.len());
+        key.extend_from_slice(&node.to_le_bytes());
+        key.extend_from_slice(tenant.as_bytes());
+        fnv1a(&key)
+    }
+
+    /// The node that owns `tenant`: highest rendezvous score, ties to
+    /// the lowest node id. `None` only for an empty registry.
+    pub fn route(&self, tenant: &str) -> Option<u64> {
+        self.nodes
+            .iter()
+            .copied()
+            .max_by_key(|&n| (Self::score(n, tenant), Reverse(n)))
+    }
+}
+
+/// Derive a stable node id from a seed string (listen address,
+/// hostname, …). Forced odd so an id is never 0 — 0 is reserved as
+/// "unset" in CLI plumbing.
+pub fn auto_node_id(seed: &str) -> u64 {
+    fnv1a(seed.as_bytes()) | 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let mut r = NodeRegistry::new(11);
+        r.add(22);
+        r.add(33);
+        for t in ["alice", "bob", "carol", ""] {
+            let owner = r.route(t).unwrap();
+            assert!(r.nodes().contains(&owner));
+            assert_eq!(r.route(t), Some(owner), "route must be stable");
+        }
+        assert_eq!(r.clone(), r);
+    }
+
+    #[test]
+    fn add_remove_dedup() {
+        let mut r = NodeRegistry::new(5);
+        assert!(!r.add(5));
+        assert!(r.add(9));
+        assert!(!r.add(9));
+        assert_eq!(r.nodes(), &[5, 9]);
+        assert!(r.remove(5));
+        assert!(!r.remove(5));
+        assert_eq!(r.nodes(), &[9]);
+    }
+
+    #[test]
+    fn removing_a_node_only_moves_its_own_tenants() {
+        let mut r = NodeRegistry::new(1);
+        r.add(2);
+        r.add(3);
+        let tenants: Vec<String> = (0..200).map(|i| format!("tenant-{i}")).collect();
+        let before: Vec<u64> = tenants.iter().map(|t| r.route(t).unwrap()).collect();
+        r.remove(2);
+        for (t, &owner) in tenants.iter().zip(&before) {
+            if owner != 2 {
+                assert_eq!(r.route(t), Some(owner), "tenant {t} moved without cause");
+            } else {
+                assert_ne!(r.route(t), Some(2));
+            }
+        }
+    }
+}

@@ -1,0 +1,517 @@
+//! The pluggable [`Transport`] trait and its socket implementation.
+//!
+//! Rank-level distributed mitigation (`coordinator::{strategy,halo}`)
+//! talks to peers through `&mut dyn Transport`. Two implementations
+//! exist:
+//!
+//! * the in-process loopback — the coordinator's
+//!   [`Endpoint`](crate::coordinator::transport::Endpoint) mailbox,
+//!   adapted behind the trait with **bit-identical** behavior (the
+//!   trait methods delegate to the same inherent `send`/`recv` the
+//!   fabric always had);
+//! * [`SocketTransport`] — length-prefixed frames
+//!   ([`wire`](crate::cluster::wire)) over TCP or Unix-domain
+//!   sockets, one duplex stream per peer, with per-peer send/recv
+//!   byte/message counters and a wall-clock communication timer that
+//!   feeds fig11's measured comm breakdown.
+//!
+//! [`ClusterListener`] / [`connect_backoff`] are the shared
+//! accept/connect plumbing (also used by the node-level
+//! [`ClusterServer`](crate::cluster::node::ClusterServer)).
+
+#![deny(missing_docs)]
+
+use crate::cluster::wire::{
+    decode_message, encode_message, read_frame, write_frame, Message, WireError,
+};
+use crate::coordinator::transport::Pod;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Immutable snapshot of one peer's traffic counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerCounters {
+    /// Peer identifier (rank or node id, depending on the scope).
+    pub peer: u64,
+    /// Wire bytes sent to this peer (frame payload + length prefix).
+    pub sent_bytes: u64,
+    /// Messages sent to this peer.
+    pub sent_msgs: u64,
+    /// Wire bytes received from this peer.
+    pub recv_bytes: u64,
+    /// Messages received from this peer.
+    pub recv_msgs: u64,
+}
+
+/// Shared mutable per-peer counter cell (atomics; cloned into reader
+/// threads).
+#[derive(Debug, Default)]
+pub struct CounterCell {
+    sent_bytes: AtomicU64,
+    sent_msgs: AtomicU64,
+    recv_bytes: AtomicU64,
+    recv_msgs: AtomicU64,
+}
+
+impl CounterCell {
+    /// Record one sent message of `bytes` wire bytes.
+    pub fn note_sent(&self, bytes: u64) {
+        self.sent_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.sent_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Record one received message of `bytes` wire bytes.
+    pub fn note_recv(&self, bytes: u64) {
+        self.recv_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.recv_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Snapshot the cell for peer id `peer`.
+    pub fn snapshot(&self, peer: u64) -> PeerCounters {
+        PeerCounters {
+            peer,
+            sent_bytes: self.sent_bytes.load(Ordering::Relaxed),
+            sent_msgs: self.sent_msgs.load(Ordering::Relaxed),
+            recv_bytes: self.recv_bytes.load(Ordering::Relaxed),
+            recv_msgs: self.recv_msgs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Typed transport failure. The loopback implementation never returns
+/// these (its mailbox panics on fabric teardown exactly as before);
+/// the socket implementation surfaces peer loss and codec faults.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The stream to `peer` was closed.
+    Closed {
+        /// The lost peer's rank.
+        peer: usize,
+    },
+    /// A socket operation failed.
+    Io {
+        /// The peer whose stream failed.
+        peer: usize,
+        /// Stringified I/O error.
+        detail: String,
+    },
+    /// The peer sent bytes the codec rejected.
+    Codec(
+        /// The underlying codec error.
+        WireError,
+    ),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Closed { peer } => write!(f, "peer {peer} closed the stream"),
+            TransportError::Io { peer, detail } => write!(f, "io with peer {peer}: {detail}"),
+            TransportError::Codec(e) => write!(f, "codec: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Object-safe rank-to-rank message transport. `coordinator`'s halo
+/// exchange and gather/scatter strategies are written against
+/// `&mut dyn Transport`, so the same numerics run over the in-process
+/// fabric and over sockets.
+pub trait Transport: Send {
+    /// This endpoint's rank.
+    fn rank(&self) -> usize;
+    /// World size.
+    fn n_ranks(&self) -> usize;
+    /// Send `payload` to rank `to` under message `tag`.
+    fn send(&mut self, to: usize, tag: u64, payload: Vec<u8>) -> Result<(), TransportError>;
+    /// Receive the next payload from rank `from` under `tag`
+    /// (out-of-order arrivals are buffered, MPI-style).
+    fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>, TransportError>;
+    /// Per-peer traffic counter snapshots.
+    fn counters(&self) -> Vec<PeerCounters>;
+    /// Nanoseconds spent inside send/recv so far (0 where not tracked).
+    fn comm_nanos(&self) -> u64 {
+        0
+    }
+}
+
+/// Typed-slice helpers over any [`Transport`] (a blanket extension —
+/// generic methods can't live on the object-safe trait itself). These
+/// panic on transport failure, matching the original `Endpoint`
+/// slice-helper contract the numeric kernels rely on.
+pub trait TransportExt: Transport {
+    /// Send a typed slice ([`Pod`]-encoded).
+    fn send_slice<T: Pod>(&mut self, to: usize, tag: u64, data: &[T]) {
+        self.send(to, tag, T::encode(data)).expect("transport send failed");
+    }
+    /// Receive a typed slice ([`Pod`]-decoded).
+    fn recv_slice<T: Pod>(&mut self, from: usize, tag: u64) -> Vec<T> {
+        T::decode(&self.recv(from, tag).expect("transport recv failed"))
+    }
+}
+
+impl<Tr: Transport + ?Sized> TransportExt for Tr {}
+
+// ---------------------------------------------------------------------
+// Socket plumbing shared by SocketTransport and the cluster node layer
+// ---------------------------------------------------------------------
+
+/// A cloneable bidirectional byte stream (TCP or Unix-domain).
+pub trait Duplex: Read + Write + Send {
+    /// Clone the underlying stream (for split reader/writer ownership).
+    fn try_clone_box(&self) -> io::Result<Box<dyn Duplex>>;
+}
+
+impl Duplex for TcpStream {
+    fn try_clone_box(&self) -> io::Result<Box<dyn Duplex>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+}
+
+impl Duplex for UnixStream {
+    fn try_clone_box(&self) -> io::Result<Box<dyn Duplex>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+}
+
+impl Read for Box<dyn Duplex> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        (**self).read(buf)
+    }
+}
+
+impl Write for Box<dyn Duplex> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        (**self).write(buf)
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        (**self).flush()
+    }
+}
+
+impl Duplex for Box<dyn Duplex> {
+    fn try_clone_box(&self) -> io::Result<Box<dyn Duplex>> {
+        (**self).try_clone_box()
+    }
+}
+
+/// A parsed cluster address: `host:port` TCP, or `unix:/path` for a
+/// Unix-domain socket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterAddr {
+    /// TCP `host:port`.
+    Tcp(String),
+    /// Unix-domain socket path.
+    Unix(PathBuf),
+}
+
+impl ClusterAddr {
+    /// Parse an address string (`unix:` prefix selects a Unix socket).
+    pub fn parse(s: &str) -> ClusterAddr {
+        match s.strip_prefix("unix:") {
+            Some(path) => ClusterAddr::Unix(PathBuf::from(path)),
+            None => ClusterAddr::Tcp(s.to_string()),
+        }
+    }
+}
+
+impl std::fmt::Display for ClusterAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterAddr::Tcp(a) => write!(f, "{a}"),
+            ClusterAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// A bound accept socket over either address family.
+pub enum ClusterListener {
+    /// TCP listener.
+    Tcp(TcpListener),
+    /// Unix-domain listener (path retained for unlink-on-drop).
+    Unix(UnixListener, PathBuf),
+}
+
+impl ClusterListener {
+    /// Bind to `addr` (use port 0 for an OS-assigned TCP port).
+    pub fn bind(addr: &ClusterAddr) -> io::Result<ClusterListener> {
+        match addr {
+            ClusterAddr::Tcp(a) => Ok(ClusterListener::Tcp(TcpListener::bind(a)?)),
+            ClusterAddr::Unix(p) => {
+                // A stale socket file from a dead process blocks bind.
+                let _removed = std::fs::remove_file(p);
+                Ok(ClusterListener::Unix(UnixListener::bind(p)?, p.clone()))
+            }
+        }
+    }
+
+    /// The bound address, with OS-assigned ports resolved.
+    pub fn local_addr(&self) -> io::Result<ClusterAddr> {
+        match self {
+            ClusterListener::Tcp(l) => Ok(ClusterAddr::Tcp(l.local_addr()?.to_string())),
+            ClusterListener::Unix(_, p) => Ok(ClusterAddr::Unix(p.clone())),
+        }
+    }
+
+    /// Toggle non-blocking accept (used by the poll-for-shutdown loop).
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            ClusterListener::Tcp(l) => l.set_nonblocking(nb),
+            ClusterListener::Unix(l, _) => l.set_nonblocking(nb),
+        }
+    }
+
+    /// Accept one connection; the returned stream is forced back to
+    /// blocking mode (non-blocking inheritance from the listener is
+    /// platform-dependent).
+    pub fn accept(&self) -> io::Result<Box<dyn Duplex>> {
+        match self {
+            ClusterListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                Ok(Box::new(s))
+            }
+            ClusterListener::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Box::new(s))
+            }
+        }
+    }
+}
+
+impl Drop for ClusterListener {
+    fn drop(&mut self) {
+        if let ClusterListener::Unix(_, p) = self {
+            let _removed = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Connect to `addr`, retrying with doubling backoff (10 ms start,
+/// 500 ms cap) for up to `attempts` tries — peers racing through
+/// startup connect before their listener is up without failing.
+pub fn connect_backoff(addr: &ClusterAddr, attempts: u32) -> io::Result<Box<dyn Duplex>> {
+    let mut delay = Duration::from_millis(10);
+    let mut last: Option<io::Error> = None;
+    for _ in 0..attempts.max(1) {
+        match addr {
+            ClusterAddr::Tcp(a) => match TcpStream::connect(a) {
+                Ok(s) => {
+                    s.set_nodelay(true)?;
+                    return Ok(Box::new(s));
+                }
+                Err(e) => last = Some(e),
+            },
+            ClusterAddr::Unix(p) => match UnixStream::connect(p) {
+                Ok(s) => return Ok(Box::new(s)),
+                Err(e) => last = Some(e),
+            },
+        }
+        std::thread::sleep(delay);
+        delay = (delay * 2).min(Duration::from_millis(500));
+    }
+    Err(last.unwrap_or_else(|| io::Error::new(io::ErrorKind::Other, "no connect attempts")))
+}
+
+// ---------------------------------------------------------------------
+// SocketTransport
+// ---------------------------------------------------------------------
+
+struct Inbound {
+    from: usize,
+    tag: u64,
+    data: Vec<u8>,
+}
+
+/// Rank-to-rank transport over one duplex socket per peer. Each peer
+/// stream gets a detached reader thread that frames, decodes, counts,
+/// and forwards [`Message::Tagged`] payloads into a single mailbox;
+/// `recv` does the same `(from, tag)` pending-buffer matching the
+/// in-process `Endpoint` does, so out-of-order tags behave
+/// identically.
+pub struct SocketTransport {
+    rank: usize,
+    n_ranks: usize,
+    writers: Vec<Option<Box<dyn Duplex>>>,
+    counters: Vec<Arc<CounterCell>>,
+    rx: Receiver<Result<Inbound, TransportError>>,
+    pending: Vec<Inbound>,
+    comm_ns: u64,
+}
+
+impl SocketTransport {
+    /// Assemble a transport from already-connected peer streams
+    /// (`peers` holds `(peer_rank, stream)`; the local rank needs no
+    /// entry). Spawns one detached reader thread per peer.
+    pub fn from_mesh(
+        rank: usize,
+        n_ranks: usize,
+        peers: Vec<(usize, Box<dyn Duplex>)>,
+    ) -> io::Result<SocketTransport> {
+        let mut writers: Vec<Option<Box<dyn Duplex>>> = (0..n_ranks).map(|_| None).collect();
+        let counters: Vec<Arc<CounterCell>> =
+            (0..n_ranks).map(|_| Arc::new(CounterCell::default())).collect();
+        let (tx, rx) = channel::<Result<Inbound, TransportError>>();
+        for (peer, stream) in peers {
+            assert!(peer < n_ranks && peer != rank, "bad peer rank {peer}");
+            let reader = stream.try_clone_box()?;
+            writers[peer] = Some(stream);
+            let cell = Arc::clone(&counters[peer]);
+            let tx = tx.clone();
+            std::thread::spawn(move || reader_loop(peer, reader, cell, tx));
+        }
+        Ok(SocketTransport { rank, n_ranks, writers, counters, rx, pending: Vec::new(), comm_ns: 0 })
+    }
+}
+
+fn reader_loop(
+    peer: usize,
+    mut stream: Box<dyn Duplex>,
+    cell: Arc<CounterCell>,
+    tx: Sender<Result<Inbound, TransportError>>,
+) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(WireError::Eof) => return,
+            Err(e) => {
+                let _sent = tx.send(Err(TransportError::Codec(e)));
+                return;
+            }
+        };
+        cell.note_recv(frame.len() as u64 + 4);
+        match decode_message(&frame) {
+            Ok(Message::Tagged { tag, data }) => {
+                if tx.send(Ok(Inbound { from: peer, tag, data })).is_err() {
+                    return; // transport dropped
+                }
+            }
+            Ok(_) => {
+                let _sent = tx.send(Err(TransportError::Codec(WireError::BadPayload(
+                    "non-Tagged message on rank mesh",
+                ))));
+                return;
+            }
+            Err(e) => {
+                let _sent = tx.send(Err(TransportError::Codec(e)));
+                return;
+            }
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn send(&mut self, to: usize, tag: u64, payload: Vec<u8>) -> Result<(), TransportError> {
+        if to == self.rank {
+            // Self-sends (the exact strategy's leader gathers from
+            // itself) never touch a wire: deliver straight into the
+            // pending buffer, uncounted.
+            self.pending.push(Inbound { from: to, tag, data: payload });
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let frame = encode_message(&Message::Tagged { tag, data: payload });
+        let writer = self.writers[to]
+            .as_mut()
+            .ok_or(TransportError::Closed { peer: to })?;
+        let wire_len = frame.len() as u64 + 4;
+        match write_frame(writer, &frame) {
+            Ok(()) => {
+                self.counters[to].note_sent(wire_len);
+                self.comm_ns += t0.elapsed().as_nanos() as u64;
+                Ok(())
+            }
+            Err(WireError::Io(detail)) => {
+                self.writers[to] = None;
+                Err(TransportError::Io { peer: to, detail })
+            }
+            Err(e) => Err(TransportError::Codec(e)),
+        }
+    }
+
+    fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<u8>, TransportError> {
+        let t0 = Instant::now();
+        if let Some(i) = self.pending.iter().position(|m| m.from == from && m.tag == tag) {
+            let m = self.pending.remove(i);
+            self.comm_ns += t0.elapsed().as_nanos() as u64;
+            return Ok(m.data);
+        }
+        loop {
+            match self.rx.recv() {
+                Ok(Ok(m)) => {
+                    if m.from == from && m.tag == tag {
+                        self.comm_ns += t0.elapsed().as_nanos() as u64;
+                        return Ok(m.data);
+                    }
+                    self.pending.push(m);
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(_) => return Err(TransportError::Closed { peer: from }),
+            }
+        }
+    }
+
+    fn counters(&self) -> Vec<PeerCounters> {
+        (0..self.n_ranks)
+            .filter(|&p| p != self.rank)
+            .map(|p| self.counters[p].snapshot(p as u64))
+            .collect()
+    }
+
+    fn comm_nanos(&self) -> u64 {
+        self.comm_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two socket transports over a localhost TCP pair behave like the
+    /// in-process mailbox: tag matching, out-of-order buffering, and
+    /// byte counters.
+    #[test]
+    fn socket_pair_tagged_roundtrip() {
+        let listener = ClusterListener::bind(&ClusterAddr::parse("127.0.0.1:0")).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accepted = std::thread::spawn(move || listener.accept().unwrap());
+        let client = connect_backoff(&addr, 20).unwrap();
+        let server = accepted.join().unwrap();
+
+        let mut t0 = SocketTransport::from_mesh(0, 2, vec![(1, client)]).unwrap();
+        let mut t1 = SocketTransport::from_mesh(1, 2, vec![(0, server)]).unwrap();
+
+        // Out-of-order tags: send tag 7 then 5; receive 5 first.
+        t0.send(1, 7, vec![7u8; 3]).unwrap();
+        t0.send(1, 5, vec![5u8; 2]).unwrap();
+        assert_eq!(t1.recv(0, 5).unwrap(), vec![5u8; 2]);
+        assert_eq!(t1.recv(0, 7).unwrap(), vec![7u8; 3]);
+
+        // Typed slices through the blanket extension.
+        t1.send_slice::<i64>(0, 9, &[1, -2, 3]);
+        let got: Vec<i64> = (&mut t0 as &mut dyn Transport).recv_slice(1, 9);
+        assert_eq!(got, vec![1, -2, 3]);
+
+        let c0 = t0.counters();
+        assert_eq!(c0.len(), 1);
+        assert_eq!(c0[0].sent_msgs, 2);
+        assert_eq!(c0[0].recv_msgs, 1);
+        assert!(c0[0].sent_bytes > 0 && c0[0].recv_bytes > 0);
+        assert!(t0.comm_nanos() > 0);
+    }
+}

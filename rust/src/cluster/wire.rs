@@ -1,0 +1,1056 @@
+//! Length-prefixed wire framing and message codec for the cluster
+//! subsystem.
+//!
+//! Every byte that crosses a socket is a **frame**: a little-endian
+//! `u32` length prefix followed by that many payload bytes (bounded by
+//! [`MAX_FRAME_BYTES`] — an oversized prefix is rejected *before* any
+//! allocation). Inside a frame sits exactly one [`Message`], encoded
+//! with the same hand-rolled little-endian discipline as the
+//! coordinator's [`Pod`](crate::coordinator::transport::Pod) slices —
+//! no external serialization crates (the build is offline).
+//!
+//! Decoding is **total**: any input — truncated, oversized, wrong
+//! magic, wrong protocol version, unknown tag, trailing garbage —
+//! produces a typed [`WireError`], never a panic and never an unbounded
+//! read (the property tests in `rust/tests/cluster.rs` fuzz this
+//! contract).
+//!
+//! Deadlines never serialize as absolute instants: a request's
+//! `deadline` field crosses the wire as the *remaining budget* at send
+//! time (the sender subtracts time already burned), and the receiving
+//! engine re-anchors it at its own enqueue instant — the same
+//! from-submission semantics the local path has always had.
+
+#![deny(missing_docs)]
+
+use crate::coordinator::strategy::Strategy;
+use crate::coordinator::transport::Pod;
+use crate::data::grid::{Grid, SharedGrid};
+use crate::mitigation::admission::{Priority, SubmitError};
+use crate::mitigation::engine::{MitigationRequest, MitigationResponse};
+use crate::mitigation::pipeline::{Backend, MitigationConfig};
+use crate::mitigation::quality::QualityTarget;
+use crate::mitigation::service::Job;
+use crate::mitigation::tiled::TiledConfig;
+use crate::quant::{QIndex, ResolvedBound};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Wire protocol version; bumped on any incompatible layout change.
+/// Handshakes carrying any other version fail with
+/// [`WireError::VersionMismatch`].
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Magic bytes opening every handshake payload.
+pub const MAGIC: [u8; 4] = *b"QAIC";
+
+/// Upper bound on a single frame's payload (1 GiB). A length prefix
+/// above this is rejected before any buffer is allocated.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Typed decode/transport-framing failure. Every malformed input maps
+/// to one of these — the codec never panics and never hangs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Clean end-of-stream at a frame boundary (the peer closed).
+    Eof,
+    /// The input ended inside a frame or field.
+    Truncated {
+        /// Bytes the decoder needed.
+        needed: usize,
+        /// Bytes actually available.
+        got: usize,
+    },
+    /// A length prefix exceeded [`MAX_FRAME_BYTES`].
+    Oversized {
+        /// The claimed length.
+        len: u64,
+        /// The enforced maximum.
+        max: u64,
+    },
+    /// A handshake did not open with [`MAGIC`].
+    BadMagic(
+        /// The four bytes found instead.
+        [u8; 4],
+    ),
+    /// The peer speaks a different protocol version.
+    VersionMismatch {
+        /// Our [`PROTOCOL_VERSION`].
+        ours: u32,
+        /// The version the peer sent.
+        theirs: u32,
+    },
+    /// Unknown message tag byte.
+    BadTag(
+        /// The tag found.
+        u8,
+    ),
+    /// A message decoded cleanly but left unconsumed bytes.
+    TrailingBytes {
+        /// How many bytes were left over.
+        extra: usize,
+    },
+    /// A field held a structurally invalid value (named).
+    BadPayload(
+        /// What was wrong.
+        &'static str,
+    ),
+    /// An underlying socket read/write failed.
+    Io(
+        /// The I/O error, stringified (keeps `WireError: Clone + Eq`).
+        String,
+    ),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Eof => write!(f, "end of stream"),
+            WireError::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized length prefix: {len} > max {max}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad handshake magic {m:?}"),
+            WireError::VersionMismatch { ours, theirs } => {
+                write!(f, "protocol version mismatch: ours {ours}, theirs {theirs}")
+            }
+            WireError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            WireError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after message")
+            }
+            WireError::BadPayload(what) => write!(f, "bad payload: {what}"),
+            WireError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------
+// Frame layer
+// ---------------------------------------------------------------------
+
+/// Write one length-prefixed frame (flushes the writer).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), WireError> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized {
+            len: payload.len() as u64,
+            max: MAX_FRAME_BYTES as u64,
+        });
+    }
+    let io = |e: std::io::Error| WireError::Io(e.to_string());
+    w.write_all(&(payload.len() as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(payload).map_err(io)?;
+    w.flush().map_err(io)
+}
+
+/// Read one length-prefixed frame. A clean close at a frame boundary is
+/// [`WireError::Eof`]; a close mid-frame is [`WireError::Truncated`];
+/// a length prefix above [`MAX_FRAME_BYTES`] is rejected before any
+/// allocation.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, WireError> {
+    let mut len4 = [0u8; 4];
+    // First byte separately, to tell a clean EOF from a torn prefix.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Err(WireError::Eof),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e.to_string())),
+        }
+    }
+    len4[0] = first[0];
+    read_exact_or(r, &mut len4[1..], 4, 1)?;
+    let len = u32::from_le_bytes(len4) as u64;
+    if len > MAX_FRAME_BYTES as u64 {
+        return Err(WireError::Oversized { len, max: MAX_FRAME_BYTES as u64 });
+    }
+    let mut buf = vec![0u8; len as usize];
+    read_exact_or(r, &mut buf, len as usize, 0)?;
+    Ok(buf)
+}
+
+fn read_exact_or(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    needed: usize,
+    already: usize,
+) -> Result<(), WireError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+            Err(WireError::Truncated { needed, got: already })
+        }
+        Err(e) => Err(WireError::Io(e.to_string())),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Field-level encoder/decoder
+// ---------------------------------------------------------------------
+
+/// Little-endian field writer backing [`encode_message`].
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn boolean(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn blob(&mut self, bytes: &[u8]) {
+        self.u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+    fn string(&mut self, s: &str) {
+        self.blob(s.as_bytes());
+    }
+    fn opt_string(&mut self, s: Option<&str>) {
+        match s {
+            Some(s) => {
+                self.u8(1);
+                self.string(s);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn duration(&mut self, d: Duration) {
+        self.u64(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+    fn opt_duration(&mut self, d: Option<Duration>) {
+        match d {
+            Some(d) => {
+                self.u8(1);
+                self.duration(d);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn grid<T: WireElem>(&mut self, g: &Grid<T>) {
+        self.u8(g.shape.ndim as u8);
+        for d in g.shape.dims {
+            self.u64(d as u64);
+        }
+        self.blob(&T::encode(&g.data));
+    }
+}
+
+/// Little-endian field reader backing [`decode_message`]. Every read is
+/// bounds-checked; exhaustion yields [`WireError::Truncated`].
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if n > self.remaining() {
+            return Err(WireError::Truncated { needed: n, got: self.remaining() });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn boolean(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::BadPayload("bool flag not 0/1")),
+        }
+    }
+    fn flag(&mut self) -> Result<bool, WireError> {
+        self.boolean()
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>, WireError> {
+        Ok(if self.flag()? { Some(self.u64()?) } else { None })
+    }
+    fn opt_f64(&mut self) -> Result<Option<f64>, WireError> {
+        Ok(if self.flag()? { Some(self.f64()?) } else { None })
+    }
+    fn blob(&mut self) -> Result<&'a [u8], WireError> {
+        let len = self.u64()?;
+        if len > MAX_FRAME_BYTES as u64 {
+            return Err(WireError::Oversized { len, max: MAX_FRAME_BYTES as u64 });
+        }
+        self.take(len as usize)
+    }
+    fn string(&mut self) -> Result<String, WireError> {
+        let bytes = self.blob()?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::BadPayload("string is not UTF-8"))
+    }
+    fn opt_string(&mut self) -> Result<Option<String>, WireError> {
+        Ok(if self.flag()? { Some(self.string()?) } else { None })
+    }
+    fn duration(&mut self) -> Result<Duration, WireError> {
+        Ok(Duration::from_nanos(self.u64()?))
+    }
+    fn opt_duration(&mut self) -> Result<Option<Duration>, WireError> {
+        Ok(if self.flag()? { Some(self.duration()?) } else { None })
+    }
+    fn grid<T: WireElem>(&mut self) -> Result<Grid<T>, WireError> {
+        let ndim = self.u8()? as usize;
+        if !(1..=3).contains(&ndim) {
+            return Err(WireError::BadPayload("grid ndim not in 1..=3"));
+        }
+        let mut dims = [0usize; 3];
+        for d in &mut dims {
+            let v = self.u64()?;
+            if v == 0 || v > MAX_FRAME_BYTES as u64 {
+                return Err(WireError::BadPayload("grid dim zero or absurd"));
+            }
+            *d = v as usize;
+        }
+        // Leading axes beyond the declared ndim must be the normalized 1s.
+        if dims[..3 - ndim].iter().any(|&d| d != 1) {
+            return Err(WireError::BadPayload("grid leading dims not normalized"));
+        }
+        let elems = dims[0]
+            .checked_mul(dims[1])
+            .and_then(|p| p.checked_mul(dims[2]))
+            .ok_or(WireError::BadPayload("grid dims overflow"))?;
+        let bytes = self.blob()?;
+        if bytes.len() != elems * T::SIZE {
+            return Err(WireError::BadPayload("grid data length mismatch"));
+        }
+        Ok(Grid::from_vec(T::decode(bytes), &dims[3 - ndim..]))
+    }
+    fn finish(self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::TrailingBytes { extra: self.remaining() });
+        }
+        Ok(())
+    }
+}
+
+/// [`Pod`] elements with a statically known wire width — the two grid
+/// element types the cluster actually ships.
+trait WireElem: Pod {
+    /// Bytes per element on the wire.
+    const SIZE: usize;
+}
+impl WireElem for f32 {
+    const SIZE: usize = 4;
+}
+impl WireElem for i64 {
+    const SIZE: usize = 8;
+}
+
+// ---------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------
+
+/// Handshake payload: who is speaking and which protocol they speak.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Handshake {
+    /// The sender's cluster node id.
+    pub node_id: u64,
+    /// The sender's [`PROTOCOL_VERSION`].
+    pub version: u32,
+}
+
+/// Typed rejection category mirrored from
+/// [`SubmitError`](crate::mitigation::admission::SubmitError) (plus
+/// [`RejectKind::Failed`] for execution errors) so remote callers see
+/// the same taxonomy local callers do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectKind {
+    /// The routed shard's bounded queue was full.
+    QueueFull,
+    /// A blocking submit exhausted its timeout.
+    Timeout,
+    /// The remote engine is shutting down.
+    Shutdown,
+    /// The tenant was at quota on the remote node.
+    QuotaExceeded,
+    /// The remote node shed the request: its service-time estimate
+    /// proved the (re-anchored) remaining deadline budget infeasible.
+    DeadlineInfeasible,
+    /// The job was admitted but its execution failed.
+    Failed,
+}
+
+impl RejectKind {
+    /// Map a local [`SubmitError`] to its wire category.
+    pub fn from_submit(e: &SubmitError) -> RejectKind {
+        match e {
+            SubmitError::QueueFull(_) => RejectKind::QueueFull,
+            SubmitError::Timeout(_) => RejectKind::Timeout,
+            SubmitError::Shutdown(_) => RejectKind::Shutdown,
+            SubmitError::QuotaExceeded(_) => RejectKind::QuotaExceeded,
+            SubmitError::DeadlineInfeasible(_) => RejectKind::DeadlineInfeasible,
+        }
+    }
+    fn code(self) -> u8 {
+        match self {
+            RejectKind::QueueFull => 1,
+            RejectKind::Timeout => 2,
+            RejectKind::Shutdown => 3,
+            RejectKind::QuotaExceeded => 4,
+            RejectKind::DeadlineInfeasible => 5,
+            RejectKind::Failed => 6,
+        }
+    }
+    fn from_code(c: u8) -> Result<RejectKind, WireError> {
+        Ok(match c {
+            1 => RejectKind::QueueFull,
+            2 => RejectKind::Timeout,
+            3 => RejectKind::Shutdown,
+            4 => RejectKind::QuotaExceeded,
+            5 => RejectKind::DeadlineInfeasible,
+            6 => RejectKind::Failed,
+            _ => return Err(WireError::BadPayload("unknown reject kind")),
+        })
+    }
+}
+
+/// Outcome of a remotely executed request: a full response, or a typed
+/// rejection. Per-step [`PipelineStats`](crate::mitigation::pipeline::PipelineStats)
+/// are not transported — a remote response always carries `stats: None`.
+#[derive(Debug)]
+pub enum RemoteOutcome {
+    /// The request ran; here is its response.
+    Ok(MitigationResponse),
+    /// The request was rejected or failed on the remote node.
+    Rejected {
+        /// Typed category (shed, quota, queue-full, …).
+        kind: RejectKind,
+        /// Human-readable detail from the remote error.
+        message: String,
+    },
+}
+
+/// Per-rank work order for a forked multi-process distributed run
+/// (`qai rank-worker`, spawned by
+/// [`run_distributed_procs`](crate::cluster::procs::run_distributed_procs)).
+#[derive(Debug)]
+pub struct RankSetup {
+    /// This worker's rank.
+    pub rank: u64,
+    /// World size.
+    pub n_ranks: u64,
+    /// Parallelization strategy to run.
+    pub strategy: Strategy,
+    /// Compensation factor η.
+    pub eta: f64,
+    /// Shared-memory threads per rank.
+    pub threads: u64,
+    /// Resolved error bound.
+    pub eb: ResolvedBound,
+    /// Global field dims (normalized to 3).
+    pub shape_dims: [u64; 3],
+    /// Global field declared dimensionality.
+    pub shape_ndim: u8,
+    /// The rank's local dequantized block.
+    pub dq: Grid<f32>,
+    /// The rank's local quantization-index block.
+    pub q: Grid<QIndex>,
+    /// Rank-indexed mesh listen addresses for peer-to-peer halo
+    /// connections.
+    pub mesh: Vec<String>,
+}
+
+/// A rank worker's result, returned to the forking driver.
+#[derive(Debug)]
+pub struct RankResult {
+    /// The reporting rank.
+    pub rank: u64,
+    /// Nanoseconds this rank spent inside transport send/recv — the
+    /// *measured* communication time fig11 reports instead of the
+    /// analytic `CommModel`.
+    pub comm_nanos: u64,
+    /// Wire bytes this rank sent over the mesh (frame payload + prefix).
+    pub sent_bytes: u64,
+    /// Mesh messages this rank sent.
+    pub sent_msgs: u64,
+    /// Wire bytes this rank received.
+    pub recv_bytes: u64,
+    /// Mesh messages this rank received.
+    pub recv_msgs: u64,
+    /// The rank's compensated local block.
+    pub out: Grid<f32>,
+}
+
+/// One frame's payload: everything that crosses a cluster socket.
+#[derive(Debug)]
+pub enum Message {
+    /// Client → server handshake.
+    Hello(Handshake),
+    /// Server → client handshake reply, with the node ids the server
+    /// currently knows about.
+    Welcome {
+        /// The server's node id.
+        node_id: u64,
+        /// The server's protocol version.
+        version: u32,
+        /// Node ids known to the server (including itself).
+        nodes: Vec<u64>,
+    },
+    /// A mitigation request forwarded to a remote shard. The embedded
+    /// request's `deadline` holds the **remaining budget at send
+    /// time**, never an absolute instant; the receiver re-anchors it
+    /// at its own enqueue.
+    Request {
+        /// Per-connection correlation id.
+        req_id: u64,
+        /// The request payload (grids, config, priority, tenant,
+        /// trace id — the trace id is preserved across the wire).
+        request: Box<MitigationRequest>,
+    },
+    /// The matching reply for a [`Message::Request`].
+    Response {
+        /// Correlation id of the request this answers.
+        req_id: u64,
+        /// Response or typed rejection.
+        outcome: Box<RemoteOutcome>,
+    },
+    /// Ask the receiving server to stop accepting and exit.
+    Shutdown,
+    /// Raw tagged rank-mesh traffic (halo planes, gather/scatter
+    /// slices) — the socket twin of the in-process fabric's messages.
+    Tagged {
+        /// MPI-style message tag.
+        tag: u64,
+        /// Opaque payload ([`Pod`]-encoded by the caller).
+        data: Vec<u8>,
+    },
+    /// Rank-worker introduction (to the driver: carries the worker's
+    /// mesh listen address; between workers: identifies the connecting
+    /// rank, `mesh_addr` empty).
+    RankHello {
+        /// The introducing rank.
+        rank: u64,
+        /// The rank's mesh listener address ("" on peer connections).
+        mesh_addr: String,
+    },
+    /// Driver → rank work order.
+    RankSetup(
+        /// The order (boxed: it embeds the rank's data blocks).
+        Box<RankSetup>,
+    ),
+    /// Rank → driver result.
+    RankResult(
+        /// The result (boxed: it embeds the output block).
+        Box<RankResult>,
+    ),
+}
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_REQUEST: u8 = 3;
+const TAG_RESPONSE: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_TAGGED: u8 = 6;
+const TAG_RANK_HELLO: u8 = 7;
+const TAG_RANK_SETUP: u8 = 8;
+const TAG_RANK_RESULT: u8 = 9;
+
+fn priority_code(p: Priority) -> u8 {
+    match p {
+        Priority::Bulk => 0,
+        Priority::Interactive => 1,
+    }
+}
+
+fn priority_from(c: u8) -> Result<Priority, WireError> {
+    match c {
+        0 => Ok(Priority::Bulk),
+        1 => Ok(Priority::Interactive),
+        _ => Err(WireError::BadPayload("unknown priority code")),
+    }
+}
+
+fn backend_code(b: Backend) -> u8 {
+    match b {
+        Backend::Native => 0,
+        Backend::Pjrt => 1,
+    }
+}
+
+fn backend_from(c: u8) -> Result<Backend, WireError> {
+    match c {
+        0 => Ok(Backend::Native),
+        1 => Ok(Backend::Pjrt),
+        _ => Err(WireError::BadPayload("unknown backend code")),
+    }
+}
+
+fn strategy_code(s: Strategy) -> u8 {
+    match s {
+        Strategy::Embarrassing => 0,
+        Strategy::Exact => 1,
+        Strategy::Approximate => 2,
+    }
+}
+
+fn strategy_from(c: u8) -> Result<Strategy, WireError> {
+    match c {
+        0 => Ok(Strategy::Embarrassing),
+        1 => Ok(Strategy::Exact),
+        2 => Ok(Strategy::Approximate),
+        _ => Err(WireError::BadPayload("unknown strategy code")),
+    }
+}
+
+fn enc_handshake(e: &mut Enc, node_id: u64, version: u32) {
+    e.buf.extend_from_slice(&MAGIC);
+    e.u32(version);
+    e.u64(node_id);
+}
+
+fn dec_handshake(d: &mut Dec) -> Result<Handshake, WireError> {
+    let magic: [u8; 4] = d.take(4)?.try_into().unwrap();
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = d.u32()?;
+    if version != PROTOCOL_VERSION {
+        return Err(WireError::VersionMismatch { ours: PROTOCOL_VERSION, theirs: version });
+    }
+    let node_id = d.u64()?;
+    Ok(Handshake { node_id, version })
+}
+
+fn enc_request(e: &mut Enc, r: &MitigationRequest) {
+    e.u64(r.trace_id);
+    e.u8(priority_code(r.priority));
+    e.opt_duration(r.deadline);
+    e.opt_duration(r.timeout);
+    e.opt_string(r.tenant.as_deref());
+    e.boolean(r.collect_stats);
+    let cfg = r.job.cfg;
+    e.f64(cfg.eta);
+    e.u64(cfg.threads as u64);
+    e.u8(backend_code(cfg.backend));
+    e.opt_f64(cfg.taper_radius);
+    e.f64(r.job.eb.abs);
+    e.opt_f64(r.job.eb.rel);
+    e.grid(&*r.job.dq);
+    e.grid(&*r.job.q);
+    match &r.job.reference {
+        Some(g) => {
+            e.u8(1);
+            e.grid(&**g);
+        }
+        None => e.u8(0),
+    }
+    match r.job.target {
+        None => e.u8(0),
+        Some(QualityTarget::Psnr(v)) => {
+            e.u8(1);
+            e.f64(v);
+        }
+        Some(QualityTarget::Ssim(v)) => {
+            e.u8(2);
+            e.f64(v);
+        }
+    }
+    match r.job.tiled {
+        Some(t) => {
+            e.u8(1);
+            e.u8(t.tile.ndim as u8);
+            for d in t.tile.dims {
+                e.u64(d as u64);
+            }
+            e.u64(t.halo as u64);
+        }
+        None => e.u8(0),
+    }
+}
+
+fn dec_request(d: &mut Dec) -> Result<MitigationRequest, WireError> {
+    let trace_id = d.u64()?;
+    let priority = priority_from(d.u8()?)?;
+    let deadline = d.opt_duration()?;
+    let timeout = d.opt_duration()?;
+    let tenant = d.opt_string()?;
+    let collect_stats = d.boolean()?;
+    let eta = d.f64()?;
+    let threads = d.u64()? as usize;
+    let backend = backend_from(d.u8()?)?;
+    let taper_radius = d.opt_f64()?;
+    let cfg = MitigationConfig { eta, threads, backend, taper_radius };
+    let abs = d.f64()?;
+    let rel = d.opt_f64()?;
+    let eb = ResolvedBound { abs, rel };
+    let dq: Grid<f32> = d.grid()?;
+    let q: Grid<QIndex> = d.grid()?;
+    let reference = if d.flag()? { Some(SharedGrid::new(d.grid()?)) } else { None };
+    let target = match d.u8()? {
+        0 => None,
+        1 => Some(QualityTarget::Psnr(d.f64()?)),
+        2 => Some(QualityTarget::Ssim(d.f64()?)),
+        _ => return Err(WireError::BadPayload("unknown quality-target code")),
+    };
+    let tiled = if d.flag()? {
+        let ndim = d.u8()? as usize;
+        if !(1..=3).contains(&ndim) {
+            return Err(WireError::BadPayload("tile ndim not in 1..=3"));
+        }
+        let mut dims = [0usize; 3];
+        for dim in &mut dims {
+            let v = d.u64()?;
+            if v == 0 || v > MAX_FRAME_BYTES as u64 {
+                return Err(WireError::BadPayload("tile dim zero or absurd"));
+            }
+            *dim = v as usize;
+        }
+        let halo = d.u64()? as usize;
+        Some(TiledConfig::new(&dims[3 - ndim..]).with_halo(halo))
+    } else {
+        None
+    };
+    let job = Job {
+        dq: SharedGrid::new(dq),
+        q: SharedGrid::new(q),
+        eb,
+        cfg,
+        reference,
+        target,
+        tiled,
+    };
+    Ok(MitigationRequest { job, priority, deadline, timeout, tenant, collect_stats, trace_id })
+}
+
+fn enc_response(e: &mut Enc, r: &MitigationResponse) {
+    e.u64(r.trace_id);
+    e.u8(priority_code(r.priority));
+    e.opt_u64(r.shard.map(|s| s as u64));
+    e.opt_string(r.tenant.as_deref());
+    e.opt_u64(r.seq);
+    e.duration(r.queue_wait);
+    e.duration(r.exec);
+    e.opt_duration(r.deadline);
+    e.boolean(r.deadline_missed);
+    e.opt_f64(r.quality);
+    e.grid(&r.output);
+}
+
+fn dec_response(d: &mut Dec) -> Result<MitigationResponse, WireError> {
+    let trace_id = d.u64()?;
+    let priority = priority_from(d.u8()?)?;
+    let shard = d.opt_u64()?.map(|s| s as usize);
+    let tenant = d.opt_string()?;
+    let seq = d.opt_u64()?;
+    let queue_wait = d.duration()?;
+    let exec = d.duration()?;
+    let deadline = d.opt_duration()?;
+    let deadline_missed = d.boolean()?;
+    let quality = d.opt_f64()?;
+    let output: Grid<f32> = d.grid()?;
+    Ok(MitigationResponse {
+        output,
+        stats: None,
+        shard,
+        tenant,
+        seq,
+        trace_id,
+        priority,
+        queue_wait,
+        exec,
+        deadline,
+        deadline_missed,
+        quality,
+    })
+}
+
+/// Encode one [`Message`] into a frame payload.
+pub fn encode_message(msg: &Message) -> Vec<u8> {
+    let mut e = Enc::default();
+    match msg {
+        Message::Hello(h) => {
+            e.u8(TAG_HELLO);
+            enc_handshake(&mut e, h.node_id, h.version);
+        }
+        Message::Welcome { node_id, version, nodes } => {
+            e.u8(TAG_WELCOME);
+            enc_handshake(&mut e, *node_id, *version);
+            e.u64(nodes.len() as u64);
+            for n in nodes {
+                e.u64(*n);
+            }
+        }
+        Message::Request { req_id, request } => {
+            e.u8(TAG_REQUEST);
+            e.u64(*req_id);
+            enc_request(&mut e, request);
+        }
+        Message::Response { req_id, outcome } => {
+            e.u8(TAG_RESPONSE);
+            e.u64(*req_id);
+            match &**outcome {
+                RemoteOutcome::Ok(resp) => {
+                    e.u8(0);
+                    enc_response(&mut e, resp);
+                }
+                RemoteOutcome::Rejected { kind, message } => {
+                    e.u8(1);
+                    e.u8(kind.code());
+                    e.string(message);
+                }
+            }
+        }
+        Message::Shutdown => e.u8(TAG_SHUTDOWN),
+        Message::Tagged { tag, data } => {
+            e.u8(TAG_TAGGED);
+            e.u64(*tag);
+            e.blob(data);
+        }
+        Message::RankHello { rank, mesh_addr } => {
+            e.u8(TAG_RANK_HELLO);
+            e.u64(*rank);
+            e.string(mesh_addr);
+        }
+        Message::RankSetup(s) => {
+            e.u8(TAG_RANK_SETUP);
+            e.u64(s.rank);
+            e.u64(s.n_ranks);
+            e.u8(strategy_code(s.strategy));
+            e.f64(s.eta);
+            e.u64(s.threads);
+            e.f64(s.eb.abs);
+            e.opt_f64(s.eb.rel);
+            for d in s.shape_dims {
+                e.u64(d);
+            }
+            e.u8(s.shape_ndim);
+            e.grid(&s.dq);
+            e.grid(&s.q);
+            e.u64(s.mesh.len() as u64);
+            for a in &s.mesh {
+                e.string(a);
+            }
+        }
+        Message::RankResult(r) => {
+            e.u8(TAG_RANK_RESULT);
+            e.u64(r.rank);
+            e.u64(r.comm_nanos);
+            e.u64(r.sent_bytes);
+            e.u64(r.sent_msgs);
+            e.u64(r.recv_bytes);
+            e.u64(r.recv_msgs);
+            e.grid(&r.out);
+        }
+    }
+    e.buf
+}
+
+/// Decode one frame payload into a [`Message`]. Total: every malformed
+/// input yields a typed [`WireError`].
+pub fn decode_message(buf: &[u8]) -> Result<Message, WireError> {
+    let mut d = Dec::new(buf);
+    let tag = d.u8()?;
+    let msg = match tag {
+        TAG_HELLO => Message::Hello(dec_handshake(&mut d)?),
+        TAG_WELCOME => {
+            let h = dec_handshake(&mut d)?;
+            let count = d.u64()?;
+            if count > 1 << 20 {
+                return Err(WireError::BadPayload("absurd node count"));
+            }
+            let mut nodes = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                nodes.push(d.u64()?);
+            }
+            Message::Welcome { node_id: h.node_id, version: h.version, nodes }
+        }
+        TAG_REQUEST => {
+            let req_id = d.u64()?;
+            let request = Box::new(dec_request(&mut d)?);
+            Message::Request { req_id, request }
+        }
+        TAG_RESPONSE => {
+            let req_id = d.u64()?;
+            let outcome = match d.u8()? {
+                0 => RemoteOutcome::Ok(dec_response(&mut d)?),
+                1 => {
+                    let kind = RejectKind::from_code(d.u8()?)?;
+                    let message = d.string()?;
+                    RemoteOutcome::Rejected { kind, message }
+                }
+                _ => return Err(WireError::BadPayload("unknown response status")),
+            };
+            Message::Response { req_id, outcome: Box::new(outcome) }
+        }
+        TAG_SHUTDOWN => Message::Shutdown,
+        TAG_TAGGED => {
+            let tag = d.u64()?;
+            let data = d.blob()?.to_vec();
+            Message::Tagged { tag, data }
+        }
+        TAG_RANK_HELLO => {
+            let rank = d.u64()?;
+            let mesh_addr = d.string()?;
+            Message::RankHello { rank, mesh_addr }
+        }
+        TAG_RANK_SETUP => {
+            let rank = d.u64()?;
+            let n_ranks = d.u64()?;
+            let strategy = strategy_from(d.u8()?)?;
+            let eta = d.f64()?;
+            let threads = d.u64()?;
+            let abs = d.f64()?;
+            let rel = d.opt_f64()?;
+            let mut shape_dims = [0u64; 3];
+            for sd in &mut shape_dims {
+                *sd = d.u64()?;
+            }
+            let shape_ndim = d.u8()?;
+            let dq: Grid<f32> = d.grid()?;
+            let q: Grid<QIndex> = d.grid()?;
+            let count = d.u64()?;
+            if count > 1 << 20 {
+                return Err(WireError::BadPayload("absurd mesh size"));
+            }
+            let mut mesh = Vec::with_capacity(count as usize);
+            for _ in 0..count {
+                mesh.push(d.string()?);
+            }
+            Message::RankSetup(Box::new(RankSetup {
+                rank,
+                n_ranks,
+                strategy,
+                eta,
+                threads,
+                eb: ResolvedBound { abs, rel },
+                shape_dims,
+                shape_ndim,
+                dq,
+                q,
+                mesh,
+            }))
+        }
+        TAG_RANK_RESULT => {
+            let rank = d.u64()?;
+            let comm_nanos = d.u64()?;
+            let sent_bytes = d.u64()?;
+            let sent_msgs = d.u64()?;
+            let recv_bytes = d.u64()?;
+            let recv_msgs = d.u64()?;
+            let out: Grid<f32> = d.grid()?;
+            Message::RankResult(Box::new(RankResult {
+                rank,
+                comm_nanos,
+                sent_bytes,
+                sent_msgs,
+                recv_bytes,
+                recv_msgs,
+                out,
+            }))
+        }
+        other => return Err(WireError::BadTag(other)),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut cur).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cur).unwrap(), b"");
+        assert_eq!(read_frame(&mut cur), Err(WireError::Eof));
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_allocation() {
+        let bytes = (u32::MAX).to_le_bytes().to_vec();
+        let mut cur = std::io::Cursor::new(bytes);
+        match read_frame(&mut cur) {
+            Err(WireError::Oversized { len, .. }) => assert_eq!(len, u64::from(u32::MAX)),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_version_mismatch_is_typed() {
+        let hello =
+            encode_message(&Message::Hello(Handshake { node_id: 7, version: PROTOCOL_VERSION }));
+        // Corrupt the version field (bytes 5..9 after tag + magic).
+        let mut bad = hello.clone();
+        bad[5] = PROTOCOL_VERSION as u8 + 1;
+        match decode_message(&bad) {
+            Err(WireError::VersionMismatch { ours, theirs }) => {
+                assert_eq!(ours, PROTOCOL_VERSION);
+                assert_eq!(theirs, u32::from(PROTOCOL_VERSION as u8 + 1));
+            }
+            other => panic!("expected VersionMismatch, got {other:?}"),
+        }
+        // The clean one still decodes.
+        match decode_message(&hello).unwrap() {
+            Message::Hello(h) => assert_eq!(h.node_id, 7),
+            other => panic!("expected Hello, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tagged_roundtrip() {
+        let msg = Message::Tagged { tag: 42, data: vec![1, 2, 3] };
+        match decode_message(&encode_message(&msg)).unwrap() {
+            Message::Tagged { tag, data } => {
+                assert_eq!(tag, 42);
+                assert_eq!(data, vec![1, 2, 3]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

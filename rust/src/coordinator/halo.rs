@@ -8,8 +8,9 @@
 //! up correct after the last axis — the standard trick that keeps halo
 //! exchange to 2 messages per axis.
 
+use crate::cluster::transport::{Transport, TransportExt};
 use crate::coordinator::topology::Topology;
-use crate::coordinator::transport::{Endpoint, Pod};
+use crate::coordinator::transport::Pod;
 use crate::data::grid::Grid;
 
 /// Which axes carry a ghost shell (the topology's active axes).
@@ -138,10 +139,12 @@ fn scatter_plane<T: Copy + Default>(g: &mut Grid<T>, axis: usize, coord: usize, 
 
 /// One round of ghost exchange over all ghosted axes. `tag_base`
 /// namespaces this round's messages (steps A and C use distinct bases).
+/// `ep` is any [`Transport`]: the in-process fabric endpoint and the
+/// cluster's socket transport exchange the identical planes.
 pub fn exchange<T: Pod + Default>(
     padded: &mut Grid<T>,
     ghosted: [bool; 3],
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     topo: &Topology,
     tag_base: u64,
 ) {
@@ -150,8 +153,8 @@ pub fn exchange<T: Pod + Default>(
             continue;
         }
         let d = padded.shape.dims[axis];
-        let lo_nb = topo.neighbor(ep.rank, axis, -1);
-        let hi_nb = topo.neighbor(ep.rank, axis, 1);
+        let lo_nb = topo.neighbor(ep.rank(), axis, -1);
+        let hi_nb = topo.neighbor(ep.rank(), axis, 1);
         let tag_lo = tag_base + axis as u64 * 2; // toward lower ranks
         let tag_hi = tag_base + axis as u64 * 2 + 1; // toward higher ranks
 

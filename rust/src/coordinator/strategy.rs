@@ -16,9 +16,9 @@
 //!   step C); EDT stays rank-local. Near-embarrassing scalability with
 //!   near-exact quality.
 
+use crate::cluster::transport::{Transport, TransportExt};
 use crate::coordinator::halo::{exchange, ghosted_axes, pad, unpad};
 use crate::coordinator::topology::Topology;
-use crate::coordinator::transport::Endpoint;
 use crate::data::grid::{Grid, SharedGrid};
 use crate::mitigation::boundary::{boundary_and_sign, boundary_mask, BoundaryResult};
 use crate::mitigation::edt::edt;
@@ -72,12 +72,13 @@ impl Strategy {
 /// Run one rank's share of the mitigation. `block_dq`/`block_q` are the
 /// rank's local blocks (shared handles, so the embarrassing strategy's
 /// request payload is a pointer bump); returns the compensated local
-/// block.
+/// block. `ep` is any [`Transport`] — the in-process fabric endpoint
+/// and the cluster's socket transport run the identical code path.
 #[allow(clippy::too_many_arguments)]
 pub fn mitigate_rank(
     strategy: Strategy,
     topo: &Topology,
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     block_dq: &SharedGrid<f32>,
     block_q: &SharedGrid<QIndex>,
     eb: ResolvedBound,
@@ -102,7 +103,7 @@ pub fn mitigate_rank(
 /// block, with marks cleared on *global* domain edges (Alg. 2 bounds).
 fn boundary_with_ghosts(
     topo: &Topology,
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     block_q: &Grid<QIndex>,
     threads: usize,
 ) -> (BoundaryResult, [bool; 3]) {
@@ -110,14 +111,14 @@ fn boundary_with_ghosts(
     let mut padded_q = pad(block_q, ghosted);
     exchange(&mut padded_q, ghosted, ep, topo, TAG_HALO_Q);
     let mut bres = boundary_and_sign(&padded_q, threads);
-    clear_global_edges(topo, ep.rank, ghosted, &mut bres.mask, Some(&mut bres.sign));
+    clear_global_edges(topo, ep.rank(), ghosted, &mut bres.mask, Some(&mut bres.sign));
     (bres, ghosted)
 }
 
 /// Approximate strategy: two stencil rounds, local EDTs.
 fn mitigate_rank_approximate(
     topo: &Topology,
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     block_dq: &Grid<f32>,
     block_q: &Grid<QIndex>,
     eb: ResolvedBound,
@@ -142,7 +143,7 @@ fn mitigate_rank_approximate(
     // Second stencil round: neighbor signs, then recompute B₂ with them.
     exchange(&mut s, ghosted, ep, topo, TAG_HALO_S);
     let mut b2 = boundary_mask(&s, threads);
-    clear_global_edges(topo, ep.rank, ghosted, &mut b2, None);
+    clear_global_edges(topo, ep.rank(), ghosted, &mut b2, None);
 
     // Step D local, step E on the padded block, then drop ghosts.
     let edt2 = edt(&b2, false, threads);
@@ -156,7 +157,7 @@ fn mitigate_rank_approximate(
 /// Exact strategy: ghost-correct step A, then leader-global EDT rounds.
 fn mitigate_rank_exact(
     topo: &Topology,
-    ep: &mut Endpoint,
+    ep: &mut dyn Transport,
     block_dq: &Grid<f32>,
     block_q: &Grid<QIndex>,
     eb: ResolvedBound,
@@ -172,7 +173,7 @@ fn mitigate_rank_exact(
     ep.send_slice(leader, TAG_GATHER_MASK, &mask_local.data);
     ep.send_slice(leader, TAG_GATHER_SIGN, &sign_local.data);
 
-    let (d1, d2, s) = if ep.rank == leader {
+    let (d1, d2, s) = if ep.rank() == leader {
         // Assemble global mask/sign, run the global sequential steps.
         let shape = topo.data;
         let mut gmask = Grid::<bool>::zeros(&[shape.dims[0], shape.dims[1], shape.dims[2]]);

@@ -182,6 +182,112 @@ impl Endpoint {
     }
 }
 
+/// The in-process loopback adapted behind the cluster's pluggable
+/// transport trait. Delegation is direct — `send`/`recv` call the
+/// inherent methods above unchanged, so behavior (counters, blocking,
+/// out-of-order buffering, panic-on-teardown) is bit-identical whether
+/// a rank runs through `&mut Endpoint` or `&mut dyn Transport`.
+impl crate::cluster::transport::Transport for Endpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn send(
+        &mut self,
+        to: usize,
+        tag: u64,
+        payload: Vec<u8>,
+    ) -> Result<(), crate::cluster::transport::TransportError> {
+        Endpoint::send(self, to, tag, payload);
+        Ok(())
+    }
+
+    fn recv(
+        &mut self,
+        from: usize,
+        tag: u64,
+    ) -> Result<Vec<u8>, crate::cluster::transport::TransportError> {
+        Ok(Endpoint::recv(self, from, tag))
+    }
+
+    fn counters(&self) -> Vec<crate::cluster::transport::PeerCounters> {
+        // This rank's sent traffic, bucketed by destination.
+        let log = self.stats.sent_log.lock().unwrap();
+        let mut out: Vec<crate::cluster::transport::PeerCounters> = (0..self.n_ranks)
+            .filter(|&p| p != self.rank)
+            .map(|p| crate::cluster::transport::PeerCounters {
+                peer: p as u64,
+                sent_bytes: 0,
+                sent_msgs: 0,
+                recv_bytes: 0,
+                recv_msgs: 0,
+            })
+            .collect();
+        for &(to, bytes) in log.iter() {
+            if let Some(c) = out.iter_mut().find(|c| c.peer == to as u64) {
+                c.sent_bytes += bytes;
+                c.sent_msgs += 1;
+            }
+        }
+        out
+    }
+
+    fn comm_nanos(&self) -> u64 {
+        self.stats.recv_wait_ns.load(Ordering::Relaxed)
+    }
+}
+
+/// A `Send + Sync` snapshot handle over a fabric's per-rank counters,
+/// attachable to an engine as a transport metrics source (the fabric
+/// itself holds channel senders, so the handle carries only the
+/// `RankStats` arcs).
+pub struct FabricTransportStats {
+    node: u64,
+    stats: Vec<Arc<RankStats>>,
+}
+
+impl Fabric {
+    /// A metrics source reporting this fabric's per-rank traffic under
+    /// node id `node` (one `peer=<rank>` line per rank: bytes/messages
+    /// sent by that rank, and received by it per the other ranks'
+    /// send logs).
+    pub fn stats_source(&self, node: u64) -> Arc<FabricTransportStats> {
+        Arc::new(FabricTransportStats { node, stats: self.stats.clone() })
+    }
+}
+
+impl crate::mitigation::engine::TransportStatsSource for FabricTransportStats {
+    fn transport_node(&self) -> u64 {
+        self.node
+    }
+
+    fn transport_counters(&self) -> Vec<crate::cluster::transport::PeerCounters> {
+        let n = self.stats.len();
+        let mut out: Vec<crate::cluster::transport::PeerCounters> = (0..n)
+            .map(|r| crate::cluster::transport::PeerCounters {
+                peer: r as u64,
+                sent_bytes: self.stats[r].bytes_sent.load(Ordering::Relaxed),
+                sent_msgs: self.stats[r].msgs_sent.load(Ordering::Relaxed),
+                recv_bytes: 0,
+                recv_msgs: 0,
+            })
+            .collect();
+        for stats in &self.stats {
+            for &(to, bytes) in stats.sent_log.lock().unwrap().iter() {
+                if to < n {
+                    out[to].recv_bytes += bytes;
+                    out[to].recv_msgs += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Plain-old-data element types that can cross the fabric.
 pub trait Pod: Copy {
     /// Serialize a slice little-endian.
@@ -251,6 +357,40 @@ mod tests {
         // Receive in tag order 1 then 2 despite arrival order 2 then 1.
         assert_eq!(ep0.recv(1, 1), vec![1]);
         assert_eq!(ep0.recv(1, 2), vec![2]);
+    }
+
+    #[test]
+    fn endpoint_behind_transport_trait_is_bit_identical() {
+        use crate::cluster::transport::{Transport, TransportExt};
+        let (fabric, mut endpoints) = Fabric::new(2);
+        let mut ep1 = endpoints.pop().unwrap();
+        let mut ep0 = endpoints.pop().unwrap();
+        {
+            let t1: &mut dyn Transport = &mut ep1;
+            t1.send_slice::<i64>(0, 5, &[10, 20]);
+            t1.send(0, 9, vec![3, 1, 4]).unwrap();
+        }
+        {
+            let t0: &mut dyn Transport = &mut ep0;
+            assert_eq!(t0.recv(1, 9).unwrap(), vec![3, 1, 4]);
+            assert_eq!(t0.recv_slice::<i64>(1, 5), vec![10, 20]);
+            assert_eq!(t0.rank(), 0);
+            assert_eq!(t0.n_ranks(), 2);
+        }
+        // Counters agree between the trait view and the fabric stats.
+        let c1 = Transport::counters(&ep1);
+        assert_eq!(c1.len(), 1);
+        assert_eq!(c1[0].peer, 0);
+        assert_eq!(c1[0].sent_msgs, 2);
+        assert_eq!(c1[0].sent_bytes, fabric.total_bytes());
+        let source = fabric.stats_source(7);
+        use crate::mitigation::engine::TransportStatsSource;
+        assert_eq!(source.transport_node(), 7);
+        let per_rank = source.transport_counters();
+        assert_eq!(per_rank.len(), 2);
+        assert_eq!(per_rank[1].sent_bytes, fabric.total_bytes());
+        assert_eq!(per_rank[0].recv_msgs, 2);
+        assert_eq!(per_rank[0].recv_bytes, fabric.total_bytes());
     }
 
     #[test]

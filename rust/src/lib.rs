@@ -35,7 +35,15 @@
 //! * [`filters`] — the Gaussian / uniform / Wiener baselines of §VIII;
 //! * [`metrics`] — SSIM (QCAT convention), PSNR, max-error, bit-rate;
 //! * [`coordinator`] — the distributed-memory runtime with the paper's
-//!   three parallelization strategies over a simulated-MPI transport;
+//!   three parallelization strategies, written against the cluster's
+//!   pluggable transport (in-process loopback or real sockets);
+//! * [`cluster`] — multi-process shards over a pluggable
+//!   [`Transport`](cluster::transport::Transport): length-prefixed
+//!   wire codec with typed errors ([`cluster::wire`]), rendezvous
+//!   (HRW) tenant → node routing ([`cluster::registry`]),
+//!   remote-addressable engine shards with `--listen`/`--join`
+//!   ([`cluster::node`]), and real forked multi-process fig9/fig11
+//!   runs ([`cluster::procs`]);
 //! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and runs them from the Rust hot
 //!   path (Python is build-time only);
@@ -96,6 +104,7 @@
 
 pub mod bench_support;
 pub mod cli;
+pub mod cluster;
 pub mod compressors;
 pub mod coordinator;
 pub mod data;

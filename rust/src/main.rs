@@ -10,14 +10,22 @@
 //!                  mitigation service on the shared thread pool
 //! * `serve`      — stream jobs through the bounded admission queue
 //!                  (priorities, backpressure, deadlines; see
-//!                  docs/SERVING.md)
+//!                  docs/SERVING.md), or form a multi-node cluster
+//!                  with `--listen`/`--join` (docs/SERVING.md §
+//!                  Multi-node serving)
 //! * `distributed`— run the MPI-analog coordinator on a synthetic field
+//! * `rank-worker`— internal child process for real multi-process
+//!                  distributed runs (spawned by the fig9/fig11
+//!                  benches; never invoked by hand)
 //! * `info`       — PJRT platform + artifact inventory
 //!
 //! Run `qai help` for flag details.
 
 use anyhow::Result;
 use qai::cli::{parse_dims, Args};
+use qai::cluster::node::{ClusterEngine, ClusterError, ClusterServer, ClusterTransportStats};
+use qai::cluster::registry::auto_node_id;
+use qai::cluster::wire::RejectKind;
 use qai::compressors::{cusz::CuszLike, cuszp::CuszpLike, szp::SzpLike, Compressor};
 use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
 use qai::data::io;
@@ -28,7 +36,9 @@ use qai::mitigation::{Backend, Job, MitigationConfig, QualityTarget, SubmitError
 use qai::quant::ErrorBound;
 use qai::util::pool;
 use qai::SharedGrid;
+use std::io::Write;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -57,6 +67,7 @@ fn run(args: &Args) -> Result<()> {
         Some("batch") => cmd_batch(args),
         Some("serve") => cmd_serve(args),
         Some("distributed") => cmd_distributed(args),
+        Some("rank-worker") => cmd_rank_worker(args),
         Some("info") => cmd_info(args),
         Some("help") | None => {
             print_help();
@@ -121,8 +132,22 @@ SUBCOMMANDS
                the tiled streaming executor (O(tile) arena scratch,
                bounded by the arena_bytes_peak metrics token; --halo
                sets the ghost width, default 8); see docs/SERVING.md)
+              [--listen ADDR | --join ADDR] [--node-id N]
+              (cluster mode: --listen HOST:PORT or
+               unix:/path/sock turns this process into a remotely
+               addressable engine node that serves requests until a
+               peer sends Shutdown; --join ADDR connects to a
+               listening node, forms a 2-node rendezvous-hashed
+               registry, and routes the generated workload per tenant
+               — some jobs execute locally (zero-copy), the rest are
+               framed over the socket; --node-id overrides the
+               auto-derived 64-bit node id; see docs/SERVING.md §
+               Multi-node serving)
   distributed [--dataset ...] [--dims AxBxC] [--rel 1e-2] [--ranks N]
               [--strategy embarrassing|exact|approximate] [--seed N]
+  rank-worker --connect ADDR [--rank R]
+              (internal: child process for real multi-process
+               distributed runs; spawned by run_distributed_procs)
   info        (PJRT platform + artifacts present)
 "
     );
@@ -417,6 +442,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         threads: args.get_parse("threads", 1)?,
         ..Default::default()
     };
+    let listen = args.get("listen");
+    let join = args.get("join");
+    let node_id_flag: u64 = args.get_parse("node-id", 0)?;
+    anyhow::ensure!(
+        listen.is_none() || join.is_none(),
+        "--listen and --join are mutually exclusive"
+    );
     args.finish()?;
     if tiled.is_some() && quality_target.is_some() {
         eprintln!(
@@ -448,7 +480,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if adaptive {
         builder = builder.adaptive_lanes(true);
     }
-    let engine = builder.build();
+    let engine = Arc::new(builder.build());
+
+    if let Some(addr) = listen {
+        // Listener mode: this process *is* an engine node. It serves
+        // remote mitigation requests until a peer sends Shutdown; the
+        // workload-generation flags below only shape the engine it
+        // hosts, not a local job stream.
+        let node_id = if node_id_flag != 0 {
+            node_id_flag
+        } else {
+            auto_node_id(&format!("listen:{addr}"))
+        };
+        let stats = ClusterTransportStats::new(node_id);
+        engine.attach_transport(stats.clone());
+        let mut server = ClusterServer::start(Arc::clone(&engine), node_id, &addr, stats)?;
+        // The exact "listening on" line (with the kernel-chosen port
+        // for HOST:0) is what joiners and the multi-process tests
+        // parse — keep it stable and flushed.
+        println!("cluster node {node_id} listening on {}", server.addr());
+        std::io::stdout().flush()?;
+        server.wait();
+        if metrics {
+            println!("{}", engine.metrics_text());
+        }
+        return Ok(());
+    }
 
     // Quantize-only ingest — `qai batch` exercises the codec path; this
     // subcommand is about the serving engine itself.
@@ -484,6 +541,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         req
     };
+
+    if let Some(addr) = join {
+        // Joiner mode: form a 2-node registry with the listener and
+        // route the whole workload through the cluster engine. The
+        // tenant id decides the node (rendezvous hashing), so with
+        // --tenants > 1 part of the stream executes locally
+        // (zero-copy) and part is framed over the socket.
+        let node_id = if node_id_flag != 0 {
+            node_id_flag
+        } else {
+            auto_node_id(&format!("join:{addr}:{}", std::process::id()))
+        };
+        let cluster = ClusterEngine::new(node_id, Arc::clone(&engine));
+        let peer = cluster.join(&addr)?;
+        println!("cluster node {node_id} joined peer {peer} at {addr}");
+        let t0 = std::time::Instant::now();
+        let mut tickets = Vec::with_capacity(jobs_n);
+        let mut shed_jobs = 0usize;
+        let mut rejected = 0usize;
+        for (i, job) in inputs.into_iter().enumerate() {
+            match cluster.submit(request_for(job, i)) {
+                Ok(t) => tickets.push((i, t)),
+                Err(ClusterError::Local(SubmitError::DeadlineInfeasible(_)))
+                | Err(ClusterError::Rejected { kind: RejectKind::DeadlineInfeasible, .. }) => {
+                    shed_jobs += 1;
+                }
+                Err(e) => {
+                    rejected += 1;
+                    eprintln!("job {i} rejected: {e}");
+                }
+            }
+        }
+        let mut local = 0usize;
+        let mut remote = 0usize;
+        let mut failures = 0usize;
+        let mut max_wait = Duration::ZERO;
+        for (i, ticket) in tickets {
+            if ticket.is_remote() {
+                remote += 1;
+            } else {
+                local += 1;
+            }
+            match ticket.wait() {
+                Ok(resp) => max_wait = max_wait.max(resp.queue_wait),
+                Err(ClusterError::Rejected {
+                    kind: RejectKind::DeadlineInfeasible, ..
+                }) => shed_jobs += 1,
+                Err(e) => {
+                    failures += 1;
+                    eprintln!("job {i} failed: {e}");
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "cluster: {local} local / {remote} remote of {jobs_n} jobs across nodes {:?}; {shed_jobs} shed",
+            cluster.nodes()
+        );
+        println!(
+            "throughput: {:.1} fields/s, {:.1} MB/s aggregate ({wall:.3}s wall); max queue wait {:.1} ms",
+            (local + remote) as f64 / wall.max(1e-12),
+            (n_elems * 4) as f64 / 1e6 / wall.max(1e-12),
+            max_wait.as_secs_f64() * 1e3
+        );
+        if metrics {
+            println!("{}", engine.metrics_text());
+        }
+        anyhow::ensure!(
+            failures == 0 && rejected == 0,
+            "{failures} job(s) failed, {rejected} rejected"
+        );
+        return Ok(());
+    }
 
     // Stream the jobs in: try_submit first; on backpressure fall back
     // to a blocking submit, and on a quota rejection back off briefly
@@ -713,6 +843,20 @@ fn cmd_distributed(args: &Args) -> Result<()> {
         rep.wall_s
     );
     Ok(())
+}
+
+/// Internal: one rank of a real multi-process distributed run.
+///
+/// Spawned by [`qai::cluster::procs::run_distributed_procs`] — connects
+/// back to the driver's control socket, forms the rank mesh over
+/// localhost, runs its block through `mitigate_rank`, and ships the
+/// result (plus measured transport counters) back. Never useful to
+/// invoke by hand.
+fn cmd_rank_worker(args: &Args) -> Result<()> {
+    let connect = args.require("connect")?;
+    let rank: usize = args.get_parse("rank", 0)?;
+    args.finish()?;
+    qai::cluster::procs::rank_worker(&connect, rank)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -66,7 +66,7 @@ use crate::mitigation::admission::{
 use crate::mitigation::pipeline::{run_pipeline, MitigationConfig, PipelineStats};
 use crate::mitigation::quality::{self, QualityTarget};
 use crate::mitigation::service::{
-    render_latency_labeled, render_metrics_labeled, Job, ServiceConfig,
+    render_latency_labeled, render_metrics_labeled, render_transport_labeled, Job, ServiceConfig,
 };
 use crate::mitigation::tiled::{run_tiled, TiledConfig};
 use crate::quant::{QIndex, ResolvedBound};
@@ -638,9 +638,10 @@ impl Drop for QuotaLease {
 }
 
 /// Stable (cross-run, cross-platform) 64-bit FNV-1a — the consistent
-/// tenant → shard hash. `std`'s `DefaultHasher` is randomized per
-/// process, which would break router determinism.
-fn fnv1a(bytes: &[u8]) -> u64 {
+/// tenant → shard hash, also reused by the cluster's rendezvous
+/// node routing (`cluster::registry`). `std`'s `DefaultHasher` is
+/// randomized per process, which would break router determinism.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -898,8 +899,21 @@ impl EngineBuilder {
             default_burst: self.default_burst,
             shared_arena,
             default_tiled: self.tiled,
+            transport: Mutex::new(Vec::new()),
         }
     }
+}
+
+/// A source of cluster/fabric traffic counters the engine surfaces in
+/// [`Engine::metrics_text`] as `scope=transport` lines. Implemented by
+/// the cluster's per-node counter set
+/// (`cluster::node::ClusterTransportStats`) and the in-process
+/// fabric's snapshot handle (`coordinator::transport::FabricTransportStats`).
+pub trait TransportStatsSource: Send + Sync {
+    /// The node id these counters belong to.
+    fn transport_node(&self) -> u64;
+    /// One counter snapshot per peer.
+    fn transport_counters(&self) -> Vec<crate::cluster::transport::PeerCounters>;
 }
 
 /// A sharded mitigation engine: `N` bounded admission queues behind a
@@ -921,6 +935,9 @@ pub struct Engine {
     /// Engine-wide default tiling ([`EngineBuilder::tiled`]); applied
     /// at submission to requests without their own setting.
     default_tiled: Option<TiledConfig>,
+    /// Attached transport counter sources ([`Engine::attach_transport`])
+    /// rendered as `scope=transport` metrics lines.
+    transport: Mutex<Vec<Arc<dyn TransportStatsSource>>>,
 }
 
 impl Default for Engine {
@@ -1250,14 +1267,25 @@ impl Engine {
         }
     }
 
+    /// Attach a transport counter source; its per-peer traffic appears
+    /// in [`Engine::metrics_text`] as `scope=transport` lines. Used by
+    /// the cluster layer (`ClusterEngine`/`ClusterServer` node
+    /// counters) and the distributed driver's fabric snapshot.
+    pub fn attach_transport(&self, source: Arc<dyn TransportStatsSource>) {
+        self.transport.lock().unwrap().push(source);
+    }
+
     /// Engine counters rendered as scrapeable `key=value` text, one
     /// line per scope: an aggregate `scope=engine` line, one
     /// `shard=<i>` line per shard, one `scope=latency` line per shard
     /// and priority class with completions (p50/p99/mean, queue-wait
-    /// vs service-time split), and one `tenant=<id>` line per tenant
+    /// vs service-time split), one `tenant=<id>` line per tenant
     /// (quota/bucket state plus the tenant's latency quantiles once
-    /// jobs have completed). Every line is independently parseable
-    /// `key=value` tokens (the `qai serve --metrics` format).
+    /// jobs have completed), and — when a transport source is attached
+    /// ([`Engine::attach_transport`]) — one aggregate
+    /// `scope=transport` line per source plus one `peer=<id>` line per
+    /// peer. Every line is independently parseable `key=value` tokens
+    /// (the `qai serve --metrics` format).
     pub fn metrics_text(&self) -> String {
         let stats = self.stats();
         let agg = stats.aggregate();
@@ -1315,6 +1343,35 @@ impl Engine {
                     pair.wait.quantile_ms(0.99),
                     pair.exec.quantile_ms(0.50),
                     pair.exec.quantile_ms(0.99),
+                ));
+            }
+        }
+        for source in self.transport.lock().unwrap().iter() {
+            let node = source.transport_node().to_string();
+            let counters = source.transport_counters();
+            let totals = counters.iter().fold((0u64, 0u64, 0u64, 0u64), |acc, c| {
+                (
+                    acc.0 + c.sent_bytes,
+                    acc.1 + c.sent_msgs,
+                    acc.2 + c.recv_bytes,
+                    acc.3 + c.recv_msgs,
+                )
+            });
+            out.push('\n');
+            out.push_str(&format!(
+                "scope=transport node={} peers={} total_sent_bytes={} total_sent_msgs={} total_recv_bytes={} total_recv_msgs={}",
+                node,
+                counters.len(),
+                totals.0,
+                totals.1,
+                totals.2,
+                totals.3,
+            ));
+            for c in &counters {
+                out.push('\n');
+                out.push_str(&render_transport_labeled(
+                    &[("scope", "transport"), ("node", node.as_str())],
+                    c,
                 ));
             }
         }

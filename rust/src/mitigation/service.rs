@@ -444,6 +444,33 @@ pub fn render_latency_labeled(labels: &[(&str, &str)], pair: &LatencyPair) -> St
     line
 }
 
+/// Render one peer's transport counters as a scrapeable `key=value`
+/// line with leading label tokens — the `scope=transport` format of
+/// [`Engine::metrics_text`](crate::mitigation::engine::Engine::metrics_text).
+/// Byte counts are wire bytes (frame payload + length prefix). Labels
+/// must be token-safe (no spaces, no `=` in values).
+pub fn render_transport_labeled(
+    labels: &[(&str, &str)],
+    counters: &crate::cluster::transport::PeerCounters,
+) -> String {
+    let mut line = String::new();
+    for (key, value) in labels {
+        line.push_str(key);
+        line.push('=');
+        line.push_str(value);
+        line.push(' ');
+    }
+    line.push_str(&format!(
+        "peer={} sent_bytes={} sent_msgs={} recv_bytes={} recv_msgs={}",
+        counters.peer,
+        counters.sent_bytes,
+        counters.sent_msgs,
+        counters.recv_bytes,
+        counters.recv_msgs,
+    ));
+    line
+}
+
 #[cfg(test)]
 mod tests {
     // The deprecated constructors/batch wrappers are exercised

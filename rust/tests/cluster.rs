@@ -1,0 +1,509 @@
+//! Integration tests over the cluster subsystem: wire-codec round-trips
+//! and malformed-input fuzzing, rendezvous-routing movement bounds, the
+//! zero-copy local path, remote deadline shedding, 2-process
+//! bit-identity over localhost TCP (the acceptance anchor), and real
+//! multi-process rank meshes vs the in-process fabric.
+
+use qai::cluster::node::{
+    request_shutdown, ClusterEngine, ClusterError, ClusterServer, ClusterTransportStats,
+};
+use qai::cluster::procs::run_distributed_procs;
+use qai::cluster::registry::NodeRegistry;
+use qai::cluster::wire::{
+    decode_message, encode_message, read_frame, write_frame, Handshake, Message, RankResult,
+    RankSetup, RejectKind, RemoteOutcome, WireError, PROTOCOL_VERSION,
+};
+use qai::coordinator::{run_distributed, DistributedConfig, Strategy};
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::metrics::psnr;
+use qai::mitigation::engine::{Engine, MitigationRequest, MitigationResponse, TransportStatsSource};
+use qai::mitigation::pipeline::{mitigate, MitigationConfig};
+use qai::mitigation::quality::QualityTarget;
+use qai::mitigation::service::Job;
+use qai::mitigation::tiled::TiledConfig;
+use qai::mitigation::Priority;
+use qai::quant::{quantize_grid, ErrorBound, QIndex, ResolvedBound};
+use qai::SharedGrid;
+use std::io::{BufRead, BufReader, Cursor};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn setup(dims: &[usize], seed: u64) -> (Grid<f32>, Grid<f32>, Grid<QIndex>, ResolvedBound) {
+    let orig = generate(DatasetKind::MirandaLike, dims, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    (orig, dq, q, eb)
+}
+
+/// encode → decode → re-encode must reproduce the original bytes for
+/// every message type (the decoded value carries everything the encoded
+/// one did).
+fn assert_reencodes(msg: &Message) {
+    let bytes = encode_message(msg);
+    let decoded = decode_message(&bytes)
+        .unwrap_or_else(|e| panic!("decode failed for {msg:?}: {e}"));
+    assert_eq!(encode_message(&decoded), bytes, "re-encode mismatch for {msg:?}");
+}
+
+// ---------------------------------------------------------------------
+// Satellite: wire framing round-trips and malformed-input behavior
+// ---------------------------------------------------------------------
+
+#[test]
+fn wire_roundtrip_all_message_types() {
+    let (_orig, dq, q, eb) = setup(&[4, 4, 4], 1);
+
+    assert_reencodes(&Message::Hello(Handshake { node_id: 42, version: PROTOCOL_VERSION }));
+    assert_reencodes(&Message::Welcome {
+        node_id: 7,
+        version: PROTOCOL_VERSION,
+        nodes: vec![7, 9, 11],
+    });
+    assert_reencodes(&Message::Shutdown);
+    assert_reencodes(&Message::Tagged { tag: 1000, data: vec![1, 2, 3, 255] });
+    assert_reencodes(&Message::Tagged { tag: 0, data: Vec::new() });
+    assert_reencodes(&Message::RankHello { rank: 3, mesh_addr: "127.0.0.1:5555".into() });
+
+    // Minimal request: every optional field absent.
+    let bare = MitigationRequest::new(dq.clone(), q.clone(), eb);
+    assert_reencodes(&Message::Request { req_id: 1, request: Box::new(bare) });
+
+    // Maximal request: every optional field present.
+    let job = Job {
+        dq: SharedGrid::new(dq.clone()),
+        q: SharedGrid::new(q.clone()),
+        eb,
+        cfg: MitigationConfig { eta: 0.7, threads: 2, ..Default::default() },
+        reference: Some(SharedGrid::new(dq.clone())),
+        target: Some(QualityTarget::Psnr(60.0)),
+        tiled: Some(TiledConfig::new(&[4, 4]).with_halo(3)),
+    };
+    let full = MitigationRequest::from_job(job)
+        .interactive()
+        .deadline(Duration::from_millis(250))
+        .tenant("alice");
+    assert_reencodes(&Message::Request { req_id: u64::MAX, request: Box::new(full) });
+
+    let resp = MitigationResponse {
+        output: dq.clone(),
+        stats: None,
+        shard: Some(1),
+        tenant: Some("alice".into()),
+        seq: Some(3),
+        trace_id: 77,
+        priority: Priority::Interactive,
+        queue_wait: Duration::from_micros(10),
+        exec: Duration::from_millis(2),
+        deadline: Some(Duration::from_millis(100)),
+        deadline_missed: false,
+        quality: Some(0.99),
+    };
+    assert_reencodes(&Message::Response { req_id: 9, outcome: Box::new(RemoteOutcome::Ok(resp)) });
+    assert_reencodes(&Message::Response {
+        req_id: 10,
+        outcome: Box::new(RemoteOutcome::Rejected {
+            kind: RejectKind::QuotaExceeded,
+            message: "tenant at quota".into(),
+        }),
+    });
+
+    let setup_msg = RankSetup {
+        rank: 1,
+        n_ranks: 2,
+        strategy: Strategy::Approximate,
+        eta: 0.9,
+        threads: 1,
+        eb,
+        shape_dims: [1, 4, 16],
+        shape_ndim: 2,
+        dq: dq.clone(),
+        q: q.clone(),
+        mesh: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+    };
+    assert_reencodes(&Message::RankSetup(Box::new(setup_msg)));
+    assert_reencodes(&Message::RankResult(Box::new(RankResult {
+        rank: 0,
+        comm_nanos: 5,
+        sent_bytes: 10,
+        sent_msgs: 2,
+        recv_bytes: 3,
+        recv_msgs: 1,
+        out: dq,
+    })));
+}
+
+#[test]
+fn wire_rejects_truncation_oversize_and_garbage() {
+    // Clean EOF at a frame boundary.
+    assert_eq!(read_frame(&mut Cursor::new(Vec::<u8>::new())), Err(WireError::Eof));
+
+    // Torn length prefix.
+    assert!(matches!(
+        read_frame(&mut Cursor::new(vec![0x05u8, 0x00])),
+        Err(WireError::Truncated { .. })
+    ));
+
+    // Torn body: a 5-byte frame cut off after the prefix + 2 bytes.
+    let mut framed = Vec::new();
+    write_frame(&mut framed, &[1, 2, 3, 4, 5]).unwrap();
+    framed.truncate(6);
+    assert!(matches!(
+        read_frame(&mut Cursor::new(framed)),
+        Err(WireError::Truncated { .. })
+    ));
+
+    // Oversized length prefix (0x41000001 > 1 GiB) is rejected before
+    // any allocation — this must return instantly.
+    assert!(matches!(
+        read_frame(&mut Cursor::new(vec![0x01u8, 0x00, 0x00, 0x41])),
+        Err(WireError::Oversized { .. })
+    ));
+
+    // Every strict prefix of a valid encoding fails with a typed error
+    // (never panics, never succeeds): the decoder follows the same
+    // byte-path as the full message until it runs off the end.
+    let (_orig, dq, q, eb) = setup(&[4, 4, 4], 2);
+    let msg = Message::Request {
+        req_id: 3,
+        request: Box::new(MitigationRequest::new(dq, q, eb).tenant("bob")),
+    };
+    let bytes = encode_message(&msg);
+    for k in 0..bytes.len() {
+        assert!(
+            decode_message(&bytes[..k]).is_err(),
+            "prefix of length {k}/{} decoded successfully",
+            bytes.len()
+        );
+    }
+
+    // Deterministic corruption fuzz: flip a few bytes anywhere in the
+    // encoding; decode must return (Ok or typed Err), never panic.
+    let mut x: u64 = 0x243F6A8885A308D3;
+    let mut lcg = move || {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (x >> 33) as usize
+    };
+    for _round in 0..256 {
+        let mut corrupt = bytes.clone();
+        for _flip in 0..1 + lcg() % 4 {
+            let at = lcg() % corrupt.len();
+            corrupt[at] ^= (1 + lcg() % 255) as u8;
+        }
+        let _result = decode_message(&corrupt);
+    }
+}
+
+#[test]
+fn handshake_failures_are_typed() {
+    let bytes = encode_message(&Message::Hello(Handshake {
+        node_id: 7,
+        version: PROTOCOL_VERSION,
+    }));
+
+    // Layout: tag(1) + magic(4) + version(4) + node_id(8).
+    let mut bad_version = bytes.clone();
+    bad_version[5] ^= 0xFF;
+    match decode_message(&bad_version) {
+        Err(WireError::VersionMismatch { ours, theirs }) => {
+            assert_eq!(ours, PROTOCOL_VERSION);
+            assert_ne!(theirs, PROTOCOL_VERSION);
+        }
+        other => panic!("expected VersionMismatch, got {other:?}"),
+    }
+
+    let mut bad_magic = bytes.clone();
+    bad_magic[1] ^= 0xFF;
+    assert!(matches!(decode_message(&bad_magic), Err(WireError::BadMagic(_))));
+
+    let mut bad_tag = bytes.clone();
+    bad_tag[0] = 99;
+    assert_eq!(decode_message(&bad_tag).unwrap_err(), WireError::BadTag(99));
+
+    let mut trailing = encode_message(&Message::Shutdown);
+    trailing.push(0xAB);
+    assert_eq!(decode_message(&trailing).unwrap_err(), WireError::TrailingBytes { extra: 1 });
+}
+
+// ---------------------------------------------------------------------
+// Tentpole acceptance: rendezvous routing moves ≤ ⌈T/N⌉ tenants when a
+// node joins
+// ---------------------------------------------------------------------
+
+#[test]
+fn rendezvous_add_node_moves_at_most_ceil_t_over_n() {
+    const T: usize = 100;
+    let tenants: Vec<String> = (0..T).map(|i| format!("tenant-{i}")).collect();
+
+    let mut reg = NodeRegistry::new(1);
+    reg.add(2);
+    reg.add(3);
+    let before: Vec<u64> = tenants.iter().map(|t| reg.route(t).unwrap()).collect();
+
+    assert!(reg.add(4));
+    let n = reg.len(); // 4
+    let after: Vec<u64> = tenants.iter().map(|t| reg.route(t).unwrap()).collect();
+
+    let mut moved = 0usize;
+    for ((tenant, &was), &now) in tenants.iter().zip(&before).zip(&after) {
+        if was != now {
+            moved += 1;
+            // A tenant only ever moves *to* the new node — rendezvous
+            // scores of existing nodes are unchanged by the join.
+            assert_eq!(now, 4, "tenant {tenant} moved {was} -> {now}, not to the joiner");
+        }
+    }
+    let bound = T.div_ceil(n); // ⌈T/N⌉ = 25
+    assert!(moved <= bound, "{moved} tenants moved on join; bound is {bound}");
+    assert!(moved > 0, "a 4th node that receives zero of 100 tenants means routing ignores it");
+
+    // Routing is deterministic: same registry, same answers.
+    let again: Vec<u64> = tenants.iter().map(|t| reg.route(t).unwrap()).collect();
+    assert_eq!(after, again);
+}
+
+// ---------------------------------------------------------------------
+// Local path: routing to the local node preserves SharedGrid zero-copy
+// ---------------------------------------------------------------------
+
+#[test]
+fn local_route_is_zero_copy() {
+    let (_orig, dq, q, eb) = setup(&[8, 8, 8], 3);
+    let cluster = ClusterEngine::new(1, Arc::new(Engine::builder().shards(1).build()));
+
+    let shared: SharedGrid<f32> = SharedGrid::new(dq);
+    let shared_q: SharedGrid<QIndex> = SharedGrid::new(q);
+    assert_eq!(shared.handle_count(), 1);
+
+    // Pause dispatch so the job sits in the queue while we look at the
+    // handle count.
+    cluster.engine().pause();
+    let ticket = cluster
+        .submit(MitigationRequest::new(shared.clone(), shared_q.clone(), eb).tenant("solo"))
+        .unwrap();
+    assert!(!ticket.is_remote(), "single-node registry must route locally");
+    assert_eq!(
+        shared.handle_count(),
+        2,
+        "local submission must share the payload grid, not copy or serialize it"
+    );
+    cluster.engine().resume();
+    let resp = ticket.wait().unwrap();
+    assert_eq!(resp.output.shape, shared.shape);
+    assert_eq!(resp.tenant.as_deref(), Some("solo"));
+}
+
+// ---------------------------------------------------------------------
+// Satellite: deadlines cross the wire as remaining budget and shed on
+// the remote node
+// ---------------------------------------------------------------------
+
+#[test]
+fn remote_deadline_shed_regression() {
+    let (_orig, dq, q, eb) = setup(&[16, 16, 16], 4);
+
+    // Server node 202: sheds infeasible deadlines once its EWMA is warm.
+    let server_engine = Arc::new(Engine::builder().shards(1).shed(true).build());
+    let server_stats = ClusterTransportStats::new(202);
+    server_engine.attach_transport(server_stats.clone());
+    let mut server =
+        ClusterServer::start(Arc::clone(&server_engine), 202, "127.0.0.1:0", server_stats)
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    // Client node 101 joins and picks a tenant that rendezvous-routes
+    // to the server.
+    let client = ClusterEngine::new(101, Arc::new(Engine::builder().shards(1).build()));
+    assert_eq!(client.join(&addr).unwrap(), 202);
+    assert_eq!(client.nodes(), vec![101, 202]);
+    let mut reg = NodeRegistry::new(101);
+    reg.add(202);
+    let tenant = (0..64)
+        .map(|i| format!("t{i}"))
+        .find(|t| reg.route(t) == Some(202))
+        .expect("64 tenants and none routes to the peer");
+
+    // Warm the server's (tenant, shape) service-time estimate: the
+    // estimate is recorded before the ticket resolves, so one completed
+    // remote job is enough.
+    let req = MitigationRequest::new(dq.clone(), q.clone(), eb).tenant(tenant.clone());
+    let ticket = client.submit(req).unwrap();
+    assert!(ticket.is_remote(), "tenant {tenant} was chosen to route remotely");
+    let resp = ticket.wait().unwrap();
+    assert_eq!(resp.output.shape, dq.shape);
+    assert_eq!(resp.tenant.as_deref(), Some(tenant.as_str()));
+
+    // A nearly-expired deadline: by the time the request is encoded the
+    // remaining budget is ~zero nanoseconds. The wire carries that
+    // budget (never an absolute instant); the server re-anchors it at
+    // its own enqueue, projects with the warmed estimate, and sheds.
+    let req = MitigationRequest::new(dq.clone(), q.clone(), eb)
+        .tenant(tenant.clone())
+        .deadline(Duration::from_nanos(1));
+    let ticket = client.submit(req).unwrap();
+    assert!(ticket.is_remote());
+    match ticket.wait() {
+        Err(ClusterError::Rejected { kind: RejectKind::DeadlineInfeasible, .. }) => {}
+        other => panic!("expected remote DeadlineInfeasible shed, got {other:?}"),
+    }
+
+    // Satellite: both sides surface scope=transport metrics lines with
+    // live byte counters.
+    let client_metrics = client.engine().metrics_text();
+    assert!(
+        client_metrics.contains("scope=transport"),
+        "client metrics missing transport scope:\n{client_metrics}"
+    );
+    assert!(
+        server_engine.metrics_text().contains("scope=transport"),
+        "server metrics missing transport scope"
+    );
+    let sent: u64 = client.transport_stats().transport_counters().iter().map(|c| c.sent_bytes).sum();
+    let recv: u64 = client.transport_stats().transport_counters().iter().map(|c| c.recv_bytes).sum();
+    assert!(sent > 0, "client sent two requests; sent_bytes must be nonzero");
+    assert!(recv > 0, "client got a response; recv_bytes must be nonzero");
+
+    server.stop();
+}
+
+// ---------------------------------------------------------------------
+// Acceptance anchor: a 2-process engine (listener + joiner over
+// localhost TCP) is bit-identical to a single-process engine for the
+// same request set
+// ---------------------------------------------------------------------
+
+/// Kills the child on panic-unwind so a failed assertion doesn't leak a
+/// listening process.
+struct ChildGuard(Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _killed = self.0.kill();
+        let _reaped = self.0.wait();
+    }
+}
+
+#[test]
+fn two_process_cluster_is_bit_identical_to_single_process() {
+    let child = Command::new(env!("CARGO_BIN_EXE_qai"))
+        .args(["serve", "--listen", "127.0.0.1:0", "--node-id", "202", "--shards", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn listener process");
+    let mut guard = ChildGuard(child);
+    let stdout = guard.0.stdout.take().expect("child stdout piped");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("read listen line");
+    let addr = line
+        .trim()
+        .split(" listening on ")
+        .nth(1)
+        .unwrap_or_else(|| panic!("unexpected listen line: {line:?}"))
+        .to_string();
+    assert!(line.starts_with("cluster node 202 "), "listen line: {line:?}");
+
+    // Joiner node inside the test process.
+    let local_engine = Arc::new(Engine::builder().shards(2).build());
+    let cluster = ClusterEngine::new(101, Arc::clone(&local_engine));
+    assert_eq!(cluster.join(&addr).unwrap(), 202);
+
+    // Pick tenants so the request set provably exercises BOTH paths:
+    // two that rendezvous-route locally, two that route to the peer.
+    let mut reg = NodeRegistry::new(101);
+    reg.add(202);
+    let mut locals = Vec::new();
+    let mut remotes = Vec::new();
+    for i in 0..64 {
+        let t = format!("t{i}");
+        match reg.route(&t) {
+            Some(101) => locals.push(t),
+            Some(202) => remotes.push(t),
+            other => panic!("route returned unknown node {other:?}"),
+        }
+    }
+    assert!(locals.len() >= 2 && remotes.len() >= 2, "pathological rendezvous split");
+    let tenants =
+        [locals[0].clone(), remotes[0].clone(), locals[1].clone(), remotes[1].clone()];
+
+    // Same request set, three executions: cluster (mixed local/remote),
+    // and a plain single-process engine as the reference.
+    let jobs: Vec<(Grid<f32>, Grid<QIndex>, ResolvedBound)> = (0..8)
+        .map(|i| {
+            let (_orig, dq, q, eb) = setup(&[12, 12, 12], 100 + i);
+            (dq, q, eb)
+        })
+        .collect();
+
+    let reference = Arc::new(Engine::builder().shards(2).build());
+    let mut expected = Vec::new();
+    for (i, (dq, q, eb)) in jobs.iter().enumerate() {
+        let req = MitigationRequest::new(dq.clone(), q.clone(), *eb)
+            .tenant(tenants[i % tenants.len()].clone());
+        expected.push(reference.submit(req).unwrap().wait().unwrap().output);
+    }
+
+    let mut tickets = Vec::new();
+    for (i, (dq, q, eb)) in jobs.iter().enumerate() {
+        let tenant = tenants[i % tenants.len()].clone();
+        let expect_remote = reg.route(&tenant) == Some(202);
+        let ticket = cluster
+            .submit(MitigationRequest::new(dq.clone(), q.clone(), *eb).tenant(tenant))
+            .unwrap();
+        assert_eq!(
+            ticket.is_remote(),
+            expect_remote,
+            "job {i}: observed path disagrees with rendezvous routing"
+        );
+        tickets.push(ticket);
+    }
+    let mut saw_remote = false;
+    let mut saw_local = false;
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        saw_remote |= ticket.is_remote();
+        saw_local |= !ticket.is_remote();
+        let resp = ticket.wait().unwrap();
+        assert_eq!(
+            resp.output.data, expected[i].data,
+            "job {i}: cluster output differs from single-process output"
+        );
+    }
+    assert!(saw_remote && saw_local, "request set must cross the wire AND stay home");
+
+    // Clean shutdown: the listener must exit 0.
+    request_shutdown(&addr, 101).unwrap();
+    let status = guard.0.wait().expect("wait for listener exit");
+    assert!(status.success(), "listener exited with {status:?}");
+}
+
+// ---------------------------------------------------------------------
+// Real multi-process rank meshes (fig9/fig11 infrastructure) match the
+// in-process fabric bit-for-bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn multi_process_ranks_match_in_process_distributed() {
+    let qai_bin = Path::new(env!("CARGO_BIN_EXE_qai"));
+    let (orig, dq, q, eb) = setup(&[16, 16, 16], 5);
+
+    // Approximate: halo exchanges over real sockets.
+    let cfg = DistributedConfig { ranks: 2, strategy: Strategy::Approximate, eta: 0.9, ..Default::default() };
+    let (in_proc, _rep) = run_distributed(&dq, &q, eb, &cfg).unwrap();
+    let (out, report) =
+        run_distributed_procs(qai_bin, &dq, &q, eb, Strategy::Approximate, 2, 0.9, 1).unwrap();
+    assert_eq!(out.data, in_proc.data, "approximate: sockets vs fabric outputs differ");
+    assert_eq!(report.ranks, 2);
+    assert!(report.bytes > 0, "halo exchange must move bytes over the mesh");
+    assert!(report.msgs > 0);
+    assert!(report.wall_s > 0.0);
+
+    // Exact: exercises the gather/scatter path including the leader's
+    // self-send, and must remain sequential-identical.
+    let seq = mitigate(&dq, &q, eb, &MitigationConfig::default());
+    let (out, _report) =
+        run_distributed_procs(qai_bin, &dq, &q, eb, Strategy::Exact, 2, 0.9, 1).unwrap();
+    assert_eq!(out.data, seq.data, "exact: multi-process output must be sequential-identical");
+    assert!(psnr(&orig.data, &out.data) > psnr(&orig.data, &dq.data));
+}
