@@ -186,25 +186,7 @@ fn main() {
         recv_bytes,
         sent_msgs,
     );
-    // Append to the trajectory array — same no-serde string surgery as
-    // BENCH_serve.json (fresh file, existing array, or legacy object).
-    let path = "BENCH_cluster.json";
-    let existing = std::fs::read_to_string(path).unwrap_or_default();
-    let trimmed = existing.trim();
-    let json = if trimmed.is_empty() {
-        format!("[\n{record}\n]\n")
-    } else if let Some(body) =
-        trimmed.strip_prefix('[').and_then(|s| s.strip_suffix(']')).map(str::trim)
-    {
-        if body.is_empty() {
-            format!("[\n{record}\n]\n")
-        } else {
-            format!("[\n{body},\n{record}\n]\n")
-        }
-    } else {
-        format!("[\n{trimmed},\n{record}\n]\n")
-    };
-    std::fs::write(path, &json).expect("write BENCH_cluster.json");
-    println!("\nappended run record to BENCH_cluster.json");
+    println!();
+    qai::bench_support::append_json_record("BENCH_cluster.json", &record);
     println!("cluster_scale: OK");
 }

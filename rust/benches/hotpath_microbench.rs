@@ -422,26 +422,193 @@ fn main() {
         first_tile_min,
         first_frac,
     );
-    // Same string-surgery append as BENCH_serve.json (no serde in the
-    // tree): fresh/empty file, existing array, or legacy single object.
-    let path = "BENCH_tiled.json";
-    let existing = std::fs::read_to_string(path).unwrap_or_default();
-    let trimmed = existing.trim();
-    let json = if trimmed.is_empty() {
-        format!("[\n{record}\n]\n")
-    } else if let Some(body) =
-        trimmed.strip_prefix('[').and_then(|s| s.strip_suffix(']')).map(str::trim)
-    {
-        if body.is_empty() {
-            format!("[\n{record}\n]\n")
-        } else {
-            format!("[\n{body},\n{record}\n]\n")
-        }
-    } else {
-        format!("[\n{trimmed},\n{record}\n]\n")
-    };
-    std::fs::write(path, &json).expect("write BENCH_tiled.json");
-    println!("appended run record to BENCH_tiled.json");
+    qai::bench_support::append_json_record("BENCH_tiled.json", &record);
+
+    bench_simd(quick);
 
     println!("\nhotpath_microbench: OK");
+}
+
+/// Scalar-vs-vector columns for the `util::simd` hot kernels: each
+/// kernel runs through its `*_with` entry point forced to
+/// `SimdLevel::Scalar` and again at the active dispatch level, and the
+/// per-kernel time pairs plus speedups append to the BENCH_simd.json
+/// trajectory. On a machine whose best level *is* scalar the columns
+/// coincide and every speedup reads ~1.0 — the record still documents
+/// that run's level. The Huffman row compares the bit-serial reference
+/// decoder against the flat-table fast path through
+/// `decode_into_with`, the same parity hook the tests pin.
+fn bench_simd(quick: bool) {
+    use qai::compressors::{bitio, huffman, lorenzo};
+    use qai::util::simd::{self, SimdLevel};
+
+    let level = simd::level();
+    let side = if quick { 64 } else { 128 };
+    let (warm, samp) = if quick { (1, 3) } else { (2, 5) };
+    let dims = [side, side, side];
+    let n = side * side * side;
+
+    println!("\n== simd kernels: scalar vs {} ==", level.token());
+
+    let orig = generate(DatasetKind::MirandaLike, &dims, 7);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let inv_q = 1.0 / (2.0 * eb.abs);
+    let two_eps = 2.0 * eb.abs;
+    let (q, dq) = quantize_grid(&orig, eb);
+
+    let mut rows: Vec<(&'static str, f64, f64)> = Vec::new();
+
+    let mut qout = vec![0i64; n];
+    let s = bench_fn("quantize [scalar]", warm, samp, || {
+        simd::quantize_with(SimdLevel::Scalar, &orig.data, inv_q, &mut qout)
+    });
+    let v = bench_fn(&format!("quantize [{}]", level.token()), warm, samp, || {
+        simd::quantize_with(level, &orig.data, inv_q, &mut qout)
+    });
+    rows.push(("quantize", s.mean, v.mean));
+
+    let mut fout = vec![0f32; n];
+    let s = bench_fn("dequantize [scalar]", warm, samp, || {
+        simd::dequantize_into_with(SimdLevel::Scalar, &q.data, two_eps, &mut fout)
+    });
+    let v = bench_fn(&format!("dequantize [{}]", level.token()), warm, samp, || {
+        simd::dequantize_into_with(level, &q.data, two_eps, &mut fout)
+    });
+    rows.push(("dequantize", s.mean, v.mean));
+
+    let residuals = lorenzo::forward_with(SimdLevel::Scalar, &q);
+    let s = bench_fn("lorenzo forward [scalar]", warm, samp, || {
+        lorenzo::forward_with(SimdLevel::Scalar, &q)
+    });
+    let v = bench_fn(&format!("lorenzo forward [{}]", level.token()), warm, samp, || {
+        lorenzo::forward_with(level, &q)
+    });
+    rows.push(("lorenzo_forward", s.mean, v.mean));
+
+    let s = bench_fn("lorenzo inverse [scalar]", warm, samp, || {
+        lorenzo::inverse_with(SimdLevel::Scalar, &residuals, q.shape)
+    });
+    let v = bench_fn(&format!("lorenzo inverse [{}]", level.token()), warm, samp, || {
+        lorenzo::inverse_with(level, &residuals, q.shape)
+    });
+    rows.push(("lorenzo_inverse", s.mean, v.mean));
+
+    // Synthetic distance/sign fields with the real sentinel mix (zero
+    // and INF lanes) so the vector path's sentinel blends are exercised.
+    let inf = qai::mitigation::edt::INF;
+    let d1: Vec<i64> =
+        (0..n).map(|i| if i % 97 == 0 { inf } else { (i % 61) as i64 + 1 }).collect();
+    let d2: Vec<i64> = (0..n).map(|i| if i % 89 == 0 { 0 } else { (i % 53) as i64 + 1 }).collect();
+    let sgn: Vec<i8> = (0..n)
+        .map(|i| match i % 5 {
+            0 => 0i8,
+            1 | 2 => 1,
+            _ => -1,
+        })
+        .collect();
+    let eta_eps = 0.9 * eb.abs;
+    let mut work = dq.data.clone();
+    let s = bench_fn("compensate [scalar]", warm, samp, || {
+        work.copy_from_slice(&dq.data);
+        simd::compensate_with(SimdLevel::Scalar, &mut work, &d1, &d2, &sgn, eta_eps, inf)
+    });
+    let v = bench_fn(&format!("compensate [{}]", level.token()), warm, samp, || {
+        work.copy_from_slice(&dq.data);
+        simd::compensate_with(level, &mut work, &d1, &d2, &sgn, eta_eps, inf)
+    });
+    rows.push(("compensate", s.mean, v.mean));
+
+    let kernel: Vec<f64> = {
+        let mut k: Vec<f64> =
+            (0..9).map(|t| (-((t as f64 - 4.0).powi(2)) / 8.0).exp()).collect();
+        let sum: f64 = k.iter().sum();
+        k.iter_mut().for_each(|x| *x /= sum);
+        k
+    };
+    let line: Vec<f64> = (0..n + kernel.len() - 1).map(|i| (i as f64 * 0.37).sin()).collect();
+    let mut cout = vec![0f64; n];
+    let s = bench_fn("convolve [scalar]", warm, samp, || {
+        simd::convolve_valid_with(SimdLevel::Scalar, &mut cout, &line, &kernel)
+    });
+    let v = bench_fn(&format!("convolve [{}]", level.token()), warm, samp, || {
+        simd::convolve_valid_with(level, &mut cout, &line, &kernel)
+    });
+    rows.push(("convolve", s.mean, v.mean));
+
+    let lof = 0.5f64;
+    let sinv = 1.0 / 255.0f64;
+    let mut mx = vec![0f64; n];
+    let mut my = vec![0f64; n];
+    let mut mxx = vec![0f64; n];
+    let mut myy = vec![0f64; n];
+    let mut mxy = vec![0f64; n];
+    let s = bench_fn("ssim moments [scalar]", warm, samp, || {
+        simd::ssim_moments_with(
+            SimdLevel::Scalar,
+            &orig.data,
+            &dq.data,
+            lof,
+            sinv,
+            &mut mx,
+            &mut my,
+            &mut mxx,
+            &mut myy,
+            &mut mxy,
+        )
+    });
+    let v = bench_fn(&format!("ssim moments [{}]", level.token()), warm, samp, || {
+        simd::ssim_moments_with(
+            level,
+            &orig.data,
+            &dq.data,
+            lof,
+            sinv,
+            &mut mx,
+            &mut my,
+            &mut mxx,
+            &mut myy,
+            &mut mxy,
+        )
+    });
+    rows.push(("ssim_moments", s.mean, v.mean));
+
+    let symbols: Vec<u32> =
+        residuals.iter().map(|&r| (bitio::zigzag(r).min(4095)) as u32).collect();
+    let buf = huffman::encode(&symbols);
+    let mut dout = vec![0u32; symbols.len()];
+    let s = bench_fn("huffman decode [bit-serial]", warm, samp, || {
+        huffman::decode_into_with(&buf, &mut dout, false).unwrap()
+    });
+    let v = bench_fn("huffman decode [table]", warm, samp, || {
+        huffman::decode_into_with(&buf, &mut dout, true).unwrap()
+    });
+    rows.push(("huffman_decode", s.mean, v.mean));
+
+    println!("   kernel            scalar_ms  simd_ms  speedup  (simd = {})", level.token());
+    for &(name, sm, vm) in &rows {
+        println!(
+            "   {:<17} {:>9.3} {:>8.3} {:>7.2}x",
+            name,
+            sm * 1e3,
+            vm * 1e3,
+            sm / vm.max(1e-12)
+        );
+    }
+
+    let mut fields = String::new();
+    for &(name, sm, vm) in &rows {
+        fields.push_str(&format!(
+            ",\n  \"{name}_scalar_s\": {:.9},\n  \"{name}_simd_s\": {:.9},\n  \"{name}_speedup\": {:.3}",
+            sm,
+            vm,
+            sm / vm.max(1e-12)
+        ));
+    }
+    let record = format!(
+        "{{\n  \"bench\": \"simd\",\n  \"generator\": \"cargo bench --bench hotpath_microbench{}\",\n  \
+         \"level\": \"{}\",\n  \"grid\": {side}{fields}\n}}",
+        if quick { " -- --quick" } else { "" },
+        level.token(),
+    );
+    qai::bench_support::append_json_record("BENCH_simd.json", &record);
 }

@@ -181,28 +181,7 @@ fn main() {
         shed_infeasible,
         deadline_misses,
     );
-    // Append this run's record to the trajectory array (no serde in
-    // the dependency tree, so this is plain string surgery on the
-    // array brackets). Three shapes to handle: a fresh/empty file, an
-    // existing array from a previous run, and a legacy single-object
-    // file written before the format became an array.
-    let path = "BENCH_serve.json";
-    let existing = std::fs::read_to_string(path).unwrap_or_default();
-    let trimmed = existing.trim();
-    let json = if trimmed.is_empty() {
-        format!("[\n{record}\n]\n")
-    } else if let Some(body) =
-        trimmed.strip_prefix('[').and_then(|s| s.strip_suffix(']')).map(str::trim)
-    {
-        if body.is_empty() {
-            format!("[\n{record}\n]\n")
-        } else {
-            format!("[\n{body},\n{record}\n]\n")
-        }
-    } else {
-        format!("[\n{trimmed},\n{record}\n]\n")
-    };
-    std::fs::write(path, &json).expect("write BENCH_serve.json");
-    println!("\nappended run record to BENCH_serve.json");
+    println!();
+    qai::bench_support::append_json_record("BENCH_serve.json", &record);
     println!("serve_load: OK");
 }

@@ -1,0 +1,68 @@
+//! Trajectory-file append shared by the benches.
+//!
+//! Each bench keeps a `BENCH_*.json` file at the repo root holding an
+//! array of run records — one JSON object per invocation — so CI and
+//! humans can track performance over time. The dependency tree has no
+//! serde, so the append is plain string surgery on the array brackets.
+
+/// Append `record` (a complete JSON object, no trailing comma) to the
+/// JSON array in `path`, creating the file if needed.
+///
+/// Three existing shapes are handled: a fresh/empty file becomes a
+/// one-element array, an existing array grows by one element, and a
+/// legacy single-object file (written before the format became an
+/// array) is wrapped into an array first. Prints an
+/// `appended run record to {path}` confirmation line on success.
+///
+/// # Panics
+///
+/// Panics if the file cannot be written.
+pub fn append_json_record(path: &str, record: &str) {
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let trimmed = existing.trim();
+    let json = if trimmed.is_empty() {
+        format!("[\n{record}\n]\n")
+    } else if let Some(body) =
+        trimmed.strip_prefix('[').and_then(|s| s.strip_suffix(']')).map(str::trim)
+    {
+        if body.is_empty() {
+            format!("[\n{record}\n]\n")
+        } else {
+            format!("[\n{body},\n{record}\n]\n")
+        }
+    } else {
+        format!("[\n{trimmed},\n{record}\n]\n")
+    };
+    std::fs::write(path, &json).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("appended run record to {path}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_covers_fresh_array_and_legacy_shapes() {
+        let dir = std::env::temp_dir().join(format!("qai_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("traj.json");
+        let path = path.to_str().unwrap();
+
+        // Fresh file -> one-element array.
+        let _ = std::fs::remove_file(path);
+        append_json_record(path, "{\"a\": 1}");
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "[\n{\"a\": 1}\n]\n");
+
+        // Existing array -> grows by one element.
+        append_json_record(path, "{\"b\": 2}");
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "[\n{\"a\": 1},\n{\"b\": 2}\n]\n");
+
+        // Legacy single-object file -> wrapped into an array.
+        std::fs::write(path, "{\"old\": true}\n").unwrap();
+        append_json_record(path, "{\"c\": 3}");
+        assert_eq!(std::fs::read_to_string(path).unwrap(), "[\n{\"old\": true},\n{\"c\": 3}\n]\n");
+
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

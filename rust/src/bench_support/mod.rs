@@ -2,8 +2,10 @@
 //! table/series printers shared by the per-figure benches.
 
 pub mod harness;
+pub mod json;
 pub mod rd;
 pub mod tables;
 
 pub use harness::{bench_fn, BenchResult};
+pub use json::append_json_record;
 pub use tables::{print_series, print_table, Table};

@@ -99,6 +99,51 @@ impl<'a> BitReader<'a> {
         self.read_bits(1).map(|b| b != 0)
     }
 
+    /// Peek `n` bits (n ≤ 64) without advancing, left-aligned into an
+    /// `n`-bit field: if fewer than `n` bits remain, the available bits
+    /// occupy the *high* end of the field and the missing low bits read
+    /// as zero. This is the lookahead primitive of table-driven Huffman
+    /// decoding — near the stream tail the table lookup still sees the
+    /// remaining prefix in the right position.
+    #[inline]
+    pub fn peek_bits_lenient(&self, n: u32) -> u64 {
+        debug_assert!(n <= 64);
+        let total = self.buf.len() * 8;
+        let avail = (total - self.pos).min(n as usize) as u32;
+        if avail == 0 {
+            return 0;
+        }
+        let mut out = 0u64;
+        let mut pos = self.pos;
+        let mut rem = avail;
+        while rem > 0 {
+            let byte = self.buf[pos / 8];
+            let bit_off = (pos % 8) as u32;
+            let have = 8 - bit_off;
+            let take = have.min(rem);
+            let bits = (byte >> (have - take)) & ((1u16 << take) - 1) as u8;
+            out = (out << take) | bits as u64;
+            pos += take as usize;
+            rem -= take;
+        }
+        out << (n - avail)
+    }
+
+    /// Advance by `n` bits without reading them (caller already
+    /// inspected them via [`BitReader::peek_bits_lenient`]). Must not
+    /// move past the end of the buffer.
+    #[inline]
+    pub fn skip_bits(&mut self, n: u32) {
+        debug_assert!(self.pos + n as usize <= self.buf.len() * 8);
+        self.pos += n as usize;
+    }
+
+    /// Bits remaining before the end of the buffer.
+    #[inline]
+    pub fn bits_remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
     /// Current bit position.
     pub fn bit_pos(&self) -> usize {
         self.pos

@@ -150,10 +150,31 @@ pub fn decode(buf: &[u8]) -> Result<Vec<u32>> {
     Ok(out)
 }
 
+/// First-level decode-table width cap: codes up to this many bits
+/// resolve in one table lookup (one peek + one skip instead of one
+/// branchy loop iteration per bit); longer codes — rare by
+/// construction, Huffman assigns them to rare symbols — fall back to
+/// the bit-serial reference walk.
+const TABLE_BITS: u32 = 10;
+
 /// Decode a stream produced by [`encode`] into a caller-provided
 /// buffer of exactly [`decoded_len`] elements. Every element of `out`
 /// is overwritten on success; on error its contents are unspecified.
+///
+/// Uses the flat table-driven fast path unless the process runs forced
+/// scalar (`QAI_SIMD=scalar`), in which case the bit-serial reference
+/// decoder runs — the two are output-identical on every stream (same
+/// canonical code, same bit consumption), pinned by tests here and in
+/// `rust/tests/simd.rs`.
 pub fn decode_into(buf: &[u8], out: &mut [u32]) -> Result<()> {
+    let fast = crate::util::simd::level() != crate::util::simd::SimdLevel::Scalar;
+    decode_into_with(buf, out, fast)
+}
+
+/// [`decode_into`] with the table fast path forced on (`true`) or off
+/// (`false`, the bit-serial reference) — the parity hook for tests and
+/// the microbench.
+pub fn decode_into_with(buf: &[u8], out: &mut [u32], fast: bool) -> Result<()> {
     let mut off = 0usize;
     let n = bytes::get_u64(buf, &mut off)? as usize;
     anyhow::ensure!(
@@ -199,10 +220,55 @@ pub fn decode_into(buf: &[u8], out: &mut [u32]) -> Result<()> {
     }
     let symbols_in_order: Vec<u32> = codes.iter().map(|&(s, _, _)| s).collect();
 
+    // Flat first-level table: index = next `tb` bits of the stream,
+    // entry = `(len << 24) | symbol_index` for every code of length ≤
+    // tb (each code fills all 2^(tb−len) slots sharing its prefix),
+    // `u32::MAX` = miss (code longer than tb). Prefix-freeness makes
+    // the top `len` bits of any hit real stream bits, so the lookup
+    // consumes exactly what the bit-serial walk would.
+    // A corrupt codebook can yield out-of-range canonical codes
+    // (c ≥ 2^len); skip the table then — the bit-serial walk below
+    // reports such streams as errors instead of indexing out of range.
+    let valid = codes.iter().all(|&(_, l, c)| c >> l == 0);
+    let table: Option<(u32, Vec<u32>)> = if fast && valid && codes.len() < (1 << 24) {
+        let tb = max_len.min(TABLE_BITS);
+        let mut t = vec![u32::MAX; 1usize << tb];
+        for (idx, &(_, l, c)) in codes.iter().enumerate() {
+            if l <= tb {
+                let base = (c << (tb - l)) as usize;
+                let span = 1usize << (tb - l);
+                let entry = (l << 24) | idx as u32;
+                for e in &mut t[base..base + span] {
+                    *e = entry;
+                }
+            }
+        }
+        Some((tb, t))
+    } else {
+        None
+    };
+
     let payload_len = bytes::get_u64(buf, &mut off)? as usize;
     anyhow::ensure!(off + payload_len <= buf.len(), "stream truncated in payload");
     let mut r = BitReader::new(&buf[off..off + payload_len]);
     for slot in out.iter_mut() {
+        if let Some((tb, t)) = &table {
+            let entry = t[r.peek_bits_lenient(*tb) as usize];
+            if entry != u32::MAX {
+                let l = entry >> 24;
+                // Near the tail the peek is zero-padded; only take the
+                // hit when all `l` code bits are real. Otherwise the
+                // reference walk below reports exhaustion exactly as
+                // the scalar decoder would.
+                if (l as usize) <= r.bits_remaining() {
+                    r.skip_bits(l);
+                    *slot = symbols_in_order[(entry & 0x00FF_FFFF) as usize];
+                    continue;
+                }
+            }
+        }
+        // Bit-serial reference walk (the scalar twin): also handles
+        // codes longer than the table and the stream tail.
         let mut code = 0u64;
         let mut l = 0u32;
         loop {
@@ -305,6 +371,31 @@ mod tests {
         let empty = encode(&[]);
         assert_eq!(decoded_len(&empty).unwrap(), 0);
         decode_into(&empty, &mut empty_out).unwrap();
+    }
+
+    #[test]
+    fn table_fast_path_matches_bit_serial_reference() {
+        prop_check("huffman table parity", 40, |g| {
+            let n = g.usize_in(1, 1500);
+            // Geometric-ish alphabet: mixes short table-hit codes with
+            // long table-miss codes in one stream.
+            let data: Vec<u32> = (0..n)
+                .map(|_| {
+                    let mut v = 0u32;
+                    while g.bool_with(0.6) && v < 200 {
+                        v += 1;
+                    }
+                    v
+                })
+                .collect();
+            let enc = encode(&data);
+            let mut fast = vec![0u32; n];
+            let mut slow = vec![u32::MAX; n];
+            decode_into_with(&enc, &mut fast, true).unwrap();
+            decode_into_with(&enc, &mut slow, false).unwrap();
+            assert_eq!(fast, slow);
+            assert_eq!(fast, data);
+        });
     }
 
     #[test]

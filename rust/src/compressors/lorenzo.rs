@@ -11,18 +11,61 @@
 
 use crate::data::grid::{Grid, Shape};
 use crate::quant::QIndex;
+use crate::util::simd::{self, SimdLevel};
 
 /// Forward Lorenzo: residuals `r = q − pred(q)`. Parallel-safe (pure
 /// gather), though this implementation is single-pass sequential.
+/// Dispatches on the process-wide [`simd::level`]; see [`forward_with`].
 pub fn forward(q: &Grid<QIndex>) -> Vec<QIndex> {
+    forward_with(simd::level(), q)
+}
+
+/// [`forward`] at a forced SIMD level. `Scalar` runs the original
+/// point-at-a-time triple loop (the semantic reference); vector levels
+/// run a row-kernel form ([`simd::delta_row_with`] /
+/// [`simd::lorenzo_row2_with`] / [`simd::lorenzo_row3_with`]) that is
+/// bit-identical — prediction is pure integer inclusion–exclusion, so
+/// regrouping per row changes nothing (pinned by `rust/tests/simd.rs`).
+pub fn forward_with(level: SimdLevel, q: &Grid<QIndex>) -> Vec<QIndex> {
     let shape = q.shape;
     let mut out = vec![0 as QIndex; q.len()];
     let dims = shape.dims;
+    if level == SimdLevel::Scalar {
+        for i in 0..dims[0] {
+            for j in 0..dims[1] {
+                for k in 0..dims[2] {
+                    let idx = shape.idx(i, j, k);
+                    out[idx] = q.data[idx] - predict(&q.data, shape, i, j, k);
+                }
+            }
+        }
+        return out;
+    }
+    // Row-kernel form: each contiguous k-row's residuals depend only on
+    // the row itself and its (i−1)/(j−1)/(i−1,j−1) neighbor rows.
+    let nk = dims[2];
     for i in 0..dims[0] {
         for j in 0..dims[1] {
-            for k in 0..dims[2] {
-                let idx = shape.idx(i, j, k);
-                out[idx] = q.data[idx] - predict(&q.data, shape, i, j, k);
+            let row = shape.idx(i, j, 0);
+            let c = &q.data[row..row + nk];
+            let o = &mut out[row..row + nk];
+            if i == 0 && j == 0 {
+                simd::delta_row_with(level, o, c);
+            } else if i == 0 || j == 0 {
+                let m = if i == 0 { shape.idx(i, j - 1, 0) } else { shape.idx(i - 1, j, 0) };
+                simd::lorenzo_row2_with(level, o, c, &q.data[m..m + nk]);
+            } else {
+                let a = shape.idx(i - 1, j, 0);
+                let b = shape.idx(i, j - 1, 0);
+                let ab = shape.idx(i - 1, j - 1, 0);
+                simd::lorenzo_row3_with(
+                    level,
+                    o,
+                    c,
+                    &q.data[a..a + nk],
+                    &q.data[b..b + nk],
+                    &q.data[ab..ab + nk],
+                );
             }
         }
     }
@@ -31,17 +74,52 @@ pub fn forward(q: &Grid<QIndex>) -> Vec<QIndex> {
 
 /// Inverse Lorenzo: reconstruct `q` from residuals in scan order (each
 /// point's prediction depends only on already-reconstructed values).
+/// Dispatches on the process-wide [`simd::level`]; see [`inverse_with`].
 pub fn inverse(residuals: &[QIndex], shape: Shape) -> Grid<QIndex> {
+    inverse_with(simd::level(), residuals, shape)
+}
+
+/// [`inverse`] at a forced SIMD level. `Scalar` runs the original
+/// scan-order recurrence; vector levels factor it into an in-row prefix
+/// sum (`h[j] = g[j] − g[j−1]` satisfies `h[k] = r[k] + h[k−1]`) plus
+/// vectorized cross-row and cross-plane [`simd::add_assign_i64_with`]
+/// accumulations — an exact integer identity, so the result is
+/// bit-identical to the scalar form.
+pub fn inverse_with(level: SimdLevel, residuals: &[QIndex], shape: Shape) -> Grid<QIndex> {
     assert_eq!(residuals.len(), shape.len());
-    let mut g = Grid::<QIndex> { shape, data: vec![0; residuals.len()] };
     let dims = shape.dims;
-    for i in 0..dims[0] {
-        for j in 0..dims[1] {
-            for k in 0..dims[2] {
-                let idx = shape.idx(i, j, k);
-                let pred = predict(&g.data, shape, i, j, k);
-                g.data[idx] = residuals[idx] + pred;
+    if level == SimdLevel::Scalar {
+        let mut g = Grid::<QIndex> { shape, data: vec![0; residuals.len()] };
+        for i in 0..dims[0] {
+            for j in 0..dims[1] {
+                for k in 0..dims[2] {
+                    let idx = shape.idx(i, j, k);
+                    let pred = predict(&g.data, shape, i, j, k);
+                    g.data[idx] = residuals[idx] + pred;
+                }
             }
+        }
+        return g;
+    }
+    // Factored form: per row, h = prefix_sum(residual row); per plane,
+    // g-row_j = g-row_{j−1} + h; across planes, g-plane_i = g-plane_{i−1}
+    // + (2D-inverse of residual plane i).
+    let mut g = Grid::<QIndex> { shape, data: residuals.to_vec() };
+    let nk = dims[2];
+    let plane = dims[1] * nk;
+    for i in 0..dims[0] {
+        let base = i * plane;
+        for j in 0..dims[1] {
+            let row = base + j * nk;
+            simd::prefix_sum_i64(&mut g.data[row..row + nk]);
+            if j > 0 {
+                let (prev, cur) = g.data.split_at_mut(row);
+                simd::add_assign_i64_with(level, &mut cur[..nk], &prev[row - nk..]);
+            }
+        }
+        if i > 0 {
+            let (prev, cur) = g.data.split_at_mut(base);
+            simd::add_assign_i64_with(level, &mut cur[..plane], &prev[base - plane..]);
         }
     }
     g

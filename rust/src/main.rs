@@ -60,6 +60,11 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    // `qai --version` parses as a bare flag (no subcommand).
+    if args.command.is_none() && args.get_bool("version").unwrap_or(false) {
+        cmd_version();
+        return Ok(());
+    }
     match args.command.as_deref() {
         Some("compress") => cmd_compress(args),
         Some("decompress") => cmd_decompress(args),
@@ -69,6 +74,10 @@ fn run(args: &Args) -> Result<()> {
         Some("distributed") => cmd_distributed(args),
         Some("rank-worker") => cmd_rank_worker(args),
         Some("info") => cmd_info(args),
+        Some("version") => {
+            cmd_version();
+            Ok(())
+        }
         Some("help") | None => {
             print_help();
             Ok(())
@@ -149,7 +158,19 @@ SUBCOMMANDS
               (internal: child process for real multi-process
                distributed runs; spawned by run_distributed_procs)
   info        (PJRT platform + artifacts present)
+  version     (package version + active SIMD dispatch level; also
+               `qai --version`. QAI_SIMD=scalar|sse2|avx2 forces the
+               level, clamped to what the CPU supports)
 "
+    );
+}
+
+fn cmd_version() {
+    println!(
+        "qai {} simd={} (best={})",
+        env!("CARGO_PKG_VERSION"),
+        qai::util::simd::token(),
+        qai::util::simd::best_supported().token(),
     );
 }
 

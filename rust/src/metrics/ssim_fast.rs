@@ -187,17 +187,21 @@ fn fused_ssim(
         let xs = &original.data;
         let ys = &other.data;
         pool.for_batches(n, threads, 4096, |r| {
-            for i in r {
-                let x = (xs[i] as f64 - lof) * inv;
-                let y = (ys[i] as f64 - lof) * inv;
-                // SAFETY: each index is written by exactly one batch.
-                unsafe {
-                    px.write(i, x);
-                    py.write(i, y);
-                    pxx.write(i, x * x);
-                    pyy.write(i, y * y);
-                    pxy.write(i, x * y);
-                }
+            let (start, len) = (r.start, r.len());
+            // SAFETY: each batch owns a disjoint index range of all five
+            // moment fields, so the sub-slices are unaliased.
+            unsafe {
+                crate::util::simd::ssim_moments(
+                    &xs[start..start + len],
+                    &ys[start..start + len],
+                    lof,
+                    inv,
+                    px.slice_mut(start, len),
+                    py.slice_mut(start, len),
+                    pxx.slice_mut(start, len),
+                    pyy.slice_mut(start, len),
+                    pxy.slice_mut(start, len),
+                );
             }
         });
     }

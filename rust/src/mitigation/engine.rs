@@ -697,6 +697,7 @@ pub struct EngineBuilder {
     default_rate: f64,
     default_burst: Option<u64>,
     tiled: Option<TiledConfig>,
+    pin_workers: Option<bool>,
 }
 
 impl EngineBuilder {
@@ -836,6 +837,19 @@ impl EngineBuilder {
         self
     }
 
+    /// Pin the workers of every per-shard private pool created by
+    /// [`EngineBuilder::lanes_per_shard`] to distinct CPUs
+    /// (round-robin over the machine, Linux only — a no-op elsewhere).
+    /// Defaults to the process-wide `QAI_POOL_PIN` knob
+    /// ([`pin_workers_default`](crate::util::pool::pin_workers_default)).
+    /// Has no effect on an explicitly supplied
+    /// [`EngineBuilder::pool`], whose pinning was decided when that
+    /// pool was built.
+    pub fn pin_workers(mut self, pin: bool) -> Self {
+        self.pin_workers = Some(pin);
+        self
+    }
+
     /// Default tiling for every submitted request that does not carry
     /// its own [`MitigationRequest::tiled`] / `tile_shape` setting: the
     /// engine-wide memory-bounding policy knob (`qai serve --tile`).
@@ -861,7 +875,12 @@ impl EngineBuilder {
         let shards: Vec<Admission> = (0..n)
             .map(|_| {
                 let pool = match self.lanes_per_shard {
-                    Some(lanes) => Some(Arc::new(ThreadPool::new(lanes))),
+                    Some(lanes) => {
+                        let pin = self
+                            .pin_workers
+                            .unwrap_or_else(crate::util::pool::pin_workers_default);
+                        Some(Arc::new(ThreadPool::with_pinning(lanes, pin)))
+                    }
                     None => self.template.pool.clone(),
                 };
                 let arena = shared_arena.clone().unwrap_or_default();

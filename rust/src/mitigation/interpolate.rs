@@ -105,20 +105,37 @@ pub fn compensate_adaptive_on(
         1.0 / (r * r)
     });
     pool.chunks_mut(data, threads, |start, chunk| {
-        for (off, v) in chunk.iter_mut().enumerate() {
-            let i = start + off;
-            let s = sign[i];
-            if s == 0 {
-                continue;
+        let end = start + chunk.len();
+        match inv_r_sq {
+            None => {
+                // Paper-exact path (no taper): the vectorized IDW kernel,
+                // bit-identical to the scalar weight chain above.
+                crate::util::simd::compensate(
+                    chunk,
+                    &dist1_sq[start..end],
+                    &dist2_sq[start..end],
+                    &sign[start..end],
+                    eta_eps,
+                    INF,
+                );
             }
-            let mut w = idw_weight(dist1_sq[i], dist2_sq[i]);
-            if let Some(inv) = inv_r_sq {
-                if dist1_sq[i] >= INF {
-                    continue;
+            Some(inv) => {
+                // Taper path stays scalar: `exp` has no correctly-rounded
+                // vector form, so a SIMD twin could not be bit-identical.
+                for (off, v) in chunk.iter_mut().enumerate() {
+                    let i = start + off;
+                    let s = sign[i];
+                    if s == 0 {
+                        continue;
+                    }
+                    if dist1_sq[i] >= INF {
+                        continue;
+                    }
+                    let w = idw_weight(dist1_sq[i], dist2_sq[i])
+                        * (-(dist1_sq[i] as f64) * inv).exp();
+                    *v += (w * s as f64 * eta_eps) as f32;
                 }
-                w *= (-(dist1_sq[i] as f64) * inv).exp();
             }
-            *v += (w * s as f64 * eta_eps) as f32;
         }
     });
 }

@@ -358,7 +358,7 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
          arena_bytes_outstanding={} arena_bytes_pooled={} arena_bytes_peak={} \
          shed_infeasible={} \
          sched_wakeups={} lanes_grown={} lanes_shrunk={} lane_cap={} \
-         quality_hits={} quality_misses={} quality_evicted={} last_trace={}",
+         quality_hits={} quality_misses={} quality_evicted={} simd={} last_trace={}",
         stats.submitted,
         stats.rejected_full,
         stats.submit_timeouts,
@@ -391,6 +391,7 @@ pub fn render_metrics(stats: &ServiceStats, arena: &ArenaStats) -> String {
         stats.quality_hits,
         stats.quality_misses,
         stats.quality_evicted,
+        crate::util::simd::token(),
         stats.last_trace_id,
     )
 }

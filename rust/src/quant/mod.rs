@@ -94,9 +94,15 @@ fn min_max(data: &[f32]) -> (f32, f32) {
 pub type QIndex = i64;
 
 /// Pre-quantize a field: `q_i = round(d_i / 2ε)`.
+///
+/// Runs on the [`crate::util::simd`] substrate (AVX2 when detected;
+/// the scalar reference under `QAI_SIMD=scalar`) — both paths are
+/// bit-identical, including round-half-away-from-zero ties.
 pub fn quantize(data: &[f32], eb: ResolvedBound) -> Vec<QIndex> {
     let inv = 1.0 / (2.0 * eb.abs);
-    data.iter().map(|&d| (d as f64 * inv).round() as QIndex).collect()
+    let mut out: Vec<QIndex> = vec![0; data.len()];
+    crate::util::simd::quantize(data, inv, &mut out);
+    out
 }
 
 /// Reconstruct from indices: `d'_i = 2 q_i ε`.
@@ -113,9 +119,7 @@ pub fn dequantize(q: &[QIndex], eb: ResolvedBound) -> Vec<f32> {
 pub fn dequantize_into(q: &[QIndex], eb: ResolvedBound, out: &mut [f32]) {
     assert_eq!(q.len(), out.len(), "dequantize buffer length mismatch");
     let two_eps = 2.0 * eb.abs;
-    for (o, &qi) in out.iter_mut().zip(q) {
-        *o = (qi as f64 * two_eps) as f32;
-    }
+    crate::util::simd::dequantize_into(q, two_eps, out);
 }
 
 /// Quantize-then-dequantize convenience: what a pre-quantization

@@ -9,9 +9,13 @@
 //! substrate (`util::par`) is retired — a minimal copy survives only
 //! inside `hotpath_microbench` as the dispatch-overhead baseline.
 
+//! Numeric hot loops dispatch through [`simd`], the runtime-selected
+//! vector substrate (AVX2/SSE2 with an always-compiled scalar twin).
+
 pub mod arena;
 pub mod hist;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod timer;

@@ -102,7 +102,7 @@
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
@@ -279,6 +279,10 @@ unsafe impl Send for PinnedTask {}
 struct WorkerShared {
     deque: Mutex<VecDeque<Ticket>>,
     pinned: Mutex<Option<PinnedTask>>,
+    /// CPU the worker observed itself on after startup (and after
+    /// affinity pinning, when enabled): `sched_getcpu` on Linux, −1
+    /// elsewhere or before the worker reports in.
+    cpu: AtomicI64,
 }
 
 /// The injector: FIFO entry queue for external submissions, plus the
@@ -548,8 +552,48 @@ impl PoolShared {
     }
 }
 
-fn worker_loop(shared: Arc<PoolShared>, me: usize) {
+/// Pin the calling thread to `cpu` and return the CPU it subsequently
+/// observes itself on. On non-Linux targets this is a no-op returning
+/// −1; `pin = false` skips the affinity call but still reports the CPU.
+fn pin_current_thread(pin: bool, cpu: usize) -> i64 {
+    #[cfg(target_os = "linux")]
+    {
+        if pin {
+            let mut mask = libc::cpu_set_t::zero();
+            mask.set(cpu);
+            // Best-effort: a failed call (e.g. a restrictive cgroup
+            // cpuset) just leaves the thread unpinned.
+            unsafe { libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &mask) };
+        }
+        unsafe { libc::sched_getcpu() as i64 }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = (pin, cpu);
+        -1
+    }
+}
+
+/// `QAI_POOL_PIN=1` opts every pool into worker pinning by default
+/// (read once, cached); anything else — including unset — leaves
+/// placement to the OS scheduler. [`ThreadPool::with_pinning`] and
+/// [`EngineBuilder::pin_workers`](crate::mitigation::engine::EngineBuilder::pin_workers)
+/// override per pool.
+pub fn pin_workers_default() -> bool {
+    static PIN: OnceLock<bool> = OnceLock::new();
+    *PIN.get_or_init(|| {
+        std::env::var("QAI_POOL_PIN").map(|v| v.trim() == "1").unwrap_or(false)
+    })
+}
+
+fn worker_loop(shared: Arc<PoolShared>, me: usize, pin: bool) {
     CURRENT_WORKER.with(|c| c.set(Some((shared.id, me))));
+    // Spread workers round-robin over the host's CPUs; worker w of any
+    // pool lands on CPU w mod n_cpus, so per-shard pools of equal size
+    // overlay identically.
+    let n_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let observed = pin_current_thread(pin, me % n_cpus);
+    shared.workers[me].cpu.store(observed, Ordering::Relaxed);
     let mut rng = steal_seed(me as u64);
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -624,8 +668,21 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     /// Build a pool for `lanes`-way parallelism (`lanes >= 1`); spawns
-    /// `lanes - 1` persistent workers immediately.
+    /// `lanes - 1` persistent workers immediately. Worker pinning
+    /// follows the `QAI_POOL_PIN` process default
+    /// ([`pin_workers_default`]); use [`ThreadPool::with_pinning`] to
+    /// choose explicitly.
     pub fn new(lanes: usize) -> Self {
+        Self::with_pinning(lanes, pin_workers_default())
+    }
+
+    /// [`ThreadPool::new`] with worker pinning chosen explicitly: with
+    /// `pin = true` each worker `w` sets its CPU affinity to `w mod
+    /// available_parallelism` at startup (Linux `sched_setaffinity`;
+    /// no-op elsewhere), trading the scheduler's freedom to migrate for
+    /// cache residency on kernel-bound workloads. The CPU each worker
+    /// actually observed is reported by [`ThreadPool::worker_cpus`].
+    pub fn with_pinning(lanes: usize, pin: bool) -> Self {
         let lanes = lanes.max(1);
         let n_workers = lanes - 1;
         let shared = Arc::new(PoolShared {
@@ -640,6 +697,7 @@ impl ThreadPool {
                 .map(|_| WorkerShared {
                     deque: Mutex::new(VecDeque::new()),
                     pinned: Mutex::new(None),
+                    cpu: AtomicI64::new(-1),
                 })
                 .collect(),
             next_task_worker: AtomicUsize::new(0),
@@ -655,7 +713,7 @@ impl ThreadPool {
                 let sh = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("qai-pool-{w}"))
-                    .spawn(move || worker_loop(sh, w))
+                    .spawn(move || worker_loop(sh, w, pin))
                     .expect("spawn pool worker")
             })
             .collect();
@@ -689,6 +747,16 @@ impl ThreadPool {
     /// that a job's internal steps really ran on a specific pool.
     pub fn regions_opened(&self) -> usize {
         self.regions.load(Ordering::SeqCst)
+    }
+
+    /// The CPU each worker last observed itself on (index = worker id):
+    /// `sched_getcpu` at worker startup, after affinity pinning when
+    /// enabled. −1 means not reported — non-Linux targets, or a worker
+    /// that has not reached its loop yet. With pinning on, entry `w` is
+    /// `w mod available_parallelism` once the worker is up (modulo a
+    /// cgroup rejecting the affinity call).
+    pub fn worker_cpus(&self) -> Vec<i64> {
+        self.shared.workers.iter().map(|w| w.cpu.load(Ordering::Relaxed)).collect()
     }
 
     /// Snapshot of the scheduler counters.

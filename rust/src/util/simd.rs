@@ -1,0 +1,1285 @@
+//! Runtime-dispatched SIMD substrate for the numeric hot loops.
+//!
+//! Every kernel here exists in (up to) three forms — a portable scalar
+//! reference that is always compiled, an SSE2 form, and an AVX2 form
+//! (`std::arch` intrinsics, x86-64 only) — and every vectorized form is
+//! **bit-identical** to its scalar twin: the kernels are built
+//! exclusively from operations IEEE 754 defines exactly (add, sub, mul,
+//! div, sqrt, format conversions) applied in the same order as the
+//! scalar code, with no FMA contraction and no reassociation of
+//! floating-point sums. `rust/tests/simd.rs` pins that equivalence
+//! across datasets, dimensionalities, and thread counts.
+//!
+//! # Dispatch-once rule
+//!
+//! The active level is chosen **once per process** — the first call to
+//! [`level`] runs CPU feature detection
+//! (`is_x86_feature_detected!("avx2")`, with SSE2 implied by the
+//! x86-64 baseline) and honors the `QAI_SIMD` environment variable
+//! (`scalar` | `sse2` | `avx2` | `auto`; requests above what the CPU
+//! supports clamp down, never up) — and is cached forever. Hot loops
+//! therefore never re-branch on features, and the level is observable:
+//! [`token`] feeds the `simd=` field of
+//! [`render_metrics`](crate::mitigation::service::render_metrics) and
+//! `qai version`.
+//!
+//! # Per-kernel level support
+//!
+//! Not every kernel has every form; a kernel called at a level it does
+//! not implement runs the next level down (ultimately the scalar
+//! reference), so forcing any level is always safe:
+//!
+//! | kernel | SSE2 | AVX2 |
+//! |---|---|---|
+//! | [`dequantize_into_with`] | yes | yes |
+//! | [`quantize_with`] | scalar | yes |
+//! | [`compensate_with`] | scalar | yes |
+//! | [`delta_row_with`] / [`lorenzo_row2_with`] / [`lorenzo_row3_with`] | yes | yes |
+//! | [`add_assign_i64_with`] | yes | yes |
+//! | [`convolve_valid_with`] | yes | yes |
+//! | [`ssim_moments_with`] | yes | yes |
+//!
+//! # Tail handling
+//!
+//! Every vectorized loop processes `len / LANES` full vector groups and
+//! finishes the remainder with the scalar reference — and a vector
+//! group whose inputs fall outside a fast path's exactness
+//! preconditions (e.g. an `i64 → f64` magic-bias conversion needs
+//! `|v| < 2⁵¹`) drops that one group to the scalar reference too, so
+//! exactness never depends on input ranges.
+//!
+//! The `*_with(level, …)` variants exist so tests and benches can force
+//! both the scalar reference and the detected ISA in one process; the
+//! plain wrappers dispatch on the cached [`level`].
+
+use std::sync::OnceLock;
+
+/// Vector instruction set selected for this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Portable scalar reference (always available, every target).
+    Scalar,
+    /// 128-bit SSE2 (the x86-64 baseline).
+    Sse2,
+    /// 256-bit AVX2.
+    Avx2,
+}
+
+impl SimdLevel {
+    /// Lowercase token for metrics lines and the CLI (`scalar` | `sse2`
+    /// | `avx2`).
+    pub fn token(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Best level this CPU can execute (independent of `QAI_SIMD`).
+pub fn best_supported() -> SimdLevel {
+    static BEST: OnceLock<SimdLevel> = OnceLock::new();
+    *BEST.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                SimdLevel::Avx2
+            } else {
+                // SSE2 is architecturally guaranteed on x86-64.
+                SimdLevel::Sse2
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            SimdLevel::Scalar
+        }
+    })
+}
+
+/// The process-wide dispatch level: CPU detection clamped by the
+/// `QAI_SIMD` environment variable (`scalar` | `sse2` | `avx2` |
+/// `auto`). Chosen on first call, cached forever (dispatch-once rule).
+pub fn level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        let best = best_supported();
+        match std::env::var("QAI_SIMD").ok().as_deref() {
+            Some("scalar") => SimdLevel::Scalar,
+            Some("sse2") => best.min(SimdLevel::Sse2),
+            Some("avx2") => best.min(SimdLevel::Avx2),
+            _ => best,
+        }
+    })
+}
+
+/// [`SimdLevel::token`] of the active [`level`] — the `simd=` metrics
+/// field.
+pub fn token() -> &'static str {
+    level().token()
+}
+
+/// Clamp a requested level to what this CPU can execute, so forced
+/// `*_with` calls (tests, benches) are safe on any machine.
+#[inline]
+fn clamp(level: SimdLevel) -> SimdLevel {
+    level.min(best_supported())
+}
+
+// ---------------------------------------------------------------------
+// dequantize: out[i] = (q[i] as f64 * two_eps) as f32
+// ---------------------------------------------------------------------
+
+/// Dequantize `q` into `out`: `out[i] = (q[i] as f64 * two_eps) as
+/// f32`, dispatched on the cached [`level`].
+pub fn dequantize_into(q: &[i64], two_eps: f64, out: &mut [f32]) {
+    dequantize_into_with(level(), q, two_eps, out)
+}
+
+/// [`dequantize_into`] at a forced level.
+pub fn dequantize_into_with(level: SimdLevel, q: &[i64], two_eps: f64, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len(), "dequantize buffer length mismatch");
+    match clamp(level) {
+        SimdLevel::Scalar => dequantize_scalar(q, two_eps, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Sse2 => unsafe { x86::dequantize_sse2(q, two_eps, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::dequantize_avx2(q, two_eps, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => dequantize_scalar(q, two_eps, out),
+    }
+}
+
+fn dequantize_scalar(q: &[i64], two_eps: f64, out: &mut [f32]) {
+    for (o, &qi) in out.iter_mut().zip(q) {
+        *o = (qi as f64 * two_eps) as f32;
+    }
+}
+
+// ---------------------------------------------------------------------
+// quantize: out[i] = (data[i] as f64 * inv).round() as i64
+// ---------------------------------------------------------------------
+
+/// Quantize `data` into `out`: `out[i] = (data[i] as f64 *
+/// inv).round() as i64` (round half away from zero, saturating cast),
+/// dispatched on the cached [`level`].
+pub fn quantize(data: &[f32], inv: f64, out: &mut [i64]) {
+    quantize_with(level(), data, inv, out)
+}
+
+/// [`quantize`] at a forced level (SSE2 runs the scalar reference —
+/// the tie-exact rounding needs `roundpd`, an SSE4.1 instruction).
+pub fn quantize_with(level: SimdLevel, data: &[f32], inv: f64, out: &mut [i64]) {
+    assert_eq!(data.len(), out.len(), "quantize buffer length mismatch");
+    match clamp(level) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::quantize_avx2(data, inv, out) },
+        _ => quantize_scalar(data, inv, out),
+    }
+}
+
+fn quantize_scalar(data: &[f32], inv: f64, out: &mut [i64]) {
+    for (o, &d) in out.iter_mut().zip(data) {
+        *o = (d as f64 * inv).round() as i64;
+    }
+}
+
+// ---------------------------------------------------------------------
+// compensate: data[i] += idw_weight(d1[i], d2[i]) * sign[i] * eta_eps
+// ---------------------------------------------------------------------
+
+/// IDW compensation kernel (paper §VI, the non-tapered step-E inner
+/// loop): for every `i` with `sign[i] != 0`,
+/// `data[i] += (w(d1[i], d2[i]) * sign[i] as f64 * eta_eps) as f32`
+/// where `w` is `k₂/(k₁+k₂)` from square-rooted distances with the
+/// limit conventions of
+/// [`idw_weight`](crate::mitigation::interpolate::idw_weight): `d1 >=
+/// inf → 0`, `d1 == 0 → 1`, `d2 >= inf → 1`, `d2 == 0 → 0` (priority
+/// in that order). `inf` is the caller's sentinel
+/// ([`edt::INF`](crate::mitigation::edt::INF) in the pipeline).
+/// Elements with `sign[i] == 0` are left bit-untouched.
+pub fn compensate(data: &mut [f32], d1: &[i64], d2: &[i64], sign: &[i8], eta_eps: f64, inf: i64) {
+    compensate_with(level(), data, d1, d2, sign, eta_eps, inf)
+}
+
+/// [`compensate`] at a forced level (SSE2 runs the scalar reference —
+/// the mask logic needs 64-bit compares and `blendv`, SSE4.1+).
+pub fn compensate_with(
+    level: SimdLevel,
+    data: &mut [f32],
+    d1: &[i64],
+    d2: &[i64],
+    sign: &[i8],
+    eta_eps: f64,
+    inf: i64,
+) {
+    assert_eq!(data.len(), d1.len());
+    assert_eq!(data.len(), d2.len());
+    assert_eq!(data.len(), sign.len());
+    match clamp(level) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::compensate_avx2(data, d1, d2, sign, eta_eps, inf) },
+        _ => compensate_scalar(data, d1, d2, sign, eta_eps, inf),
+    }
+}
+
+/// Scalar IDW weight with a parameterized sentinel — the same
+/// arithmetic as
+/// [`idw_weight`](crate::mitigation::interpolate::idw_weight), kept
+/// here so the kernel has a self-contained scalar twin.
+#[inline]
+fn idw_weight_inf(d1: i64, d2: i64, inf: i64) -> f64 {
+    if d1 >= inf {
+        return 0.0;
+    }
+    if d1 == 0 {
+        return 1.0;
+    }
+    if d2 >= inf {
+        return 1.0;
+    }
+    if d2 == 0 {
+        return 0.0;
+    }
+    let k1 = (d1 as f64).sqrt();
+    let k2 = (d2 as f64).sqrt();
+    k2 / (k1 + k2)
+}
+
+fn compensate_scalar(
+    data: &mut [f32],
+    d1: &[i64],
+    d2: &[i64],
+    sign: &[i8],
+    eta_eps: f64,
+    inf: i64,
+) {
+    for (i, v) in data.iter_mut().enumerate() {
+        let s = sign[i];
+        if s == 0 {
+            continue;
+        }
+        let w = idw_weight_inf(d1[i], d2[i], inf);
+        *v += (w * s as f64 * eta_eps) as f32;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lorenzo row kernels (pure i64 — any reorganization is bit-exact)
+// ---------------------------------------------------------------------
+
+/// Forward-Lorenzo row with no preceding neighbor rows (1D / first row
+/// of a plane): `out[0] = c[0]`, `out[t] = c[t] − c[t−1]`.
+pub fn delta_row(out: &mut [i64], c: &[i64]) {
+    delta_row_with(level(), out, c)
+}
+
+/// [`delta_row`] at a forced level.
+pub fn delta_row_with(level: SimdLevel, out: &mut [i64], c: &[i64]) {
+    assert_eq!(out.len(), c.len());
+    if out.is_empty() {
+        return;
+    }
+    out[0] = c[0];
+    match clamp(level) {
+        SimdLevel::Scalar => delta_row_scalar(out, c),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Sse2 => unsafe { x86::delta_row_sse2(out, c) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::delta_row_avx2(out, c) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => delta_row_scalar(out, c),
+    }
+}
+
+fn delta_row_scalar(out: &mut [i64], c: &[i64]) {
+    for t in 1..out.len() {
+        out[t] = c[t] - c[t - 1];
+    }
+}
+
+/// Forward-Lorenzo row with one preceding neighbor row `m` (2D
+/// interior, or a 3D row on an `i = 0` / `j = 0` face): `out[0] = c[0]
+/// − m[0]`, `out[t] = c[t] − m[t] − c[t−1] + m[t−1]`.
+pub fn lorenzo_row2(out: &mut [i64], c: &[i64], m: &[i64]) {
+    lorenzo_row2_with(level(), out, c, m)
+}
+
+/// [`lorenzo_row2`] at a forced level.
+pub fn lorenzo_row2_with(level: SimdLevel, out: &mut [i64], c: &[i64], m: &[i64]) {
+    assert_eq!(out.len(), c.len());
+    assert_eq!(out.len(), m.len());
+    if out.is_empty() {
+        return;
+    }
+    out[0] = c[0] - m[0];
+    match clamp(level) {
+        SimdLevel::Scalar => lorenzo_row2_scalar(out, c, m),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Sse2 => unsafe { x86::lorenzo_row2_sse2(out, c, m) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::lorenzo_row2_avx2(out, c, m) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => lorenzo_row2_scalar(out, c, m),
+    }
+}
+
+fn lorenzo_row2_scalar(out: &mut [i64], c: &[i64], m: &[i64]) {
+    for t in 1..out.len() {
+        out[t] = c[t] - m[t] - c[t - 1] + m[t - 1];
+    }
+}
+
+/// Forward-Lorenzo row in the 3D interior, with both axis-neighbor
+/// rows `a` (i−1), `b` (j−1) and the diagonal row `ab` (i−1, j−1):
+/// `out[0] = c[0] − a[0] − b[0] + ab[0]`,
+/// `out[t] = c[t] − a[t] − b[t] + ab[t] − c[t−1] + a[t−1] + b[t−1] −
+/// ab[t−1]` — the full 7-term inclusion–exclusion corner sum.
+pub fn lorenzo_row3(out: &mut [i64], c: &[i64], a: &[i64], b: &[i64], ab: &[i64]) {
+    lorenzo_row3_with(level(), out, c, a, b, ab)
+}
+
+/// [`lorenzo_row3`] at a forced level.
+pub fn lorenzo_row3_with(
+    level: SimdLevel,
+    out: &mut [i64],
+    c: &[i64],
+    a: &[i64],
+    b: &[i64],
+    ab: &[i64],
+) {
+    assert_eq!(out.len(), c.len());
+    assert_eq!(out.len(), a.len());
+    assert_eq!(out.len(), b.len());
+    assert_eq!(out.len(), ab.len());
+    if out.is_empty() {
+        return;
+    }
+    out[0] = c[0] - a[0] - b[0] + ab[0];
+    match clamp(level) {
+        SimdLevel::Scalar => lorenzo_row3_scalar(out, c, a, b, ab),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Sse2 => unsafe { x86::lorenzo_row3_sse2(out, c, a, b, ab) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::lorenzo_row3_avx2(out, c, a, b, ab) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => lorenzo_row3_scalar(out, c, a, b, ab),
+    }
+}
+
+fn lorenzo_row3_scalar(out: &mut [i64], c: &[i64], a: &[i64], b: &[i64], ab: &[i64]) {
+    for t in 1..out.len() {
+        out[t] = c[t] - a[t] - b[t] + ab[t] - c[t - 1] + a[t - 1] + b[t - 1] - ab[t - 1];
+    }
+}
+
+/// In-place inclusive prefix sum (sequential carry — the inverse
+/// Lorenzo in-row recurrence `h[k] = r[k] + h[k−1]`). Inherently
+/// serial; kept here so the inverse's vectorizable row/plane adds have
+/// their serial companion next to them.
+pub fn prefix_sum_i64(row: &mut [i64]) {
+    for t in 1..row.len() {
+        row[t] += row[t - 1];
+    }
+}
+
+/// `out[t] += prev[t]` over i64 rows/planes — the inverse Lorenzo
+/// cross-row (`g[j] = g[j−1] + h[j]`) and cross-plane (`g[i] = g[i−1] +
+/// d[i]`) accumulation, dispatched on the cached [`level`].
+pub fn add_assign_i64(out: &mut [i64], prev: &[i64]) {
+    add_assign_i64_with(level(), out, prev)
+}
+
+/// [`add_assign_i64`] at a forced level.
+pub fn add_assign_i64_with(level: SimdLevel, out: &mut [i64], prev: &[i64]) {
+    assert_eq!(out.len(), prev.len());
+    match clamp(level) {
+        SimdLevel::Scalar => add_assign_i64_scalar(out, prev),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Sse2 => unsafe { x86::add_assign_sse2(out, prev) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::add_assign_avx2(out, prev) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => add_assign_i64_scalar(out, prev),
+    }
+}
+
+fn add_assign_i64_scalar(out: &mut [i64], prev: &[i64]) {
+    for (o, &p) in out.iter_mut().zip(prev) {
+        *o += p;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Convolution (interior positions, no boundary reflection)
+// ---------------------------------------------------------------------
+
+/// Valid-region 1D convolution: `out[p] = Σ_t kernel[t] * line[p + t]`
+/// with taps accumulated in `t` order (the boundary-free interior of
+/// [`filters`](crate::filters)' reflect-padded convolution), dispatched
+/// on the cached [`level`]. Requires `line.len() == out.len() +
+/// kernel.len() - 1`.
+pub fn convolve_valid(out: &mut [f64], line: &[f64], kernel: &[f64]) {
+    convolve_valid_with(level(), out, line, kernel)
+}
+
+/// [`convolve_valid`] at a forced level.
+pub fn convolve_valid_with(level: SimdLevel, out: &mut [f64], line: &[f64], kernel: &[f64]) {
+    assert!(!kernel.is_empty());
+    assert_eq!(line.len(), out.len() + kernel.len() - 1, "valid-convolution length mismatch");
+    match clamp(level) {
+        SimdLevel::Scalar => convolve_valid_scalar(out, line, kernel),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Sse2 => unsafe { x86::convolve_valid_sse2(out, line, kernel) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe { x86::convolve_valid_avx2(out, line, kernel) },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => convolve_valid_scalar(out, line, kernel),
+    }
+}
+
+fn convolve_valid_scalar(out: &mut [f64], line: &[f64], kernel: &[f64]) {
+    for (p, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (t, &w) in kernel.iter().enumerate() {
+            acc += w * line[p + t];
+        }
+        *o = acc;
+    }
+}
+
+// ---------------------------------------------------------------------
+// SSIM pointwise moment initialization
+// ---------------------------------------------------------------------
+
+/// Pointwise init of the five SSIM moment fields over range-normalized
+/// inputs: `x = (xs[i] − lof) * inv`, `y = (ys[i] − lof) * inv`, then
+/// `sx = x`, `sy = y`, `sxx = x·x`, `syy = y·y`, `sxy = x·y` — the
+/// first pass of
+/// [`ssim_fast`](crate::metrics::ssim_fast::ssim_fast), dispatched on
+/// the cached [`level`]. All seven slices must share one length.
+#[allow(clippy::too_many_arguments)]
+pub fn ssim_moments(
+    xs: &[f32],
+    ys: &[f32],
+    lof: f64,
+    inv: f64,
+    sx: &mut [f64],
+    sy: &mut [f64],
+    sxx: &mut [f64],
+    syy: &mut [f64],
+    sxy: &mut [f64],
+) {
+    ssim_moments_with(level(), xs, ys, lof, inv, sx, sy, sxx, syy, sxy)
+}
+
+/// [`ssim_moments`] at a forced level.
+#[allow(clippy::too_many_arguments)]
+pub fn ssim_moments_with(
+    level: SimdLevel,
+    xs: &[f32],
+    ys: &[f32],
+    lof: f64,
+    inv: f64,
+    sx: &mut [f64],
+    sy: &mut [f64],
+    sxx: &mut [f64],
+    syy: &mut [f64],
+    sxy: &mut [f64],
+) {
+    let n = xs.len();
+    assert!(
+        ys.len() == n
+            && sx.len() == n
+            && sy.len() == n
+            && sxx.len() == n
+            && syy.len() == n
+            && sxy.len() == n,
+        "ssim moment buffer length mismatch"
+    );
+    match clamp(level) {
+        SimdLevel::Scalar => ssim_moments_scalar(xs, ys, lof, inv, sx, sy, sxx, syy, sxy),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Sse2 => unsafe {
+            x86::ssim_moments_sse2(xs, ys, lof, inv, sx, sy, sxx, syy, sxy)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `clamp` proved the CPU supports the feature.
+        SimdLevel::Avx2 => unsafe {
+            x86::ssim_moments_avx2(xs, ys, lof, inv, sx, sy, sxx, syy, sxy)
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => ssim_moments_scalar(xs, ys, lof, inv, sx, sy, sxx, syy, sxy),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ssim_moments_scalar(
+    xs: &[f32],
+    ys: &[f32],
+    lof: f64,
+    inv: f64,
+    sx: &mut [f64],
+    sy: &mut [f64],
+    sxx: &mut [f64],
+    syy: &mut [f64],
+    sxy: &mut [f64],
+) {
+    for i in 0..xs.len() {
+        let x = (xs[i] as f64 - lof) * inv;
+        let y = (ys[i] as f64 - lof) * inv;
+        sx[i] = x;
+        sy[i] = y;
+        sxx[i] = x * x;
+        syy[i] = y * y;
+        sxy[i] = x * y;
+    }
+}
+
+// ---------------------------------------------------------------------
+// x86-64 intrinsic implementations
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{
+        compensate_scalar, convolve_valid_scalar, delta_row_scalar, dequantize_scalar,
+        lorenzo_row2_scalar, lorenzo_row3_scalar, quantize_scalar, ssim_moments_scalar,
+    };
+    use std::arch::x86_64::*;
+
+    /// Bit pattern of 1.5·2⁵², the bias of the exact `i64 → f64` trick:
+    /// integer-adding `v` (|v| < 2⁵¹) into the mantissa field and
+    /// subtracting the bias as a double yields exactly `v as f64`.
+    const MAGIC_I: i64 = 0x4338000000000000;
+    const MAGIC_D: f64 = 6755399441055744.0; // 1.5 * 2^52
+    /// Magic-conversion validity bound: |v| < 2⁵¹.
+    const LIM: i64 = 1 << 51;
+
+    #[inline]
+    fn magic_ok(v: i64) -> bool {
+        (-LIM..LIM).contains(&v)
+    }
+
+    // ---- dequantize ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_avx2(q: &[i64], two_eps: f64, out: &mut [f32]) {
+        let n = q.len();
+        let te = _mm256_set1_pd(two_eps);
+        let magic_i = _mm256_set1_epi64x(MAGIC_I);
+        let magic_d = _mm256_set1_pd(MAGIC_D);
+        let hi = _mm256_set1_epi64x(LIM - 1); // v > LIM-1  ⇔  v >= LIM
+        let lo = _mm256_set1_epi64x(-LIM); // -LIM > v ⇔ v < -LIM
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm256_loadu_si256(q.as_ptr().add(i) as *const __m256i);
+            let too_hi = _mm256_cmpgt_epi64(v, hi);
+            let too_lo = _mm256_cmpgt_epi64(lo, v);
+            let bad = _mm256_or_si256(too_hi, too_lo);
+            if _mm256_movemask_pd(_mm256_castsi256_pd(bad)) != 0 {
+                dequantize_scalar(&q[i..i + 4], two_eps, &mut out[i..i + 4]);
+            } else {
+                let biased = _mm256_add_epi64(v, magic_i);
+                let d = _mm256_sub_pd(_mm256_castsi256_pd(biased), magic_d);
+                let f = _mm256_cvtpd_ps(_mm256_mul_pd(d, te));
+                _mm_storeu_ps(out.as_mut_ptr().add(i), f);
+            }
+            i += 4;
+        }
+        dequantize_scalar(&q[i..], two_eps, &mut out[i..]);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dequantize_sse2(q: &[i64], two_eps: f64, out: &mut [f32]) {
+        let n = q.len();
+        let te = _mm_set1_pd(two_eps);
+        let magic_i = _mm_set1_epi64x(MAGIC_I);
+        let magic_d = _mm_set1_pd(MAGIC_D);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            // SSE2 has no 64-bit compare; range-check the pair in scalar.
+            if magic_ok(q[i]) && magic_ok(q[i + 1]) {
+                let v = _mm_loadu_si128(q.as_ptr().add(i) as *const __m128i);
+                let biased = _mm_add_epi64(v, magic_i);
+                let d = _mm_sub_pd(_mm_castsi128_pd(biased), magic_d);
+                let f = _mm_cvtpd_ps(_mm_mul_pd(d, te));
+                // Low two f32 lanes hold the results; store them as the
+                // low 8 bytes (std::arch has no __m64, so go through i64).
+                _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, _mm_castps_si128(f));
+            } else {
+                dequantize_scalar(&q[i..i + 2], two_eps, &mut out[i..i + 2]);
+            }
+            i += 2;
+        }
+        dequantize_scalar(&q[i..], two_eps, &mut out[i..]);
+    }
+
+    // ---- quantize ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_avx2(data: &[f32], inv: f64, out: &mut [i64]) {
+        let n = data.len();
+        let vinv = _mm256_set1_pd(inv);
+        let sign_mask = _mm256_set1_pd(-0.0);
+        let half = _mm256_set1_pd(0.5);
+        let one = _mm256_set1_pd(1.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d = _mm256_cvtps_pd(_mm_loadu_ps(data.as_ptr().add(i)));
+            let x = _mm256_mul_pd(d, vinv);
+            // round-half-away-from-zero, exactly matching f64::round():
+            // trunc, take the (exact) fractional part, and bump by
+            // copysign(1, x) where |frac| >= 0.5.
+            let t = _mm256_round_pd(x, _MM_FROUND_TO_ZERO | _MM_FROUND_NO_EXC);
+            let frac = _mm256_sub_pd(x, t);
+            let absfrac = _mm256_andnot_pd(sign_mask, frac);
+            let bump = _mm256_cmp_pd(absfrac, half, _CMP_GE_OQ);
+            let signed_one = _mm256_or_pd(_mm256_and_pd(x, sign_mask), one);
+            let r = _mm256_add_pd(t, _mm256_and_pd(bump, signed_one));
+            let mut tmp = [0.0f64; 4];
+            _mm256_storeu_pd(tmp.as_mut_ptr(), r);
+            // f64 → i64 saturating casts stay scalar (no packed form in
+            // AVX2); the rounded doubles are already bit-identical to
+            // the scalar path's, so the casts agree too.
+            for (l, &tv) in tmp.iter().enumerate() {
+                *out.get_unchecked_mut(i + l) = tv as i64;
+            }
+            i += 4;
+        }
+        quantize_scalar(&data[i..], inv, &mut out[i..]);
+    }
+
+    // ---- compensate ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn compensate_avx2(
+        data: &mut [f32],
+        d1: &[i64],
+        d2: &[i64],
+        sign: &[i8],
+        eta_eps: f64,
+        inf: i64,
+    ) {
+        let n = data.len();
+        let vinf = _mm256_set1_epi64x(inf - 1); // v > inf-1 ⇔ v >= inf
+        let lim = _mm256_set1_epi64x(LIM - 1);
+        let zero_i = _mm256_setzero_si256();
+        let zero_d = _mm256_setzero_pd();
+        let one_d = _mm256_set1_pd(1.0);
+        let magic_i = _mm256_set1_epi64x(MAGIC_I);
+        let magic_d = _mm256_set1_pd(MAGIC_D);
+        let veta = _mm256_set1_pd(eta_eps);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v1 = _mm256_loadu_si256(d1.as_ptr().add(i) as *const __m256i);
+            let v2 = _mm256_loadu_si256(d2.as_ptr().add(i) as *const __m256i);
+            // Lanes at or above the sentinel are masked to 0/1 and never
+            // converted; remaining lanes must sit inside the magic
+            // conversion range (negative distances never occur). A lane
+            // in the gap [2^51, inf) falls back to scalar for the group.
+            let inf1 = _mm256_cmpgt_epi64(v1, vinf);
+            let inf2 = _mm256_cmpgt_epi64(v2, vinf);
+            let big1 = _mm256_andnot_si256(inf1, _mm256_cmpgt_epi64(v1, lim));
+            let big2 = _mm256_andnot_si256(inf2, _mm256_cmpgt_epi64(v2, lim));
+            let neg = _mm256_or_si256(
+                _mm256_cmpgt_epi64(zero_i, v1),
+                _mm256_cmpgt_epi64(zero_i, v2),
+            );
+            let bad = _mm256_or_si256(_mm256_or_si256(big1, big2), neg);
+            if _mm256_movemask_pd(_mm256_castsi256_pd(bad)) != 0 {
+                compensate_scalar(
+                    &mut data[i..i + 4],
+                    &d1[i..i + 4],
+                    &d2[i..i + 4],
+                    &sign[i..i + 4],
+                    eta_eps,
+                    inf,
+                );
+                i += 4;
+                continue;
+            }
+            let zero1 = _mm256_cmpeq_epi64(v1, zero_i);
+            let zero2 = _mm256_cmpeq_epi64(v2, zero_i);
+            // k2 / (k1 + k2) — correctly-rounded sqrt/add/div, same ops
+            // and order as the scalar weight.
+            let k1 = _mm256_sqrt_pd(_mm256_sub_pd(
+                _mm256_castsi256_pd(_mm256_add_epi64(v1, magic_i)),
+                magic_d,
+            ));
+            let k2 = _mm256_sqrt_pd(_mm256_sub_pd(
+                _mm256_castsi256_pd(_mm256_add_epi64(v2, magic_i)),
+                magic_d,
+            ));
+            let mut w = _mm256_div_pd(k2, _mm256_add_pd(k1, k2));
+            // Limit conventions, lowest priority first so the highest
+            // priority blend lands last (d1>=inf beats everything).
+            w = _mm256_blendv_pd(w, zero_d, _mm256_castsi256_pd(zero2));
+            w = _mm256_blendv_pd(w, one_d, _mm256_castsi256_pd(inf2));
+            w = _mm256_blendv_pd(w, one_d, _mm256_castsi256_pd(zero1));
+            w = _mm256_blendv_pd(w, zero_d, _mm256_castsi256_pd(inf1));
+            // contribution = (w * sign) * eta_eps, narrowed to f32 and
+            // added — identical op order to the scalar loop.
+            let s0 = *sign.get_unchecked(i) as i32;
+            let s1 = *sign.get_unchecked(i + 1) as i32;
+            let s2 = *sign.get_unchecked(i + 2) as i32;
+            let s3 = *sign.get_unchecked(i + 3) as i32;
+            let sv = _mm256_set_pd(s3 as f64, s2 as f64, s1 as f64, s0 as f64);
+            let c = _mm_cvtpd_ps(_mm256_mul_pd(_mm256_mul_pd(w, sv), veta));
+            let old = _mm_loadu_ps(data.as_ptr().add(i));
+            let new = _mm_add_ps(old, c);
+            // sign == 0 lanes keep their original bits (the scalar loop
+            // skips them entirely — adding ±0.0 could flip -0.0).
+            let keep = _mm_castsi128_ps(_mm_setr_epi32(
+                if s0 == 0 { -1 } else { 0 },
+                if s1 == 0 { -1 } else { 0 },
+                if s2 == 0 { -1 } else { 0 },
+                if s3 == 0 { -1 } else { 0 },
+            ));
+            _mm_storeu_ps(data.as_mut_ptr().add(i), _mm_blendv_ps(new, old, keep));
+            i += 4;
+        }
+        compensate_scalar(&mut data[i..], &d1[i..], &d2[i..], &sign[i..], eta_eps, inf);
+    }
+
+    // ---- Lorenzo i64 row kernels ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn delta_row_avx2(out: &mut [i64], c: &[i64]) {
+        let n = out.len();
+        let mut t = 1usize;
+        while t + 4 <= n {
+            let cur = _mm256_loadu_si256(c.as_ptr().add(t) as *const __m256i);
+            let prev = _mm256_loadu_si256(c.as_ptr().add(t - 1) as *const __m256i);
+            let r = _mm256_sub_epi64(cur, prev);
+            _mm256_storeu_si256(out.as_mut_ptr().add(t) as *mut __m256i, r);
+            t += 4;
+        }
+        for t in t..n {
+            out[t] = c[t] - c[t - 1];
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn delta_row_sse2(out: &mut [i64], c: &[i64]) {
+        let n = out.len();
+        let mut t = 1usize;
+        while t + 2 <= n {
+            let cur = _mm_loadu_si128(c.as_ptr().add(t) as *const __m128i);
+            let prev = _mm_loadu_si128(c.as_ptr().add(t - 1) as *const __m128i);
+            let r = _mm_sub_epi64(cur, prev);
+            _mm_storeu_si128(out.as_mut_ptr().add(t) as *mut __m128i, r);
+            t += 2;
+        }
+        for t in t..n {
+            out[t] = c[t] - c[t - 1];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lorenzo_row2_avx2(out: &mut [i64], c: &[i64], m: &[i64]) {
+        let n = out.len();
+        let mut t = 1usize;
+        while t + 4 <= n {
+            let cc = _mm256_loadu_si256(c.as_ptr().add(t) as *const __m256i);
+            let mm = _mm256_loadu_si256(m.as_ptr().add(t) as *const __m256i);
+            let cp = _mm256_loadu_si256(c.as_ptr().add(t - 1) as *const __m256i);
+            let mp = _mm256_loadu_si256(m.as_ptr().add(t - 1) as *const __m256i);
+            let r = _mm256_add_epi64(
+                _mm256_sub_epi64(_mm256_sub_epi64(cc, mm), cp),
+                mp,
+            );
+            _mm256_storeu_si256(out.as_mut_ptr().add(t) as *mut __m256i, r);
+            t += 4;
+        }
+        if t < n {
+            lorenzo_row2_tail(out, c, m, t);
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn lorenzo_row2_sse2(out: &mut [i64], c: &[i64], m: &[i64]) {
+        let n = out.len();
+        let mut t = 1usize;
+        while t + 2 <= n {
+            let cc = _mm_loadu_si128(c.as_ptr().add(t) as *const __m128i);
+            let mm = _mm_loadu_si128(m.as_ptr().add(t) as *const __m128i);
+            let cp = _mm_loadu_si128(c.as_ptr().add(t - 1) as *const __m128i);
+            let mp = _mm_loadu_si128(m.as_ptr().add(t - 1) as *const __m128i);
+            let r = _mm_add_epi64(_mm_sub_epi64(_mm_sub_epi64(cc, mm), cp), mp);
+            _mm_storeu_si128(out.as_mut_ptr().add(t) as *mut __m128i, r);
+            t += 2;
+        }
+        if t < n {
+            lorenzo_row2_tail(out, c, m, t);
+        }
+    }
+
+    fn lorenzo_row2_tail(out: &mut [i64], c: &[i64], m: &[i64], from: usize) {
+        for t in from..out.len() {
+            out[t] = c[t] - m[t] - c[t - 1] + m[t - 1];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lorenzo_row3_avx2(out: &mut [i64], c: &[i64], a: &[i64], b: &[i64], ab: &[i64]) {
+        let n = out.len();
+        let mut t = 1usize;
+        while t + 4 <= n {
+            let cc = _mm256_loadu_si256(c.as_ptr().add(t) as *const __m256i);
+            let aa = _mm256_loadu_si256(a.as_ptr().add(t) as *const __m256i);
+            let bb = _mm256_loadu_si256(b.as_ptr().add(t) as *const __m256i);
+            let dd = _mm256_loadu_si256(ab.as_ptr().add(t) as *const __m256i);
+            let cp = _mm256_loadu_si256(c.as_ptr().add(t - 1) as *const __m256i);
+            let ap = _mm256_loadu_si256(a.as_ptr().add(t - 1) as *const __m256i);
+            let bp = _mm256_loadu_si256(b.as_ptr().add(t - 1) as *const __m256i);
+            let dp = _mm256_loadu_si256(ab.as_ptr().add(t - 1) as *const __m256i);
+            let cur = _mm256_add_epi64(_mm256_sub_epi64(_mm256_sub_epi64(cc, aa), bb), dd);
+            let prev = _mm256_add_epi64(_mm256_sub_epi64(_mm256_sub_epi64(cp, ap), bp), dp);
+            let r = _mm256_sub_epi64(cur, prev);
+            _mm256_storeu_si256(out.as_mut_ptr().add(t) as *mut __m256i, r);
+            t += 4;
+        }
+        if t < n {
+            lorenzo_row3_tail(out, c, a, b, ab, t);
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn lorenzo_row3_sse2(out: &mut [i64], c: &[i64], a: &[i64], b: &[i64], ab: &[i64]) {
+        let n = out.len();
+        let mut t = 1usize;
+        while t + 2 <= n {
+            let cc = _mm_loadu_si128(c.as_ptr().add(t) as *const __m128i);
+            let aa = _mm_loadu_si128(a.as_ptr().add(t) as *const __m128i);
+            let bb = _mm_loadu_si128(b.as_ptr().add(t) as *const __m128i);
+            let dd = _mm_loadu_si128(ab.as_ptr().add(t) as *const __m128i);
+            let cp = _mm_loadu_si128(c.as_ptr().add(t - 1) as *const __m128i);
+            let ap = _mm_loadu_si128(a.as_ptr().add(t - 1) as *const __m128i);
+            let bp = _mm_loadu_si128(b.as_ptr().add(t - 1) as *const __m128i);
+            let dp = _mm_loadu_si128(ab.as_ptr().add(t - 1) as *const __m128i);
+            let cur = _mm_add_epi64(_mm_sub_epi64(_mm_sub_epi64(cc, aa), bb), dd);
+            let prev = _mm_add_epi64(_mm_sub_epi64(_mm_sub_epi64(cp, ap), bp), dp);
+            let r = _mm_sub_epi64(cur, prev);
+            _mm_storeu_si128(out.as_mut_ptr().add(t) as *mut __m128i, r);
+            t += 2;
+        }
+        if t < n {
+            lorenzo_row3_tail(out, c, a, b, ab, t);
+        }
+    }
+
+    fn lorenzo_row3_tail(
+        out: &mut [i64],
+        c: &[i64],
+        a: &[i64],
+        b: &[i64],
+        ab: &[i64],
+        from: usize,
+    ) {
+        for t in from..out.len() {
+            out[t] = c[t] - a[t] - b[t] + ab[t] - c[t - 1] + a[t - 1] + b[t - 1] - ab[t - 1];
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign_avx2(out: &mut [i64], prev: &[i64]) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let o = _mm256_loadu_si256(out.as_ptr().add(i) as *const __m256i);
+            let p = _mm256_loadu_si256(prev.as_ptr().add(i) as *const __m256i);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, _mm256_add_epi64(o, p));
+            i += 4;
+        }
+        for i in i..n {
+            out[i] += prev[i];
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn add_assign_sse2(out: &mut [i64], prev: &[i64]) {
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let o = _mm_loadu_si128(out.as_ptr().add(i) as *const __m128i);
+            let p = _mm_loadu_si128(prev.as_ptr().add(i) as *const __m128i);
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, _mm_add_epi64(o, p));
+            i += 2;
+        }
+        for i in i..n {
+            out[i] += prev[i];
+        }
+    }
+
+    // ---- convolution ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn convolve_valid_avx2(out: &mut [f64], line: &[f64], kernel: &[f64]) {
+        let n = out.len();
+        let mut p = 0usize;
+        while p + 4 <= n {
+            let mut acc = _mm256_setzero_pd();
+            // Taps accumulate in `t` order per output lane — the exact
+            // scalar summation order (mul then add; no FMA, which would
+            // change the rounding).
+            for (t, &w) in kernel.iter().enumerate() {
+                let vw = _mm256_set1_pd(w);
+                let vl = _mm256_loadu_pd(line.as_ptr().add(p + t));
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(vw, vl));
+            }
+            _mm256_storeu_pd(out.as_mut_ptr().add(p), acc);
+            p += 4;
+        }
+        convolve_valid_scalar(&mut out[p..], &line[p..], kernel);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn convolve_valid_sse2(out: &mut [f64], line: &[f64], kernel: &[f64]) {
+        let n = out.len();
+        let mut p = 0usize;
+        while p + 2 <= n {
+            let mut acc = _mm_setzero_pd();
+            for (t, &w) in kernel.iter().enumerate() {
+                let vw = _mm_set1_pd(w);
+                let vl = _mm_loadu_pd(line.as_ptr().add(p + t));
+                acc = _mm_add_pd(acc, _mm_mul_pd(vw, vl));
+            }
+            _mm_storeu_pd(out.as_mut_ptr().add(p), acc);
+            p += 2;
+        }
+        convolve_valid_scalar(&mut out[p..], &line[p..], kernel);
+    }
+
+    // ---- SSIM moments ----
+
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn ssim_moments_avx2(
+        xs: &[f32],
+        ys: &[f32],
+        lof: f64,
+        inv: f64,
+        sx: &mut [f64],
+        sy: &mut [f64],
+        sxx: &mut [f64],
+        syy: &mut [f64],
+        sxy: &mut [f64],
+    ) {
+        let n = xs.len();
+        let vlo = _mm256_set1_pd(lof);
+        let vinv = _mm256_set1_pd(inv);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm256_mul_pd(
+                _mm256_sub_pd(_mm256_cvtps_pd(_mm_loadu_ps(xs.as_ptr().add(i))), vlo),
+                vinv,
+            );
+            let y = _mm256_mul_pd(
+                _mm256_sub_pd(_mm256_cvtps_pd(_mm_loadu_ps(ys.as_ptr().add(i))), vlo),
+                vinv,
+            );
+            _mm256_storeu_pd(sx.as_mut_ptr().add(i), x);
+            _mm256_storeu_pd(sy.as_mut_ptr().add(i), y);
+            _mm256_storeu_pd(sxx.as_mut_ptr().add(i), _mm256_mul_pd(x, x));
+            _mm256_storeu_pd(syy.as_mut_ptr().add(i), _mm256_mul_pd(y, y));
+            _mm256_storeu_pd(sxy.as_mut_ptr().add(i), _mm256_mul_pd(x, y));
+            i += 4;
+        }
+        ssim_moments_scalar(
+            &xs[i..],
+            &ys[i..],
+            lof,
+            inv,
+            &mut sx[i..],
+            &mut sy[i..],
+            &mut sxx[i..],
+            &mut syy[i..],
+            &mut sxy[i..],
+        );
+    }
+
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn ssim_moments_sse2(
+        xs: &[f32],
+        ys: &[f32],
+        lof: f64,
+        inv: f64,
+        sx: &mut [f64],
+        sy: &mut [f64],
+        sxx: &mut [f64],
+        syy: &mut [f64],
+        sxy: &mut [f64],
+    ) {
+        let n = xs.len();
+        let vlo = _mm_set1_pd(lof);
+        let vinv = _mm_set1_pd(inv);
+        let mut i = 0usize;
+        while i + 2 <= n {
+            // `_mm_cvtps_pd` widens the two low f32 lanes.
+            let xf = _mm_castsi128_ps(_mm_loadl_epi64(xs.as_ptr().add(i) as *const __m128i));
+            let yf = _mm_castsi128_ps(_mm_loadl_epi64(ys.as_ptr().add(i) as *const __m128i));
+            let x = _mm_mul_pd(_mm_sub_pd(_mm_cvtps_pd(xf), vlo), vinv);
+            let y = _mm_mul_pd(_mm_sub_pd(_mm_cvtps_pd(yf), vlo), vinv);
+            _mm_storeu_pd(sx.as_mut_ptr().add(i), x);
+            _mm_storeu_pd(sy.as_mut_ptr().add(i), y);
+            _mm_storeu_pd(sxx.as_mut_ptr().add(i), _mm_mul_pd(x, x));
+            _mm_storeu_pd(syy.as_mut_ptr().add(i), _mm_mul_pd(y, y));
+            _mm_storeu_pd(sxy.as_mut_ptr().add(i), _mm_mul_pd(x, y));
+            i += 2;
+        }
+        ssim_moments_scalar(
+            &xs[i..],
+            &ys[i..],
+            lof,
+            inv,
+            &mut sx[i..],
+            &mut sy[i..],
+            &mut sxx[i..],
+            &mut syy[i..],
+            &mut sxy[i..],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    /// Widest lane count of any vector form (AVX2 i64/f64 = 4).
+    const LANES: usize = 4;
+
+    fn levels() -> Vec<SimdLevel> {
+        // Scalar plus everything the CPU can actually run.
+        let mut v = vec![SimdLevel::Scalar];
+        if best_supported() >= SimdLevel::Sse2 {
+            v.push(SimdLevel::Sse2);
+        }
+        if best_supported() >= SimdLevel::Avx2 {
+            v.push(SimdLevel::Avx2);
+        }
+        v
+    }
+
+    #[test]
+    fn level_token_is_stable() {
+        assert!(["scalar", "sse2", "avx2"].contains(&token()));
+        assert_eq!(level(), level(), "dispatch must be chosen once");
+    }
+
+    #[test]
+    fn dequantize_bit_identical_all_lengths_and_offsets() {
+        // Tail lengths 1..=2*LANES and unaligned starting offsets, plus
+        // values outside the magic-conversion range.
+        prop_check("simd dequantize", 60, |g| {
+            let off = g.usize_in(0, LANES);
+            let n = off + g.usize_in(1, 2 * LANES + 9);
+            let mut q: Vec<i64> =
+                (0..n).map(|_| g.usize_in(0, 2_000_000) as i64 - 1_000_000).collect();
+            if g.bool_with(0.3) {
+                let i = g.usize_in(0, n - 1);
+                q[i] = [(1i64 << 51), -(1 << 51), i64::MAX / 4, i64::MIN / 4][g.usize_in(0, 3)];
+            }
+            let two_eps = g.f64_in(1e-9, 10.0);
+            let mut want = vec![0.0f32; n - off];
+            dequantize_into_with(SimdLevel::Scalar, &q[off..], two_eps, &mut want);
+            for lvl in levels() {
+                let mut got = vec![0.0f32; n - off];
+                dequantize_into_with(lvl, &q[off..], two_eps, &mut got);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={lvl:?} off={off}");
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_bit_identical_including_ties() {
+        prop_check("simd quantize", 60, |g| {
+            let off = g.usize_in(0, LANES);
+            let n = off + g.usize_in(1, 2 * LANES + 9);
+            let mut data: Vec<f32> = g.smooth_field(n, 0.4);
+            // Exact ties and near-ties: with inv = 1.0 these exercise
+            // the round-half-away edge directly.
+            if n - off > 3 {
+                data[off] = 0.5;
+                data[off + 1] = -2.5;
+                data[off + 2] = 0.499_999_97;
+            }
+            let inv = if g.bool_with(0.5) { 1.0 } else { 1.0 / (2.0 * g.f64_in(1e-4, 0.5)) };
+            let mut want = vec![0i64; n - off];
+            quantize_with(SimdLevel::Scalar, &data[off..], inv, &mut want);
+            for lvl in levels() {
+                let mut got = vec![0i64; n - off];
+                quantize_with(lvl, &data[off..], inv, &mut got);
+                assert_eq!(got, want, "level={lvl:?} off={off}");
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_within_bound_under_simd() {
+        prop_check("simd quant roundtrip", 60, |g| {
+            let n = g.usize_in(1, 3 * LANES);
+            let data = g.smooth_field(n, 0.3);
+            let eps = g.f64_in(1e-4, 0.5);
+            let inv = 1.0 / (2.0 * eps);
+            for lvl in levels() {
+                let mut q = vec![0i64; n];
+                quantize_with(lvl, &data, inv, &mut q);
+                let mut dq = vec![0.0f32; n];
+                dequantize_into_with(lvl, &q, 2.0 * eps, &mut dq);
+                for (d, r) in data.iter().zip(&dq) {
+                    let err = (*d as f64 - *r as f64).abs();
+                    assert!(err <= eps * (1.0 + 1e-9), "level={lvl:?} err={err} eps={eps}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn compensate_bit_identical_with_sentinels() {
+        const INF: i64 = i64::MAX / 4;
+        prop_check("simd compensate", 60, |g| {
+            let off = g.usize_in(0, LANES);
+            let n = off + g.usize_in(1, 2 * LANES + 9);
+            let d1: Vec<i64> = (0..n)
+                .map(|_| match g.usize_in(0, 9) {
+                    0 => 0,
+                    1 => INF,
+                    2 => INF + 7,
+                    3 => (1 << 51) + 1, // gap value → scalar fallback group
+                    _ => g.usize_in(1, 4000) as i64,
+                })
+                .collect();
+            let d2: Vec<i64> = (0..n)
+                .map(|_| match g.usize_in(0, 9) {
+                    0 => 0,
+                    1 => INF,
+                    _ => g.usize_in(1, 4000) as i64,
+                })
+                .collect();
+            let sign: Vec<i8> = (0..n).map(|_| [-1i8, 0, 1][g.usize_in(0, 2)]).collect();
+            let base: Vec<f32> = g.smooth_field(n, 0.5);
+            let eta_eps = g.f64_in(1e-6, 0.5);
+            let mut want = base[off..].to_vec();
+            compensate_with(
+                SimdLevel::Scalar,
+                &mut want,
+                &d1[off..],
+                &d2[off..],
+                &sign[off..],
+                eta_eps,
+                INF,
+            );
+            for lvl in levels() {
+                let mut got = base[off..].to_vec();
+                compensate_with(lvl, &mut got, &d1[off..], &d2[off..], &sign[off..], eta_eps, INF);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={lvl:?} off={off}");
+            }
+        });
+    }
+
+    #[test]
+    fn lorenzo_rows_bit_identical_and_invertible() {
+        prop_check("simd lorenzo rows", 60, |g| {
+            let n = g.usize_in(1, 3 * LANES + 1);
+            let c: Vec<i64> = (0..n).map(|_| g.usize_in(0, 2000) as i64 - 1000).collect();
+            let a: Vec<i64> = (0..n).map(|_| g.usize_in(0, 2000) as i64 - 1000).collect();
+            let b: Vec<i64> = (0..n).map(|_| g.usize_in(0, 2000) as i64 - 1000).collect();
+            let ab: Vec<i64> = (0..n).map(|_| g.usize_in(0, 2000) as i64 - 1000).collect();
+            let mut want1 = vec![0i64; n];
+            let mut want2 = vec![0i64; n];
+            let mut want3 = vec![0i64; n];
+            delta_row_with(SimdLevel::Scalar, &mut want1, &c);
+            lorenzo_row2_with(SimdLevel::Scalar, &mut want2, &c, &a);
+            lorenzo_row3_with(SimdLevel::Scalar, &mut want3, &c, &a, &b, &ab);
+            for lvl in levels() {
+                let mut got = vec![0i64; n];
+                delta_row_with(lvl, &mut got, &c);
+                assert_eq!(got, want1, "delta level={lvl:?}");
+                lorenzo_row2_with(lvl, &mut got, &c, &a);
+                assert_eq!(got, want2, "row2 level={lvl:?}");
+                lorenzo_row3_with(lvl, &mut got, &c, &a, &b, &ab);
+                assert_eq!(got, want3, "row3 level={lvl:?}");
+                // delta_row then prefix_sum is the identity.
+                let mut rt = vec![0i64; n];
+                delta_row_with(lvl, &mut rt, &c);
+                prefix_sum_i64(&mut rt);
+                assert_eq!(rt, c, "delta/prefix inverse level={lvl:?}");
+                // add_assign agrees with scalar addition.
+                let mut sum = want1.clone();
+                add_assign_i64_with(lvl, &mut sum, &c);
+                let want: Vec<i64> = want1.iter().zip(&c).map(|(x, y)| x + y).collect();
+                assert_eq!(sum, want, "add_assign level={lvl:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn convolve_valid_bit_identical() {
+        prop_check("simd convolve", 60, |g| {
+            let klen = [1usize, 3, 5, 7][g.usize_in(0, 3)];
+            let out_len = g.usize_in(1, 3 * LANES);
+            let line: Vec<f64> =
+                (0..out_len + klen - 1).map(|_| g.f64_in(-2.0, 2.0)).collect();
+            let kernel: Vec<f64> = (0..klen).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            let mut want = vec![0.0f64; out_len];
+            convolve_valid_with(SimdLevel::Scalar, &mut want, &line, &kernel);
+            for lvl in levels() {
+                let mut got = vec![0.0f64; out_len];
+                convolve_valid_with(lvl, &mut got, &line, &kernel);
+                let wb: Vec<u64> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={lvl:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn ssim_moments_bit_identical() {
+        prop_check("simd ssim moments", 60, |g| {
+            let n = g.usize_in(1, 3 * LANES);
+            let xs = g.smooth_field(n, 0.3);
+            let ys = g.smooth_field(n, 0.3);
+            let lof = g.f64_in(-1.0, 1.0);
+            let inv = g.f64_in(0.1, 10.0);
+            let mut want = vec![vec![0.0f64; n]; 5];
+            {
+                let [sx, sy, sxx, syy, sxy] = &mut want[..] else { unreachable!() };
+                ssim_moments_with(SimdLevel::Scalar, &xs, &ys, lof, inv, sx, sy, sxx, syy, sxy);
+            }
+            for lvl in levels() {
+                let mut got = vec![vec![0.0f64; n]; 5];
+                {
+                    let [sx, sy, sxx, syy, sxy] = &mut got[..] else { unreachable!() };
+                    ssim_moments_with(lvl, &xs, &ys, lof, inv, sx, sy, sxx, syy, sxy);
+                }
+                for (m, (w, o)) in want.iter().zip(&got).enumerate() {
+                    let wb: Vec<u64> = w.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u64> = o.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, wb, "moment {m} level={lvl:?}");
+                }
+            }
+        });
+    }
+}

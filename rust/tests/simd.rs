@@ -1,0 +1,246 @@
+//! SIMD substrate bit-exactness matrix (ISSUE 10 acceptance test).
+//!
+//! Every vectorized hot kernel must be bit-identical to its scalar
+//! twin on real pipeline data — across datasets, 2D/3D odd and
+//! lane-multiple dims, the forced-scalar level versus the detected
+//! level, and thread counts. The `*_with(level)` entry points make the
+//! comparison direct: `SimdLevel::Scalar` is the semantic reference,
+//! `simd::level()` is whatever dispatch picked for this machine (under
+//! `QAI_SIMD=scalar` both sides are scalar and the matrix degenerates
+//! to a self-check, which is exactly the CI forced-scalar pass).
+
+use qai::compressors::{bitio, huffman, lorenzo};
+use qai::data::grid::Grid;
+use qai::data::synthetic::{generate, DatasetKind};
+use qai::filters::gaussian::gaussian_filter_threads;
+use qai::metrics::ssim_fast_threads;
+use qai::mitigation::boundary::boundary_and_sign;
+use qai::mitigation::edt::{edt, INF};
+use qai::mitigation::sign::propagate_signs;
+use qai::quant::{quantize_grid, ErrorBound, QIndex, ResolvedBound};
+use qai::util::pool::ThreadPool;
+use qai::util::simd::{self, SimdLevel};
+
+/// The dataset × dims matrix: 2D and 3D, odd sizes (every row ends in
+/// a vector tail) and exact lane multiples (no tail at all).
+const CASES: [(DatasetKind, &[usize], u64); 4] = [
+    (DatasetKind::ClimateLike, &[33, 47], 11),
+    (DatasetKind::CosmologyLike, &[29, 31], 12),
+    (DatasetKind::MirandaLike, &[17, 19, 23], 13),
+    (DatasetKind::CombustionLike, &[16, 16, 16], 14),
+];
+
+fn prepared(
+    kind: DatasetKind,
+    dims: &[usize],
+    seed: u64,
+) -> (Grid<f32>, Grid<QIndex>, Grid<f32>, ResolvedBound) {
+    let orig = generate(kind, dims, seed);
+    let eb = ErrorBound::relative(1e-2).resolve(&orig.data);
+    let (q, dq) = quantize_grid(&orig, eb);
+    (orig, q, dq, eb)
+}
+
+fn assert_f32_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit divergence at {i}: {x} vs {y}");
+    }
+}
+
+fn assert_f64_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit divergence at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn quantize_and_dequantize_match_scalar_twin() {
+    let level = simd::level();
+    for (kind, dims, seed) in CASES {
+        let (orig, q, _dq, eb) = prepared(kind, dims, seed);
+        let inv = 1.0 / (2.0 * eb.abs);
+        let n = orig.data.len();
+
+        let mut qs = vec![0i64; n];
+        let mut qv = vec![0i64; n];
+        simd::quantize_with(SimdLevel::Scalar, &orig.data, inv, &mut qs);
+        simd::quantize_with(level, &orig.data, inv, &mut qv);
+        assert_eq!(qs, qv, "{kind:?} dims={dims:?}: quantize diverged");
+
+        let mut fs = vec![0f32; n];
+        let mut fv = vec![0f32; n];
+        simd::dequantize_into_with(SimdLevel::Scalar, &q.data, 2.0 * eb.abs, &mut fs);
+        simd::dequantize_into_with(level, &q.data, 2.0 * eb.abs, &mut fv);
+        assert_f32_bits_eq(&fs, &fv, "dequantize");
+    }
+}
+
+#[test]
+fn lorenzo_forward_inverse_match_scalar_and_roundtrip() {
+    let level = simd::level();
+    for (kind, dims, seed) in CASES {
+        let (_orig, q, _dq, _eb) = prepared(kind, dims, seed);
+        let rs = lorenzo::forward_with(SimdLevel::Scalar, &q);
+        let rv = lorenzo::forward_with(level, &q);
+        assert_eq!(rs, rv, "{kind:?} dims={dims:?}: lorenzo forward diverged");
+
+        let gs = lorenzo::inverse_with(SimdLevel::Scalar, &rs, q.shape);
+        let gv = lorenzo::inverse_with(level, &rs, q.shape);
+        assert_eq!(gs.data, gv.data, "{kind:?} dims={dims:?}: lorenzo inverse diverged");
+        assert_eq!(gv.data, q.data, "{kind:?} dims={dims:?}: lorenzo roundtrip broke");
+    }
+}
+
+#[test]
+fn compensate_matches_scalar_on_real_distance_fields() {
+    let level = simd::level();
+    for (kind, dims, seed) in CASES {
+        let (_orig, q, dq, eb) = prepared(kind, dims, seed);
+        let bres = boundary_and_sign(&q, 1);
+        let e1 = edt(&bres.mask, true, 1);
+        let nearest = e1.nearest.as_ref().unwrap();
+        let (s, b2) = propagate_signs(&bres.mask, &bres.sign, nearest, 1);
+        let e2 = edt(&b2, false, 1);
+
+        let mut a = dq.data.clone();
+        let mut b = dq.data.clone();
+        let eta_eps = 0.9 * eb.abs;
+        let scalar = SimdLevel::Scalar;
+        simd::compensate_with(scalar, &mut a, &e1.dist_sq, &e2.dist_sq, &s.data, eta_eps, INF);
+        simd::compensate_with(level, &mut b, &e1.dist_sq, &e2.dist_sq, &s.data, eta_eps, INF);
+        assert_f32_bits_eq(&a, &b, "compensate");
+    }
+}
+
+#[test]
+fn convolve_and_ssim_moments_match_scalar() {
+    let level = simd::level();
+    for (kind, dims, seed) in CASES {
+        let (orig, _q, dq, _eb) = prepared(kind, dims, seed);
+        let n = orig.data.len();
+
+        for radius in [1usize, 2, 4] {
+            let kernel = qai::filters::gaussian::gaussian_kernel(0.8 * radius as f64, radius);
+            let line: Vec<f64> = dq.data.iter().map(|&v| v as f64).collect();
+            let m = n - (kernel.len() - 1);
+            let mut os = vec![0f64; m];
+            let mut ov = vec![0f64; m];
+            simd::convolve_valid_with(SimdLevel::Scalar, &mut os, &line, &kernel);
+            simd::convolve_valid_with(level, &mut ov, &line, &kernel);
+            assert_f64_bits_eq(&os, &ov, "convolve_valid");
+        }
+
+        let (lof, inv) = (0.25f64, 1.0 / 127.0f64);
+        let moments = |lvl: SimdLevel| {
+            let mut sx = vec![0f64; n];
+            let mut sy = vec![0f64; n];
+            let mut sxx = vec![0f64; n];
+            let mut syy = vec![0f64; n];
+            let mut sxy = vec![0f64; n];
+            simd::ssim_moments_with(
+                lvl,
+                &orig.data,
+                &dq.data,
+                lof,
+                inv,
+                &mut sx,
+                &mut sy,
+                &mut sxx,
+                &mut syy,
+                &mut sxy,
+            );
+            [sx, sy, sxx, syy, sxy]
+        };
+        let ms = moments(SimdLevel::Scalar);
+        let mv = moments(level);
+        for (i, (a, b)) in ms.iter().zip(&mv).enumerate() {
+            assert_f64_bits_eq(a, b, &format!("ssim moment {i}"));
+        }
+    }
+}
+
+#[test]
+fn huffman_table_decode_matches_bit_serial_on_real_residuals() {
+    for (kind, dims, seed) in CASES {
+        let (_orig, q, _dq, _eb) = prepared(kind, dims, seed);
+        let residuals = lorenzo::forward_with(SimdLevel::Scalar, &q);
+        let symbols: Vec<u32> =
+            residuals.iter().map(|&r| bitio::zigzag(r).min(u32::MAX as u64) as u32).collect();
+        let buf = huffman::encode(&symbols);
+        let mut slow = vec![0u32; symbols.len()];
+        let mut fast = vec![0u32; symbols.len()];
+        huffman::decode_into_with(&buf, &mut slow, false).unwrap();
+        huffman::decode_into_with(&buf, &mut fast, true).unwrap();
+        assert_eq!(slow, symbols, "{kind:?}: bit-serial decode broke");
+        assert_eq!(fast, symbols, "{kind:?}: table decode diverged");
+    }
+}
+
+/// Threaded public entry points stay bit-identical to `threads = 1`
+/// under whatever SIMD level dispatch picked (the pool splits work at
+/// line/batch granularity, never mid-vector, so lane boundaries and
+/// thread boundaries must not interact).
+#[test]
+fn threaded_paths_are_thread_invariant_under_simd() {
+    for (kind, dims, seed) in CASES {
+        let (orig, _q, dq, _eb) = prepared(kind, dims, seed);
+
+        let s1 = ssim_fast_threads(&orig, &dq, 7, 2, 1);
+        let g1 = gaussian_filter_threads(&dq, 1.1, 1);
+        for threads in [2usize, 4] {
+            let st = ssim_fast_threads(&orig, &dq, 7, 2, threads);
+            assert_eq!(s1.to_bits(), st.to_bits(), "{kind:?} threads={threads}: ssim diverged");
+            let gt = gaussian_filter_threads(&dq, 1.1, threads);
+            assert_f32_bits_eq(&g1.data, &gt.data, "gaussian_filter");
+        }
+    }
+}
+
+#[test]
+fn forced_levels_clamp_to_hardware() {
+    // Asking a `*_with` entry point for a level the CPU lacks must not
+    // fault: the kernels clamp to `best_supported()` internally, so
+    // every level token is safe to request on every machine.
+    let data = [1.0f32, -2.5, 3.25, 0.0, 9.75, -0.5, 2.0];
+    for level in [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Avx2] {
+        let mut out = vec![0i64; data.len()];
+        simd::quantize_with(level, &data, 0.5, &mut out);
+        let mut back = vec![0f32; data.len()];
+        simd::dequantize_into_with(level, &out, 2.0, &mut back);
+    }
+}
+
+#[test]
+fn pinned_pool_reports_worker_cpus() {
+    // 4 lanes = 3 persistent workers (the caller is the 4th lane).
+    let pool = ThreadPool::with_pinning(4, true);
+    let cpus = pool.worker_cpus();
+    assert_eq!(cpus.len(), pool.workers());
+    assert_eq!(cpus.len(), 3);
+    #[cfg(target_os = "linux")]
+    {
+        // Workers record their observed CPU at startup; give them a
+        // moment, then every slot must hold a real CPU id.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let cpus = pool.worker_cpus();
+            if cpus.iter().all(|&c| c >= 0) {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "worker CPUs never reported: {cpus:?}");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+}
+
+#[test]
+fn engine_builder_pin_workers_smoke() {
+    let engine = qai::mitigation::engine::Engine::builder()
+        .shards(2)
+        .lanes_per_shard(2)
+        .pin_workers(false)
+        .build();
+    assert_eq!(engine.shards(), 2);
+}

@@ -1,9 +1,11 @@
 //! Minimal offline stand-in for the `libc` crate.
 //!
-//! The repo uses exactly one libc facility: `clock_gettime` with the
-//! per-thread / per-process CPU-time clocks, for the coordinator's
-//! compute attribution and the Fig. 8 inflation metric. This shim binds
-//! that single symbol directly against the platform C library.
+//! The repo uses two libc facilities: `clock_gettime` with the
+//! per-thread / per-process CPU-time clocks (the coordinator's compute
+//! attribution and the Fig. 8 inflation metric), and — on Linux only —
+//! `sched_setaffinity`/`sched_getcpu` for the thread pool's optional
+//! worker pinning (`QAI_POOL_PIN=1`). This shim binds those symbols
+//! directly against the platform C library.
 
 #![allow(non_camel_case_types)]
 
@@ -43,6 +45,46 @@ pub const CLOCK_THREAD_CPUTIME_ID: clockid_t = 16;
 extern "C" {
     /// POSIX `clock_gettime(2)`.
     pub fn clock_gettime(clk_id: clockid_t, tp: *mut timespec) -> c_int;
+}
+
+/// Process/thread id for [`sched_setaffinity`] (0 = calling thread).
+#[cfg(target_os = "linux")]
+pub type pid_t = i32;
+
+/// glibc `cpu_set_t`: a fixed 1024-bit CPU mask (`CPU_SETSIZE` bits,
+/// stored as 16 × 64-bit words on LP64).
+#[cfg(target_os = "linux")]
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct cpu_set_t {
+    /// Mask words, CPU `n` at word `n / 64`, bit `n % 64`.
+    pub bits: [u64; 16],
+}
+
+#[cfg(target_os = "linux")]
+impl cpu_set_t {
+    /// All-clear mask (`CPU_ZERO`).
+    pub fn zero() -> Self {
+        cpu_set_t { bits: [0; 16] }
+    }
+
+    /// Set CPU `cpu` in the mask (`CPU_SET`); out-of-range is a no-op.
+    pub fn set(&mut self, cpu: usize) {
+        if cpu < 1024 {
+            self.bits[cpu / 64] |= 1u64 << (cpu % 64);
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    /// Linux `sched_setaffinity(2)`: restrict thread `pid` (0 = self)
+    /// to the CPUs set in `mask`.
+    pub fn sched_setaffinity(pid: pid_t, cpusetsize: usize, mask: *const cpu_set_t) -> c_int;
+
+    /// Linux `sched_getcpu(3)`: the CPU the calling thread is running
+    /// on, or −1 on error.
+    pub fn sched_getcpu() -> c_int;
 }
 
 #[cfg(test)]
